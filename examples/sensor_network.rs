@@ -1,0 +1,62 @@
+//! Wireless-sensor-network scenario (the paper's motivating
+//! application class): heterogeneous nodes, noisy channels, and one
+//! faulty sensor whose data collapses onto a line (Fig. 1(c)).
+//!
+//!     cargo run --release --example sensor_network
+//!
+//! Demonstrates why the projection consensus constraint matters: the
+//! strict-consensus view would be crippled by the faulty node, while
+//! DKPCA (with the sphere z-rule) keeps every healthy node close to
+//! the global solution — over channels with Gaussian noise.
+
+use dkpca::admm::{AdmmConfig, DkpcaSolver, ZNorm};
+use dkpca::backend::NativeBackend;
+use dkpca::central::{central_kpca, local_kpca, similarity};
+use dkpca::data::synth::{blob_centers, degenerate_data, sample_blobs, BlobSpec};
+use dkpca::data::{NoiseModel, Rng};
+use dkpca::kernels::Kernel;
+use dkpca::topology::Graph;
+
+fn main() {
+    // 8 sensors observing a shared 6-D field, 25 readings each;
+    // sensor 0 is faulty: its readings collapse onto a line (rank 1).
+    let spec = BlobSpec { dim: 6, ..Default::default() };
+    let centers = blob_centers(&spec, 11);
+    let mut rng = Rng::new(12);
+    let mut xs: Vec<_> = (0..8)
+        .map(|_| sample_blobs(&spec, &centers, 25, None, &mut rng).0)
+        .collect();
+    xs[0] = degenerate_data(6, 25, 1, 1.0, &mut rng);
+
+    // Sensors form a ring; links add Gaussian channel noise.
+    let graph = Graph::ring(8, 1);
+    let kernel = Kernel::Rbf { gamma: 0.1 };
+    let noise = NoiseModel::Gaussian { sigma: 0.01 };
+
+    let central = central_kpca(&xs, &kernel);
+    let report = |label: &str, alphas: &[Vec<f64>]| {
+        let sims: Vec<f64> = alphas
+            .iter()
+            .zip(&xs)
+            .map(|(a, x)| similarity(a, x, &central, &kernel))
+            .collect();
+        let healthy = sims[1..].iter().sum::<f64>() / 7.0;
+        println!("{label:<22} healthy-mean {healthy:.4}   faulty-node {:.4}", sims[0]);
+    };
+
+    let locals: Vec<Vec<f64>> = xs.iter().map(|x| local_kpca(x, &kernel)).collect();
+    report("local-only", &locals);
+
+    for (label, z_norm) in [("DKPCA (ball, eq.11)", ZNorm::Ball), ("DKPCA (sphere)", ZNorm::Sphere)] {
+        let cfg = AdmmConfig { z_norm, max_iters: 80, seed: 5, ..Default::default() };
+        let mut solver = DkpcaSolver::new(&xs, &graph, &kernel, &cfg, noise, 13);
+        let res = solver.run(&NativeBackend);
+        report(label, &res.alphas);
+    }
+    println!(
+        "\nWith a faulty sensor inside the consensus loop the relaxed\n\
+         ball rule (11) drifts toward the trivial fixed point; the\n\
+         sphere rule (the original ||z|| = 1 of problem (7)) bounds the\n\
+         damage and keeps healthy sensors close to the global solution."
+    );
+}

@@ -1,0 +1,154 @@
+# AOT lowering: JAX (L2) + Pallas (L1) graphs -> HLO TEXT artifacts.
+#
+# Interchange format is HLO *text*, NOT lowered.compile()/.serialize():
+# jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+# xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+# text parser reassigns ids and round-trips cleanly. See
+# /opt/xla-example/gen_hlo.py and README gotchas.
+#
+# Usage (from python/):  python -m compile.aot --outdir ../artifacts
+#
+# Emits one .hlo.txt per (graph, shape) in the hot-shape manifest below,
+# plus manifest.json describing inputs/outputs so the Rust runtime
+# (rust/src/runtime/registry.rs) can key executables by (op, shape).
+# Python never runs again after this: the Rust binary is self-contained.
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = "f32"
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple so the Rust
+    side always unwraps a tuple, see load_hlo.rs reference)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def build_artifact_set(feat_dim, gram_shapes, admm_shapes, z_dims, power_dims):
+    """Return [(name, fn, arg_specs, meta)] for the hot-shape manifest."""
+    arts = []
+    for n, p in gram_shapes:
+        arts.append(
+            (
+                f"gram_rbf_centered_{n}x{p}_m{feat_dim}",
+                model.gram_rbf_centered,
+                (spec(n, feat_dim), spec(p, feat_dim), spec()),
+                {
+                    "op": "gram_rbf_centered",
+                    "n": n,
+                    "p": p,
+                    "m": feat_dim,
+                    "inputs": [[n, feat_dim], [p, feat_dim], []],
+                    "outputs": [[n, p]],
+                },
+            )
+        )
+    for n, d in admm_shapes:
+        arts.append(
+            (
+                f"admm_step_n{n}_d{d}",
+                model.admm_step,
+                (spec(n, n), spec(n, n), spec(n, d), spec(n, d), spec(d)),
+                {
+                    "op": "admm_step",
+                    "n": n,
+                    "d": d,
+                    "inputs": [[n, n], [n, n], [n, d], [n, d], [d]],
+                    "outputs": [[n], [n, d]],
+                },
+            )
+        )
+    for dn in z_dims:
+        arts.append(
+            (
+                f"z_step_dn{dn}",
+                model.z_step,
+                (spec(dn, dn), spec(dn)),
+                {
+                    "op": "z_step",
+                    "dn": dn,
+                    "inputs": [[dn, dn], [dn]],
+                    "outputs": [[dn], []],
+                },
+            )
+        )
+    for n in power_dims:
+        arts.append(
+            (
+                f"power_iter_n{n}",
+                model.power_iter_step,
+                (spec(n, n), spec(n)),
+                {
+                    "op": "power_iter",
+                    "n": n,
+                    "inputs": [[n, n], [n]],
+                    "outputs": [[n], []],
+                },
+            )
+        )
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--feat-dim", type=int, default=784)
+    ap.add_argument(
+        "--small",
+        action="store_true",
+        help="tiny shapes only (fast CI / test path)",
+    )
+    args = ap.parse_args()
+
+    if args.small:
+        gram_shapes = [(16, 16), (16, 64)]
+        admm_shapes = [(16, 4)]
+        z_dims = [64]
+        power_dims = [64]
+    else:
+        # Hot shapes of the paper's experiments: N_j = 100 samples/node,
+        # |Omega| = 4 neighbors (plus the self-constraint column, so the
+        # constraint count is D = |Omega|+1 = 5 and the z-step Gram spans
+        # the (|Omega|+1)-node group, dn = 500), J = 20 nodes central
+        # baseline (N = 2000); Fig. 4 sweeps N_j in {40..300}.
+        gram_shapes = [(100, 100), (100, 500), (500, 500), (2000, 2000)]
+        admm_shapes = [(40, 5), (100, 3), (100, 5), (100, 9), (200, 5), (300, 5)]
+        z_dims = [200, 300, 500, 900, 1000, 1500]
+        power_dims = [2000]
+
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = {"feat_dim": args.feat_dim, "dtype": F32, "artifacts": []}
+    arts = build_artifact_set(
+        args.feat_dim, gram_shapes, admm_shapes, z_dims, power_dims
+    )
+    for name, fn, arg_specs, meta in arts:
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.outdir, fname), "w") as f:
+            f.write(text)
+        meta = dict(meta, name=name, file=fname)
+        manifest["artifacts"].append(meta)
+        print(f"  lowered {name}: {len(text)} chars")
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(arts)} artifacts + manifest.json to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

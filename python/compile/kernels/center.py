@@ -1,0 +1,63 @@
+# Layer-1 Pallas kernel: tiled double-centering of a (cross-)Gram block.
+#
+# Paper §6.1: K_c = K - (1/m) 1_m K - (1/n) K 1_n + (1/(mn)) 1_m K 1_n
+# for K in R^{m x n} (1_k is the k x k all-ones matrix), i.e. subtract the
+# column means, subtract the row means, add back the grand mean. The
+# means are a cheap O(nm) reduction prologue done in plain jnp; the O(nm)
+# broadcast-subtract main pass is the tiled Pallas kernel (pure VPU work).
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (128, 128)
+
+
+def _center_kernel(k_ref, rm_ref, cm_ref, gm_ref, o_ref):
+    """One (bn, bp) tile: K - row_mean - col_mean + grand_mean."""
+    k = k_ref[...]          # (bn, bp)
+    rm = rm_ref[...]        # (bn, 1)  mean over columns, per row
+    cm = cm_ref[...]        # (1, bp)  mean over rows, per column
+    gm = gm_ref[0, 0]       # ()       grand mean
+    o_ref[...] = k - rm - cm + gm
+
+
+def _pad2(a: jax.Array, bn: int, bp: int) -> jax.Array:
+    pn = (-a.shape[0]) % bn
+    pp = (-a.shape[1]) % bp
+    if pn == 0 and pp == 0:
+        return a
+    return jnp.pad(a, ((0, pn), (0, pp)))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def center_gram(k: jax.Array, block=DEFAULT_BLOCK) -> jax.Array:
+    """Double-centered Gram block, same shape as `k` ((n, p))."""
+    n, p = k.shape
+    bn, bp = block
+    bn = min(bn, max(n, 1))
+    bp = min(bp, max(p, 1))
+    k = k.astype(jnp.float32)
+    # Reduction prologue (cheap): per-row / per-column / grand means.
+    rm = jnp.mean(k, axis=1, keepdims=True)   # (n, 1)
+    cm = jnp.mean(k, axis=0, keepdims=True)   # (1, p)
+    gm = jnp.mean(k).reshape(1, 1)            # (1, 1)
+    kp = _pad2(k, bn, bp)
+    rmp = _pad2(rm, bn, 1)
+    cmp_ = _pad2(cm, 1, bp)
+    grid = (kp.shape[0] // bn, kp.shape[1] // bp)
+    out = pl.pallas_call(
+        _center_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bp), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bp), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(kp.shape, jnp.float32),
+        interpret=True,
+    )(kp, rmp, cmp_, gm)
+    return out[:n, :p]

@@ -1,0 +1,80 @@
+# Layer-1 Pallas kernel: VMEM-tiled RBF Gram matrix.
+#
+# The paper's compute hot-spot is Gram assembly K[i,j] = exp(-gamma *
+# ||x_i - y_j||^2) (local K_j, neighbor cross-blocks K_(l,l'), and the
+# central-baseline global Gram). On TPU the squared distance is
+# reorganised as ||x||^2 + ||y||^2 - 2 x@y.T so the O(n*p*m) inner term
+# is a single MXU-shaped matmul per tile; the rank-1 norm corrections and
+# exp run on the VPU. BlockSpec tiles the (n, p) output; each step keeps
+# one (bn, m) and one (bp, m) feature stripe resident in VMEM.
+#
+# interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+# custom-calls (see DESIGN.md §Hardware-Adaptation). Numerics are
+# validated against kernels/ref.py by python/tests/test_kernels.py.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: (128, 128) output block. With m = 784 features the VMEM
+# working set is 2 * 128*784*4B (stripes) + 128*128*4B (out) ~ 0.85 MiB,
+# far under the ~16 MiB VMEM budget, leaving room for double-buffering.
+DEFAULT_BLOCK = (128, 128)
+
+
+def _rbf_gram_kernel(x_ref, y_ref, g_ref, o_ref):
+    """One (bn, bp) tile of the RBF Gram matrix."""
+    x = x_ref[...]  # (bn, m) stripe
+    y = y_ref[...]  # (bp, m) stripe
+    gamma = g_ref[0, 0]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # (bn, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True)  # (bp, 1)
+    # MXU tile: contract the feature dimension of both stripes.
+    xy = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d2 = xx + jnp.transpose(yy) - 2.0 * xy
+    # Guard tiny negative values from cancellation so exp stays <= 1.
+    o_ref[...] = jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+
+
+def _pad_rows(a: jax.Array, multiple: int) -> jax.Array:
+    n = a.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def rbf_gram(x: jax.Array, y: jax.Array, gamma, block=DEFAULT_BLOCK) -> jax.Array:
+    """Uncentered RBF Gram exp(-gamma * ||x_i - y_j||^2), shape (n, p).
+
+    x: (n, m), y: (p, m), gamma: scalar (runtime input, not baked into the
+    artifact so the Rust side can sweep bandwidths without re-lowering).
+    Inputs are zero-padded up to the tile multiple and the result sliced
+    back, so arbitrary n/p are supported.
+    """
+    n, m = x.shape
+    p, _ = y.shape
+    bn, bp = block
+    bn = min(bn, max(n, 1))
+    bp = min(bp, max(p, 1))
+    xp = _pad_rows(x.astype(jnp.float32), bn)
+    yp = _pad_rows(y.astype(jnp.float32), bp)
+    g = jnp.asarray(gamma, dtype=jnp.float32).reshape(1, 1)
+    grid = (xp.shape[0] // bn, yp.shape[0] // bp)
+    out = pl.pallas_call(
+        _rbf_gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((bp, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bp), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], yp.shape[0]), jnp.float32),
+        interpret=True,
+    )(xp, yp, g)
+    return out[:n, :p]

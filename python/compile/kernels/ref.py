@@ -1,0 +1,24 @@
+# Pure-jnp oracles for the Layer-1 Pallas kernels.
+#
+# These are the CORE correctness references: python/tests/test_kernels.py
+# sweeps shapes/dtypes (hypothesis) and asserts the Pallas outputs match
+# these to tight tolerance. They are also reused by the Layer-2 model
+# tests as the "obviously correct" implementation.
+import jax.numpy as jnp
+
+
+def rbf_gram_ref(x, y, gamma):
+    """exp(-gamma * ||x_i - y_j||^2), computed the naive broadcast way."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    d2 = jnp.sum((x[:, None, :] - y[None, :, :]) ** 2, axis=-1)
+    return jnp.exp(-jnp.float32(gamma) * d2)
+
+
+def center_gram_ref(k):
+    """Paper §6.1 double-centering: K - 1K/m - K1/n + 1K1/(mn)."""
+    k = k.astype(jnp.float32)
+    m, n = k.shape
+    ones_m = jnp.ones((m, m), dtype=jnp.float32)
+    ones_n = jnp.ones((n, n), dtype=jnp.float32)
+    return k - ones_m @ k / m - k @ ones_n / n + ones_m @ k @ ones_n / (m * n)

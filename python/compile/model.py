@@ -1,0 +1,92 @@
+# Layer-2 JAX compute graphs for DKPCA (paper Alg. 1) — build-time only.
+#
+# Everything here is lowered once to HLO text by aot.py; the Rust runtime
+# (rust/src/runtime/) loads and executes the artifacts on the PJRT CPU
+# client. The graphs call the Layer-1 Pallas kernels (kernels/rbf.py,
+# kernels/center.py) so the kernels lower into the same HLO modules.
+#
+# Per-node quantities (node j, N = N_j samples, D = |Omega_j| neighbors):
+#   Kj   (N, N)  centered local Gram (+ eps jitter so it is invertible —
+#                centering puts the all-ones vector in the null space)
+#   B    (N, D)  phi(X_j)^T eta_j, the kernelized multiplier (paper (13))
+#   P    (N, D)  phi(X_j)^T Z xi_j, projections of neighbors' z received
+#   Ainv (N, N)  (rho * D * Kj - 2 Kj^2)^{-1}, constant per rho stage
+#
+# ADMM updates implemented here:
+#   alpha-update (12):  alpha' = Ainv @ (rho * P - B) @ 1_D
+#   eta-update   (13):  B'     = B + rho * (Kj @ alpha' 1_D^T - P)
+#   z-update (10)/(11): given the stacked neighbor coefficient vector c
+#                       (concatenation of c_l = K_l^{-1} msg_l + alpha_l/D
+#                       over l in Omega_j) and the centered Gram G of the
+#                       concatenated neighbor data, s = G c gives all
+#                       phi(X_l)^T z_hat_j stacked and ||z_hat||^2 = c^T s;
+#                       scale by 1/||z_hat|| when the norm exceeds 1.
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import center as center_k
+from compile.kernels import rbf as rbf_k
+
+
+def gram_rbf_centered(x, y, gamma):
+    """Centered RBF Gram block between datasets x (n, m) and y (p, m)."""
+    return center_k.center_gram(rbf_k.rbf_gram(x, y, gamma))
+
+
+def admm_step(kj, ainv, p, b, rho):
+    """Fused alpha-update (12) + eta-update (13) for one node.
+
+    `rho` is a (D,) runtime input carrying one penalty per constraint
+    column: the paper's §6.1 tuning uses rho^(1) = 100 for the
+    self-constraint and a scheduled rho^(2) (10 -> 50 -> 100) for
+    neighbor constraints, so the per-column generalisation of (12)/(13)
+    is required (Ainv = (sum(rho) Kj - 2 Kj^2)^{-1} is recomputed
+    host-side whenever the schedule advances). Returns (alpha', B').
+    """
+    rho = jnp.asarray(rho, jnp.float32)
+    rhs = jnp.sum(p * rho[None, :] - b, axis=1)  # sum_k rho_k P_k - B_k
+    alpha = ainv @ rhs
+    kalpha = kj @ alpha
+    b_next = b + (kalpha[:, None] - p) * rho[None, :]
+    return alpha, b_next
+
+
+def z_step(g, c):
+    """z-update (10) + feasibility projection (11), kernelized.
+
+    g: (DN, DN) centered Gram over the concatenated neighbor data of node
+    j; c: (DN,) stacked coefficients so that z_hat = phi(X_nb) c.
+    Returns (s, norm2) where s stacks phi(X_l)^T z_j for every neighbor l
+    (already rescaled onto the unit ball) and norm2 = ||z_hat||^2.
+    """
+    s = g @ c
+    norm2 = jnp.dot(c, s)
+    # Centered Grams can make norm2 slightly negative for degenerate c.
+    norm2 = jnp.maximum(norm2, 0.0)
+    scale = jnp.where(norm2 > 1.0, jax.lax.rsqrt(norm2 + 1e-30), 1.0)
+    return s * scale, norm2
+
+
+def power_iter_step(k, v):
+    """One power-iteration step for the central-kPCA baseline.
+
+    Returns (v', rayleigh) with v' = K v / ||K v|| and rayleigh = v^T K v.
+    """
+    w = k @ v
+    rayleigh = jnp.dot(v, w)
+    nrm = jnp.linalg.norm(w)
+    return w / jnp.maximum(nrm, 1e-30), rayleigh
+
+
+def similarity(alpha_j, k_cross, kj, alpha_gt, k_global):
+    """Paper §6.1 similarity of w_j = phi(X_j) alpha_j to the ground truth.
+
+    |alpha_j^T K(X_j, X) alpha_gt| / sqrt((alpha_j^T Kj alpha_j)
+    (alpha_gt^T K alpha_gt)); absolute value because the eigvector sign is
+    arbitrary.
+    """
+    num = jnp.abs(alpha_j @ (k_cross @ alpha_gt))
+    den = jnp.sqrt(
+        jnp.abs(alpha_j @ (kj @ alpha_j)) * jnp.abs(alpha_gt @ (k_global @ alpha_gt))
+    )
+    return num / jnp.maximum(den, 1e-30)

@@ -1,0 +1,227 @@
+# Full-algorithm NumPy reference of paper Alg. 1 (DKPCA-ADMM).
+#
+# This is the executable spec for the Rust implementation
+# (rust/src/admm/): the kernelized update equations here are exactly the
+# ones rust implements, and python/tests/test_dkpca_ref.py validates the
+# paper's claims on it (similarity improves over local-only kPCA,
+# augmented Lagrangian monotone decrease for rho large enough).
+#
+# Generalisation used throughout (matching §6.1's tuning): each node j
+# holds one constraint per element of C_j = {j} + Omega_j (the
+# self-constraint, penalty rho1) or C_j = Omega_j (include_self=False,
+# the algorithm exactly as printed), with per-constraint penalty
+# rho_{j,k}. With uniform rho and C_j = Omega_j this reduces verbatim to
+# (10)-(13).
+import numpy as np
+
+
+def rbf_gram(x, y, gamma):
+    """exp(-gamma ||x_i - y_j||^2); x (n, m), y (p, m)."""
+    d2 = (
+        np.sum(x * x, axis=1)[:, None]
+        + np.sum(y * y, axis=1)[None, :]
+        - 2.0 * x @ y.T
+    )
+    return np.exp(-gamma * np.maximum(d2, 0.0))
+
+
+def center_gram(k):
+    """Paper §6.1 double-centering of a (cross-)Gram block."""
+    rm = k.mean(axis=1, keepdims=True)
+    cm = k.mean(axis=0, keepdims=True)
+    gm = k.mean()
+    return k - rm - cm + gm
+
+
+def top_eigvec(k):
+    """Unit top eigenvector of a symmetric matrix."""
+    w, v = np.linalg.eigh(k)
+    return v[:, -1], w[-1]
+
+
+def central_kpca(xs, gamma):
+    """Ground truth alpha_gt: top eigenvector of the centered global Gram."""
+    x = np.concatenate(xs, axis=0)
+    k = center_gram(rbf_gram(x, x, gamma))
+    v, lam = top_eigvec(k)
+    return v, lam, k, x
+
+
+def similarity(alpha_j, k_cross_c, kj_c, alpha_gt, k_global_c):
+    """Paper §6.1 similarity metric (|.| — eigvector sign is arbitrary)."""
+    num = abs(alpha_j @ k_cross_c @ alpha_gt)
+    den = np.sqrt(
+        abs(alpha_j @ kj_c @ alpha_j) * abs(alpha_gt @ k_global_c @ alpha_gt)
+    )
+    return num / max(den, 1e-30)
+
+
+class RefDKPCA:
+    """Decentralized kernel PCA with projection consensus constraints.
+
+    xs: list of J local datasets (N_j, M); adj: list of J neighbor lists
+    (symmetric, connected). Nodes exchange raw data with neighbors at
+    setup (per the paper; optionally noised by the caller beforehand).
+    """
+
+    def __init__(
+        self,
+        xs,
+        adj,
+        gamma,
+        rho1=100.0,
+        rho2=10.0,
+        jitter=1e-5,
+        include_self=True,
+        z_norm="ball",
+        seed=0,
+    ):
+        # z_norm: "ball" follows eq. (11) exactly (project onto ||z|| <= 1
+        # only when outside); "sphere" always renormalises to ||z|| = 1 —
+        # the pre-relaxation constraint of (7). Ball admits the trivial
+        # (alpha, z) = 0 fixed point, which rank-deficient nodes can drag
+        # the relaxed iteration into (Fig. 1(c) ablation); sphere is robust
+        # to that at the cost of slower early convergence.
+        self.xs = [np.asarray(x, dtype=np.float64) for x in xs]
+        self.adj = [list(a) for a in adj]
+        self.gamma = gamma
+        self.rho1 = rho1
+        self.rho2 = rho2
+        self.include_self = include_self
+        self.z_norm = z_norm
+        self.J = len(xs)
+        rng = np.random.default_rng(seed)
+
+        # Constraint set C_j: columns of B/P for node j, in this order.
+        self.cset = [
+            ([j] + self.adj[j]) if include_self else list(self.adj[j])
+            for j in range(self.J)
+        ]
+        # Contributors to z_k == C_k by graph symmetry.
+        self.kc = []     # centered local Gram (no jitter)
+        self.kinv = []   # inverse of jittered centered local Gram
+        for j in range(self.J):
+            kc = center_gram(rbf_gram(self.xs[j], self.xs[j], gamma))
+            self.kc.append(kc)
+            self.kinv.append(
+                np.linalg.inv(kc + jitter * len(self.xs[j]) * np.eye(len(kc)))
+            )
+        # Centered cross-Gram blocks among each z-group (what node k can
+        # compute from the raw data of C_k).
+        self.gz = []
+        for k in range(self.J):
+            grp = self.cset[k]
+            blocks = [
+                [
+                    center_gram(rbf_gram(self.xs[a], self.xs[b], gamma))
+                    for b in grp
+                ]
+                for a in grp
+            ]
+            self.gz.append(np.block(blocks))
+
+        self.alpha = [rng.standard_normal(len(x)) for x in self.xs]
+        self.alpha = [a / np.linalg.norm(a) for a in self.alpha]
+        self.b = [
+            np.zeros((len(self.xs[j]), len(self.cset[j]))) for j in range(self.J)
+        ]
+        # P columns: phi(X_j)^T z_k for k in C_j; start at zero.
+        self.p = [np.zeros_like(b) for b in self.b]
+        self.comm_floats = 0  # §4.2 communication accounting
+
+    def rho_vec(self, j):
+        """Per-constraint penalties for node j's columns (C_j order)."""
+        return np.array(
+            [
+                self.rho1 if (self.include_self and k == j) else self.rho2
+                for k in self.cset[j]
+            ]
+        )
+
+    def s_total(self, k):
+        """sum_{l in contributors(k)} rho_{l,k} (the z-averaging weight)."""
+        tot = 0.0
+        for l in self.cset[k]:
+            tot += self.rho1 if (self.include_self and l == k) else self.rho2
+        return tot
+
+    def z_update(self):
+        """Eqs. (10)/(11), kernelized: returns per-node received P."""
+        p_new = [np.zeros_like(b) for b in self.b]
+        for k in range(self.J):
+            grp = self.cset[k]
+            s_k = self.s_total(k)
+            # Round-A messages into node k: m_{l->k} = B_l[:, idx_l(k)]/S_k
+            # (alpha_l rides along). Build stacked coefficient vector c.
+            cs = []
+            for l in grp:
+                idx = self.cset[l].index(k)
+                m = self.b[l][:, idx] / s_k
+                rho_lk = self.rho1 if (self.include_self and l == k) else self.rho2
+                cs.append(self.kinv[l] @ m + (rho_lk / s_k) * self.alpha[l])
+                if l != k:
+                    self.comm_floats += len(m) + len(self.alpha[l])
+            c = np.concatenate(cs)
+            s = self.gz[k] @ c
+            norm2 = max(float(c @ s), 0.0)
+            if self.z_norm == "sphere":
+                s = s / np.sqrt(max(norm2, 1e-30))
+            elif norm2 > 1.0:
+                s = s / np.sqrt(norm2)
+            # Scatter segments of s back: segment for l is phi(X_l)^T z_k.
+            off = 0
+            for l in grp:
+                n_l = len(self.xs[l])
+                seg = s[off : off + n_l]
+                idx = self.cset[l].index(k)
+                p_new[l][:, idx] = seg
+                if l != k:
+                    self.comm_floats += n_l
+                off += n_l
+        return p_new
+
+    def alpha_eta_update(self):
+        """Eqs. (12)/(13), per node, with per-column rho."""
+        for j in range(self.J):
+            rho = self.rho_vec(j)
+            kc = self.kc[j]
+            a_mat = np.sum(rho) * kc - 2.0 * kc @ kc
+            # Jitter keeps A invertible (centered Gram has a null vector).
+            a_mat += 1e-8 * np.trace(np.abs(a_mat)) / len(kc) * np.eye(len(kc))
+            rhs = np.sum(self.p[j] * rho[None, :] - self.b[j], axis=1)
+            self.alpha[j] = np.linalg.solve(a_mat, rhs)
+            kalpha = kc @ self.alpha[j]
+            self.b[j] = self.b[j] + (kalpha[:, None] - self.p[j]) * rho[None, :]
+
+    def lagrangian(self):
+        """Augmented Lagrangian (8) (true L, not the relaxed U)."""
+        total = 0.0
+        for j in range(self.J):
+            rho = self.rho_vec(j)
+            kc = self.kc[j]
+            ka = kc @ self.alpha[j]
+            total -= float(ka @ ka)
+            proj = self.kinv[j] @ self.p[j]  # K_j^{-1} phi^T z_k columns
+            for col, k in enumerate(self.cset[j]):
+                lin = self.b[j][:, col] @ self.alpha[j] - self.b[j][:, col] @ proj[:, col]
+                quad = (
+                    self.alpha[j] @ ka
+                    - 2.0 * self.alpha[j] @ self.p[j][:, col]
+                    + self.p[j][:, col] @ proj[:, col]
+                )
+                total += lin + 0.5 * rho[col] * max(quad, 0.0)
+        return total
+
+    def step(self):
+        self.p = self.z_update()
+        self.alpha_eta_update()
+
+    def run(self, iters, rho2_schedule=None):
+        """rho2_schedule: list of (start_iter, rho2) pairs (paper §6.1)."""
+        for t in range(iters):
+            if rho2_schedule:
+                for start, val in rho2_schedule:
+                    if t == start:
+                        self.rho2 = val
+            self.step()
+        return self.alpha

@@ -1,0 +1,63 @@
+# pytest: AOT lowering sanity — every artifact lowers to parseable HLO
+# text (the Rust runtime's interchange format) and the manifest describes
+# the shapes the Rust registry keys on. Uses the --small shape set so the
+# suite stays fast; `make artifacts` lowers the full hot-shape set.
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def small_set():
+    return aot.build_artifact_set(
+        feat_dim=8,
+        gram_shapes=[(12, 12), (12, 24)],
+        admm_shapes=[(12, 3)],
+        z_dims=[24],
+        power_dims=[16],
+    )
+
+
+class TestLowering:
+    def test_all_artifacts_lower_to_hlo_text(self, small_set):
+        for name, fn, arg_specs, meta in small_set:
+            lowered = jax.jit(fn).lower(*arg_specs)
+            text = aot.to_hlo_text(lowered)
+            assert text.startswith("HloModule"), name
+            assert "ROOT" in text, name
+
+    def test_gram_artifact_contains_pallas_loop(self, small_set):
+        # interpret=True lowers the Pallas kernel into plain HLO (while
+        # loop over the grid) — verify the kernel actually lowered in.
+        name, fn, arg_specs, _ = small_set[0]
+        text = aot.to_hlo_text(jax.jit(fn).lower(*arg_specs))
+        assert "exponential" in text  # the RBF exp survived lowering
+
+    def test_manifest_shapes_match_specs(self, small_set):
+        for name, fn, arg_specs, meta in small_set:
+            assert len(meta["inputs"]) == len(arg_specs)
+            for shape, spec in zip(meta["inputs"], arg_specs):
+                assert tuple(shape) == tuple(spec.shape), name
+
+
+class TestMainSmall:
+    def test_writes_artifacts_and_manifest(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(
+            "sys.argv",
+            ["aot", "--outdir", str(tmp_path), "--feat-dim", "8", "--small"],
+        )
+        aot.main()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["feat_dim"] == 8
+        assert len(manifest["artifacts"]) > 0
+        for art in manifest["artifacts"]:
+            path = tmp_path / art["file"]
+            assert path.exists(), art["name"]
+            head = path.read_text()[:200]
+            assert head.startswith("HloModule")

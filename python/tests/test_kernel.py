@@ -1,0 +1,186 @@
+# pytest: Pallas kernels vs pure-jnp oracle — the CORE L1 correctness
+# signal. Hypothesis sweeps shapes/gammas/block sizes; explicit cases pin
+# the tile-edge paths (n < block, non-multiple shapes, single row).
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import center as center_k
+from compile.kernels import rbf as rbf_k
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- rbf ---
+
+
+class TestRbfGram:
+    def test_matches_ref_square(self):
+        rng = np.random.default_rng(0)
+        x = _rand(rng, 50, 7)
+        got = rbf_k.rbf_gram(x, x, 0.3)
+        want = ref.rbf_gram_ref(x, x, 0.3)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_matches_ref_rect(self):
+        rng = np.random.default_rng(1)
+        x = _rand(rng, 37, 12)
+        y = _rand(rng, 91, 12)
+        got = rbf_k.rbf_gram(x, y, 0.05)
+        want = ref.rbf_gram_ref(x, y, 0.05)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_diag_is_one(self):
+        # K(x, x) = 1: the paper's normalization requirement (§3.1) holds
+        # for RBF by construction.
+        rng = np.random.default_rng(2)
+        x = _rand(rng, 20, 4)
+        k = rbf_k.rbf_gram(x, x, 1.7)
+        np.testing.assert_allclose(np.diag(k), np.ones(20), atol=1e-5)
+
+    def test_symmetric(self):
+        rng = np.random.default_rng(3)
+        x = _rand(rng, 33, 6)
+        k = np.asarray(rbf_k.rbf_gram(x, x, 0.2))
+        np.testing.assert_allclose(k, k.T, atol=1e-6)
+
+    def test_values_in_unit_interval(self):
+        rng = np.random.default_rng(4)
+        x = _rand(rng, 25, 3)
+        y = _rand(rng, 31, 3)
+        k = np.asarray(rbf_k.rbf_gram(x, y, 0.9))
+        assert (k >= 0).all() and (k <= 1 + 1e-6).all()
+
+    def test_single_row(self):
+        rng = np.random.default_rng(5)
+        x = _rand(rng, 1, 8)
+        y = _rand(rng, 5, 8)
+        got = rbf_k.rbf_gram(x, y, 0.4)
+        want = ref.rbf_gram_ref(x, y, 0.4)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_exact_block_multiple(self):
+        rng = np.random.default_rng(6)
+        x = _rand(rng, 16, 5)
+        y = _rand(rng, 32, 5)
+        got = rbf_k.rbf_gram(x, y, 0.1, block=(16, 16))
+        want = ref.rbf_gram_ref(x, y, 0.1)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_block_bigger_than_input(self):
+        rng = np.random.default_rng(7)
+        x = _rand(rng, 3, 2)
+        got = rbf_k.rbf_gram(x, x, 2.0, block=(128, 128))
+        want = ref.rbf_gram_ref(x, x, 2.0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_f64_inputs_coerced(self):
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.standard_normal((9, 4)))  # f64 -> f32 inside
+        k = rbf_k.rbf_gram(x, x, 0.5)
+        assert k.dtype == jnp.float32
+
+    def test_identical_points_give_one(self):
+        x = jnp.ones((4, 3), dtype=jnp.float32)
+        k = np.asarray(rbf_k.rbf_gram(x, x, 0.8))
+        np.testing.assert_allclose(k, np.ones((4, 4)), rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 70),
+        p=st.integers(1, 70),
+        m=st.integers(1, 20),
+        gamma=st.floats(1e-3, 5.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, n, p, m, gamma, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, n, m)
+        y = _rand(rng, p, m)
+        got = rbf_k.rbf_gram(x, y, gamma, block=(32, 32))
+        want = ref.rbf_gram_ref(x, y, gamma)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- center ---
+
+
+class TestCenterGram:
+    def test_matches_ref_square(self):
+        rng = np.random.default_rng(10)
+        k = _rand(rng, 40, 40)
+        got = center_k.center_gram(k)
+        want = ref.center_gram_ref(k)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_matches_ref_rect(self):
+        rng = np.random.default_rng(11)
+        k = _rand(rng, 23, 57)
+        got = center_k.center_gram(k)
+        want = ref.center_gram_ref(k)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_row_and_col_sums_vanish(self):
+        # Double-centering annihilates both marginals.
+        rng = np.random.default_rng(12)
+        k = _rand(rng, 30, 30)
+        c = np.asarray(center_k.center_gram(k))
+        np.testing.assert_allclose(c.sum(axis=0), 0.0, atol=1e-3)
+        np.testing.assert_allclose(c.sum(axis=1), 0.0, atol=1e-3)
+
+    def test_idempotent(self):
+        rng = np.random.default_rng(13)
+        k = _rand(rng, 25, 25)
+        once = center_k.center_gram(k)
+        twice = center_k.center_gram(once)
+        np.testing.assert_allclose(once, twice, atol=1e-4)
+
+    def test_centered_gram_is_gram_of_centered_features(self):
+        # K_c = (phi - mu)^T (phi - mu) for the linear kernel.
+        rng = np.random.default_rng(14)
+        x = rng.standard_normal((20, 6)).astype(np.float32)
+        k = jnp.asarray(x @ x.T)
+        xc = x - x.mean(axis=0)
+        want = xc @ xc.T
+        got = center_k.center_gram(k)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_single_element(self):
+        k = jnp.asarray([[3.5]], dtype=jnp.float32)
+        got = np.asarray(center_k.center_gram(k))
+        np.testing.assert_allclose(got, [[0.0]], atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 80),
+        p=st.integers(1, 80),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, n, p, seed):
+        rng = np.random.default_rng(seed)
+        k = _rand(rng, n, p)
+        got = center_k.center_gram(k, block=(32, 32))
+        want = ref.center_gram_ref(k)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+# ----------------------------------------------------------- composed ---
+
+
+class TestComposedGram:
+    def test_centered_rbf_pipeline(self):
+        from compile import model
+
+        rng = np.random.default_rng(20)
+        x = _rand(rng, 45, 9)
+        y = _rand(rng, 33, 9)
+        got = model.gram_rbf_centered(x, y, 0.25)
+        want = ref.center_gram_ref(ref.rbf_gram_ref(x, y, 0.25))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,169 @@
+# pytest: Layer-2 graphs vs straightforward NumPy — validates the ADMM
+# update algebra that the Rust coordinator will drive through the AOT
+# artifacts.
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from tests import ref_dkpca as refa
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _sym_psd(rng, n):
+    a = rng.standard_normal((n, n))
+    return (a @ a.T / n).astype(np.float32)
+
+
+class TestAdmmStep:
+    def _numpy_step(self, kj, ainv, p, b, rho):
+        rhs = np.sum(p * rho[None, :] - b, axis=1)
+        alpha = ainv @ rhs
+        b_next = b + (kj @ alpha)[:, None] * rho[None, :] - p * rho[None, :]
+        return alpha, b_next
+
+    def test_matches_numpy(self):
+        rng = np.random.default_rng(0)
+        n, d = 17, 4
+        kj = _sym_psd(rng, n)
+        ainv = _sym_psd(rng, n)
+        p = rng.standard_normal((n, d)).astype(np.float32)
+        b = rng.standard_normal((n, d)).astype(np.float32)
+        rho = np.array([100.0, 10.0, 10.0, 10.0], dtype=np.float32)
+        a_got, b_got = model.admm_step(kj, ainv, p, b, rho)
+        a_want, b_want = self._numpy_step(kj, ainv, p, b, rho)
+        np.testing.assert_allclose(a_got, a_want, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(b_got, b_want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_multiplier_fixed_point(self):
+        # With P = Kj alpha 1^T and B chosen so rhs reproduces alpha, the
+        # eta-update leaves B unchanged (primal feasibility => dual fixed).
+        rng = np.random.default_rng(1)
+        n, d = 11, 3
+        kj = _sym_psd(rng, n)
+        rho = np.full(d, 7.0, dtype=np.float32)
+        ssum = float(rho.sum())
+        a_mat = ssum * kj - 2.0 * kj @ kj
+        a_mat += 1e-6 * np.eye(n, dtype=np.float32)
+        ainv = np.linalg.inv(a_mat).astype(np.float32)
+        alpha = rng.standard_normal(n).astype(np.float32)
+        p = np.tile((kj @ alpha)[:, None], (1, d)).astype(np.float32)
+        b = np.zeros((n, d), dtype=np.float32)
+        a_new, b_new = model.admm_step(kj, ainv, p, b, rho)
+        np.testing.assert_allclose(b_new, (kj @ np.asarray(a_new))[:, None] * rho - p * rho, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(2, 40),
+        d=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, n, d, seed):
+        rng = np.random.default_rng(seed)
+        kj = _sym_psd(rng, n)
+        ainv = _sym_psd(rng, n)
+        p = rng.standard_normal((n, d)).astype(np.float32)
+        b = rng.standard_normal((n, d)).astype(np.float32)
+        rho = rng.uniform(1.0, 100.0, d).astype(np.float32)
+        a_got, b_got = model.admm_step(kj, ainv, p, b, rho)
+        a_want, b_want = self._numpy_step(kj, ainv, p, b, rho)
+        np.testing.assert_allclose(a_got, a_want, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(b_got, b_want, rtol=1e-3, atol=1e-2)
+
+
+class TestZStep:
+    def test_inside_ball_unscaled(self):
+        rng = np.random.default_rng(2)
+        n = 13
+        g = _sym_psd(rng, n) * 1e-4  # tiny Gram -> ||z||^2 < 1
+        c = rng.standard_normal(n).astype(np.float32)
+        s, norm2 = model.z_step(g, c)
+        np.testing.assert_allclose(s, g @ c, rtol=1e-5, atol=1e-6)
+        assert float(norm2) <= 1.0
+
+    def test_outside_ball_projected(self):
+        rng = np.random.default_rng(3)
+        n = 9
+        g = _sym_psd(rng, n) * 50.0
+        c = rng.standard_normal(n).astype(np.float32)
+        s, norm2 = model.z_step(g, c)
+        assert float(norm2) > 1.0
+        np.testing.assert_allclose(
+            np.asarray(s), (g @ c) / np.sqrt(float(norm2)), rtol=1e-4, atol=1e-5
+        )
+
+    def test_norm2_is_quadratic_form(self):
+        rng = np.random.default_rng(4)
+        n = 21
+        g = _sym_psd(rng, n)
+        c = rng.standard_normal(n).astype(np.float32)
+        _, norm2 = model.z_step(g, c)
+        np.testing.assert_allclose(float(norm2), float(c @ g @ c), rtol=1e-4)
+
+    def test_negative_norm_clamped(self):
+        # Indefinite (centered) Gram can push c^T G c below zero.
+        g = jnp.asarray([[-1.0, 0.0], [0.0, -1.0]], dtype=jnp.float32)
+        c = jnp.asarray([1.0, 1.0], dtype=jnp.float32)
+        _, norm2 = model.z_step(g, c)
+        assert float(norm2) == 0.0
+
+
+class TestPowerIter:
+    def test_converges_to_top_eigvec(self):
+        rng = np.random.default_rng(5)
+        n = 30
+        k = _sym_psd(rng, n)
+        v = rng.standard_normal(n).astype(np.float32)
+        v /= np.linalg.norm(v)
+        for _ in range(300):
+            v, rayleigh = model.power_iter_step(k, v)
+        w, vec = np.linalg.eigh(k.astype(np.float64))
+        assert abs(abs(np.asarray(v) @ vec[:, -1]) - 1.0) < 1e-3
+        assert abs(float(rayleigh) - w[-1]) < 1e-3 * abs(w[-1])
+
+    def test_unit_norm_output(self):
+        rng = np.random.default_rng(6)
+        k = _sym_psd(rng, 12)
+        v = rng.standard_normal(12).astype(np.float32)
+        v2, _ = model.power_iter_step(k, v)
+        np.testing.assert_allclose(np.linalg.norm(np.asarray(v2)), 1.0, rtol=1e-5)
+
+
+class TestSimilarity:
+    def test_self_similarity_is_one(self):
+        rng = np.random.default_rng(7)
+        n = 15
+        k = _sym_psd(rng, n)
+        a = rng.standard_normal(n).astype(np.float32)
+        sim = model.similarity(a, k, k, a, k)
+        np.testing.assert_allclose(float(sim), 1.0, rtol=1e-4)
+
+    def test_sign_invariant(self):
+        rng = np.random.default_rng(8)
+        n = 15
+        k = _sym_psd(rng, n)
+        a = rng.standard_normal(n).astype(np.float32)
+        b = rng.standard_normal(n).astype(np.float32)
+        s1 = model.similarity(a, k, k, b, k)
+        s2 = model.similarity(a, k, k, -b, k)
+        np.testing.assert_allclose(float(s1), float(s2), rtol=1e-6)
+
+    def test_matches_numpy_reference(self):
+        rng = np.random.default_rng(9)
+        xs = [rng.standard_normal((12, 3)) for _ in range(2)]
+        gamma = 0.5
+        alpha_gt, _, kg, xg = refa.central_kpca(xs, gamma)
+        kj = refa.center_gram(refa.rbf_gram(xs[0], xs[0], gamma))
+        kx = refa.center_gram(refa.rbf_gram(xs[0], xg, gamma))
+        a = rng.standard_normal(12)
+        want = refa.similarity(a, kx, kj, alpha_gt, kg)
+        got = model.similarity(
+            a.astype(np.float32),
+            kx.astype(np.float32),
+            kj.astype(np.float32),
+            alpha_gt.astype(np.float32),
+            kg.astype(np.float32),
+        )
+        np.testing.assert_allclose(float(got), want, rtol=1e-3)

@@ -1,0 +1,30 @@
+//! Bench: the DESIGN.md ablations in one target —
+//!   FIG1C degenerate-node (ball vs sphere z-normalisation)
+//!   RHO   Theorem-2 Lagrangian behaviour vs penalty
+//!   SELF  §6.1 self-constraint column on/off
+//!   INIT  random vs local-kPCA warm start
+//!
+//!     cargo bench --bench ablations
+
+use dkpca::backend::NativeBackend;
+use dkpca::experiments::ablation;
+use dkpca::metrics::Stopwatch;
+
+fn main() {
+    let sw = Stopwatch::start();
+    let backend = NativeBackend;
+
+    let d = ablation::degenerate(5, 15, 40, &backend, 23);
+    println!("{}", ablation::degenerate_table(&d));
+
+    let r = ablation::rho_sweep(&[10.0, 50.0, 100.0, 500.0, 2000.0], 20, &backend, 17);
+    println!("{}", ablation::rho_table(&r));
+
+    let s = ablation::self_constraint(30, &backend, 29);
+    println!("{}", ablation::self_table(&s));
+
+    let i = ablation::init_sweep(12, 50, &[2026, 7, 123], 60, &backend);
+    println!("{}", ablation::init_table(&i));
+
+    println!("bench wall time: {:.1}s", sw.elapsed_secs());
+}

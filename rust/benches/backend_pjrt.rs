@@ -1,0 +1,77 @@
+//! Bench: per-op latency, native substrate vs PJRT artifacts — the
+//! L1/L2 perf instrument. Run after `make artifacts`.
+//!
+//!     cargo bench --bench backend_pjrt
+//!
+//! Interpretation caveat (DESIGN.md §Hardware-Adaptation): the Pallas
+//! kernel executes in interpret mode inside the artifact, so CPU-PJRT
+//! timings measure the XLA-compiled interpretation, not TPU-Mosaic
+//! performance; the structural VMEM/MXU analysis lives in
+//! EXPERIMENTS.md §Perf.
+
+use dkpca::backend::{ComputeBackend, NativeBackend};
+use dkpca::data::Rng;
+use dkpca::linalg::Matrix;
+use dkpca::metrics::Stopwatch;
+use dkpca::runtime::{default_artifacts_dir, PjrtBackend};
+
+fn rand_matrix(r: usize, c: usize, rng: &mut Rng) -> Matrix {
+    Matrix::from_fn(r, c, |_, _| rng.gauss())
+}
+
+fn time<T>(label: &str, reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    let _ = f();
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        std::hint::black_box(f());
+    }
+    let secs = sw.elapsed_secs() / reps as f64;
+    println!("{label:<46} {:>9.3} ms", secs * 1e3);
+    secs
+}
+
+fn main() {
+    let pjrt = match PjrtBackend::new(&default_artifacts_dir()) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("artifacts not built ({e}); run `make artifacts`");
+            std::process::exit(1);
+        }
+    };
+    let native = NativeBackend;
+    let mut rng = Rng::new(3);
+
+    let x100 = rand_matrix(100, 784, &mut rng);
+    let n1 = time("gram 100x100 m=784        native", 5, || {
+        native.gram_rbf_centered(&x100, &x100, 0.02)
+    });
+    let p1 = time("gram 100x100 m=784        pjrt", 5, || {
+        pjrt.gram_rbf_centered(&x100, &x100, 0.02)
+    });
+
+    let kc = native.gram_rbf_centered(&x100, &x100, 0.02);
+    let p = rand_matrix(100, 5, &mut rng);
+    let b = rand_matrix(100, 5, &mut rng);
+    let rho = vec![100.0, 10.0, 10.0, 10.0, 10.0];
+    let n2 = time("admm_step n=100 d=5       native", 50, || {
+        native.admm_step(&kc, &kc, &p, &b, &rho)
+    });
+    let p2 = time("admm_step n=100 d=5       pjrt", 50, || {
+        pjrt.admm_step(&kc, &kc, &p, &b, &rho)
+    });
+
+    let x500 = rand_matrix(500, 784, &mut rng);
+    let g500 = native.gram_rbf_centered(&x500, &x500, 0.02);
+    let c = rng.gauss_vec(500);
+    let n3 = time("z_step dn=500             native", 50, || native.z_step(&g500, &c));
+    let p3 = time("z_step dn=500             pjrt", 50, || pjrt.z_step(&g500, &c));
+
+    let (hits, misses) = pjrt.stats();
+    println!("\npjrt stats: {hits} artifact hits, {misses} fallbacks");
+    println!(
+        "speedups (pjrt/native): gram {:.2}x, admm {:.2}x, z {:.2}x",
+        n1 / p1,
+        n2 / p2,
+        n3 / p3
+    );
+}

@@ -1,0 +1,17 @@
+//! Bench: §4.2 communication-cost accounting — measured fabric traffic
+//! vs the closed form O(|Omega_j| N) per node per iteration.
+//!
+//!     cargo bench --bench comm_cost
+
+use std::sync::Arc;
+
+use dkpca::backend::NativeBackend;
+use dkpca::experiments::comm;
+use dkpca::metrics::Stopwatch;
+
+fn main() {
+    let sw = Stopwatch::start();
+    let rows = comm::run(20, &[2, 4, 6, 8], &[50, 100, 200], 5, Arc::new(NativeBackend), 0);
+    println!("{}", comm::table(&rows));
+    println!("bench wall time: {:.1}s", sw.elapsed_secs());
+}

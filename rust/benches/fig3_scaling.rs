@@ -1,0 +1,26 @@
+//! Bench: regenerates paper Fig. 3 (similarity + running time vs
+//! network size J; N_j = 100, |Omega| = 4, MNIST-like digits).
+//!
+//!     cargo bench --bench fig3_scaling             # J in {10, 20, 40}
+//!     DKPCA_BENCH_FULL=1 cargo bench --bench fig3_scaling   # paper's {20,40,60,80}
+//!
+//! Paper shape to reproduce: similarity stays high (>= ~0.91 at J=80 in
+//! the paper) and decays only mildly with J, while central kPCA's
+//! running time grows superlinearly and DKPCA's per-node cost stays
+//! flat.
+
+use std::sync::Arc;
+
+use dkpca::backend::NativeBackend;
+use dkpca::experiments::fig3;
+use dkpca::metrics::Stopwatch;
+
+fn main() {
+    let full = std::env::var("DKPCA_BENCH_FULL").is_ok();
+    let counts: &[usize] = if full { &[20, 40, 60, 80] } else { &[10, 20, 40] };
+    eprintln!("fig3_scaling: J in {counts:?} (set DKPCA_BENCH_FULL=1 for the paper set)");
+    let sw = Stopwatch::start();
+    let rows = fig3::run(counts, 100, Arc::new(NativeBackend), 0);
+    println!("{}", fig3::table(&rows));
+    println!("bench wall time: {:.1}s", sw.elapsed_secs());
+}

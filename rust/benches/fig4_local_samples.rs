@@ -1,0 +1,24 @@
+//! Bench: regenerates paper Fig. 4 (similarity of Alg. 1 vs local-only
+//! kPCA as the per-node sample count N_j sweeps; J = 20, |Omega| = 4).
+//!
+//!     cargo bench --bench fig4_local_samples          # N_j in {40, 100, 200}
+//!     DKPCA_BENCH_FULL=1 ... --bench fig4_local_samples  # {40, 100, 200, 300}
+//!
+//! Paper shape: the DKPCA-over-local gain is largest at small N_j and
+//! shrinks as local data suffices.
+
+use std::sync::Arc;
+
+use dkpca::backend::NativeBackend;
+use dkpca::experiments::fig4;
+use dkpca::metrics::Stopwatch;
+
+fn main() {
+    let full = std::env::var("DKPCA_BENCH_FULL").is_ok();
+    let counts: &[usize] = if full { &[40, 100, 200, 300] } else { &[40, 100, 200] };
+    eprintln!("fig4_local_samples: N_j in {counts:?}");
+    let sw = Stopwatch::start();
+    let rows = fig4::run(20, counts, Arc::new(NativeBackend), 0);
+    println!("{}", fig4::table(&rows));
+    println!("bench wall time: {:.1}s", sw.elapsed_secs());
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerates paper Fig. 5 (per-iteration similarity vs
+//! neighbor count |Omega|, against the neighbor-gather baseline;
+//! J = 20, N_j = 100).
+//!
+//!     cargo bench --bench fig5_neighbors              # |Omega| in {2, 4, 8}
+//!     DKPCA_BENCH_FULL=1 ... --bench fig5_neighbors   # {2, 4, 6, 8, 10, 12}
+//!
+//! Paper shape: similarity rises with iterations, overtakes the
+//! gather-all-neighbor-data baseline within a few iterations, and more
+//! neighbors help.
+
+use dkpca::backend::NativeBackend;
+use dkpca::experiments::fig5;
+use dkpca::metrics::Stopwatch;
+
+fn main() {
+    let full = std::env::var("DKPCA_BENCH_FULL").is_ok();
+    let omegas: &[usize] = if full { &[2, 4, 6, 8, 10, 12] } else { &[2, 4, 8] };
+    eprintln!("fig5_neighbors: |Omega| in {omegas:?}");
+    let sw = Stopwatch::start();
+    let rows = fig5::run(20, 100, omegas, 30, &NativeBackend, 0);
+    println!("{}", fig5::table(&rows));
+    println!("bench wall time: {:.1}s", sw.elapsed_secs());
+}

@@ -1,0 +1,81 @@
+//! Bench: S1 linalg microbenchmarks — the perf-pass instrument for the
+//! L3 hot paths (GEMM throughput, Gram assembly, eigensolve, the ADMM
+//! per-iteration ops at hot shapes).
+//!
+//!     cargo bench --bench linalg_micro
+
+use dkpca::backend::{ComputeBackend, NativeBackend};
+use dkpca::data::Rng;
+use dkpca::kernels::{center_gram, gram_sym, Kernel};
+use dkpca::linalg::{eigen_sym, matmul, matmul_nt, Matrix};
+use dkpca::metrics::Stopwatch;
+
+fn rand_matrix(r: usize, c: usize, rng: &mut Rng) -> Matrix {
+    Matrix::from_fn(r, c, |_, _| rng.gauss())
+}
+
+fn time<T>(label: &str, flops: f64, reps: usize, mut f: impl FnMut() -> T) {
+    // Warm up once, then time.
+    let _ = f();
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        std::hint::black_box(f());
+    }
+    let secs = sw.elapsed_secs() / reps as f64;
+    if flops > 0.0 {
+        println!("{label:<42} {:>9.3} ms   {:>7.2} GFLOP/s", secs * 1e3, flops / secs / 1e9);
+    } else {
+        println!("{label:<42} {:>9.3} ms", secs * 1e3);
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let backend = NativeBackend;
+
+    // GEMM at the experiment hot shapes.
+    for n in [100usize, 500, 1000] {
+        let a = rand_matrix(n, n, &mut rng);
+        let b = rand_matrix(n, n, &mut rng);
+        let flops = 2.0 * (n * n * n) as f64;
+        time(&format!("gemm {n}x{n} @ {n}x{n}"), flops, 3, || matmul(&a, &b));
+    }
+
+    // Gram assembly (the L1-equivalent op): N x 784 digits.
+    for n in [100usize, 500] {
+        let x = rand_matrix(n, 784, &mut rng);
+        let flops = 2.0 * (n * n * 784) as f64;
+        time(&format!("rbf gram+center {n}x784"), flops, 3, || {
+            center_gram(&gram_sym(&Kernel::Rbf { gamma: 0.02 }, &x))
+        });
+        let _ = matmul_nt(&x, &x); // keep the symbol hot
+    }
+
+    // Exact eigensolve (node setup cost).
+    for n in [100usize, 300] {
+        let x = rand_matrix(n, 20, &mut rng);
+        let mut g = matmul_nt(&x, &x);
+        g.symmetrize();
+        time(&format!("eigen_sym {n}x{n}"), 0.0, 3, || eigen_sym(&g));
+    }
+
+    // ADMM per-iteration ops at the paper's hot shape (N=100, D=5).
+    let kc = {
+        let x = rand_matrix(100, 784, &mut rng);
+        center_gram(&gram_sym(&Kernel::Rbf { gamma: 0.02 }, &x))
+    };
+    let ainv = kc.clone();
+    let p = rand_matrix(100, 5, &mut rng);
+    let b = rand_matrix(100, 5, &mut rng);
+    let rho = vec![100.0, 10.0, 10.0, 10.0, 10.0];
+    time("admm_step n=100 d=5 (native)", 0.0, 50, || {
+        backend.admm_step(&kc, &ainv, &p, &b, &rho)
+    });
+
+    let g500 = {
+        let x = rand_matrix(500, 784, &mut rng);
+        center_gram(&gram_sym(&Kernel::Rbf { gamma: 0.02 }, &x))
+    };
+    let c = rng.gauss_vec(500);
+    time("z_step dn=500 (native)", 0.0, 50, || backend.z_step(&g500, &c));
+}

@@ -1,0 +1,26 @@
+//! Bench: the §6.2 running-time table — central kPCA vs DKPCA across
+//! network sizes (the paper's headline efficiency claim).
+//!
+//!     cargo bench --bench timing_central_vs_dkpca
+//!     DKPCA_BENCH_FULL=1 ... for the paper-sized sweep
+//!
+//! Paper shape: central grows ~ (J N)^2.. (J N)^3; DKPCA per-node
+//! compute is flat in J. On this single-core host the DKPCA *wall*
+//! clock serialises all J node threads, so the per-node CPU column is
+//! the deployable decentralized metric (see EXPERIMENTS.md).
+
+use std::sync::Arc;
+
+use dkpca::backend::NativeBackend;
+use dkpca::experiments::timing;
+use dkpca::metrics::Stopwatch;
+
+fn main() {
+    let full = std::env::var("DKPCA_BENCH_FULL").is_ok();
+    let counts: &[usize] = if full { &[10, 20, 40, 80] } else { &[10, 20, 40] };
+    eprintln!("timing_central_vs_dkpca: J in {counts:?}");
+    let sw = Stopwatch::start();
+    let rows = timing::run(counts, 100, 30, Arc::new(NativeBackend), 0);
+    println!("{}", timing::table(&rows));
+    println!("bench wall time: {:.1}s", sw.elapsed_secs());
+}

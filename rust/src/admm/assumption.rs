@@ -1,0 +1,59 @@
+//! Assumption 2 (paper §5): the penalty lower bound that guarantees the
+//! augmented-Lagrangian decrease of Theorem 2.
+//!
+//! rho >= [ sqrt(lam1^4 + 8 |Omega_j| lam1 sum_n lam_n^3) + lam1^2 ]
+//!        / ( |Omega_j| lam1 )
+
+/// Lower bound on rho for one node given its centered-Gram spectrum.
+pub fn rho_bound(eigenvalues: &[f64], degree: usize) -> f64 {
+    assert!(degree >= 1, "Alg. 1 requires at least one neighbor");
+    let lam1 = eigenvalues.iter().fold(0.0f64, |m, &v| m.max(v));
+    if lam1 <= 0.0 {
+        return 0.0;
+    }
+    let s3: f64 = eigenvalues.iter().map(|&v| v.abs().powi(3)).sum();
+    let omega = degree as f64;
+    ((lam1.powi(4) + 8.0 * omega * lam1 * s3).sqrt() + lam1 * lam1) / (omega * lam1)
+}
+
+/// Bound over a whole network: the max across nodes.
+pub fn rho_bound_network(spectra: &[(Vec<f64>, usize)]) -> f64 {
+    spectra
+        .iter()
+        .map(|(vals, deg)| rho_bound(vals, *deg))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_spectrum_gives_zero() {
+        assert_eq!(rho_bound(&[0.0, 0.0], 2), 0.0);
+    }
+
+    #[test]
+    fn single_eigenvalue_closed_form() {
+        // lam = [L]: bound = (sqrt(L^4 + 8 O L^4) + L^2) / (O L)
+        //             = L (sqrt(1 + 8 O) + 1) / O.
+        let l = 2.0f64;
+        let o = 4usize;
+        let want = l * ((1.0 + 8.0 * o as f64).sqrt() + 1.0) / o as f64;
+        assert!((rho_bound(&[l], o) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_neighbors_lower_bound() {
+        let vals = vec![3.0, 1.0, 0.5];
+        assert!(rho_bound(&vals, 8) < rho_bound(&vals, 2));
+    }
+
+    #[test]
+    fn network_takes_max() {
+        let a = (vec![1.0], 2usize);
+        let b = (vec![5.0, 2.0], 2usize);
+        let net = rho_bound_network(&[a.clone(), b.clone()]);
+        assert_eq!(net, rho_bound(&b.0, 2).max(rho_bound(&a.0, 2)));
+    }
+}

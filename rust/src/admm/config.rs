@@ -1,0 +1,117 @@
+//! DKPCA-ADMM hyper-parameters (paper §6.1 defaults).
+
+/// z-feasibility handling in the z-update.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ZNorm {
+    /// Eq. (11) exactly: project onto `||z|| <= 1` only when outside.
+    /// Admits the trivial fixed point (see the Fig. 1(c) ablation).
+    Ball,
+    /// Always renormalise to `||z|| = 1` — the pre-relaxation constraint
+    /// of problem (7); robust to rank-deficient nodes.
+    Sphere,
+}
+
+/// alpha initialisation strategy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Init {
+    /// Random unit vector (the paper's Alg. 1 as printed). The
+    /// consensus iteration is nonconvex: from a random start it can
+    /// lock onto a lower principal component (see the INIT ablation).
+    Random,
+    /// Warm start from the local kPCA top eigenvector — free (the setup
+    /// already eigendecomposes K_j) and places every node in the basin
+    /// of the global top component.
+    LocalKpca,
+}
+
+/// Hyper-parameters of Alg. 1.
+#[derive(Clone, Debug)]
+pub struct AdmmConfig {
+    /// Penalty for the self projection constraint (§6.1: rho^(1) = 100).
+    pub rho1: f64,
+    /// Schedule for the neighbor-constraint penalty rho^(2): pairs of
+    /// (start iteration, value). §6.1: 10 -> 50 (iter 10) -> 100 (iter 20).
+    pub rho2_schedule: Vec<(usize, f64)>,
+    /// Include the self-constraint column (the rho^(1) constraint of
+    /// §6.1). `false` reproduces Alg. 1 exactly as printed.
+    pub include_self: bool,
+    /// z-update feasibility mode.
+    pub z_norm: ZNorm,
+    /// Relative spectral cutoff for the truncated pseudo-inverse of the
+    /// centered local Grams (`K_j^{-1}` and the alpha-update inverse).
+    /// Centering makes K_j exactly singular, so some regularisation is
+    /// mandatory; 1e-6 sits above the f32 artifact noise floor (the AOT
+    /// Grams are f32) and the result is insensitive to the exact value
+    /// between 1e-6 and 1e-2 (rcond sweep, EXPERIMENTS.md).
+    pub pinv_rcond: f64,
+    /// Maximum ADMM iterations.
+    pub max_iters: usize,
+    /// Stop when `max_j ||alpha_j^(t+1) - alpha_j^(t)||_inf /
+    /// max(1, ||alpha_j||_inf)` drops below this (0 disables).
+    pub tol: f64,
+    /// Seed for the alpha initialisation.
+    pub seed: u64,
+    /// alpha initialisation strategy.
+    pub init: Init,
+}
+
+impl Default for AdmmConfig {
+    fn default() -> Self {
+        AdmmConfig {
+            rho1: 100.0,
+            rho2_schedule: vec![(0, 10.0), (10, 50.0), (20, 100.0)],
+            include_self: true,
+            z_norm: ZNorm::Ball,
+            pinv_rcond: 1e-6,
+            max_iters: 30,
+            tol: 0.0,
+            seed: 0,
+            init: Init::LocalKpca,
+        }
+    }
+}
+
+impl AdmmConfig {
+    /// rho^(2) in force at iteration `t`.
+    pub fn rho2_at(&self, t: usize) -> f64 {
+        let mut val = self
+            .rho2_schedule
+            .first()
+            .map(|&(_, v)| v)
+            .expect("empty rho2 schedule");
+        for &(start, v) in &self.rho2_schedule {
+            if t >= start {
+                val = v;
+            }
+        }
+        val
+    }
+
+    /// Distinct (first-iteration, rho2) stages in order.
+    pub fn stages(&self) -> &[(usize, f64)] {
+        &self.rho2_schedule
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper() {
+        let c = AdmmConfig::default();
+        assert_eq!(c.rho1, 100.0);
+        assert_eq!(c.rho2_at(0), 10.0);
+        assert_eq!(c.rho2_at(9), 10.0);
+        assert_eq!(c.rho2_at(10), 50.0);
+        assert_eq!(c.rho2_at(25), 100.0);
+        assert!(c.include_self);
+    }
+
+    #[test]
+    fn single_stage_schedule() {
+        let c = AdmmConfig { rho2_schedule: vec![(0, 42.0)], ..Default::default() };
+        assert_eq!(c.rho2_at(0), 42.0);
+        assert_eq!(c.rho2_at(1000), 42.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! S5 — the paper's contribution: DKPCA via ADMM with projection
+//! consensus constraints (Alg. 1).
+
+pub mod assumption;
+pub mod config;
+pub mod lagrangian;
+pub mod node;
+pub mod solver;
+
+pub use config::{AdmmConfig, Init, ZNorm};
+pub use lagrangian::lagrangian;
+pub use node::{NodeState, RoundA, RoundB};
+pub use solver::{DkpcaResult, DkpcaSolver};

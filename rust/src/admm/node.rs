@@ -1,0 +1,457 @@
+//! Per-node DKPCA state and the kernelized Alg. 1 updates.
+//!
+//! A node j holds:
+//!   * its own data X_j and exact centered Gram `kc`,
+//!   * (possibly noisy) copies of each neighbor's data, exchanged once
+//!     at setup (Alg. 1 "Distributes X_j to neighbors"),
+//!   * the z-host state for its own z_j: the group Gram `gz` over
+//!     {X_l : l in contributors(j)} and each contributor's truncated
+//!     Gram pseudo-inverse,
+//!   * the ADMM variables alpha (N), B = phi^T eta (N x D) and
+//!     P = phi^T z (N x D), one column per constraint in `cset` order.
+//!
+//! One eigendecomposition of `kc` at setup yields BOTH the truncated
+//! pseudo-inverse K_j^+ and, per rho stage, the alpha-update inverse
+//! (sum(rho) K - 2 K^2)^+ analytically (shared eigenbasis) — see
+//! DESIGN.md §Perf.
+
+use crate::backend::ComputeBackend;
+use crate::data::Rng;
+use crate::kernels::{center_gram, gram, Kernel};
+
+/// Centered Gram block through the backend when possible (the RBF path
+/// is the AOT-artifact hot-spot; other kernels use the native path).
+fn gram_centered_via(
+    backend: &dyn ComputeBackend,
+    kernel: &Kernel,
+    x: &Matrix,
+    y: &Matrix,
+) -> Matrix {
+    match *kernel {
+        Kernel::Rbf { gamma } => backend.gram_rbf_centered(x, y, gamma),
+        _ => center_gram(&gram(kernel, x, y)),
+    }
+}
+use crate::linalg::eigen::eigen_sym;
+use crate::linalg::ops::normalize;
+use crate::linalg::Matrix;
+
+use super::config::{AdmmConfig, ZNorm};
+
+/// Round-A payload from node `from` toward the z-host `to`:
+/// the sender's current alpha plus the B column for constraint `to`.
+#[derive(Clone, Debug)]
+pub struct RoundA {
+    pub alpha: Vec<f64>,
+    pub bcol: Vec<f64>,
+}
+
+/// Round-B payload: the segment `phi(X_to)^T z_from`.
+#[derive(Clone, Debug)]
+pub struct RoundB {
+    pub segment: Vec<f64>,
+}
+
+/// Eigendecomposition bundle of a centered Gram (shared basis for all
+/// spectral operators derived from it).
+struct SpectralGram {
+    values: Vec<f64>,
+    vectors: Matrix,
+    lmax: f64,
+}
+
+impl SpectralGram {
+    fn new(kc: &Matrix) -> SpectralGram {
+        let eig = eigen_sym(kc);
+        let lmax = eig.values.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        SpectralGram { values: eig.values, vectors: eig.vectors, lmax }
+    }
+
+    /// `V f(lambda) V^T` with directions below `cutoff` dropped.
+    fn apply_spectrum(&self, cutoff: f64, f: impl Fn(f64) -> f64) -> Matrix {
+        let n = self.values.len();
+        let mut out = Matrix::zeros(n, n);
+        for k in 0..n {
+            let lam = self.values[k];
+            if lam.abs() <= cutoff {
+                continue;
+            }
+            let g = f(lam);
+            if !g.is_finite() {
+                continue;
+            }
+            let v = self.vectors.col(k);
+            for i in 0..n {
+                let vi = v[i] * g;
+                if vi == 0.0 {
+                    continue;
+                }
+                let row = out.row_mut(i);
+                for (jj, &vj) in v.iter().enumerate() {
+                    row[jj] += vi * vj;
+                }
+            }
+        }
+        out
+    }
+
+    fn pinv(&self, rcond: f64) -> Matrix {
+        let cutoff = (rcond * self.lmax).max(self.lmax * 1e-14);
+        self.apply_spectrum(cutoff, |lam| 1.0 / lam)
+    }
+}
+
+/// Full per-node state.
+pub struct NodeState {
+    pub id: usize,
+    pub n: usize,
+    /// Constraint set C_j: z ids, self first when `include_self`.
+    pub cset: Vec<usize>,
+    /// Neighbors Omega_j (cset minus self).
+    pub neighbors: Vec<usize>,
+    /// Exact centered local Gram.
+    pub kc: Matrix,
+    /// Truncated pseudo-inverse of `kc`.
+    pub kinv: Matrix,
+    /// z-host group Gram over contributors' data (cset order).
+    pub gz: Matrix,
+    /// Sample count per contributor (cset order).
+    pub contrib_sizes: Vec<usize>,
+    /// Truncated pinv of each contributor's centered Gram, computed
+    /// from the (noisy) data this node received (cset order).
+    pub contrib_kinv: Vec<Matrix>,
+    /// ADMM variables.
+    pub alpha: Vec<f64>,
+    pub alpha_prev: Vec<f64>,
+    pub b: Matrix,
+    pub p: Matrix,
+    /// Spectral bundle for rebuilding the alpha-update inverse.
+    spectral: SpectralGram,
+    a_inv: Matrix,
+    a_inv_rho_sum: f64,
+    cfg: AdmmConfig,
+}
+
+impl NodeState {
+    /// Construct node `id`.
+    ///
+    /// `received`: the (noisy) data copies of every neighbor, in
+    /// `neighbors` order — what the setup exchange delivered.
+    pub fn new(
+        id: usize,
+        x_own: &Matrix,
+        neighbors: Vec<usize>,
+        received: &[Matrix],
+        kernel: &Kernel,
+        cfg: &AdmmConfig,
+        backend: &dyn ComputeBackend,
+    ) -> NodeState {
+        assert_eq!(neighbors.len(), received.len());
+        assert!(!neighbors.is_empty(), "Alg. 1 requires |Omega_j| >= 1");
+        let n = x_own.rows();
+        let mut cset = Vec::with_capacity(neighbors.len() + 1);
+        if cfg.include_self {
+            cset.push(id);
+        }
+        cset.extend_from_slice(&neighbors);
+
+        let mut kc = gram_centered_via(backend, kernel, x_own, x_own);
+        kc.symmetrize();
+        let spectral = SpectralGram::new(&kc);
+        let kinv = spectral.pinv(cfg.pinv_rcond);
+
+        // z-host group: contributors(id) == cset (graph symmetry).
+        // Data per contributor: own exact, neighbors as received.
+        let datasets: Vec<&Matrix> = cset
+            .iter()
+            .map(|&l| {
+                if l == id {
+                    x_own
+                } else {
+                    let pos = neighbors.iter().position(|&q| q == l).unwrap();
+                    &received[pos]
+                }
+            })
+            .collect();
+        let contrib_sizes: Vec<usize> = datasets.iter().map(|d| d.rows()).collect();
+        // Centered cross-Gram blocks (paper §6.1 centering per block).
+        let blocks: Vec<Vec<Matrix>> = datasets
+            .iter()
+            .map(|a| {
+                datasets
+                    .iter()
+                    .map(|bm| gram_centered_via(backend, kernel, a, bm))
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<Vec<&Matrix>> =
+            blocks.iter().map(|row| row.iter().collect()).collect();
+        let gz = Matrix::from_blocks(&refs);
+        let contrib_kinv: Vec<Matrix> = cset
+            .iter()
+            .zip(&datasets)
+            .map(|(&l, d)| {
+                if l == id {
+                    kinv.clone()
+                } else {
+                    let mut kcl = gram_centered_via(backend, kernel, d, d);
+                    kcl.symmetrize();
+                    SpectralGram::new(&kcl).pinv(cfg.pinv_rcond)
+                }
+            })
+            .collect();
+
+        let mut alpha = match cfg.init {
+            super::config::Init::Random => {
+                let mut rng =
+                    Rng::new(cfg.seed.wrapping_add(id as u64).wrapping_mul(0x9E37));
+                rng.gauss_vec(n)
+            }
+            // Warm start: top eigenvector of the local centered Gram
+            // (eigen_sym sorts ascending -> last column).
+            super::config::Init::LocalKpca => spectral.vectors.col(n - 1),
+        };
+        normalize(&mut alpha);
+        let d = cset.len();
+        NodeState {
+            id,
+            n,
+            cset,
+            neighbors,
+            kc,
+            kinv,
+            gz,
+            contrib_sizes,
+            contrib_kinv,
+            alpha_prev: alpha.clone(),
+            alpha,
+            b: Matrix::zeros(n, d),
+            p: Matrix::zeros(n, d),
+            spectral,
+            a_inv: Matrix::zeros(0, 0),
+            a_inv_rho_sum: f64::NAN,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Column index of z id `k` in this node's constraint set.
+    pub fn col_of(&self, k: usize) -> usize {
+        self.cset.iter().position(|&c| c == k).expect("unknown constraint id")
+    }
+
+    /// Per-constraint penalties in `cset` order for the given rho2.
+    pub fn rho_vec(&self, rho2: f64) -> Vec<f64> {
+        self.cset
+            .iter()
+            .map(|&k| if self.cfg.include_self && k == self.id { self.cfg.rho1 } else { rho2 })
+            .collect()
+    }
+
+    /// `S_j = sum_l rho_{l,j}` over contributors of this node's own z.
+    pub fn s_total(&self, rho2: f64) -> f64 {
+        let self_part = if self.cfg.include_self { self.cfg.rho1 } else { 0.0 };
+        self_part + self.neighbors.len() as f64 * rho2
+    }
+
+    /// Round-A message toward z-host `to` (a neighbor).
+    pub fn round_a_message(&self, to: usize) -> RoundA {
+        RoundA { alpha: self.alpha.clone(), bcol: self.b.col(self.col_of(to)) }
+    }
+
+    /// z-update for this node's own z (eqs. 10/11): consumes round-A
+    /// payloads from every neighbor (plus the implicit self payload)
+    /// and produces one round-B segment per contributor, in `cset`
+    /// order (the self segment is applied by the caller too).
+    pub fn z_solve(
+        &self,
+        msgs: &[(usize, RoundA)],
+        rho2: f64,
+        backend: &dyn ComputeBackend,
+    ) -> Vec<(usize, RoundB)> {
+        let s_k = self.s_total(rho2);
+        let total: usize = self.contrib_sizes.iter().sum();
+        let mut c = Vec::with_capacity(total);
+        for (pos, &l) in self.cset.iter().enumerate() {
+            let (alpha_l, bcol_l, rho_lk): (&[f64], Vec<f64>, f64) = if l == self.id {
+                (
+                    &self.alpha,
+                    self.b.col(self.col_of(self.id)),
+                    self.cfg.rho1,
+                )
+            } else {
+                let (_, msg) = msgs
+                    .iter()
+                    .find(|(from, _)| *from == l)
+                    .unwrap_or_else(|| panic!("missing round-A message from {l}"));
+                (&msg.alpha, msg.bcol.clone(), rho2)
+            };
+            assert_eq!(alpha_l.len(), self.contrib_sizes[pos], "size mismatch from {l}");
+            // c_l = K_l^+ (bcol / S) + (rho_lk / S) alpha_l
+            let scaled: Vec<f64> = bcol_l.iter().map(|v| v / s_k).collect();
+            let mut cl = crate::linalg::ops::matvec(&self.contrib_kinv[pos], &scaled);
+            let w = rho_lk / s_k;
+            for (ci, &ai) in cl.iter_mut().zip(alpha_l) {
+                *ci += w * ai;
+            }
+            c.extend_from_slice(&cl);
+        }
+        let (mut s, norm2) = backend.z_step(&self.gz, &c);
+        if self.cfg.z_norm == ZNorm::Sphere && norm2 <= 1.0 {
+            // Backend applied the ball rule; lift onto the sphere.
+            let inv = 1.0 / norm2.max(1e-30).sqrt();
+            for v in s.iter_mut() {
+                *v *= inv;
+            }
+        }
+        // Scatter segments per contributor.
+        let mut out = Vec::with_capacity(self.cset.len());
+        let mut off = 0;
+        for (pos, &l) in self.cset.iter().enumerate() {
+            let n_l = self.contrib_sizes[pos];
+            out.push((l, RoundB { segment: s[off..off + n_l].to_vec() }));
+            off += n_l;
+        }
+        out
+    }
+
+    /// Deliver a round-B segment: `phi(X_self)^T z_from`.
+    pub fn receive_z(&mut self, from_z: usize, seg: &RoundB) {
+        assert_eq!(seg.segment.len(), self.n);
+        let col = self.col_of(from_z);
+        self.p.set_col(col, &seg.segment);
+    }
+
+    /// alpha-update (12) + eta-update (13) through the backend.
+    pub fn local_update(&mut self, rho2: f64, backend: &dyn ComputeBackend) {
+        let rho = self.rho_vec(rho2);
+        let rho_sum: f64 = rho.iter().sum();
+        if self.a_inv.rows() != self.n
+            || (rho_sum - self.a_inv_rho_sum).abs() > 1e-12 * rho_sum.max(1.0)
+        {
+            self.rebuild_a_inv(rho_sum);
+        }
+        let (alpha, b_next) = backend.admm_step(&self.kc, &self.a_inv, &self.p, &self.b, &rho);
+        self.alpha_prev = std::mem::replace(&mut self.alpha, alpha);
+        self.b = b_next;
+    }
+
+    /// `(sum(rho) K - 2 K^2)^+` in the shared eigenbasis.
+    fn rebuild_a_inv(&mut self, rho_sum: f64) {
+        let lmax = self.spectral.lmax;
+        let cutoff = (self.cfg.pinv_rcond * lmax).max(lmax * 1e-14);
+        self.a_inv = self.spectral.apply_spectrum(cutoff, |lam| {
+            let den = rho_sum * lam - 2.0 * lam * lam;
+            if den.abs() < 1e-14 * lmax * lmax.max(1.0) {
+                0.0
+            } else {
+                1.0 / den
+            }
+        });
+        self.a_inv_rho_sum = rho_sum;
+    }
+
+    /// Relative infinity-norm change of alpha in the last update.
+    pub fn alpha_delta(&self) -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 1.0f64;
+        for (a, b) in self.alpha.iter().zip(&self.alpha_prev) {
+            num = num.max((a - b).abs());
+            den = den.max(a.abs());
+        }
+        num / den
+    }
+
+    /// Assumption-2 lower bound on rho for this node's Gram spectrum.
+    pub fn assumption2_bound(&self) -> f64 {
+        super::assumption::rho_bound(&self.spectral.values, self.neighbors.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    fn toy_nodes() -> Vec<NodeState> {
+        // 3-node complete graph over tiny 2-D blobs.
+        let kernel = Kernel::Rbf { gamma: 0.5 };
+        let cfg = AdmmConfig::default();
+        let mut rng = Rng::new(1);
+        let xs: Vec<Matrix> =
+            (0..3).map(|_| Matrix::from_fn(6, 2, |_, _| rng.gauss())).collect();
+        (0..3)
+            .map(|j| {
+                let nbrs: Vec<usize> = (0..3).filter(|&q| q != j).collect();
+                let recv: Vec<Matrix> = nbrs.iter().map(|&q| xs[q].clone()).collect();
+                NodeState::new(j, &xs[j], nbrs, &recv, &kernel, &cfg, &NativeBackend)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn construction_shapes() {
+        let nodes = toy_nodes();
+        for node in &nodes {
+            assert_eq!(node.cset.len(), 3); // self + 2 neighbors
+            assert_eq!(node.cset[0], node.id);
+            assert_eq!(node.b.cols(), 3);
+            assert_eq!(node.gz.rows(), 18); // 3 contributors x 6 samples
+            assert_eq!(node.kinv.rows(), 6);
+            assert!((crate::linalg::ops::norm2(&node.alpha) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rho_vec_and_s_total() {
+        let nodes = toy_nodes();
+        let rho = nodes[0].rho_vec(10.0);
+        assert_eq!(rho, vec![100.0, 10.0, 10.0]);
+        assert_eq!(nodes[0].s_total(10.0), 120.0);
+    }
+
+    #[test]
+    fn one_iteration_runs_and_is_finite() {
+        let mut nodes = toy_nodes();
+        let backend = NativeBackend;
+        // Round A.
+        let mut inbox: Vec<Vec<(usize, RoundA)>> = vec![Vec::new(); 3];
+        for node in &nodes {
+            for &to in &node.neighbors {
+                inbox[to].push((node.id, node.round_a_message(to)));
+            }
+        }
+        // z-solve + scatter.
+        let mut segments: Vec<Vec<(usize, usize, RoundB)>> = Vec::new();
+        for (k, node) in nodes.iter().enumerate() {
+            let outs = node.z_solve(&inbox[k], 10.0, &backend);
+            segments.push(outs.into_iter().map(|(l, seg)| (k, l, seg)).collect());
+        }
+        for batch in segments {
+            for (from_z, to, seg) in batch {
+                nodes[to].receive_z(from_z, &seg);
+            }
+        }
+        for node in nodes.iter_mut() {
+            node.local_update(10.0, &backend);
+            assert!(node.alpha.iter().all(|v| v.is_finite()));
+            assert!(node.b.is_finite());
+        }
+    }
+
+    #[test]
+    fn col_of_roundtrip() {
+        let nodes = toy_nodes();
+        for node in &nodes {
+            for (i, &k) in node.cset.iter().enumerate() {
+                assert_eq!(node.col_of(k), i);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown constraint")]
+    fn col_of_unknown_panics() {
+        let nodes = toy_nodes();
+        let _ = nodes[0].col_of(99);
+    }
+}

@@ -1,0 +1,247 @@
+//! Sequential in-process driver for Alg. 1 — the reference execution
+//! path. It performs exactly the message pattern of the decentralized
+//! protocol (setup data exchange, round A, z-solve, round B, local
+//! update) in one thread; `coordinator::` runs the same node code on
+//! real parallel actors.
+
+use crate::backend::ComputeBackend;
+use crate::data::NoiseModel;
+use crate::kernels::Kernel;
+use crate::linalg::Matrix;
+use crate::topology::Graph;
+
+use super::config::AdmmConfig;
+use super::node::{NodeState, RoundA};
+
+/// Outcome of a DKPCA run.
+pub struct DkpcaResult {
+    /// Final per-node dual coefficients alpha_j.
+    pub alphas: Vec<Vec<f64>>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Floats transmitted over the (simulated) network, total.
+    pub comm_floats: u64,
+}
+
+/// Sequential solver holding the node states.
+pub struct DkpcaSolver {
+    pub nodes: Vec<NodeState>,
+    pub cfg: AdmmConfig,
+    pub comm_floats: u64,
+}
+
+impl DkpcaSolver {
+    /// Build the network: distributes each node's data to its neighbors
+    /// through the noise model (one independent noisy copy per directed
+    /// edge, as over a physical channel), then constructs node states.
+    pub fn new(
+        xs: &[Matrix],
+        graph: &Graph,
+        kernel: &Kernel,
+        cfg: &AdmmConfig,
+        noise: NoiseModel,
+        noise_seed: u64,
+    ) -> DkpcaSolver {
+        Self::new_with_backend(xs, graph, kernel, cfg, noise, noise_seed, &crate::backend::NativeBackend)
+    }
+
+    /// Build with setup Gram assembly routed through `backend` (the L1
+    /// artifact hot path).
+    pub fn new_with_backend(
+        xs: &[Matrix],
+        graph: &Graph,
+        kernel: &Kernel,
+        cfg: &AdmmConfig,
+        noise: NoiseModel,
+        noise_seed: u64,
+        backend: &dyn ComputeBackend,
+    ) -> DkpcaSolver {
+        assert_eq!(xs.len(), graph.len(), "one dataset per node");
+        assert!(graph.is_connected(), "Assumption 1: connected network");
+        assert!(graph.min_degree_one(), "Alg. 1 needs |Omega_j| >= 1");
+        let nodes = (0..xs.len())
+            .map(|j| {
+                let nbrs = graph.neighbors(j).to_vec();
+                let received: Vec<Matrix> = nbrs
+                    .iter()
+                    .map(|&l| {
+                        // Edge (l -> j) channel seed.
+                        let seed = noise_seed
+                            .wrapping_mul(0x9E3779B97F4A7C15)
+                            .wrapping_add((l * graph.len() + j) as u64);
+                        noise.apply(&xs[l], seed)
+                    })
+                    .collect();
+                NodeState::new(j, &xs[j], nbrs, &received, kernel, cfg, backend)
+            })
+            .collect();
+        DkpcaSolver { nodes, cfg: cfg.clone(), comm_floats: 0 }
+    }
+
+    /// One full ADMM iteration (both communication rounds + updates).
+    pub fn step(&mut self, t: usize, backend: &dyn ComputeBackend) {
+        let rho2 = self.cfg.rho2_at(t);
+        let j = self.nodes.len();
+
+        // Round A: alpha + B column toward each neighboring z-host.
+        let mut inbox: Vec<Vec<(usize, RoundA)>> = vec![Vec::new(); j];
+        for node in &self.nodes {
+            for &to in &node.neighbors {
+                let msg = node.round_a_message(to);
+                self.comm_floats += (msg.alpha.len() + msg.bcol.len()) as u64;
+                inbox[to].push((node.id, msg));
+            }
+        }
+
+        // z-solve at every host, scatter round-B segments.
+        let mut deliveries = Vec::new();
+        for (k, node) in self.nodes.iter().enumerate() {
+            for (l, seg) in node.z_solve(&inbox[k], rho2, backend) {
+                if l != k {
+                    self.comm_floats += seg.segment.len() as u64;
+                }
+                deliveries.push((k, l, seg));
+            }
+        }
+        for (from_z, to, seg) in deliveries {
+            self.nodes[to].receive_z(from_z, &seg);
+        }
+
+        // Local alpha/eta updates.
+        for node in self.nodes.iter_mut() {
+            node.local_update(rho2, backend);
+        }
+    }
+
+    /// Max relative alpha change across nodes for the last step.
+    pub fn max_alpha_delta(&self) -> f64 {
+        self.nodes.iter().map(|n| n.alpha_delta()).fold(0.0, f64::max)
+    }
+
+    /// Run to completion with a per-iteration observer.
+    pub fn run_with(
+        &mut self,
+        backend: &dyn ComputeBackend,
+        mut observer: impl FnMut(usize, &[NodeState]),
+    ) -> DkpcaResult {
+        let mut iterations = 0;
+        let mut converged = false;
+        for t in 0..self.cfg.max_iters {
+            self.step(t, backend);
+            iterations = t + 1;
+            observer(t, &self.nodes);
+            if self.cfg.tol > 0.0 && self.max_alpha_delta() < self.cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+        DkpcaResult {
+            alphas: self.nodes.iter().map(|n| n.alpha.clone()).collect(),
+            iterations,
+            converged,
+            comm_floats: self.comm_floats,
+        }
+    }
+
+    /// Run to completion.
+    pub fn run(&mut self, backend: &dyn ComputeBackend) -> DkpcaResult {
+        self.run_with(backend, |_, _| {})
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::synth::{blob_centers, sample_blobs, BlobSpec};
+    use crate::data::Rng;
+
+    fn blob_network(j: usize, n: usize, seed: u64) -> Vec<Matrix> {
+        let spec = BlobSpec::default();
+        let centers = blob_centers(&spec, seed);
+        let mut rng = Rng::new(seed + 1);
+        (0..j)
+            .map(|_| sample_blobs(&spec, &centers, n, None, &mut rng).0)
+            .collect()
+    }
+
+    #[test]
+    fn runs_and_produces_finite_alphas() {
+        let xs = blob_network(5, 10, 3);
+        let graph = Graph::ring(5, 1);
+        let cfg = AdmmConfig { max_iters: 5, ..Default::default() };
+        let mut solver = DkpcaSolver::new(
+            &xs,
+            &graph,
+            &Kernel::Rbf { gamma: 0.1 },
+            &cfg,
+            NoiseModel::None,
+            0,
+        );
+        let res = solver.run(&NativeBackend);
+        assert_eq!(res.iterations, 5);
+        assert_eq!(res.alphas.len(), 5);
+        assert!(res
+            .alphas
+            .iter()
+            .all(|a| a.iter().all(|v| v.is_finite())));
+    }
+
+    #[test]
+    fn comm_accounting_matches_formula() {
+        // §4.2: round A moves 2N floats per directed edge, round B N.
+        let (j, n, k) = (6usize, 8usize, 1usize);
+        let xs = blob_network(j, n, 5);
+        let graph = Graph::ring(j, k);
+        let cfg = AdmmConfig { max_iters: 1, ..Default::default() };
+        let mut solver = DkpcaSolver::new(
+            &xs,
+            &graph,
+            &Kernel::Rbf { gamma: 0.1 },
+            &cfg,
+            NoiseModel::None,
+            0,
+        );
+        let res = solver.run(&NativeBackend);
+        let directed_edges = (j * 2 * k) as u64;
+        assert_eq!(res.comm_floats, directed_edges * (3 * n) as u64);
+    }
+
+    #[test]
+    fn tol_early_stop() {
+        let xs = blob_network(4, 8, 7);
+        let graph = Graph::ring(4, 1);
+        let cfg = AdmmConfig {
+            max_iters: 500,
+            tol: 1e-6,
+            rho2_schedule: vec![(0, 100.0)],
+            ..Default::default()
+        };
+        let mut solver = DkpcaSolver::new(
+            &xs,
+            &graph,
+            &Kernel::Rbf { gamma: 0.1 },
+            &cfg,
+            NoiseModel::None,
+            0,
+        );
+        let res = solver.run(&NativeBackend);
+        assert!(res.converged, "should reach tol before 500 iters");
+        assert!(res.iterations < 500);
+    }
+
+    #[test]
+    #[should_panic(expected = "Assumption 1")]
+    fn disconnected_rejected() {
+        let xs = blob_network(4, 6, 9);
+        let graph = Graph::from_edges(4, &[(0, 1), (2, 3)]);
+        let _ = DkpcaSolver::new(
+            &xs,
+            &graph,
+            &Kernel::Rbf { gamma: 0.1 },
+            &AdmmConfig::default(),
+            NoiseModel::None,
+            0,
+        );
+    }
+}

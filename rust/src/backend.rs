@@ -1,0 +1,217 @@
+//! Compute-backend abstraction: every numerical hot-spot of Alg. 1 goes
+//! through this trait so the coordinator can run identically on the
+//! native linalg substrate (S1) or on the AOT-compiled PJRT artifacts
+//! (S8, `runtime::PjrtBackend`). Integration tests cross-check the two.
+
+use crate::kernels::{center_gram_inplace, gram, Kernel};
+use crate::linalg::ops::{dot, matvec, normalize};
+use crate::linalg::{matmul, Matrix};
+
+/// The four compute graphs of DESIGN.md's artifact set.
+pub trait ComputeBackend: Send + Sync {
+    /// Centered RBF Gram block between datasets (rows = samples).
+    fn gram_rbf_centered(&self, x: &Matrix, y: &Matrix, gamma: f64) -> Matrix;
+
+    /// z-update (10) + ball projection (11): given the group Gram `g`
+    /// (DN x DN) and stacked coefficients `c`, returns
+    /// (s = projections, already ball-projected; norm2 = ||z_hat||^2).
+    fn z_step(&self, g: &Matrix, c: &[f64]) -> (Vec<f64>, f64);
+
+    /// Fused alpha-update (12) + eta-update (13): returns (alpha',
+    /// B'). `rho` carries one penalty per constraint column.
+    fn admm_step(
+        &self,
+        kc: &Matrix,
+        ainv: &Matrix,
+        p: &Matrix,
+        b: &Matrix,
+        rho: &[f64],
+    ) -> (Vec<f64>, Matrix);
+
+    /// One power-iteration step: (v' = Kv/||Kv||, rayleigh = v^T K v).
+    fn power_iter_step(&self, k: &Matrix, v: &[f64]) -> (Vec<f64>, f64);
+
+    /// Human-readable backend name (for reports).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend over the S1 linalg substrate.
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl ComputeBackend for NativeBackend {
+    fn gram_rbf_centered(&self, x: &Matrix, y: &Matrix, gamma: f64) -> Matrix {
+        let mut k = gram(&Kernel::Rbf { gamma }, x, y);
+        center_gram_inplace(&mut k);
+        k
+    }
+
+    fn z_step(&self, g: &Matrix, c: &[f64]) -> (Vec<f64>, f64) {
+        let mut s = matvec(g, c);
+        let norm2 = dot(c, &s).max(0.0);
+        if norm2 > 1.0 {
+            let inv = 1.0 / norm2.sqrt();
+            for v in s.iter_mut() {
+                *v *= inv;
+            }
+        }
+        (s, norm2)
+    }
+
+    fn admm_step(
+        &self,
+        kc: &Matrix,
+        ainv: &Matrix,
+        p: &Matrix,
+        b: &Matrix,
+        rho: &[f64],
+    ) -> (Vec<f64>, Matrix) {
+        let (n, d) = (p.rows(), p.cols());
+        assert_eq!(rho.len(), d);
+        // rhs = sum_k (rho_k P[:,k] - B[:,k])
+        let mut rhs = vec![0.0; n];
+        for i in 0..n {
+            let prow = p.row(i);
+            let brow = b.row(i);
+            let mut acc = 0.0;
+            for k in 0..d {
+                acc += rho[k] * prow[k] - brow[k];
+            }
+            rhs[i] = acc;
+        }
+        let alpha = matvec(ainv, &rhs);
+        let kalpha = matvec(kc, &alpha);
+        let mut b_next = b.clone();
+        for i in 0..n {
+            let ka = kalpha[i];
+            let prow = p.row(i);
+            // SAFETY of indexing: same shape as p by construction.
+            let brow = b_next.row_mut(i);
+            for k in 0..d {
+                brow[k] += rho[k] * (ka - prow[k]);
+            }
+        }
+        (alpha, b_next)
+    }
+
+    fn power_iter_step(&self, k: &Matrix, v: &[f64]) -> (Vec<f64>, f64) {
+        let mut w = matvec(k, v);
+        let rayleigh = dot(v, &w);
+        normalize(&mut w);
+        (w, rayleigh)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Reference (unfused, obviously-correct) implementations used by
+/// tests to pin the backend contract.
+pub mod reference {
+    use super::*;
+
+    /// alpha-update (12) + eta-update (13) via explicit matrices.
+    pub fn admm_step_ref(
+        kc: &Matrix,
+        ainv: &Matrix,
+        p: &Matrix,
+        b: &Matrix,
+        rho: &[f64],
+    ) -> (Vec<f64>, Matrix) {
+        let d = p.cols();
+        let rho_diag = Matrix::diag(rho);
+        let scaled = matmul(p, &rho_diag);
+        let diff = crate::linalg::ops::sub(&scaled, b);
+        let rhs: Vec<f64> = (0..p.rows())
+            .map(|i| diff.row(i).iter().sum::<f64>())
+            .collect();
+        let alpha = matvec(ainv, &rhs);
+        let kalpha = matvec(kc, &alpha);
+        let mut b_next = b.clone();
+        for i in 0..p.rows() {
+            for k in 0..d {
+                b_next[(i, k)] += rho[k] * (kalpha[i] - p[(i, k)]);
+            }
+        }
+        (alpha, b_next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn rand_matrix(r: usize, c: usize, rng: &mut Rng) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.gauss())
+    }
+
+    fn spd(n: usize, rng: &mut Rng) -> Matrix {
+        let a = rand_matrix(n, n, rng);
+        let mut g = matmul(&a, &a.transpose());
+        g.symmetrize();
+        g
+    }
+
+    #[test]
+    fn admm_step_matches_reference() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            let (n, d) = (3 + rng.below(20), 1 + rng.below(6));
+            let kc = spd(n, &mut rng);
+            let ainv = spd(n, &mut rng);
+            let p = rand_matrix(n, d, &mut rng);
+            let b = rand_matrix(n, d, &mut rng);
+            let rho: Vec<f64> = (0..d).map(|_| 1.0 + rng.uniform() * 99.0).collect();
+            let nb = NativeBackend;
+            let (a1, b1) = nb.admm_step(&kc, &ainv, &p, &b, &rho);
+            let (a2, b2) = reference::admm_step_ref(&kc, &ainv, &p, &b, &rho);
+            for (x, y) in a1.iter().zip(&a2) {
+                assert!((x - y).abs() < 1e-10);
+            }
+            for (x, y) in b1.as_slice().iter().zip(b2.as_slice()) {
+                assert!((x - y).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn z_step_ball_projection() {
+        let nb = NativeBackend;
+        let mut rng = Rng::new(2);
+        let g = spd(8, &mut rng);
+        let c = rng.gauss_vec(8);
+        let (s, norm2) = nb.z_step(&g, &c);
+        let want = matvec(&g, &c);
+        if norm2 > 1.0 {
+            for (x, y) in s.iter().zip(&want) {
+                assert!((x - y / norm2.sqrt()).abs() < 1e-12);
+            }
+        } else {
+            assert_eq!(s, want);
+        }
+        assert!((norm2 - dot(&c, &want).max(0.0)).abs() < 1e-9 * norm2.max(1.0));
+    }
+
+    #[test]
+    fn gram_rbf_centered_marginals_vanish() {
+        let nb = NativeBackend;
+        let mut rng = Rng::new(3);
+        let x = rand_matrix(9, 4, &mut rng);
+        let k = nb.gram_rbf_centered(&x, &x, 0.5);
+        for i in 0..9 {
+            assert!(k.row(i).iter().sum::<f64>().abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn power_step_unit_norm() {
+        let nb = NativeBackend;
+        let mut rng = Rng::new(4);
+        let k = spd(7, &mut rng);
+        let v = rng.gauss_vec(7);
+        let (v2, _) = nb.power_iter_step(&k, &v);
+        assert!((crate::linalg::ops::norm2(&v2) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,179 @@
+//! S6 — baselines and the §6.1 evaluation metric.
+//!
+//! * central kPCA: the ground truth `alpha_gt` (top eigenvector of the
+//!   centered global Gram) the paper compares against;
+//! * local kPCA: `(alpha_j)_local`, each node alone (Fig. 4 baseline);
+//! * neighbor-gather kPCA: `(alpha_j)_Nei`, node + raw neighbor data
+//!   pooled (Fig. 5 baseline);
+//! * the similarity metric.
+
+use crate::kernels::{center_gram, gram, gram_sym, Kernel};
+use crate::linalg::ops::dot;
+use crate::linalg::{top_eig, Matrix};
+
+/// Central kPCA solution over the full dataset.
+pub struct CentralKpca {
+    /// Top eigenvector of the centered global Gram (the paper's
+    /// alpha_gt, unit norm — the metric is scale-invariant).
+    pub alpha: Vec<f64>,
+    /// Its eigenvalue.
+    pub lambda: f64,
+    /// Centered global Gram (kept for similarity evaluation).
+    pub kc: Matrix,
+    /// The concatenated dataset (row order = node order).
+    pub x: Matrix,
+}
+
+/// Solve central kPCA on the concatenation of all node datasets.
+pub fn central_kpca(xs: &[Matrix], kernel: &Kernel) -> CentralKpca {
+    let refs: Vec<&Matrix> = xs.iter().collect();
+    let x = Matrix::vstack(&refs);
+    let kc = center_gram(&gram_sym(kernel, &x));
+    let (lambda, alpha) = top_eig(&kc);
+    CentralKpca { alpha, lambda, kc, x }
+}
+
+/// Local-only kPCA at one node: top eigenvector of its centered Gram.
+pub fn local_kpca(x: &Matrix, kernel: &Kernel) -> Vec<f64> {
+    let kc = center_gram(&gram_sym(kernel, x));
+    top_eig(&kc).1
+}
+
+/// Neighbor-gather baseline `(alpha_j)_Nei`: pool the node's own data
+/// with all neighbor data and run kPCA on the pool. Returns (pooled
+/// data, alpha over the pool).
+pub fn neighbor_gather_kpca(
+    xs: &[Matrix],
+    node: usize,
+    neighbors: &[usize],
+    kernel: &Kernel,
+) -> (Matrix, Vec<f64>) {
+    let mut parts: Vec<&Matrix> = vec![&xs[node]];
+    parts.extend(neighbors.iter().map(|&q| &xs[q]));
+    let pooled = Matrix::vstack(&parts);
+    let alpha = local_kpca(&pooled, kernel);
+    (pooled, alpha)
+}
+
+/// Paper §6.1 similarity of `w = phi(X_w) alpha_w` to the central
+/// solution: |alpha_w^T K_c(X_w, X) alpha_gt| / sqrt(...); absolute
+/// value because eigvector sign is arbitrary.
+pub fn similarity(
+    alpha_w: &[f64],
+    x_w: &Matrix,
+    central: &CentralKpca,
+    kernel: &Kernel,
+) -> f64 {
+    let k_cross = center_gram(&gram(kernel, x_w, &central.x));
+    let k_w = center_gram(&gram_sym(kernel, x_w));
+    let num = dot(alpha_w, &crate::linalg::ops::matvec(&k_cross, &central.alpha)).abs();
+    let den_w = dot(alpha_w, &crate::linalg::ops::matvec(&k_w, alpha_w)).abs();
+    let den_g = dot(
+        &central.alpha,
+        &crate::linalg::ops::matvec(&central.kc, &central.alpha),
+    )
+    .abs();
+    num / (den_w * den_g).sqrt().max(1e-30)
+}
+
+/// Mean similarity of per-node solutions against the central solution.
+pub fn mean_similarity(
+    alphas: &[Vec<f64>],
+    xs: &[Matrix],
+    central: &CentralKpca,
+    kernel: &Kernel,
+) -> f64 {
+    assert_eq!(alphas.len(), xs.len());
+    let total: f64 = alphas
+        .iter()
+        .zip(xs)
+        .map(|(a, x)| similarity(a, x, central, kernel))
+        .sum();
+    total / alphas.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blob_centers, sample_blobs, BlobSpec};
+    use crate::data::Rng;
+
+    const K: Kernel = Kernel::Rbf { gamma: 0.1 };
+
+    fn blobs(j: usize, n: usize, seed: u64) -> Vec<Matrix> {
+        let spec = BlobSpec::default();
+        let centers = blob_centers(&spec, seed);
+        let mut rng = Rng::new(seed + 1);
+        (0..j)
+            .map(|_| sample_blobs(&spec, &centers, n, None, &mut rng).0)
+            .collect()
+    }
+
+    #[test]
+    fn central_self_similarity_is_one() {
+        let xs = blobs(3, 10, 1);
+        let c = central_kpca(&xs, &K);
+        // The central solution evaluated as "node" holding all data.
+        let sim = similarity(&c.alpha, &c.x, &c, &K);
+        assert!((sim - 1.0).abs() < 1e-8, "sim {sim}");
+    }
+
+    #[test]
+    fn similarity_sign_invariant() {
+        let xs = blobs(3, 10, 2);
+        let c = central_kpca(&xs, &K);
+        let a = local_kpca(&xs[0], &K);
+        let neg: Vec<f64> = a.iter().map(|v| -v).collect();
+        let s1 = similarity(&a, &xs[0], &c, &K);
+        let s2 = similarity(&neg, &xs[0], &c, &K);
+        assert!((s1 - s2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn local_similarity_reasonable_on_shared_mixture() {
+        // Nodes sampling the same mixture should find similar top
+        // directions.
+        let xs = blobs(4, 40, 3);
+        let c = central_kpca(&xs, &K);
+        for x in &xs {
+            let a = local_kpca(x, &K);
+            let s = similarity(&a, x, &c, &K);
+            assert!(s > 0.8, "local sim unexpectedly low: {s}");
+        }
+    }
+
+    #[test]
+    fn neighbor_gather_beats_local_under_skew() {
+        // Heterogeneous nodes: pooling neighbors improves similarity.
+        let spec = BlobSpec::default();
+        let centers = blob_centers(&spec, 4);
+        let mut rng = Rng::new(5);
+        let xs: Vec<Matrix> = (0..4)
+            .map(|j| {
+                let w = if j % 2 == 0 { [0.9, 0.1] } else { [0.1, 0.9] };
+                sample_blobs(&spec, &centers, 15, Some(&w), &mut rng).0
+            })
+            .collect();
+        let c = central_kpca(&xs, &K);
+        let mut local_mean = 0.0;
+        let mut gather_mean = 0.0;
+        for j in 0..4 {
+            let nbrs: Vec<usize> = (0..4).filter(|&q| q != j).collect();
+            let a_local = local_kpca(&xs[j], &K);
+            local_mean += similarity(&a_local, &xs[j], &c, &K);
+            let (pool, a_nei) = neighbor_gather_kpca(&xs, j, &nbrs, &K);
+            gather_mean += similarity(&a_nei, &pool, &c, &K);
+        }
+        assert!(
+            gather_mean > local_mean,
+            "gather {gather_mean} <= local {local_mean}"
+        );
+    }
+
+    #[test]
+    fn central_lambda_positive() {
+        let xs = blobs(2, 12, 7);
+        let c = central_kpca(&xs, &K);
+        assert!(c.lambda > 0.0);
+    }
+}

@@ -1,0 +1,291 @@
+//! S9 — experiment configuration: a JSON-backed config system feeding
+//! the CLI launcher (`dkpca run --config file.json`). Every field has a
+//! paper-faithful default so `{}` is a valid config.
+
+use crate::admm::{AdmmConfig, Init, ZNorm};
+use crate::data::NoiseModel;
+use crate::kernels::Kernel;
+use crate::util::json::Json;
+
+/// Dataset family for an experiment.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSpec {
+    /// MNIST-like synthetic digits (paper §6.1 substitution), digits
+    /// {0, 3, 5, 8}.
+    MnistLike { feat_gamma: f64 },
+    /// Low-dimensional Gaussian blobs (fast smoke/config tests).
+    Blobs { dim: usize, skew: f64, gamma: f64 },
+}
+
+/// Topology family.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TopoSpec {
+    /// Ring with `k` neighbors per side (paper: k = 2 -> |Omega| = 4).
+    Ring { k: usize },
+    Complete,
+    Star,
+    Random { avg_degree: f64 },
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Number of network nodes J.
+    pub nodes: usize,
+    /// Samples per node N_j.
+    pub samples_per_node: usize,
+    pub data: DataSpec,
+    pub topo: TopoSpec,
+    pub admm: AdmmConfig,
+    pub noise: NoiseModel,
+    /// Run the decentralized protocol on parallel OS threads
+    /// (coordinator) instead of the sequential reference driver.
+    pub parallel: bool,
+    /// Use the PJRT artifact backend when artifacts cover the shapes.
+    pub use_pjrt: bool,
+    /// Master seed (data, init, channels derive from it).
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            nodes: 20,
+            samples_per_node: 100,
+            data: DataSpec::MnistLike { feat_gamma: 0.02 },
+            topo: TopoSpec::Ring { k: 2 },
+            // Sphere z-normalisation + 40 iterations: the robust
+            // defaults for MNIST-scale spectra (see experiments::
+            // paper_admm and the FIG1C ablation); AdmmConfig::default()
+            // itself stays paper-literal (ball rule of eq. 11).
+            admm: AdmmConfig {
+                z_norm: ZNorm::Sphere,
+                max_iters: 40,
+                ..AdmmConfig::default()
+            },
+            noise: NoiseModel::None,
+            parallel: false,
+            use_pjrt: false,
+            seed: 0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Kernel implied by the data spec.
+    pub fn kernel(&self) -> Kernel {
+        match self.data {
+            DataSpec::MnistLike { feat_gamma } => Kernel::Rbf { gamma: feat_gamma },
+            DataSpec::Blobs { gamma, .. } => Kernel::Rbf { gamma },
+        }
+    }
+
+    /// Parse from JSON text; unknown fields are rejected (typo guard).
+    pub fn from_json(text: &str) -> Result<ExperimentConfig, String> {
+        let j = Json::parse(text)?;
+        let obj = match &j {
+            Json::Obj(m) => m,
+            _ => return Err("config must be a JSON object".into()),
+        };
+        let known = [
+            "nodes",
+            "samples_per_node",
+            "data",
+            "topo",
+            "admm",
+            "noise",
+            "parallel",
+            "use_pjrt",
+            "seed",
+        ];
+        for key in obj.keys() {
+            if !known.contains(&key.as_str()) {
+                return Err(format!("unknown config field '{key}'"));
+            }
+        }
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = j.get("nodes") {
+            cfg.nodes = v.as_usize().ok_or("nodes must be a number")?;
+        }
+        if let Some(v) = j.get("samples_per_node") {
+            cfg.samples_per_node = v.as_usize().ok_or("samples_per_node must be a number")?;
+        }
+        if let Some(v) = j.get("seed") {
+            cfg.seed = v.as_f64().ok_or("seed must be a number")? as u64;
+        }
+        if let Some(v) = j.get("parallel") {
+            cfg.parallel = v.as_bool().ok_or("parallel must be a bool")?;
+        }
+        if let Some(v) = j.get("use_pjrt") {
+            cfg.use_pjrt = v.as_bool().ok_or("use_pjrt must be a bool")?;
+        }
+        if let Some(d) = j.get("data") {
+            cfg.data = parse_data(d)?;
+        }
+        if let Some(t) = j.get("topo") {
+            cfg.topo = parse_topo(t)?;
+        }
+        if let Some(n) = j.get("noise") {
+            cfg.noise = parse_noise(n)?;
+        }
+        if let Some(a) = j.get("admm") {
+            cfg.admm = parse_admm(a, cfg.admm.clone())?;
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&text)
+    }
+}
+
+fn parse_data(j: &Json) -> Result<DataSpec, String> {
+    match j.field("kind")?.as_str() {
+        Some("mnist_like") => Ok(DataSpec::MnistLike {
+            feat_gamma: j.get("gamma").and_then(Json::as_f64).unwrap_or(0.02),
+        }),
+        Some("blobs") => Ok(DataSpec::Blobs {
+            dim: j.get("dim").and_then(Json::as_usize).unwrap_or(5),
+            skew: j.get("skew").and_then(Json::as_f64).unwrap_or(0.0),
+            gamma: j.get("gamma").and_then(Json::as_f64).unwrap_or(0.1),
+        }),
+        other => Err(format!("unknown data kind {other:?}")),
+    }
+}
+
+fn parse_topo(j: &Json) -> Result<TopoSpec, String> {
+    match j.field("kind")?.as_str() {
+        Some("ring") => Ok(TopoSpec::Ring {
+            k: j.get("k").and_then(Json::as_usize).unwrap_or(2),
+        }),
+        Some("complete") => Ok(TopoSpec::Complete),
+        Some("star") => Ok(TopoSpec::Star),
+        Some("random") => Ok(TopoSpec::Random {
+            avg_degree: j.get("avg_degree").and_then(Json::as_f64).unwrap_or(4.0),
+        }),
+        other => Err(format!("unknown topo kind {other:?}")),
+    }
+}
+
+fn parse_noise(j: &Json) -> Result<NoiseModel, String> {
+    match j.field("kind")?.as_str() {
+        Some("none") => Ok(NoiseModel::None),
+        Some("gaussian") => Ok(NoiseModel::Gaussian {
+            sigma: j.get("sigma").and_then(Json::as_f64).unwrap_or(0.01),
+        }),
+        Some("quantize") => Ok(NoiseModel::Quantize {
+            levels: j.get("levels").and_then(Json::as_usize).unwrap_or(256) as u32,
+        }),
+        other => Err(format!("unknown noise kind {other:?}")),
+    }
+}
+
+fn parse_admm(j: &Json, base: AdmmConfig) -> Result<AdmmConfig, String> {
+    let mut cfg = base;
+    if let Some(v) = j.get("rho1") {
+        cfg.rho1 = v.as_f64().ok_or("rho1 must be a number")?;
+    }
+    if let Some(v) = j.get("rho2_schedule") {
+        let arr = v.as_arr().ok_or("rho2_schedule must be an array")?;
+        let mut sched = Vec::new();
+        for pair in arr {
+            let p = pair.as_arr().ok_or("rho2_schedule entries are [iter, value]")?;
+            if p.len() != 2 {
+                return Err("rho2_schedule entries are [iter, value]".into());
+            }
+            sched.push((
+                p[0].as_usize().ok_or("bad schedule iter")?,
+                p[1].as_f64().ok_or("bad schedule value")?,
+            ));
+        }
+        cfg.rho2_schedule = sched;
+    }
+    if let Some(v) = j.get("include_self") {
+        cfg.include_self = v.as_bool().ok_or("include_self must be a bool")?;
+    }
+    if let Some(v) = j.get("z_norm") {
+        cfg.z_norm = match v.as_str() {
+            Some("ball") => ZNorm::Ball,
+            Some("sphere") => ZNorm::Sphere,
+            other => return Err(format!("unknown z_norm {other:?}")),
+        };
+    }
+    if let Some(v) = j.get("pinv_rcond") {
+        cfg.pinv_rcond = v.as_f64().ok_or("pinv_rcond must be a number")?;
+    }
+    if let Some(v) = j.get("max_iters") {
+        cfg.max_iters = v.as_usize().ok_or("max_iters must be a number")?;
+    }
+    if let Some(v) = j.get("tol") {
+        cfg.tol = v.as_f64().ok_or("tol must be a number")?;
+    }
+    if let Some(v) = j.get("seed") {
+        cfg.seed = v.as_f64().ok_or("seed must be a number")? as u64;
+    }
+    if let Some(v) = j.get("init") {
+        cfg.init = match v.as_str() {
+            Some("random") => Init::Random,
+            Some("local_kpca") => Init::LocalKpca,
+            other => return Err(format!("unknown init {other:?}")),
+        };
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_object_gives_paper_defaults() {
+        let cfg = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(cfg.nodes, 20);
+        assert_eq!(cfg.samples_per_node, 100);
+        assert_eq!(cfg.topo, TopoSpec::Ring { k: 2 });
+        assert_eq!(cfg.admm.rho1, 100.0);
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{
+              "nodes": 8, "samples_per_node": 50, "seed": 3,
+              "parallel": true, "use_pjrt": true,
+              "data": {"kind": "blobs", "dim": 4, "skew": 0.5, "gamma": 0.2},
+              "topo": {"kind": "random", "avg_degree": 3.5},
+              "noise": {"kind": "gaussian", "sigma": 0.05},
+              "admm": {"rho1": 50, "rho2_schedule": [[0, 5], [10, 25]],
+                        "z_norm": "sphere", "max_iters": 12, "tol": 0.001}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.nodes, 8);
+        assert!(cfg.parallel && cfg.use_pjrt);
+        assert_eq!(cfg.data, DataSpec::Blobs { dim: 4, skew: 0.5, gamma: 0.2 });
+        assert_eq!(cfg.topo, TopoSpec::Random { avg_degree: 3.5 });
+        assert_eq!(cfg.noise, NoiseModel::Gaussian { sigma: 0.05 });
+        assert_eq!(cfg.admm.rho2_schedule, vec![(0, 5.0), (10, 25.0)]);
+        assert_eq!(cfg.admm.z_norm, ZNorm::Sphere);
+        assert_eq!(cfg.admm.max_iters, 12);
+    }
+
+    #[test]
+    fn unknown_field_rejected() {
+        let err = ExperimentConfig::from_json(r#"{"nodez": 3}"#).unwrap_err();
+        assert!(err.contains("nodez"));
+    }
+
+    #[test]
+    fn bad_nested_kind_rejected() {
+        assert!(ExperimentConfig::from_json(r#"{"data": {"kind": "what"}}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"topo": {"kind": 7}}"#).is_err());
+    }
+
+    #[test]
+    fn kernel_from_data_spec() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.kernel(), Kernel::Rbf { gamma: 0.02 });
+    }
+}

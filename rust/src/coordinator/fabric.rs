@@ -1,0 +1,198 @@
+//! Message fabric: one mpsc link per directed edge with byte/float
+//! accounting — the in-process stand-in for the paper's MPI network
+//! (DESIGN.md §Substitutions).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::topology::Graph;
+
+use super::message::{Envelope, Payload, Phase};
+
+/// Per-directed-edge traffic counters (floats transmitted).
+pub struct TrafficStats {
+    /// Indexed by `from * n + to`.
+    counters: Vec<AtomicU64>,
+    n: usize,
+}
+
+impl TrafficStats {
+    fn new(n: usize) -> TrafficStats {
+        TrafficStats { counters: (0..n * n).map(|_| AtomicU64::new(0)).collect(), n }
+    }
+
+    pub fn record(&self, from: usize, to: usize, floats: u64) {
+        self.counters[from * self.n + to].fetch_add(floats, Ordering::Relaxed);
+    }
+
+    pub fn edge(&self, from: usize, to: usize) -> u64 {
+        self.counters[from * self.n + to].load(Ordering::Relaxed)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counters.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Floats sent by one node across all its links.
+    pub fn sent_by(&self, node: usize) -> u64 {
+        (0..self.n).map(|to| self.edge(node, to)).sum()
+    }
+}
+
+/// One node's endpoint: senders to each neighbor plus its own receiver.
+pub struct Endpoint {
+    pub id: usize,
+    rx: Receiver<Envelope>,
+    tx: HashMap<usize, Sender<Envelope>>,
+    stats: Arc<TrafficStats>,
+    /// Out-of-order stash (messages for future phases/iterations).
+    stash: Vec<Envelope>,
+}
+
+impl Endpoint {
+    /// Send an envelope to a neighbor (panics on unknown link —
+    /// the topology defines who may talk to whom).
+    pub fn send(&self, to: usize, env: Envelope) {
+        self.stats.record(self.id, to, env.floats());
+        self.tx
+            .get(&to)
+            .unwrap_or_else(|| panic!("node {} has no link to {to}", self.id))
+            .send(env)
+            .expect("link closed");
+    }
+
+    /// Receive exactly `count` messages of the given (iter, phase),
+    /// stashing anything that arrives early.
+    pub fn collect(&mut self, iter: usize, phase: Phase, count: usize) -> Vec<Envelope> {
+        let mut got = Vec::with_capacity(count);
+        // Drain matching messages from the stash first.
+        let mut rest = Vec::new();
+        for env in self.stash.drain(..) {
+            if env.iter == iter && env.phase == phase && got.len() < count {
+                got.push(env);
+            } else {
+                rest.push(env);
+            }
+        }
+        self.stash = rest;
+        while got.len() < count {
+            let env = self.rx.recv().expect("fabric disconnected");
+            if env.iter == iter && env.phase == phase {
+                got.push(env);
+            } else {
+                self.stash.push(env);
+            }
+        }
+        got
+    }
+}
+
+/// Build endpoints for every node of the graph.
+pub fn build_fabric(graph: &Graph) -> (Vec<Endpoint>, Arc<TrafficStats>) {
+    let n = graph.len();
+    let stats = Arc::new(TrafficStats::new(n));
+    let mut senders: Vec<Sender<Envelope>> = Vec::with_capacity(n);
+    let mut receivers: Vec<Option<Receiver<Envelope>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(Some(rx));
+    }
+    let endpoints = (0..n)
+        .map(|id| {
+            let tx: HashMap<usize, Sender<Envelope>> = graph
+                .neighbors(id)
+                .iter()
+                .map(|&q| (q, senders[q].clone()))
+                .collect();
+            Endpoint {
+                id,
+                rx: receivers[id].take().unwrap(),
+                tx,
+                stats: stats.clone(),
+                stash: Vec::new(),
+            }
+        })
+        .collect();
+    (endpoints, stats)
+}
+
+/// Convenience constructors for envelopes.
+pub fn data_env(from: usize, m: crate::linalg::Matrix) -> Envelope {
+    Envelope { from, iter: 0, phase: Phase::Setup, payload: Payload::Data(m) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::{RoundA, RoundB};
+
+    fn round_a(from: usize, iter: usize, len: usize) -> Envelope {
+        Envelope {
+            from,
+            iter,
+            phase: Phase::RoundA,
+            payload: Payload::A(RoundA { alpha: vec![0.0; len], bcol: vec![0.0; len] }),
+        }
+    }
+
+    #[test]
+    fn point_to_point_delivery() {
+        let g = Graph::ring(3, 1);
+        let (mut eps, stats) = build_fabric(&g);
+        let e2 = eps.remove(2);
+        let mut e1 = eps.remove(1);
+        let e0 = eps.remove(0);
+        e0.send(1, round_a(0, 0, 4));
+        e2.send(1, round_a(2, 0, 4));
+        let got = e1.collect(0, Phase::RoundA, 2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(stats.edge(0, 1), 8);
+        assert_eq!(stats.edge(2, 1), 8);
+        assert_eq!(stats.total(), 16);
+    }
+
+    #[test]
+    fn out_of_order_messages_stashed() {
+        let g = Graph::from_edges(2, &[(0, 1)]);
+        let (mut eps, _) = build_fabric(&g);
+        let mut e1 = eps.remove(1);
+        let e0 = eps.remove(0);
+        // Send iter-1 round A before iter-0 round B.
+        e0.send(1, round_a(0, 1, 3));
+        e0.send(
+            1,
+            Envelope {
+                from: 0,
+                iter: 0,
+                phase: Phase::RoundB,
+                payload: Payload::B(RoundB { segment: vec![1.0; 3] }),
+            },
+        );
+        let b = e1.collect(0, Phase::RoundB, 1);
+        assert_eq!(b.len(), 1);
+        let a = e1.collect(1, Phase::RoundA, 1);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].from, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no link")]
+    fn non_edge_send_rejected() {
+        let g = Graph::ring(4, 1); // 0-2 are not neighbors
+        let (eps, _) = build_fabric(&g);
+        eps[0].send(2, round_a(0, 0, 1));
+    }
+
+    #[test]
+    fn per_node_sent_accounting() {
+        let g = Graph::complete(3);
+        let (eps, stats) = build_fabric(&g);
+        eps[0].send(1, round_a(0, 0, 5));
+        eps[0].send(2, round_a(0, 0, 5));
+        assert_eq!(stats.sent_by(0), 20);
+        assert_eq!(stats.sent_by(1), 0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Typed message fabric payloads exchanged between node actors.
+
+use crate::admm::{RoundA, RoundB};
+use crate::linalg::Matrix;
+
+/// Protocol phase tag (messages are matched by (iter, phase)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Setup raw-data exchange.
+    Setup,
+    /// Alpha + multiplier column toward a z-host.
+    RoundA,
+    /// z projections back from a z-host.
+    RoundB,
+}
+
+/// One envelope on a directed link.
+#[derive(Debug)]
+pub struct Envelope {
+    pub from: usize,
+    pub iter: usize,
+    pub phase: Phase,
+    pub payload: Payload,
+}
+
+/// Message payloads.
+#[derive(Debug)]
+pub enum Payload {
+    /// Raw (noisy) dataset copy, setup only.
+    Data(Matrix),
+    A(RoundA),
+    B(RoundB),
+}
+
+impl Envelope {
+    /// Payload size in transmitted floats (the §4.2 accounting unit).
+    pub fn floats(&self) -> u64 {
+        match &self.payload {
+            Payload::Data(m) => (m.rows() * m.cols()) as u64,
+            Payload::A(a) => (a.alpha.len() + a.bcol.len()) as u64,
+            Payload::B(b) => b.segment.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_accounting() {
+        let e = Envelope {
+            from: 0,
+            iter: 0,
+            phase: Phase::RoundA,
+            payload: Payload::A(RoundA { alpha: vec![0.0; 7], bcol: vec![0.0; 7] }),
+        };
+        assert_eq!(e.floats(), 14);
+        let d = Envelope {
+            from: 1,
+            iter: 0,
+            phase: Phase::Setup,
+            payload: Payload::Data(Matrix::zeros(3, 5)),
+        };
+        assert_eq!(d.floats(), 15);
+    }
+}

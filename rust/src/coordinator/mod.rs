@@ -1,0 +1,13 @@
+//! S7 — the decentralized runtime: node actors on OS threads, a typed
+//! point-to-point message fabric with traffic accounting and channel
+//! noise, and the run driver. This is the "truly parallel architecture"
+//! of the paper's §6 (MPI cluster -> in-process actor network, DESIGN.md
+//! §Substitutions).
+
+pub mod driver;
+pub mod fabric;
+pub mod message;
+
+pub use driver::{run_decentralized, RunReport};
+pub use fabric::{build_fabric, TrafficStats};
+pub use message::{Envelope, Payload, Phase};

@@ -1,0 +1,212 @@
+//! MNIST-like synthetic digit generator (DESIGN.md §Substitutions).
+//!
+//! No network access is available to download the real MNIST files, so
+//! we synthesise a 784-dimensional dataset with the properties the
+//! paper's experiments rely on: a small number of class-structured
+//! dominant directions (strokes) plus a broad noise floor, yielding the
+//! same kind of Gram-spectrum decay. Digits are drawn on a 28 x 28
+//! canvas from per-class stroke templates with random thickness jitter,
+//! translation, and pixel noise — deterministic in the seed.
+
+use super::rng::Rng;
+use crate::linalg::Matrix;
+
+pub const SIDE: usize = 28;
+pub const DIM: usize = SIDE * SIDE;
+
+/// Stroke-segment templates per digit class (coarse 7-segment-like
+/// geometry on the 28x28 canvas; enough to give classes distinct,
+/// low-rank structure). Each stroke is ((x0, y0), (x1, y1)) in [0, 1].
+fn strokes(digit: u8) -> &'static [((f64, f64), (f64, f64))] {
+    match digit {
+        0 => &[
+            ((0.3, 0.2), (0.7, 0.2)),
+            ((0.7, 0.2), (0.7, 0.8)),
+            ((0.7, 0.8), (0.3, 0.8)),
+            ((0.3, 0.8), (0.3, 0.2)),
+        ],
+        1 => &[((0.5, 0.15), (0.5, 0.85)), ((0.35, 0.3), (0.5, 0.15))],
+        2 => &[
+            ((0.3, 0.25), (0.7, 0.2)),
+            ((0.7, 0.2), (0.7, 0.5)),
+            ((0.7, 0.5), (0.3, 0.8)),
+            ((0.3, 0.8), (0.7, 0.8)),
+        ],
+        3 => &[
+            ((0.3, 0.2), (0.7, 0.2)),
+            ((0.7, 0.2), (0.7, 0.5)),
+            ((0.4, 0.5), (0.7, 0.5)),
+            ((0.7, 0.5), (0.7, 0.8)),
+            ((0.7, 0.8), (0.3, 0.8)),
+        ],
+        4 => &[
+            ((0.35, 0.2), (0.3, 0.55)),
+            ((0.3, 0.55), (0.7, 0.55)),
+            ((0.65, 0.2), (0.65, 0.85)),
+        ],
+        5 => &[
+            ((0.7, 0.2), (0.3, 0.2)),
+            ((0.3, 0.2), (0.3, 0.5)),
+            ((0.3, 0.5), (0.7, 0.55)),
+            ((0.7, 0.55), (0.7, 0.8)),
+            ((0.7, 0.8), (0.3, 0.8)),
+        ],
+        6 => &[
+            ((0.65, 0.2), (0.35, 0.35)),
+            ((0.35, 0.35), (0.3, 0.75)),
+            ((0.3, 0.75), (0.65, 0.8)),
+            ((0.65, 0.8), (0.68, 0.55)),
+            ((0.68, 0.55), (0.33, 0.52)),
+        ],
+        7 => &[((0.3, 0.2), (0.7, 0.2)), ((0.7, 0.2), (0.45, 0.85))],
+        8 => &[
+            ((0.35, 0.2), (0.65, 0.2)),
+            ((0.65, 0.2), (0.65, 0.5)),
+            ((0.65, 0.5), (0.35, 0.5)),
+            ((0.35, 0.5), (0.35, 0.2)),
+            ((0.35, 0.5), (0.35, 0.8)),
+            ((0.35, 0.8), (0.65, 0.8)),
+            ((0.65, 0.8), (0.65, 0.5)),
+        ],
+        9 => &[
+            ((0.65, 0.5), (0.35, 0.47)),
+            ((0.35, 0.47), (0.33, 0.22)),
+            ((0.33, 0.22), (0.65, 0.2)),
+            ((0.65, 0.2), (0.65, 0.8)),
+        ],
+        _ => panic!("digit out of range"),
+    }
+}
+
+/// Render one digit sample: strokes with per-sample jitter, Gaussian
+/// blur-ish thickness, translation, plus pixel noise. Values in [0, 1].
+pub fn render_digit(digit: u8, rng: &mut Rng) -> Vec<f64> {
+    let mut img = vec![0.0f64; DIM];
+    let dx = (rng.uniform() - 0.5) * 0.12;
+    let dy = (rng.uniform() - 0.5) * 0.12;
+    let thickness = 1.2 + rng.uniform() * 1.0;
+    let wobble = 0.02 + rng.uniform() * 0.02;
+    for &((x0, y0), (x1, y1)) in strokes(digit) {
+        // Per-stroke endpoint jitter.
+        let jx0 = x0 + dx + (rng.uniform() - 0.5) * wobble;
+        let jy0 = y0 + dy + (rng.uniform() - 0.5) * wobble;
+        let jx1 = x1 + dx + (rng.uniform() - 0.5) * wobble;
+        let jy1 = y1 + dy + (rng.uniform() - 0.5) * wobble;
+        draw_stroke(&mut img, jx0, jy0, jx1, jy1, thickness);
+    }
+    // Pixel dropout + additive noise (sensor grit).
+    for v in img.iter_mut() {
+        if rng.uniform() < 0.05 {
+            *v = 0.0;
+        }
+        *v = (*v + rng.gauss() * 0.04).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// Paint a line segment with a Gaussian cross-section of width
+/// `thickness` pixels.
+fn draw_stroke(img: &mut [f64], x0: f64, y0: f64, x1: f64, y1: f64, thickness: f64) {
+    let (px0, py0) = (x0 * SIDE as f64, y0 * SIDE as f64);
+    let (px1, py1) = (x1 * SIDE as f64, y1 * SIDE as f64);
+    let (dx, dy) = (px1 - px0, py1 - py0);
+    let len2 = (dx * dx + dy * dy).max(1e-12);
+    let reach = thickness.ceil() as isize + 1;
+    let min_x = (px0.min(px1) as isize - reach).max(0) as usize;
+    let max_x = ((px0.max(px1) as isize) + reach).min(SIDE as isize - 1) as usize;
+    let min_y = (py0.min(py1) as isize - reach).max(0) as usize;
+    let max_y = ((py0.max(py1) as isize) + reach).min(SIDE as isize - 1) as usize;
+    for y in min_y..=max_y {
+        for x in min_x..=max_x {
+            let (fx, fy) = (x as f64 + 0.5, y as f64 + 0.5);
+            // Distance from pixel to segment.
+            let t = (((fx - px0) * dx + (fy - py0) * dy) / len2).clamp(0.0, 1.0);
+            let (cx, cy) = (px0 + t * dx, py0 + t * dy);
+            let d2 = (fx - cx) * (fx - cx) + (fy - cy) * (fy - cy);
+            let ink = (-d2 / (thickness * thickness * 0.5)).exp();
+            let idx = y * SIDE + x;
+            img[idx] = img[idx].max(ink);
+        }
+    }
+}
+
+/// Generate `n` samples of the given digit classes (cycled uniformly at
+/// random), returning (data: n x 784, labels). The paper uses digits
+/// {0, 3, 5, 8} (§6.1).
+pub fn generate(digits: &[u8], n: usize, seed: u64) -> (Matrix, Vec<u8>) {
+    assert!(!digits.is_empty());
+    let mut rng = Rng::new(seed);
+    let mut data = Matrix::zeros(n, DIM);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let d = digits[rng.below(digits.len())];
+        let img = render_digit(d, &mut rng);
+        data.row_mut(i).copy_from_slice(&img);
+        labels.push(d);
+    }
+    (data, labels)
+}
+
+/// The paper's §6.1 class subset.
+pub const PAPER_DIGITS: [u8; 4] = [0, 3, 5, 8];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{center_gram, gram_sym, Kernel};
+    use crate::linalg::eigen_sym;
+
+    #[test]
+    fn shapes_and_range() {
+        let (x, labels) = generate(&PAPER_DIGITS, 50, 1);
+        assert_eq!(x.rows(), 50);
+        assert_eq!(x.cols(), DIM);
+        assert_eq!(labels.len(), 50);
+        assert!(x.as_slice().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(labels.iter().all(|l| PAPER_DIGITS.contains(l)));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (a, la) = generate(&[0, 1], 10, 7);
+        let (b, lb) = generate(&[0, 1], 10, 7);
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert_eq!(la, lb);
+        let (c, _) = generate(&[0, 1], 10, 8);
+        assert_ne!(a.as_slice(), c.as_slice());
+    }
+
+    #[test]
+    fn same_class_closer_than_cross_class() {
+        let mut rng = Rng::new(3);
+        let a0 = render_digit(0, &mut rng);
+        let b0 = render_digit(0, &mut rng);
+        let c8 = render_digit(8, &mut rng);
+        let d = |u: &[f64], v: &[f64]| -> f64 {
+            u.iter().zip(v).map(|(x, y)| (x - y) * (x - y)).sum()
+        };
+        assert!(d(&a0, &b0) < d(&a0, &c8), "class structure must dominate");
+    }
+
+    #[test]
+    fn gram_spectrum_has_dominant_directions() {
+        // The kPCA-relevant property: a few large eigenvalues + decay.
+        let (x, _) = generate(&PAPER_DIGITS, 60, 5);
+        let k = center_gram(&gram_sym(&Kernel::Rbf { gamma: 0.02 }, &x));
+        let eig = eigen_sym(&k);
+        let n = eig.values.len();
+        let top: f64 = eig.values[n - 4..].iter().sum();
+        let total: f64 = eig.values.iter().map(|v| v.max(0.0)).sum();
+        assert!(top / total > 0.3, "top-4 share {}", top / total);
+    }
+
+    #[test]
+    fn every_digit_renders_ink() {
+        let mut rng = Rng::new(9);
+        for d in 0..10u8 {
+            let img = render_digit(d, &mut rng);
+            let ink: f64 = img.iter().sum();
+            assert!(ink > 5.0, "digit {d} almost blank (ink {ink})");
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! S4 — dataset substrate: synthetic generators, partitioners, channel
+//! noise, and the dependency-free RNG they share.
+
+pub mod mnist_like;
+pub mod noise;
+pub mod partition;
+pub mod rng;
+pub mod synth;
+
+pub use noise::NoiseModel;
+pub use partition::{partition, Strategy};
+pub use rng::Rng;

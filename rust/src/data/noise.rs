@@ -1,0 +1,106 @@
+//! Channel-noise models for inter-node data exchange.
+//!
+//! The paper (§3.1): "A node in Omega_j could exchange data with node j
+//! (but there may be noise)". The fabric applies a noise model to raw
+//! data payloads at setup time; the COMM experiment sweeps intensity.
+
+use super::rng::Rng;
+use crate::linalg::Matrix;
+
+/// Noise applied to a transmitted copy of a dataset.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NoiseModel {
+    /// Lossless channel.
+    None,
+    /// Additive white Gaussian noise with the given sigma.
+    Gaussian { sigma: f64 },
+    /// Uniform quantisation to the given number of levels over the
+    /// empirical range (models low-bandwidth links).
+    Quantize { levels: u32 },
+}
+
+impl NoiseModel {
+    /// Apply to a payload matrix, deterministically in `seed`.
+    pub fn apply(&self, x: &Matrix, seed: u64) -> Matrix {
+        match *self {
+            NoiseModel::None => x.clone(),
+            NoiseModel::Gaussian { sigma } => {
+                let mut rng = Rng::new(seed);
+                let mut out = x.clone();
+                for v in out.as_mut_slice() {
+                    *v += rng.gauss() * sigma;
+                }
+                out
+            }
+            NoiseModel::Quantize { levels } => {
+                assert!(levels >= 2);
+                let lo = x.as_slice().iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = x.as_slice().iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let span = (hi - lo).max(1e-300);
+                let steps = (levels - 1) as f64;
+                let mut out = x.clone();
+                for v in out.as_mut_slice() {
+                    let t = ((*v - lo) / span * steps).round() / steps;
+                    *v = lo + t * span;
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Matrix {
+        Matrix::from_fn(8, 6, |i, j| (i as f64 - 3.0) * 0.5 + j as f64 * 0.1)
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let x = toy();
+        assert_eq!(NoiseModel::None.apply(&x, 1).as_slice(), x.as_slice());
+    }
+
+    #[test]
+    fn gaussian_perturbs_with_right_scale() {
+        let x = toy();
+        let y = NoiseModel::Gaussian { sigma: 0.1 }.apply(&x, 2);
+        let diffs: Vec<f64> = x
+            .as_slice()
+            .iter()
+            .zip(y.as_slice())
+            .map(|(a, b)| b - a)
+            .collect();
+        let rms = (diffs.iter().map(|d| d * d).sum::<f64>() / diffs.len() as f64).sqrt();
+        assert!(rms > 0.05 && rms < 0.2, "rms {rms}");
+    }
+
+    #[test]
+    fn gaussian_deterministic_per_seed() {
+        let x = toy();
+        let m = NoiseModel::Gaussian { sigma: 0.5 };
+        assert_eq!(m.apply(&x, 7).as_slice(), m.apply(&x, 7).as_slice());
+        assert_ne!(m.apply(&x, 7).as_slice(), m.apply(&x, 8).as_slice());
+    }
+
+    #[test]
+    fn quantize_reduces_distinct_values() {
+        let x = toy();
+        let y = NoiseModel::Quantize { levels: 4 }.apply(&x, 0);
+        let mut vals: Vec<u64> = y.as_slice().iter().map(|v| v.to_bits()).collect();
+        vals.sort_unstable();
+        vals.dedup();
+        assert!(vals.len() <= 4, "levels leaked: {}", vals.len());
+    }
+
+    #[test]
+    fn quantize_preserves_range() {
+        let x = toy();
+        let y = NoiseModel::Quantize { levels: 8 }.apply(&x, 0);
+        let lo = x.as_slice().iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = x.as_slice().iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(y.as_slice().iter().all(|&v| v >= lo - 1e-12 && v <= hi + 1e-12));
+    }
+}

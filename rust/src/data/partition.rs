@@ -1,0 +1,149 @@
+//! Sample-distributed partitioners: split a global dataset across J
+//! nodes (paper §3.1: full features, disjoint sample sets).
+
+use super::rng::Rng;
+use crate::linalg::Matrix;
+
+/// Split strategy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strategy {
+    /// Random even split — the paper's §6.1 setting.
+    Even,
+    /// Uneven random split: node j receives a share proportional to
+    /// `1 + j` (stress-tests the N_j-dependent code paths).
+    Proportional,
+    /// Label-skewed: node j prefers class `j mod n_classes` with the
+    /// given probability mass (data heterogeneity, §3.2).
+    LabelSkew { skew: f64 },
+}
+
+/// Partition rows of `x` (with `labels`) into `j` node datasets.
+pub fn partition(
+    x: &Matrix,
+    labels: &[usize],
+    j: usize,
+    strategy: Strategy,
+    seed: u64,
+) -> Vec<Matrix> {
+    assert_eq!(x.rows(), labels.len());
+    assert!(j >= 1 && j <= x.rows());
+    let mut rng = Rng::new(seed);
+    let n = x.rows();
+    let assignment: Vec<usize> = match strategy {
+        Strategy::Even => {
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            let mut assign = vec![0usize; n];
+            for (pos, &sample) in idx.iter().enumerate() {
+                assign[sample] = pos % j;
+            }
+            assign
+        }
+        Strategy::Proportional => {
+            let weights: Vec<f64> = (0..j).map(|node| (node + 1) as f64).collect();
+            (0..n).map(|_| rng.weighted(&weights)).collect()
+        }
+        Strategy::LabelSkew { skew } => {
+            assert!((0.0..=1.0).contains(&skew));
+            let n_classes = labels.iter().max().map(|m| m + 1).unwrap_or(1);
+            (0..n)
+                .map(|i| {
+                    // Preferred nodes are those congruent to the label.
+                    let preferred: Vec<usize> =
+                        (0..j).filter(|node| node % n_classes == labels[i]).collect();
+                    if !preferred.is_empty() && rng.uniform() < skew {
+                        preferred[rng.below(preferred.len())]
+                    } else {
+                        rng.below(j)
+                    }
+                })
+                .collect()
+        }
+    };
+    collect_partitions(x, &assignment, j)
+}
+
+fn collect_partitions(x: &Matrix, assignment: &[usize], j: usize) -> Vec<Matrix> {
+    let mut rows_per: Vec<Vec<usize>> = vec![Vec::new(); j];
+    for (i, &node) in assignment.iter().enumerate() {
+        rows_per[node].push(i);
+    }
+    rows_per
+        .into_iter()
+        .map(|rows| {
+            let mut out = Matrix::zeros(rows.len(), x.cols());
+            for (r, &src) in rows.iter().enumerate() {
+                out.row_mut(r).copy_from_slice(x.row(src));
+            }
+            out
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> (Matrix, Vec<usize>) {
+        let x = Matrix::from_fn(n, 3, |i, j| (i * 3 + j) as f64);
+        let labels = (0..n).map(|i| i % 4).collect();
+        (x, labels)
+    }
+
+    #[test]
+    fn even_split_balanced() {
+        let (x, labels) = toy(100);
+        let parts = partition(&x, &labels, 5, Strategy::Even, 1);
+        assert_eq!(parts.len(), 5);
+        assert!(parts.iter().all(|p| p.rows() == 20));
+        let total: usize = parts.iter().map(|p| p.rows()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn even_split_preserves_rows() {
+        let (x, labels) = toy(30);
+        let parts = partition(&x, &labels, 3, Strategy::Even, 2);
+        // Every original row appears exactly once across partitions.
+        let mut seen: Vec<Vec<f64>> = Vec::new();
+        for p in &parts {
+            for i in 0..p.rows() {
+                seen.push(p.row(i).to_vec());
+            }
+        }
+        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut want: Vec<Vec<f64>> = (0..30).map(|i| x.row(i).to_vec()).collect();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn proportional_is_increasing_on_average() {
+        let (x, labels) = toy(2000);
+        let parts = partition(&x, &labels, 4, Strategy::Proportional, 3);
+        assert!(parts[3].rows() > parts[0].rows());
+    }
+
+    #[test]
+    fn label_skew_concentrates_classes() {
+        let (x, labels) = toy(400);
+        let parts = partition(&x, &labels, 4, Strategy::LabelSkew { skew: 0.9 }, 4);
+        // Node 0 prefers label 0; its rows should mostly have i % 4 == 0,
+        // i.e. first feature divisible by 12 (x[i][0] = 3 i).
+        let node0 = &parts[0];
+        let hits = (0..node0.rows())
+            .filter(|&r| (node0[(r, 0)] / 3.0) as usize % 4 == 0)
+            .count();
+        assert!(hits * 2 > node0.rows(), "skew too weak: {hits}/{}", node0.rows());
+    }
+
+    #[test]
+    fn deterministic() {
+        let (x, labels) = toy(50);
+        let a = partition(&x, &labels, 5, Strategy::Even, 9);
+        let b = partition(&x, &labels, 5, Strategy::Even, 9);
+        for (p, q) in a.iter().zip(&b) {
+            assert_eq!(p.as_slice(), q.as_slice());
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Low-dimensional synthetic generators: Gaussian blob mixtures, ring
+//! manifolds, and rank-deficient (degenerate) datasets for the
+//! Fig. 1(c) ablation.
+
+use super::rng::Rng;
+use crate::linalg::Matrix;
+
+/// Mixture of `n_classes` Gaussian blobs in `R^dim`; returns (data,
+/// labels). Class centers ~ N(0, center_scale^2 I), samples add
+/// N(0, spread^2 I).
+pub struct BlobSpec {
+    pub dim: usize,
+    pub n_classes: usize,
+    pub center_scale: f64,
+    pub spread: f64,
+}
+
+impl Default for BlobSpec {
+    fn default() -> Self {
+        BlobSpec { dim: 5, n_classes: 2, center_scale: 2.0, spread: 0.7 }
+    }
+}
+
+/// Shared blob centers drawn once from `seed`; use with
+/// [`sample_blobs`] so every node draws from the same mixture.
+pub fn blob_centers(spec: &BlobSpec, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(spec.n_classes, spec.dim, |_, _| rng.gauss() * spec.center_scale)
+}
+
+/// Draw `n` samples from the mixture with optional class-probability
+/// weights (data heterogeneity, §3.2). Returns (data, labels).
+pub fn sample_blobs(
+    spec: &BlobSpec,
+    centers: &Matrix,
+    n: usize,
+    class_weights: Option<&[f64]>,
+    rng: &mut Rng,
+) -> (Matrix, Vec<usize>) {
+    assert_eq!(centers.rows(), spec.n_classes);
+    let uniform = vec![1.0; spec.n_classes];
+    let w = class_weights.unwrap_or(&uniform);
+    let mut x = Matrix::zeros(n, spec.dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = rng.weighted(w);
+        labels.push(c);
+        for j in 0..spec.dim {
+            x[(i, j)] = centers[(c, j)] + rng.gauss() * spec.spread;
+        }
+    }
+    (x, labels)
+}
+
+/// Noisy ring (circle) embedded in `R^dim` — a classic kPCA showcase
+/// where linear PCA fails.
+pub fn ring_data(dim: usize, n: usize, radius: f64, noise: f64, rng: &mut Rng) -> Matrix {
+    assert!(dim >= 2);
+    let mut x = Matrix::zeros(n, dim);
+    for i in 0..n {
+        let th = rng.uniform() * std::f64::consts::TAU;
+        x[(i, 0)] = radius * th.cos() + rng.gauss() * noise;
+        x[(i, 1)] = radius * th.sin() + rng.gauss() * noise;
+        for j in 2..dim {
+            x[(i, j)] = rng.gauss() * noise;
+        }
+    }
+    x
+}
+
+/// Rank-`r` degenerate data: samples confined to an `r`-dimensional
+/// random subspace of `R^dim` (Fig. 1(c): r = 1 is "all data on a
+/// line").
+pub fn degenerate_data(dim: usize, n: usize, rank: usize, scale: f64, rng: &mut Rng) -> Matrix {
+    assert!(rank >= 1 && rank <= dim);
+    let basis = Matrix::from_fn(rank, dim, |_, _| rng.gauss());
+    let mut x = Matrix::zeros(n, dim);
+    for i in 0..n {
+        let coef: Vec<f64> = (0..rank).map(|_| rng.gauss() * scale).collect();
+        for j in 0..dim {
+            let mut v = 0.0;
+            for (r, &c) in coef.iter().enumerate() {
+                v += c * basis[(r, j)];
+            }
+            x[(i, j)] = v;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_shapes_and_labels() {
+        let spec = BlobSpec::default();
+        let centers = blob_centers(&spec, 1);
+        let mut rng = Rng::new(2);
+        let (x, labels) = sample_blobs(&spec, &centers, 40, None, &mut rng);
+        assert_eq!(x.rows(), 40);
+        assert_eq!(x.cols(), 5);
+        assert!(labels.iter().all(|&l| l < 2));
+        // Both classes appear under uniform weights.
+        assert!(labels.contains(&0) && labels.contains(&1));
+    }
+
+    #[test]
+    fn skewed_weights_bias_labels() {
+        let spec = BlobSpec::default();
+        let centers = blob_centers(&spec, 3);
+        let mut rng = Rng::new(4);
+        let (_, labels) = sample_blobs(&spec, &centers, 200, Some(&[0.9, 0.1]), &mut rng);
+        let zeros = labels.iter().filter(|&&l| l == 0).count();
+        assert!(zeros > 140, "skew not applied: {zeros}");
+    }
+
+    #[test]
+    fn ring_radius_roughly_respected() {
+        let mut rng = Rng::new(5);
+        let x = ring_data(4, 300, 3.0, 0.05, &mut rng);
+        for i in 0..300 {
+            let r = (x[(i, 0)] * x[(i, 0)] + x[(i, 1)] * x[(i, 1)]).sqrt();
+            assert!((r - 3.0).abs() < 0.5, "radius {r}");
+        }
+    }
+
+    #[test]
+    fn degenerate_rank_is_respected() {
+        let mut rng = Rng::new(6);
+        let x = degenerate_data(6, 50, 1, 1.0, &mut rng);
+        // Covariance of rank-1 data has one dominant eigenvalue.
+        let mut cov = crate::linalg::matmul(&x.transpose(), &x);
+        cov.symmetrize();
+        let eig = crate::linalg::eigen_sym(&cov);
+        let lmax = eig.values[5];
+        assert!(eig.values[4].abs() < 1e-8 * lmax.max(1.0), "rank > 1");
+    }
+}

@@ -1,0 +1,259 @@
+//! Ablations called out in DESIGN.md:
+//!  * FIG1C — degenerate (rank-deficient) node: ball vs sphere z-norm;
+//!  * RHO   — Theorem 2 in practice: Lagrangian behaviour vs rho;
+//!  * SELF  — the §6.1 self-constraint column on/off;
+//!  * INIT  — random (paper) vs local-kPCA warm start; at the paper's
+//!    J=20 x N_j=100 scale the nonconvex iteration can lock onto the
+//!    second principal component from a random start.
+
+use crate::admm::{lagrangian, AdmmConfig, DkpcaSolver, Init, ZNorm};
+use crate::backend::ComputeBackend;
+use crate::central::{central_kpca, similarity};
+use crate::data::synth::{blob_centers, degenerate_data, sample_blobs, BlobSpec};
+use crate::data::{NoiseModel, Rng};
+use crate::kernels::Kernel;
+use crate::linalg::Matrix;
+use crate::metrics::{f, Table};
+use crate::topology::Graph;
+
+const K: Kernel = Kernel::Rbf { gamma: 0.1 };
+
+fn blob_network(j: usize, n: usize, seed: u64) -> Vec<Matrix> {
+    let spec = BlobSpec::default();
+    let centers = blob_centers(&spec, seed);
+    let mut rng = Rng::new(seed + 1);
+    (0..j)
+        .map(|_| sample_blobs(&spec, &centers, n, None, &mut rng).0)
+        .collect()
+}
+
+/// FIG1C: healthy-node similarity with one rank-1 node, ball vs sphere.
+pub struct DegenerateRow {
+    pub z_norm: &'static str,
+    pub healthy_mean: f64,
+    pub degenerate: f64,
+}
+
+pub fn degenerate(j: usize, n: usize, iters: usize, backend: &dyn ComputeBackend, seed: u64) -> Vec<DegenerateRow> {
+    let mut xs = blob_network(j, n, seed);
+    let mut rng = Rng::new(seed ^ 0xD15EA5E);
+    xs[0] = degenerate_data(5, n, 1, 1.0, &mut rng);
+    let graph = Graph::ring(j, 1);
+    let central = central_kpca(&xs, &K);
+    let mut rows = Vec::new();
+    for (label, mode) in [("ball", ZNorm::Ball), ("sphere", ZNorm::Sphere)] {
+        let cfg = AdmmConfig { z_norm: mode, max_iters: iters, seed, ..Default::default() };
+        let mut solver = DkpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, seed);
+        let res = solver.run(backend);
+        let sims: Vec<f64> = res
+            .alphas
+            .iter()
+            .zip(&xs)
+            .map(|(a, x)| similarity(a, x, &central, &K))
+            .collect();
+        rows.push(DegenerateRow {
+            z_norm: label,
+            healthy_mean: sims[1..].iter().sum::<f64>() / (j - 1) as f64,
+            degenerate: sims[0],
+        });
+    }
+    rows
+}
+
+pub fn degenerate_table(rows: &[DegenerateRow]) -> Table {
+    let mut t = Table::new(
+        "Fig. 1(c) ablation — rank-1 node, ball vs sphere z-normalisation",
+        &["z_norm", "healthy_sim", "degenerate_sim"],
+    );
+    for r in rows {
+        t.row(&[r.z_norm.to_string(), f(r.healthy_mean), f(r.degenerate)]);
+    }
+    t
+}
+
+/// RHO: Lagrangian trajectory summary for a set of uniform penalties.
+pub struct RhoRow {
+    pub rho: f64,
+    pub assumption2_bound: f64,
+    pub total_drop: f64,
+    pub max_late_increase: f64,
+}
+
+pub fn rho_sweep(rhos: &[f64], iters: usize, backend: &dyn ComputeBackend, seed: u64) -> Vec<RhoRow> {
+    let xs = blob_network(5, 12, seed);
+    let graph = Graph::ring(5, 1);
+    let mut rows = Vec::new();
+    for &rho in rhos {
+        let cfg = AdmmConfig {
+            rho1: rho,
+            rho2_schedule: vec![(0, rho)],
+            max_iters: iters,
+            seed,
+            ..Default::default()
+        };
+        let mut solver = DkpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, seed);
+        let bound = solver
+            .nodes
+            .iter()
+            .map(|n| n.assumption2_bound())
+            .fold(0.0, f64::max);
+        let mut vals = Vec::new();
+        for t in 0..iters {
+            solver.step(t, backend);
+            vals.push(lagrangian(&solver.nodes, rho));
+        }
+        let total_drop = vals[0] - vals[vals.len() - 1];
+        let max_late_increase = vals
+            .windows(2)
+            .skip(2)
+            .map(|w| w[1] - w[0])
+            .fold(f64::NEG_INFINITY, f64::max);
+        rows.push(RhoRow { rho, assumption2_bound: bound, total_drop, max_late_increase });
+    }
+    rows
+}
+
+pub fn rho_table(rows: &[RhoRow]) -> Table {
+    let mut t = Table::new(
+        "Theorem 2 ablation — Lagrangian behaviour vs rho",
+        &["rho", "assumption2_bound", "total_drop", "max_late_increase"],
+    );
+    for r in rows {
+        t.row(&[
+            format!("{:.0}", r.rho),
+            f(r.assumption2_bound),
+            f(r.total_drop),
+            format!("{:+.4}", r.max_late_increase),
+        ]);
+    }
+    t
+}
+
+/// SELF: the §6.1 self-constraint column on/off.
+pub struct SelfRow {
+    pub include_self: bool,
+    pub sim_mean: f64,
+}
+
+pub fn self_constraint(iters: usize, backend: &dyn ComputeBackend, seed: u64) -> Vec<SelfRow> {
+    let xs = blob_network(8, 20, seed);
+    let graph = Graph::ring(8, 1);
+    let central = central_kpca(&xs, &K);
+    let mut rows = Vec::new();
+    for include_self in [true, false] {
+        let cfg = AdmmConfig { include_self, max_iters: iters, seed, ..Default::default() };
+        let mut solver = DkpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, seed);
+        let res = solver.run(backend);
+        let sim = res
+            .alphas
+            .iter()
+            .zip(&xs)
+            .map(|(a, x)| similarity(a, x, &central, &K))
+            .sum::<f64>()
+            / 8.0;
+        rows.push(SelfRow { include_self, sim_mean: sim });
+    }
+    rows
+}
+
+pub fn self_table(rows: &[SelfRow]) -> Table {
+    let mut t = Table::new(
+        "Self-constraint ablation (rho^(1) column of §6.1)",
+        &["include_self", "sim_mean"],
+    );
+    for r in rows {
+        t.row(&[r.include_self.to_string(), f(r.sim_mean)]);
+    }
+    t
+}
+
+/// INIT: random vs warm-started alpha at a given scale, across seeds.
+pub struct InitRow {
+    pub init: &'static str,
+    pub seed: u64,
+    pub sim_mean: f64,
+}
+
+pub fn init_sweep(
+    nodes: usize,
+    samples: usize,
+    seeds: &[u64],
+    iters: usize,
+    backend: &dyn ComputeBackend,
+) -> Vec<InitRow> {
+    use crate::config::ExperimentConfig;
+    let mut rows = Vec::new();
+    for &seed in seeds {
+        let cfg = ExperimentConfig { nodes, samples_per_node: samples, seed, ..Default::default() };
+        let env = super::build_env(&cfg);
+        let central = super::central_kpca_power(&env.xs, &env.kernel, 1000);
+        for (label, init) in [("random", Init::Random), ("local_kpca", Init::LocalKpca)] {
+            let admm = AdmmConfig {
+                init,
+                z_norm: ZNorm::Sphere,
+                max_iters: iters,
+                seed,
+                ..Default::default()
+            };
+            let mut solver =
+                DkpcaSolver::new(&env.xs, &env.graph, &env.kernel, &admm, NoiseModel::None, seed);
+            let res = solver.run(backend);
+            let sim = res
+                .alphas
+                .iter()
+                .zip(&env.xs)
+                .map(|(a, x)| similarity(a, x, &central, &env.kernel))
+                .sum::<f64>()
+                / nodes as f64;
+            rows.push(InitRow { init: label, seed, sim_mean: sim });
+        }
+    }
+    rows
+}
+
+pub fn init_table(rows: &[InitRow]) -> Table {
+    let mut t = Table::new(
+        "Init ablation — random (Alg. 1 as printed) vs local-kPCA warm start",
+        &["init", "seed", "sim_mean"],
+    );
+    for r in rows {
+        t.row(&[r.init.to_string(), r.seed.to_string(), f(r.sim_mean)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    #[test]
+    fn degenerate_sphere_beats_ball() {
+        let rows = degenerate(5, 15, 40, &NativeBackend, 23);
+        let ball = rows.iter().find(|r| r.z_norm == "ball").unwrap();
+        let sphere = rows.iter().find(|r| r.z_norm == "sphere").unwrap();
+        assert!(sphere.healthy_mean > ball.healthy_mean);
+    }
+
+    #[test]
+    fn rho_sweep_reports_bound_and_drop() {
+        let rows = rho_sweep(&[50.0, 500.0], 10, &NativeBackend, 17);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].assumption2_bound > 0.0);
+        assert!(rows[1].total_drop > 0.0);
+    }
+
+    #[test]
+    fn init_sweep_reports_both_modes() {
+        let rows = init_sweep(6, 15, &[3], 15, &NativeBackend);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.sim_mean.is_finite()));
+    }
+
+    #[test]
+    fn self_constraint_runs_both_ways() {
+        let rows = self_constraint(15, &NativeBackend, 29);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.sim_mean.is_finite() && r.sim_mean > 0.0));
+    }
+}

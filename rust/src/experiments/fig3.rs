@@ -1,0 +1,109 @@
+//! FIG3 — paper Fig. 3: average similarity of alpha_j vs network size
+//! J, with N_j = 100 MNIST-like images per node and |Omega| = 4
+//! (ring, k = 2), plus the running-time comparison against central
+//! kPCA that motivates the figure's discussion.
+
+use std::sync::Arc;
+
+use crate::backend::ComputeBackend;
+use crate::central::similarity;
+use crate::config::{DataSpec, ExperimentConfig, TopoSpec};
+use crate::coordinator::run_decentralized;
+use crate::data::NoiseModel;
+use crate::metrics::{f, ms, Stats, Stopwatch, Table};
+
+use super::{build_env, central_kpca_power, paper_admm};
+
+/// One row of Fig. 3.
+pub struct Fig3Row {
+    pub nodes: usize,
+    pub sim: Stats,
+    pub dkpca_secs: f64,
+    pub central_secs: f64,
+}
+
+/// Run the sweep. `node_counts` defaults to the paper's {20, 40, 60, 80}
+/// in the bench; tests use smaller counts.
+pub fn run(
+    node_counts: &[usize],
+    samples_per_node: usize,
+    backend: Arc<dyn ComputeBackend>,
+    seed: u64,
+) -> Vec<Fig3Row> {
+    let mut rows = Vec::new();
+    for &j in node_counts {
+        let cfg = ExperimentConfig {
+            nodes: j,
+            samples_per_node,
+            data: DataSpec::MnistLike { feat_gamma: 0.02 },
+            topo: TopoSpec::Ring { k: 2 },
+            seed,
+            ..Default::default()
+        };
+        let env = build_env(&cfg);
+        let admm = paper_admm(seed, 80);
+
+        let sw = Stopwatch::start();
+        let rep = run_decentralized(
+            &env.xs,
+            &env.graph,
+            &env.kernel,
+            &admm,
+            NoiseModel::None,
+            seed,
+            backend.clone(),
+        );
+        let dkpca_secs = sw.elapsed_secs();
+
+        let sw = Stopwatch::start();
+        let central = central_kpca_power(&env.xs, &env.kernel, 500);
+        let central_secs = sw.elapsed_secs();
+
+        let sims: Vec<f64> = rep
+            .alphas
+            .iter()
+            .zip(&env.xs)
+            .map(|(a, x)| similarity(a, x, &central, &env.kernel))
+            .collect();
+        rows.push(Fig3Row { nodes: j, sim: Stats::from(&sims), dkpca_secs, central_secs });
+    }
+    rows
+}
+
+/// Render as the paper-style table.
+pub fn table(rows: &[Fig3Row]) -> Table {
+    let mut t = Table::new(
+        "Fig. 3 — similarity vs network size (N_j=100, |Omega|=4)",
+        &["J", "sim_mean", "sim_min", "sim_max", "dkpca_ms", "central_ms", "speedup"],
+    );
+    for r in rows {
+        t.row(&[
+            r.nodes.to_string(),
+            f(r.sim.mean),
+            f(r.sim.min),
+            f(r.sim.max),
+            ms(r.dkpca_secs),
+            ms(r.central_secs),
+            format!("{:.1}x", r.central_secs / r.dkpca_secs.max(1e-12)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    #[test]
+    fn small_instance_produces_sane_rows() {
+        let rows = run(&[6], 20, Arc::new(NativeBackend), 3);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.nodes, 6);
+        assert!(r.sim.mean > 0.5 && r.sim.mean <= 1.0 + 1e-9, "sim {}", r.sim.mean);
+        assert!(r.dkpca_secs > 0.0 && r.central_secs > 0.0);
+        let t = table(&rows);
+        assert_eq!(t.rows.len(), 1);
+    }
+}

@@ -1,0 +1,106 @@
+//! TIME — §6.2 running-time claim: Alg. 1's per-node cost is
+//! independent of the network size J while central kPCA grows
+//! ~ (J N)^2..(J N)^3; the decentralized run should win clearly well
+//! before the paper's J = 80.
+
+use std::sync::Arc;
+
+use crate::backend::ComputeBackend;
+use crate::config::{DataSpec, ExperimentConfig, TopoSpec};
+use crate::coordinator::run_decentralized;
+use crate::data::NoiseModel;
+use crate::metrics::{ms, Stopwatch, Table};
+
+use super::{build_env, central_kpca_power, paper_admm};
+
+pub struct TimingRow {
+    pub nodes: usize,
+    pub dkpca_wall: f64,
+    pub dkpca_node_mean: f64,
+    pub central_wall: f64,
+}
+
+/// Time both systems across network sizes.
+pub fn run(
+    node_counts: &[usize],
+    samples_per_node: usize,
+    iters: usize,
+    backend: Arc<dyn ComputeBackend>,
+    seed: u64,
+) -> Vec<TimingRow> {
+    let mut rows = Vec::new();
+    for &j in node_counts {
+        let cfg = ExperimentConfig {
+            nodes: j,
+            samples_per_node,
+            data: DataSpec::MnistLike { feat_gamma: 0.02 },
+            topo: TopoSpec::Ring { k: 2 },
+            seed,
+            ..Default::default()
+        };
+        let env = build_env(&cfg);
+        let admm = paper_admm(seed, iters);
+
+        let sw = Stopwatch::start();
+        let rep = run_decentralized(
+            &env.xs,
+            &env.graph,
+            &env.kernel,
+            &admm,
+            NoiseModel::None,
+            seed,
+            backend.clone(),
+        );
+        let dkpca_wall = sw.elapsed_secs();
+        let node_mean =
+            rep.node_compute_secs.iter().sum::<f64>() / rep.node_compute_secs.len() as f64;
+
+        let sw = Stopwatch::start();
+        let _central = central_kpca_power(&env.xs, &env.kernel, 500);
+        let central_wall = sw.elapsed_secs();
+
+        rows.push(TimingRow { nodes: j, dkpca_wall, dkpca_node_mean: node_mean, central_wall });
+    }
+    rows
+}
+
+pub fn table(rows: &[TimingRow]) -> Table {
+    let mut t = Table::new(
+        "Running time — DKPCA vs central kPCA (N_j fixed)",
+        &["J", "dkpca_wall_ms", "node_compute_ms", "central_ms", "speedup"],
+    );
+    for r in rows {
+        t.row(&[
+            r.nodes.to_string(),
+            ms(r.dkpca_wall),
+            ms(r.dkpca_node_mean),
+            ms(r.central_wall),
+            format!("{:.1}x", r.central_wall / r.dkpca_wall.max(1e-12)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    #[test]
+    fn per_node_compute_stays_flat_as_network_grows() {
+        // The paper's headline: per-node cost independent of J.
+        let rows = run(&[4, 8], 12, 5, Arc::new(NativeBackend), 9);
+        assert_eq!(rows.len(), 2);
+        let (small, big) = (&rows[0], &rows[1]);
+        // Per-node compute should not grow with J (allow 3x wiggle for
+        // timer noise at these tiny sizes).
+        assert!(
+            big.dkpca_node_mean < small.dkpca_node_mean * 3.0 + 1e-3,
+            "per-node compute grew: {} -> {}",
+            small.dkpca_node_mean,
+            big.dkpca_node_mean
+        );
+        // Central cost must grow superlinearly in J.
+        assert!(big.central_wall > small.central_wall);
+    }
+}

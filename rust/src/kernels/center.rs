@@ -1,0 +1,117 @@
+//! Double-centering of (cross-)Gram blocks — paper §6.1:
+//! `K_c = K - 1_m K / m - K 1_n / n + 1_m K 1_n / (mn)`.
+
+use crate::linalg::Matrix;
+
+/// Centered copy of a Gram block.
+pub fn center_gram(k: &Matrix) -> Matrix {
+    let mut out = k.clone();
+    center_gram_inplace(&mut out);
+    out
+}
+
+/// Center a Gram block in place (one pass for means, one for update).
+pub fn center_gram_inplace(k: &mut Matrix) {
+    let (m, n) = (k.rows(), k.cols());
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut row_mean = vec![0.0; m];
+    let mut col_mean = vec![0.0; n];
+    let mut grand = 0.0;
+    for i in 0..m {
+        for (j, &v) in k.row(i).iter().enumerate() {
+            row_mean[i] += v;
+            col_mean[j] += v;
+            grand += v;
+        }
+    }
+    for r in row_mean.iter_mut() {
+        *r /= n as f64;
+    }
+    for c in col_mean.iter_mut() {
+        *c /= m as f64;
+    }
+    grand /= (m * n) as f64;
+    for i in 0..m {
+        let rm = row_mean[i];
+        for (j, v) in k.row_mut(i).iter_mut().enumerate() {
+            *v += grand - rm - col_mean[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{gram_sym, Kernel};
+
+    fn data(n: usize, m: usize, seed: u64) -> Matrix {
+        let mut s = seed | 1;
+        Matrix::from_fn(n, m, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as f64 / u64::MAX as f64) * 2.0 - 1.0
+        })
+    }
+
+    #[test]
+    fn marginals_vanish() {
+        let k = data(14, 9, 1);
+        let c = center_gram(&k);
+        for i in 0..14 {
+            let rs: f64 = c.row(i).iter().sum();
+            assert!(rs.abs() < 1e-10);
+        }
+        for j in 0..9 {
+            let cs: f64 = c.col(j).iter().sum();
+            assert!(cs.abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let k = data(10, 10, 2);
+        let once = center_gram(&k);
+        let twice = center_gram(&once);
+        for (a, b) in once.as_slice().iter().zip(twice.as_slice()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_explicit_formula() {
+        // K - 1K/m - K1/n + 1K1/(mn) with explicit all-ones matrices.
+        let k = data(6, 4, 3);
+        let (m, n) = (6usize, 4usize);
+        let want = Matrix::from_fn(m, n, |i, j| {
+            let rm: f64 = k.row(i).iter().sum::<f64>() / n as f64;
+            let cm: f64 = k.col(j).iter().sum::<f64>() / m as f64;
+            let gm: f64 = k.as_slice().iter().sum::<f64>() / (m * n) as f64;
+            k[(i, j)] - rm - cm + gm
+        });
+        let got = center_gram(&k);
+        for (a, b) in got.as_slice().iter().zip(want.as_slice()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn centered_gram_stays_symmetric_for_sym_input() {
+        let x = data(12, 5, 4);
+        let k = gram_sym(&Kernel::Rbf { gamma: 0.4 }, &x);
+        let c = center_gram(&k);
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((c[(i, j)] - c[(j, i)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_is_noop() {
+        let mut k = Matrix::zeros(0, 0);
+        center_gram_inplace(&mut k);
+    }
+}

@@ -1,0 +1,137 @@
+//! Gram matrix assembly.
+//!
+//! Datasets are [`Matrix`] with one sample per row (N x M). The RBF path
+//! uses the `||x||^2 + ||y||^2 - 2 x.y` expansion through the blocked
+//! GEMM — the same structure as the L1 Pallas kernel, so the
+//! native/PJRT cross-checks in `rust/tests/` compare like against like.
+
+use super::Kernel;
+use crate::linalg::gemm::matmul_nt;
+use crate::linalg::Matrix;
+
+/// Gram block `K[i, j] = K(x_i, y_j)` for `x` (n x m), `y` (p x m).
+pub fn gram(kernel: &Kernel, x: &Matrix, y: &Matrix) -> Matrix {
+    assert_eq!(x.cols(), y.cols(), "feature dimension mismatch");
+    match *kernel {
+        Kernel::Rbf { gamma } => rbf_gram_fast(x, y, gamma),
+        _ => Matrix::from_fn(x.rows(), y.rows(), |i, j| {
+            kernel.normalized_eval(x.row(i), y.row(j))
+        }),
+    }
+}
+
+/// Symmetric Gram `K(x, x)` (exploits symmetry for non-RBF kernels).
+pub fn gram_sym(kernel: &Kernel, x: &Matrix) -> Matrix {
+    match *kernel {
+        Kernel::Rbf { gamma } => {
+            let mut k = rbf_gram_fast(x, x, gamma);
+            k.symmetrize();
+            k
+        }
+        _ => {
+            let n = x.rows();
+            let mut k = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in i..n {
+                    let v = kernel.normalized_eval(x.row(i), x.row(j));
+                    k[(i, j)] = v;
+                    k[(j, i)] = v;
+                }
+            }
+            k
+        }
+    }
+}
+
+/// RBF Gram via one GEMM + rank-1 corrections (mirrors the Pallas tile).
+fn rbf_gram_fast(x: &Matrix, y: &Matrix, gamma: f64) -> Matrix {
+    let xy = matmul_nt(x, y); // x @ y^T
+    let xn: Vec<f64> = (0..x.rows()).map(|i| sq_norm(x.row(i))).collect();
+    let yn: Vec<f64> = (0..y.rows()).map(|j| sq_norm(y.row(j))).collect();
+    let mut out = xy;
+    for i in 0..out.rows() {
+        let xi = xn[i];
+        let row = out.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            let d2 = (xi + yn[j] - 2.0 * *v).max(0.0);
+            *v = (-gamma * d2).exp();
+        }
+    }
+    out
+}
+
+fn sq_norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data(n: usize, m: usize, seed: u64) -> Matrix {
+        let mut s = seed | 1;
+        Matrix::from_fn(n, m, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as f64 / u64::MAX as f64) * 2.0 - 1.0
+        })
+    }
+
+    #[test]
+    fn rbf_fast_matches_naive() {
+        let x = data(13, 5, 1);
+        let y = data(9, 5, 2);
+        let k = Kernel::Rbf { gamma: 0.3 };
+        let fast = gram(&k, &x, &y);
+        for i in 0..13 {
+            for j in 0..9 {
+                let want = k.eval(x.row(i), y.row(j));
+                assert!((fast[(i, j)] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sym_gram_is_symmetric_unit_diag() {
+        let x = data(11, 4, 3);
+        let k = gram_sym(&Kernel::Rbf { gamma: 0.5 }, &x);
+        for i in 0..11 {
+            assert!((k[(i, i)] - 1.0).abs() < 1e-12);
+            for j in 0..11 {
+                assert_eq!(k[(i, j)], k[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn polynomial_gram_normalized() {
+        let x = data(6, 3, 4);
+        let k = gram_sym(&Kernel::Polynomial { degree: 2, c: 1.0 }, &x);
+        for i in 0..6 {
+            assert!((k[(i, i)] - 1.0).abs() < 1e-12, "diag normalised");
+        }
+    }
+
+    #[test]
+    fn gram_psd() {
+        let x = data(10, 3, 5);
+        let k = gram_sym(&Kernel::Rbf { gamma: 1.0 }, &x);
+        let eig = crate::linalg::eigen_sym(&k);
+        assert!(eig.values.iter().all(|&v| v > -1e-10));
+    }
+
+    #[test]
+    fn linear_gram_matches_xxt() {
+        let x = data(7, 4, 6);
+        let k = gram(&Kernel::Linear, &x, &x);
+        let want = matmul_nt(&x, &x);
+        // Linear kernel is cosine-normalised by gram()'s normalized_eval.
+        for i in 0..7 {
+            for j in 0..7 {
+                let denom = (want[(i, i)] * want[(j, j)]).sqrt();
+                assert!((k[(i, j)] - want[(i, j)] / denom).abs() < 1e-10);
+            }
+        }
+    }
+}

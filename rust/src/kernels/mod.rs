@@ -1,0 +1,127 @@
+//! S2 — kernel function library: kernel evaluation, Gram assembly and
+//! the paper's double-centering (§6.1).
+//!
+//! The paper requires `K(x, x) = 1` (§3.1, normalized feature map); RBF
+//! and Laplacian satisfy this natively, other kernels are wrapped by
+//! [`Kernel::normalized`] (cosine normalisation).
+
+pub mod center;
+pub mod gram;
+pub mod rff;
+
+pub use center::{center_gram, center_gram_inplace};
+pub use gram::{gram, gram_sym};
+pub use rff::RffMap;
+
+/// Positive definite kernel functions over `R^M`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// `exp(-gamma ||x - y||^2)` — the paper's experimental kernel.
+    Rbf { gamma: f64 },
+    /// `exp(-gamma ||x - y||_1)`.
+    Laplacian { gamma: f64 },
+    /// `x . y` (recovers linear PCA; used by cross-checks).
+    Linear,
+    /// `(x . y + c)^degree`.
+    Polynomial { degree: u32, c: f64 },
+    /// Cosine-normalised wrapper of another kernel family is expressed
+    /// via [`Kernel::normalized`] at evaluation sites.
+    Normalized(&'static Kernel),
+}
+
+impl Kernel {
+    /// Evaluate `K(x, y)`.
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        match *self {
+            Kernel::Rbf { gamma } => {
+                let mut d2 = 0.0;
+                for (a, b) in x.iter().zip(y) {
+                    let d = a - b;
+                    d2 += d * d;
+                }
+                (-gamma * d2).exp()
+            }
+            Kernel::Laplacian { gamma } => {
+                let d1: f64 = x.iter().zip(y).map(|(a, b)| (a - b).abs()).sum();
+                (-gamma * d1).exp()
+            }
+            Kernel::Linear => x.iter().zip(y).map(|(a, b)| a * b).sum(),
+            Kernel::Polynomial { degree, c } => {
+                let d: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+                (d + c).powi(degree as i32)
+            }
+            Kernel::Normalized(inner) => {
+                let kxy = inner.eval(x, y);
+                let kxx = inner.eval(x, x);
+                let kyy = inner.eval(y, y);
+                kxy / (kxx.sqrt() * kyy.sqrt()).max(1e-300)
+            }
+        }
+    }
+
+    /// `K(x, y) / sqrt(K(x,x) K(y,y))` — guarantees `K(x, x) = 1`
+    /// (paper §3.1).
+    pub fn normalized_eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        match self {
+            // Already unit-diagonal families: skip the extra evals.
+            Kernel::Rbf { .. } | Kernel::Laplacian { .. } => self.eval(x, y),
+            _ => {
+                let kxy = self.eval(x, y);
+                let kxx = self.eval(x, x);
+                let kyy = self.eval(y, y);
+                kxy / (kxx.sqrt() * kyy.sqrt()).max(1e-300)
+            }
+        }
+    }
+
+    /// Whether `K(x, x) = 1` by construction.
+    pub fn unit_diagonal(&self) -> bool {
+        matches!(self, Kernel::Rbf { .. } | Kernel::Laplacian { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbf_identity_is_one() {
+        let k = Kernel::Rbf { gamma: 0.7 };
+        assert_eq!(k.eval(&[1.0, 2.0], &[1.0, 2.0]), 1.0);
+    }
+
+    #[test]
+    fn rbf_symmetric_and_bounded() {
+        let k = Kernel::Rbf { gamma: 0.2 };
+        let a = [0.5, -1.0, 2.0];
+        let b = [1.5, 0.0, -0.5];
+        assert_eq!(k.eval(&a, &b), k.eval(&b, &a));
+        assert!(k.eval(&a, &b) > 0.0 && k.eval(&a, &b) < 1.0);
+    }
+
+    #[test]
+    fn linear_is_dot() {
+        assert_eq!(Kernel::Linear.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn polynomial_known_value() {
+        let k = Kernel::Polynomial { degree: 2, c: 1.0 };
+        assert_eq!(k.eval(&[1.0], &[2.0]), 9.0); // (2 + 1)^2
+    }
+
+    #[test]
+    fn normalized_unit_diag_for_polynomial() {
+        let k = Kernel::Polynomial { degree: 3, c: 0.5 };
+        let x = [0.7, -0.2];
+        assert!((k.normalized_eval(&x, &x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn laplacian_is_unit_diag() {
+        let k = Kernel::Laplacian { gamma: 0.4 };
+        assert!(k.unit_diagonal());
+        assert_eq!(k.eval(&[3.0], &[3.0]), 1.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! DKPCA: Decentralized Kernel PCA with Projection Consensus Constraints.
+//!
+//! Rust + JAX + Pallas reproduction of He, Yang, Shi, Huang (2022).
+//! Layer 3 (this crate) owns the decentralized coordinator; Layers 2/1
+//! (`python/compile/`) are build-time JAX/Pallas graphs AOT-lowered to
+//! the HLO-text artifacts executed by [`runtime`]. See DESIGN.md.
+
+pub mod admm;
+pub mod backend;
+pub mod central;
+pub mod data;
+pub mod experiments;
+pub mod kernels;
+pub mod linalg;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod runtime;
+pub mod topology;
+pub mod util;

@@ -1,0 +1,169 @@
+//! Cholesky factorisation and SPD solves.
+//!
+//! Used for the jittered centered Gram `K_j + eps*I` inverses/solves in
+//! the ADMM updates (DESIGN.md S5) and for generic SPD systems.
+
+use super::matrix::Matrix;
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+pub struct Cholesky {
+    l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor `a = L L^T`. Returns `None` if `a` is not (numerically)
+    /// positive definite.
+    pub fn new(a: &Matrix) -> Option<Cholesky> {
+        assert!(a.is_square());
+        let n = a.rows();
+        let mut l = Matrix::zeros(n, n);
+        for j in 0..n {
+            let mut d = a[(j, j)];
+            for k in 0..j {
+                d -= l[(j, k)] * l[(j, k)];
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return None;
+            }
+            let dj = d.sqrt();
+            l[(j, j)] = dj;
+            for i in (j + 1)..n {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                l[(i, j)] = s / dj;
+            }
+        }
+        Some(Cholesky { l })
+    }
+
+    /// Factor with escalating diagonal jitter until SPD. Returns the
+    /// factor and the jitter actually applied.
+    pub fn new_with_jitter(a: &Matrix, mut jitter: f64) -> (Cholesky, f64) {
+        let scale = a.trace().abs().max(1.0) / a.rows() as f64;
+        loop {
+            let mut aj = a.clone();
+            aj.add_diag(jitter * scale);
+            if let Some(c) = Cholesky::new(&aj) {
+                return (c, jitter * scale);
+            }
+            jitter = if jitter == 0.0 { 1e-12 } else { jitter * 10.0 };
+            assert!(jitter < 1.0, "matrix hopelessly indefinite");
+        }
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        // Forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            let row = self.l.row(i);
+            for k in 0..i {
+                s -= row[k] * y[k];
+            }
+            y[i] = s / row[i];
+        }
+        // Backward: L^T x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve against every column of `b`.
+    pub fn solve_mat(&self, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(b.rows(), b.cols());
+        for j in 0..b.cols() {
+            out.set_col(j, &self.solve(&b.col(j)));
+        }
+        out
+    }
+
+    /// Explicit inverse (prefer `solve` when possible).
+    pub fn inverse(&self) -> Matrix {
+        self.solve_mat(&Matrix::eye(self.l.rows()))
+    }
+
+    /// The lower factor.
+    pub fn factor(&self) -> &Matrix {
+        &self.l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut s = seed | 1;
+        let a = Matrix::from_fn(n, n, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as f64 / u64::MAX as f64) - 0.5
+        });
+        let mut g = matmul(&a, &a.transpose());
+        g.add_diag(0.5);
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(12, 3);
+        let c = Cholesky::new(&a).unwrap();
+        let rec = matmul(c.factor(), &c.factor().transpose());
+        for (x, y) in rec.as_slice().iter().zip(a.as_slice()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn solve_recovers() {
+        let a = spd(15, 5);
+        let c = Cholesky::new(&a).unwrap();
+        let x_true: Vec<f64> = (0..15).map(|i| (i as f64 - 7.0) / 3.0).collect();
+        let b = crate::linalg::ops::matvec(&a, &x_true);
+        let x = c.solve(&b);
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = spd(8, 7);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        let id = matmul(&a, &inv);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id[(i, j)] - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn indefinite_rejected() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eig -1, 3
+        assert!(Cholesky::new(&a).is_none());
+    }
+
+    #[test]
+    fn jitter_rescues_singular() {
+        let a = Matrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]); // rank 1
+        let (c, jit) = Cholesky::new_with_jitter(&a, 1e-10);
+        assert!(jit > 0.0);
+        let x = c.solve(&[1.0, 1.0]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+}

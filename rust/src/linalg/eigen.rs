@@ -1,0 +1,346 @@
+//! Symmetric eigendecomposition: Householder tridiagonalisation (tred2)
+//! followed by implicit-shift QL (tql2) — the classic EISPACK pair.
+//!
+//! This is the exact solver behind the central-kPCA ground truth
+//! `alpha_gt` (paper §6.1) and the local/neighbor-gather baselines; the
+//! iterative [`crate::linalg::power`] path is used on the hot loop.
+
+use super::matrix::Matrix;
+
+/// Eigenvalues (ascending) and matching eigenvectors (columns of `vectors`).
+pub struct EigenSym {
+    pub values: Vec<f64>,
+    pub vectors: Matrix,
+}
+
+/// Full eigendecomposition of a symmetric matrix.
+///
+/// Panics if the QL iteration fails to converge (50 sweeps), which for
+/// symmetric input does not happen in practice.
+pub fn eigen_sym(a: &Matrix) -> EigenSym {
+    assert!(a.is_square(), "eigen_sym needs a square matrix");
+    let n = a.rows();
+    if n == 0 {
+        return EigenSym { values: vec![], vectors: Matrix::zeros(0, 0) };
+    }
+    let mut z = a.clone();
+    z.symmetrize();
+    let mut d = vec![0.0; n]; // diagonal
+    let mut e = vec![0.0; n]; // off-diagonal
+    tred2(&mut z, &mut d, &mut e);
+    tql2(&mut z, &mut d, &mut e);
+    // tql2 leaves eigenvalues sorted ascending with vectors in columns.
+    EigenSym { values: d, vectors: z }
+}
+
+/// Convenience: (largest eigenvalue, unit eigenvector).
+pub fn top_eig(a: &Matrix) -> (f64, Vec<f64>) {
+    let eig = eigen_sym(a);
+    let n = a.rows();
+    (eig.values[n - 1], eig.vectors.col(n - 1))
+}
+
+/// Householder reduction to tridiagonal form (EISPACK tred2).
+fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in 0..n {
+        d[i] = z[(n - 1, i)];
+    }
+    for i in (1..n).rev() {
+        let l = i;
+        let mut h = 0.0;
+        let mut scale = 0.0;
+        if l > 1 {
+            for k in 0..l {
+                scale += d[k].abs();
+            }
+            if scale == 0.0 {
+                e[i] = d[l - 1];
+                for j in 0..l {
+                    d[j] = z[(l - 1, j)];
+                    z[(i, j)] = 0.0;
+                    z[(j, i)] = 0.0;
+                }
+            } else {
+                for k in 0..l {
+                    d[k] /= scale;
+                    h += d[k] * d[k];
+                }
+                let mut f = d[l - 1];
+                let mut g = if f > 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                d[l - 1] = f - g;
+                for j in 0..l {
+                    e[j] = 0.0;
+                }
+                for j in 0..l {
+                    f = d[j];
+                    z[(j, i)] = f;
+                    g = e[j] + z[(j, j)] * f;
+                    for k in (j + 1)..l {
+                        g += z[(k, j)] * d[k];
+                        e[k] += z[(k, j)] * f;
+                    }
+                    e[j] = g;
+                }
+                f = 0.0;
+                for j in 0..l {
+                    e[j] /= h;
+                    f += e[j] * d[j];
+                }
+                let hh = f / (h + h);
+                for j in 0..l {
+                    e[j] -= hh * d[j];
+                }
+                for j in 0..l {
+                    f = d[j];
+                    g = e[j];
+                    for k in j..l {
+                        let t = f * e[k] + g * d[k];
+                        z[(k, j)] -= t;
+                    }
+                    d[j] = z[(l - 1, j)];
+                    z[(i, j)] = 0.0;
+                }
+            }
+        } else {
+            e[i] = d[l - 1];
+            for j in 0..l {
+                d[j] = z[(l - 1, j)];
+                z[(i, j)] = 0.0;
+                z[(j, i)] = 0.0;
+            }
+        }
+        d[i] = h;
+    }
+    // Accumulate transformations.
+    for i in 0..n {
+        if i > 0 {
+            z[(n - 1, i - 1)] = z[(i - 1, i - 1)];
+            z[(i - 1, i - 1)] = 1.0;
+            let h = d[i];
+            if h != 0.0 {
+                for k in 0..i {
+                    d[k] = z[(k, i)] / h;
+                }
+                for j in 0..i {
+                    let mut g = 0.0;
+                    for k in 0..i {
+                        g += z[(k, i)] * z[(k, j)];
+                    }
+                    for k in 0..i {
+                        z[(k, j)] -= g * d[k];
+                    }
+                }
+            }
+            for k in 0..i {
+                z[(k, i)] = 0.0;
+            }
+        }
+    }
+    for j in 0..n {
+        d[j] = z[(n - 1, j)];
+        z[(n - 1, j)] = 0.0;
+    }
+    z[(n - 1, n - 1)] = 1.0;
+    e[0] = 0.0;
+}
+
+/// Implicit-shift QL on a symmetric tridiagonal (EISPACK tql2),
+/// accumulating eigenvectors into `z` and sorting ascending.
+fn tql2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    let eps = f64::EPSILON;
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        if m > l {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                assert!(iter <= 50, "tql2 failed to converge");
+                // Compute implicit shift.
+                let mut g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = (p * p + 1.0).sqrt();
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for i in (l + 2)..n {
+                    d[i] -= h;
+                }
+                f += h;
+                // QL sweep.
+                p = d[m];
+                let mut c = 1.0;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0;
+                let mut s2 = 0.0;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    g = c * e[i];
+                    h = c * p;
+                    r = (p * p + e[i] * e[i]).sqrt();
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+                    // Accumulate eigenvectors.
+                    for k in 0..n {
+                        h = z[(k, i + 1)];
+                        z[(k, i + 1)] = s * z[(k, i)] + c * h;
+                        z[(k, i)] = c * z[(k, i)] - s * h;
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+
+    // Sort ascending (selection sort, swapping vector columns).
+    for i in 0..n.saturating_sub(1) {
+        let mut k = i;
+        let mut p = d[i];
+        for j in (i + 1)..n {
+            if d[j] < p {
+                k = j;
+                p = d[j];
+            }
+        }
+        if k != i {
+            d[k] = d[i];
+            d[i] = p;
+            for r in 0..n {
+                let t = z[(r, i)];
+                z[(r, i)] = z[(r, k)];
+                z[(r, k)] = t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::linalg::ops::{dot, matvec, norm2};
+
+    fn sym_random(n: usize, seed: u64) -> Matrix {
+        let mut s = seed | 1;
+        let a = Matrix::from_fn(n, n, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as f64 / u64::MAX as f64) - 0.5
+        });
+        let mut g = matmul(&a, &a.transpose());
+        g.symmetrize();
+        g
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::diag(&[3.0, 1.0, 2.0]);
+        let e = eigen_sym(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let e = eigen_sym(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthonormality() {
+        for seed in 1..6u64 {
+            let n = 4 + (seed as usize) * 3;
+            let a = sym_random(n, seed);
+            let e = eigen_sym(&a);
+            // A v = lambda v for every pair.
+            for j in 0..n {
+                let v = e.vectors.col(j);
+                let av = matvec(&a, &v);
+                for i in 0..n {
+                    assert!(
+                        (av[i] - e.values[j] * v[i]).abs() < 1e-8 * (1.0 + e.values[j].abs()),
+                        "residual too large (seed {seed}, eig {j})"
+                    );
+                }
+            }
+            // Orthonormal columns.
+            for p in 0..n {
+                let vp = e.vectors.col(p);
+                assert!((norm2(&vp) - 1.0).abs() < 1e-9);
+                for q in (p + 1)..n {
+                    assert!(dot(&vp, &e.vectors.col(q)).abs() < 1e-9);
+                }
+            }
+            // Trace preserved.
+            let sum: f64 = e.values.iter().sum();
+            assert!((sum - a.trace()).abs() < 1e-8 * (1.0 + a.trace().abs()));
+        }
+    }
+
+    #[test]
+    fn top_eig_matches_full() {
+        let a = sym_random(12, 9);
+        let (lam, v) = top_eig(&a);
+        let e = eigen_sym(&a);
+        assert!((lam - e.values[11]).abs() < 1e-10);
+        let av = matvec(&a, &v);
+        for i in 0..12 {
+            assert!((av[i] - lam * v[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn psd_gram_has_nonnegative_spectrum() {
+        let a = sym_random(10, 13); // A A^T is PSD
+        let e = eigen_sym(&a);
+        assert!(e.values.iter().all(|&v| v > -1e-9));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let e = eigen_sym(&Matrix::zeros(0, 0));
+        assert!(e.values.is_empty());
+        let e1 = eigen_sym(&Matrix::from_rows(&[&[7.0]]));
+        assert!((e1.values[0] - 7.0).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,260 @@
+//! Blocked matrix multiplication.
+//!
+//! Cache-blocked, transpose-packed GEMM. For the paper's problem sizes
+//! (Gram matrices up to a few thousand) this stays within a small factor
+//! of a tuned BLAS while keeping the crate dependency-free. The kernel
+//! packs the RHS by columns so the innermost loop is two contiguous
+//! streams (auto-vectorisable).
+
+use super::matrix::Matrix;
+
+/// Tile edge used by the blocked kernel (elements, not bytes). 64x64
+/// f64 tiles = 32 KiB per operand tile, comfortably inside L1+L2.
+const BLOCK: usize = 64;
+
+/// Dot product with 4 independent accumulators: breaks the FMA
+/// dependency chain so the core can keep >1 fused multiply-add in
+/// flight per cycle (perf pass, EXPERIMENTS.md §Perf L3).
+#[inline(always)]
+fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut tail = 0.0;
+    for j in chunks * 4..a.len() {
+        tail += a[j] * b[j];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// `A @ B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let mut out = Matrix::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// `A @ B` into a caller-provided output (hot path: allocation-free
+/// apart from the packed RHS scratch).
+pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    assert_eq!((out.rows(), out.cols()), (m, n), "output shape mismatch");
+    out.as_mut_slice().fill(0.0);
+    // Pack B^T so each (j, :) stream is contiguous.
+    let bt = b.transpose();
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for j0 in (0..n).step_by(BLOCK) {
+            let j1 = (j0 + BLOCK).min(n);
+            for k0 in (0..k).step_by(BLOCK) {
+                let k1 = (k0 + BLOCK).min(k);
+                for i in i0..i1 {
+                    let arow = &a.row(i)[k0..k1];
+                    let mut j = j0;
+                    while j + 4 <= j1 {
+                        let q = dot4(
+                            arow,
+                            &bt.row(j)[k0..k1],
+                            &bt.row(j + 1)[k0..k1],
+                            &bt.row(j + 2)[k0..k1],
+                            &bt.row(j + 3)[k0..k1],
+                        );
+                        out[(i, j)] += q[0];
+                        out[(i, j + 1)] += q[1];
+                        out[(i, j + 2)] += q[2];
+                        out[(i, j + 3)] += q[3];
+                        j += 4;
+                    }
+                    while j < j1 {
+                        out[(i, j)] += dot_unrolled(arow, &bt.row(j)[k0..k1]);
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 1x4 micro-kernel: one `a` stream against four `b` streams — each
+/// loaded `a[k]` feeds four FMAs, quartering the dominant load traffic
+/// (perf pass, EXPERIMENTS.md §Perf L3).
+#[inline(always)]
+fn dot4(arow: &[f64], b0: &[f64], b1: &[f64], b2: &[f64], b3: &[f64]) -> [f64; 4] {
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let (mut t0, mut t1, mut t2, mut t3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let chunks = arow.len() / 2;
+    for c in 0..chunks {
+        let k = c * 2;
+        let (a0, a1) = (arow[k], arow[k + 1]);
+        s0 += a0 * b0[k];
+        t0 += a1 * b0[k + 1];
+        s1 += a0 * b1[k];
+        t1 += a1 * b1[k + 1];
+        s2 += a0 * b2[k];
+        t2 += a1 * b2[k + 1];
+        s3 += a0 * b3[k];
+        t3 += a1 * b3[k + 1];
+    }
+    if arow.len() % 2 == 1 {
+        let k = arow.len() - 1;
+        let a0 = arow[k];
+        s0 += a0 * b0[k];
+        s1 += a0 * b1[k];
+        s2 += a0 * b2[k];
+        s3 += a0 * b3[k];
+    }
+    [s0 + t0, s1 + t1, s2 + t2, s3 + t3]
+}
+
+/// `A @ B^T` without materialising the transpose (both row-major).
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt inner-dim mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let mut out = Matrix::zeros(m, n);
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for j0 in (0..n).step_by(BLOCK) {
+            let j1 = (j0 + BLOCK).min(n);
+            for k0 in (0..k).step_by(BLOCK) {
+                let k1 = (k0 + BLOCK).min(k);
+                for i in i0..i1 {
+                    let arow = &a.row(i)[k0..k1];
+                    let mut j = j0;
+                    while j + 4 <= j1 {
+                        let q = dot4(
+                            arow,
+                            &b.row(j)[k0..k1],
+                            &b.row(j + 1)[k0..k1],
+                            &b.row(j + 2)[k0..k1],
+                            &b.row(j + 3)[k0..k1],
+                        );
+                        out[(i, j)] += q[0];
+                        out[(i, j + 1)] += q[1];
+                        out[(i, j + 2)] += q[2];
+                        out[(i, j + 3)] += q[3];
+                        j += 4;
+                    }
+                    while j < j1 {
+                        out[(i, j)] += dot_unrolled(arow, &b.row(j)[k0..k1]);
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `A^T @ A` (symmetric result, only the upper triangle is computed).
+pub fn gram_tt(a: &Matrix) -> Matrix {
+    let n = a.cols();
+    let mut out = Matrix::zeros(n, n);
+    for i in 0..a.rows() {
+        let row = a.row(i);
+        for p in 0..n {
+            let rp = row[p];
+            if rp == 0.0 {
+                continue;
+            }
+            for q in p..n {
+                out[(p, q)] += rp * row[q];
+            }
+        }
+    }
+    for p in 0..n {
+        for q in (p + 1)..n {
+            out[(q, p)] = out[(p, q)];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = 0.0;
+                for k in 0..a.cols() {
+                    acc += a[(i, k)] * b[(k, j)];
+                }
+                out[(i, j)] = acc;
+            }
+        }
+        out
+    }
+
+    fn pseudo_random(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        Matrix::from_fn(rows, cols, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as f64 / u64::MAX as f64) - 0.5
+        })
+    }
+
+    #[test]
+    fn matches_naive_square() {
+        let a = pseudo_random(37, 37, 1);
+        let b = pseudo_random(37, 37, 2);
+        let got = matmul(&a, &b);
+        let want = naive(&a, &b);
+        for (x, y) in got.as_slice().iter().zip(want.as_slice()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matches_naive_rect_spanning_blocks() {
+        let a = pseudo_random(70, 130, 3);
+        let b = pseudo_random(130, 65, 4);
+        let got = matmul(&a, &b);
+        let want = naive(&a, &b);
+        for (x, y) in got.as_slice().iter().zip(want.as_slice()) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = pseudo_random(20, 20, 5);
+        let got = matmul(&a, &Matrix::eye(20));
+        for (x, y) in got.as_slice().iter().zip(a.as_slice()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn nt_matches_explicit_transpose() {
+        let a = pseudo_random(33, 21, 6);
+        let b = pseudo_random(44, 21, 7);
+        let got = matmul_nt(&a, &b);
+        let want = matmul(&a, &b.transpose());
+        for (x, y) in got.as_slice().iter().zip(want.as_slice()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gram_tt_matches() {
+        let a = pseudo_random(15, 9, 8);
+        let got = gram_tt(&a);
+        let want = matmul(&a.transpose(), &a);
+        for (x, y) in got.as_slice().iter().zip(want.as_slice()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! Dense row-major `f64` matrix — the workhorse type of the whole stack.
+//!
+//! The coordinator's numerics (S1 in DESIGN.md) run in `f64` and convert
+//! to `f32` only at the PJRT artifact boundary (`runtime::exec`). No BLAS
+//! dependency: `gemm.rs` provides a blocked kernel that is fast enough
+//! for the paper's problem sizes (N <= a few thousand).
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero-filled `rows x cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with a constant value.
+    pub fn full(rows: usize, cols: usize, value: f64) -> Self {
+        Matrix { rows, cols, data: vec![value; rows * cols] }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major `Vec` (length must be `rows * cols`).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from nested slices (rows of equal length).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    /// Build by evaluating `f(i, j)` at every position.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: &[f64]) -> Self {
+        let mut m = Matrix::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Raw row-major data slice.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw row-major data slice.
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// One row as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// One row as a mutable slice.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Overwrite column `j`.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Copy a rectangular block `[r0..r1) x [c0..c1)`.
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut b = Matrix::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            let src = &self.data[i * self.cols + c0..i * self.cols + c1];
+            b.row_mut(i - r0).copy_from_slice(src);
+        }
+        b
+    }
+
+    /// Paste `other` with its top-left corner at `(r0, c0)`.
+    pub fn set_block(&mut self, r0: usize, c0: usize, other: &Matrix) {
+        assert!(r0 + other.rows <= self.rows && c0 + other.cols <= self.cols);
+        for i in 0..other.rows {
+            let dst_start = (r0 + i) * self.cols + c0;
+            self.data[dst_start..dst_start + other.cols].copy_from_slice(other.row(i));
+        }
+    }
+
+    /// Stack matrices vertically (all must share the column count).
+    pub fn vstack(parts: &[&Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        let rows: usize = parts.iter().map(|p| p.rows).sum();
+        let mut out = Matrix::zeros(rows, cols);
+        let mut r = 0;
+        for p in parts {
+            assert_eq!(p.cols, cols, "vstack column mismatch");
+            out.set_block(r, 0, p);
+            r += p.rows;
+        }
+        out
+    }
+
+    /// Assemble a block matrix from a grid of blocks.
+    pub fn from_blocks(grid: &[Vec<&Matrix>]) -> Matrix {
+        assert!(!grid.is_empty());
+        let total_rows: usize = grid.iter().map(|row| row[0].rows).sum();
+        let total_cols: usize = grid[0].iter().map(|b| b.cols).sum();
+        let mut out = Matrix::zeros(total_rows, total_cols);
+        let mut r = 0;
+        for row in grid {
+            let mut c = 0;
+            let h = row[0].rows;
+            for b in row {
+                assert_eq!(b.rows, h, "block row height mismatch");
+                out.set_block(r, c, b);
+                c += b.cols;
+            }
+            r += h;
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |a, &v| a.max(v.abs()))
+    }
+
+    /// Trace (square only).
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Symmetrize in place: `A <- (A + A^T) / 2`.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let m = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = m;
+                self[(j, i)] = m;
+            }
+        }
+    }
+
+    /// Add `v` to every diagonal entry (jitter regularisation).
+    pub fn add_diag(&mut self, v: f64) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            self[(i, i)] += v;
+        }
+    }
+
+    /// True when all entries are finite.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+
+    /// Convert to `f32` row-major (PJRT boundary).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Build from `f32` row-major (PJRT boundary).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data: data.iter().map(|&v| v as f64).collect() }
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  [")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}]", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_index() {
+        let mut m = Matrix::zeros(2, 3);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn eye_trace() {
+        assert_eq!(Matrix::eye(4).trace(), 4.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t[(2, 1)], 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn block_and_set_block() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let b = m.block(1, 3, 2, 4);
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b[(0, 0)], 6.0);
+        assert_eq!(b[(1, 1)], 11.0);
+        let mut z = Matrix::zeros(4, 4);
+        z.set_block(2, 2, &b);
+        assert_eq!(z[(3, 3)], 11.0);
+        assert_eq!(z[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn vstack_concatenates() {
+        let a = Matrix::full(2, 3, 1.0);
+        let b = Matrix::full(1, 3, 2.0);
+        let s = Matrix::vstack(&[&a, &b]);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s[(2, 0)], 2.0);
+    }
+
+    #[test]
+    fn from_blocks_grid() {
+        let a = Matrix::full(1, 1, 1.0);
+        let b = Matrix::full(1, 2, 2.0);
+        let c = Matrix::full(2, 1, 3.0);
+        let d = Matrix::full(2, 2, 4.0);
+        let m = Matrix::from_blocks(&[vec![&a, &b], vec![&c, &d]]);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m[(0, 1)], 2.0);
+        assert_eq!(m[(2, 0)], 3.0);
+        assert_eq!(m[(2, 2)], 4.0);
+    }
+
+    #[test]
+    fn symmetrize_averages() {
+        let mut m = Matrix::from_rows(&[&[1.0, 3.0], &[1.0, 2.0]]);
+        m.symmetrize();
+        assert_eq!(m[(0, 1)], 2.0);
+        assert_eq!(m[(1, 0)], 2.0);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let m = Matrix::from_rows(&[&[1.5, -2.25], &[0.0, 4.0]]);
+        let f = m.to_f32();
+        let back = Matrix::from_f32(2, 2, &f);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_panic() {
+        let _ = Matrix::from_rows(&[&[1.0, 2.0], &[3.0][..]]);
+    }
+}

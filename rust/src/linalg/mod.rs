@@ -1,0 +1,19 @@
+//! S1 — dense linear-algebra substrate (no external BLAS).
+//!
+//! `f64` throughout; the PJRT boundary (`runtime::exec`) converts to
+//! `f32`. See DESIGN.md §System inventory.
+
+pub mod cholesky;
+pub mod eigen;
+pub mod gemm;
+pub mod matrix;
+pub mod ops;
+pub mod pinv;
+pub mod power;
+
+pub use cholesky::Cholesky;
+pub use eigen::{eigen_sym, top_eig, EigenSym};
+pub use gemm::{matmul, matmul_into, matmul_nt};
+pub use matrix::Matrix;
+pub use pinv::pinv_sym;
+pub use power::{power_iteration, PowerResult};

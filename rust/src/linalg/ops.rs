@@ -1,0 +1,167 @@
+//! Element-wise and vector operations on [`Matrix`] and `&[f64]`.
+
+use super::matrix::Matrix;
+
+/// `a + b` (shapes must match).
+pub fn add(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+    let mut out = a.clone();
+    for (o, &v) in out.as_mut_slice().iter_mut().zip(b.as_slice()) {
+        *o += v;
+    }
+    out
+}
+
+/// `a - b` (shapes must match).
+pub fn sub(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+    let mut out = a.clone();
+    for (o, &v) in out.as_mut_slice().iter_mut().zip(b.as_slice()) {
+        *o -= v;
+    }
+    out
+}
+
+/// `s * a`.
+pub fn scale(a: &Matrix, s: f64) -> Matrix {
+    let mut out = a.clone();
+    for o in out.as_mut_slice() {
+        *o *= s;
+    }
+    out
+}
+
+/// In-place `a += s * b` (axpy).
+pub fn axpy_inplace(a: &mut Matrix, s: f64, b: &Matrix) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+    for (o, &v) in a.as_mut_slice().iter_mut().zip(b.as_slice()) {
+        *o += s * v;
+    }
+}
+
+/// Matrix-vector product `A x`.
+pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    let mut y = vec![0.0; a.rows()];
+    matvec_into(a, x, &mut y);
+    y
+}
+
+/// Matrix-vector product into a caller-provided buffer (hot path:
+/// allocation-free).
+pub fn matvec_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.cols(), x.len());
+    assert_eq!(a.rows(), y.len());
+    for i in 0..a.rows() {
+        let row = a.row(i);
+        // 4 independent accumulators keep multiple FMAs in flight
+        // (perf pass, EXPERIMENTS.md §Perf L3).
+        let chunks = row.len() / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+        for c in 0..chunks {
+            let j = c * 4;
+            s0 += row[j] * x[j];
+            s1 += row[j + 1] * x[j + 1];
+            s2 += row[j + 2] * x[j + 2];
+            s3 += row[j + 3] * x[j + 3];
+        }
+        let mut tail = 0.0;
+        for j in chunks * 4..row.len() {
+            tail += row[j] * x[j];
+        }
+        y[i] = (s0 + s1) + (s2 + s3) + tail;
+    }
+}
+
+/// `A^T x` without materialising the transpose.
+pub fn matvec_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0; a.cols()];
+    for i in 0..a.rows() {
+        let row = a.row(i);
+        let xi = x[i];
+        for (j, rv) in row.iter().enumerate() {
+            y[j] += rv * xi;
+        }
+    }
+    y
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Normalise to unit norm (returns the original norm). Leaves the vector
+/// untouched when its norm underflows.
+pub fn normalize(a: &mut [f64]) -> f64 {
+    let n = norm2(a);
+    if n > 1e-300 {
+        for v in a.iter_mut() {
+            *v /= n;
+        }
+    }
+    n
+}
+
+/// Outer product `x y^T`.
+pub fn outer(x: &[f64], y: &[f64]) -> Matrix {
+    Matrix::from_fn(x.len(), y.len(), |i, j| x[i] * y[j])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m22(a: f64, b: f64, c: f64, d: f64) -> Matrix {
+        Matrix::from_rows(&[&[a, b], &[c, d]])
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let a = m22(1.0, 2.0, 3.0, 4.0);
+        let b = m22(4.0, 3.0, 2.0, 1.0);
+        assert_eq!(add(&a, &b), Matrix::full(2, 2, 5.0));
+        assert_eq!(sub(&a, &a), Matrix::zeros(2, 2));
+        assert_eq!(scale(&a, 2.0)[(1, 1)], 8.0);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut a = m22(1.0, 1.0, 1.0, 1.0);
+        let b = m22(1.0, 2.0, 3.0, 4.0);
+        axpy_inplace(&mut a, 0.5, &b);
+        assert_eq!(a[(1, 1)], 3.0);
+    }
+
+    #[test]
+    fn matvec_works() {
+        let a = m22(1.0, 2.0, 3.0, 4.0);
+        assert_eq!(matvec(&a, &[1.0, 1.0]), vec![3.0, 7.0]);
+        assert_eq!(matvec_t(&a, &[1.0, 1.0]), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn norms_and_dot() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        let mut v = vec![3.0, 4.0];
+        let n = normalize(&mut v);
+        assert!((n - 5.0).abs() < 1e-15);
+        assert!((norm2(&v) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn outer_shape() {
+        let o = outer(&[1.0, 2.0], &[3.0, 4.0, 5.0]);
+        assert_eq!(o.rows(), 2);
+        assert_eq!(o.cols(), 3);
+        assert_eq!(o[(1, 2)], 10.0);
+    }
+}

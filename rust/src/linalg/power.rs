@@ -1,0 +1,108 @@
+//! Power iteration — the iterative top-eigenpair path used on hot loops
+//! (and AOT-executed via the `power_iter_n*.hlo.txt` artifact when the
+//! shape is covered; see `runtime::exec`).
+
+use super::matrix::Matrix;
+use super::ops::{dot, matvec_into, normalize};
+
+/// Result of a power-iteration run.
+pub struct PowerResult {
+    pub value: f64,
+    pub vector: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Top eigenpair of a symmetric PSD matrix by power iteration.
+///
+/// `tol` is the per-step vector-change threshold; `seed` fixes the start
+/// vector (deterministic across runs and across the PJRT/native paths).
+pub fn power_iteration(a: &Matrix, max_iters: usize, tol: f64, seed: u64) -> PowerResult {
+    assert!(a.is_square());
+    let n = a.rows();
+    if n == 0 {
+        return PowerResult { value: 0.0, vector: vec![], iterations: 0, converged: true };
+    }
+    let mut s = seed | 1;
+    let mut v: Vec<f64> = (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as f64 / u64::MAX as f64) - 0.5
+        })
+        .collect();
+    normalize(&mut v);
+    let mut w = vec![0.0; n];
+    let mut value = 0.0;
+    for it in 0..max_iters {
+        matvec_into(a, &v, &mut w);
+        value = dot(&v, &w);
+        let nrm = normalize(&mut w);
+        if nrm <= 1e-300 {
+            // a annihilated v: v was in the null space; restart shifted.
+            for (i, x) in v.iter_mut().enumerate() {
+                *x += ((i % 7) as f64 - 3.0) / 10.0;
+            }
+            normalize(&mut v);
+            continue;
+        }
+        // Sign-align to measure the change.
+        let sgn = if dot(&v, &w) < 0.0 { -1.0 } else { 1.0 };
+        let mut delta = 0.0f64;
+        for i in 0..n {
+            delta = delta.max((w[i] * sgn - v[i]).abs());
+        }
+        std::mem::swap(&mut v, &mut w);
+        if delta < tol {
+            return PowerResult { value, vector: v, iterations: it + 1, converged: true };
+        }
+    }
+    PowerResult { value, vector: v, iterations: max_iters, converged: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigen::top_eig;
+    use crate::linalg::gemm::matmul;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut s = seed | 1;
+        let a = Matrix::from_fn(n, n, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as f64 / u64::MAX as f64) - 0.5
+        });
+        matmul(&a, &a.transpose())
+    }
+
+    #[test]
+    fn matches_exact_solver() {
+        for seed in 1..5 {
+            let a = spd(20, seed);
+            let exact = top_eig(&a);
+            let pr = power_iteration(&a, 5000, 1e-12, 7);
+            assert!(pr.converged);
+            assert!((pr.value - exact.0).abs() < 1e-6 * exact.0.max(1.0));
+            let align = crate::linalg::ops::dot(&pr.vector, &exact.1).abs();
+            assert!(align > 1.0 - 1e-5, "misaligned: {align}");
+        }
+    }
+
+    #[test]
+    fn zero_matrix_converges() {
+        let a = Matrix::zeros(5, 5);
+        let pr = power_iteration(&a, 100, 1e-10, 1);
+        assert!(pr.value.abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = spd(10, 3);
+        let p1 = power_iteration(&a, 100, 1e-10, 42);
+        let p2 = power_iteration(&a, 100, 1e-10, 42);
+        assert_eq!(p1.vector, p2.vector);
+    }
+}

@@ -1,0 +1,312 @@
+//! `dkpca` — the Layer-3 launcher.
+//!
+//! Subcommands:
+//!   run              one DKPCA run from a JSON config (or flags)
+//!   sweep            regenerate a paper figure/table (fig3|fig4|fig5|
+//!                    timing|comm|ablation)
+//!   central          central-kPCA baseline only
+//!   artifacts-check  verify the AOT artifact set loads, compiles and
+//!                    agrees with the native backend
+//!   info             print environment/topology/config information
+//!
+//! Examples:
+//!   dkpca run --nodes 20 --samples 100 --parallel
+//!   dkpca sweep --experiment fig3 --full
+//!   dkpca run --config examples/configs/quickstart.json --pjrt
+
+use std::sync::Arc;
+
+use dkpca::admm::DkpcaSolver;
+use dkpca::backend::{ComputeBackend, NativeBackend};
+use dkpca::central::similarity;
+use dkpca::config::ExperimentConfig;
+use dkpca::coordinator::run_decentralized;
+use dkpca::experiments::{self, build_env, central_kpca_power};
+use dkpca::metrics::{f, Stats, Stopwatch, Table};
+use dkpca::runtime::{default_artifacts_dir, PjrtBackend};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("central") => cmd_central(&args[1..]),
+        Some("artifacts-check") => cmd_artifacts_check(),
+        Some("info") => cmd_info(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "dkpca — Decentralized Kernel PCA with Projection Consensus Constraints\n\
+         \n\
+         USAGE: dkpca <run|sweep|central|artifacts-check|info> [flags]\n\
+         \n\
+         run flags:    --config <file.json> --nodes <J> --samples <N>\n\
+         \u{20}             --iters <T> --parallel --pjrt --seed <S>\n\
+         sweep flags:  --experiment <fig3|fig4|fig5|timing|comm|ablation>\n\
+         \u{20}             --full --pjrt --seed <S>\n\
+         central flags: --nodes <J> --samples <N> --seed <S>"
+    );
+}
+
+/// Tiny flag parser: `--key value` and boolean `--key`.
+fn flag<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn has(args: &[String], key: &str) -> bool {
+    args.iter().any(|a| a == key)
+}
+
+fn parse_or<T: std::str::FromStr>(s: Option<&str>, default: T) -> T {
+    s.and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn make_backend(use_pjrt: bool) -> Arc<dyn ComputeBackend> {
+    if use_pjrt {
+        match PjrtBackend::new(&default_artifacts_dir()) {
+            Ok(b) => {
+                eprintln!("[dkpca] PJRT backend: {} artifacts", b.registry().len());
+                return Arc::new(b);
+            }
+            Err(e) => eprintln!("[dkpca] PJRT unavailable ({e}); falling back to native"),
+        }
+    }
+    Arc::new(NativeBackend)
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let mut cfg = match flag(args, "--config") {
+        Some(path) => match ExperimentConfig::from_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        },
+        None => ExperimentConfig::default(),
+    };
+    if let Some(v) = flag(args, "--nodes") {
+        cfg.nodes = parse_or(Some(v), cfg.nodes);
+    }
+    if let Some(v) = flag(args, "--samples") {
+        cfg.samples_per_node = parse_or(Some(v), cfg.samples_per_node);
+    }
+    if let Some(v) = flag(args, "--iters") {
+        cfg.admm.max_iters = parse_or(Some(v), cfg.admm.max_iters);
+    }
+    if let Some(v) = flag(args, "--seed") {
+        cfg.seed = parse_or(Some(v), cfg.seed);
+        cfg.admm.seed = cfg.seed;
+    }
+    if has(args, "--parallel") {
+        cfg.parallel = true;
+    }
+    if has(args, "--pjrt") {
+        cfg.use_pjrt = true;
+    }
+
+    let backend = make_backend(cfg.use_pjrt);
+    let env = build_env(&cfg);
+    eprintln!(
+        "[dkpca] J={} N_j={} |Omega|={} kernel={:?} backend={} mode={}",
+        cfg.nodes,
+        cfg.samples_per_node,
+        env.graph.degree(0),
+        env.kernel,
+        backend.name(),
+        if cfg.parallel { "parallel" } else { "sequential" }
+    );
+
+    let sw = Stopwatch::start();
+    let (alphas, comm) = if cfg.parallel {
+        let rep = run_decentralized(
+            &env.xs,
+            &env.graph,
+            &env.kernel,
+            &cfg.admm,
+            cfg.noise,
+            cfg.seed,
+            backend.clone(),
+        );
+        (rep.alphas, rep.comm_floats_total)
+    } else {
+        let mut solver =
+            DkpcaSolver::new(&env.xs, &env.graph, &env.kernel, &cfg.admm, cfg.noise, cfg.seed);
+        let res = solver.run(backend.as_ref());
+        (res.alphas, res.comm_floats)
+    };
+    let dkpca_secs = sw.elapsed_secs();
+
+    let sw = Stopwatch::start();
+    let central = central_kpca_power(&env.xs, &env.kernel, 500);
+    let central_secs = sw.elapsed_secs();
+
+    let sims: Vec<f64> = alphas
+        .iter()
+        .zip(&env.xs)
+        .map(|(a, x)| similarity(a, x, &central, &env.kernel))
+        .collect();
+    let stats = Stats::from(&sims);
+    let mut t = Table::new(
+        "DKPCA run",
+        &["sim_mean", "sim_min", "sim_max", "dkpca_s", "central_s", "comm_floats"],
+    );
+    t.row(&[
+        f(stats.mean),
+        f(stats.min),
+        f(stats.max),
+        format!("{dkpca_secs:.3}"),
+        format!("{central_secs:.3}"),
+        comm.to_string(),
+    ]);
+    println!("{t}");
+    0
+}
+
+fn cmd_sweep(args: &[String]) -> i32 {
+    let exp = flag(args, "--experiment").unwrap_or("fig3");
+    let full = has(args, "--full");
+    let seed: u64 = parse_or(flag(args, "--seed"), 0);
+    let backend = make_backend(has(args, "--pjrt"));
+    match exp {
+        "fig3" => {
+            let counts: &[usize] = if full { &[20, 40, 60, 80] } else { &[10, 20] };
+            let rows = experiments::fig3::run(counts, 100, backend, seed);
+            println!("{}", experiments::fig3::table(&rows));
+        }
+        "fig4" => {
+            let counts: &[usize] = if full { &[40, 100, 200, 300] } else { &[40, 100] };
+            let rows = experiments::fig4::run(20, counts, backend, seed);
+            println!("{}", experiments::fig4::table(&rows));
+        }
+        "fig5" => {
+            let omegas: &[usize] = if full { &[2, 4, 6, 8, 10, 12] } else { &[2, 4] };
+            let rows = experiments::fig5::run(20, 100, omegas, 30, backend.as_ref(), seed);
+            println!("{}", experiments::fig5::table(&rows));
+        }
+        "timing" => {
+            let counts: &[usize] = if full { &[10, 20, 40, 80] } else { &[10, 20] };
+            let rows = experiments::timing::run(counts, 100, 30, backend, seed);
+            println!("{}", experiments::timing::table(&rows));
+        }
+        "comm" => {
+            let rows =
+                experiments::comm::run(20, &[2, 4, 6], &[50, 100, 200], 5, backend, seed);
+            println!("{}", experiments::comm::table(&rows));
+        }
+        "ablation" => {
+            let d = experiments::ablation::degenerate(5, 15, 40, backend.as_ref(), 23);
+            println!("{}", experiments::ablation::degenerate_table(&d));
+            let r = experiments::ablation::rho_sweep(
+                &[10.0, 50.0, 100.0, 500.0],
+                20,
+                backend.as_ref(),
+                17,
+            );
+            println!("{}", experiments::ablation::rho_table(&r));
+            let s = experiments::ablation::self_constraint(30, backend.as_ref(), 29);
+            println!("{}", experiments::ablation::self_table(&s));
+            let i = experiments::ablation::init_sweep(
+                12,
+                50,
+                &[2026, 7, 123],
+                60,
+                backend.as_ref(),
+            );
+            println!("{}", experiments::ablation::init_table(&i));
+        }
+        other => {
+            eprintln!("unknown experiment '{other}'");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_central(args: &[String]) -> i32 {
+    let mut cfg = ExperimentConfig::default();
+    cfg.nodes = parse_or(flag(args, "--nodes"), 20);
+    cfg.samples_per_node = parse_or(flag(args, "--samples"), 100);
+    cfg.seed = parse_or(flag(args, "--seed"), 0);
+    let env = build_env(&cfg);
+    let sw = Stopwatch::start();
+    let central = central_kpca_power(&env.xs, &env.kernel, 500);
+    println!(
+        "central kPCA: N={} lambda1={:.6} time={:.3}s",
+        cfg.nodes * cfg.samples_per_node,
+        central.lambda,
+        sw.elapsed_secs()
+    );
+    0
+}
+
+fn cmd_artifacts_check() -> i32 {
+    let dir = default_artifacts_dir();
+    let pjrt = match PjrtBackend::new(&dir) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("FAIL: {e}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    println!("registry: {} artifacts from {}", pjrt.registry().len(), dir.display());
+    // Exercise one op per family and cross-check against native.
+    use dkpca::data::Rng;
+    use dkpca::linalg::Matrix;
+    let mut rng = Rng::new(0);
+    let native = NativeBackend;
+    let x = Matrix::from_fn(100, 784, |_, _| rng.gauss());
+    let a = pjrt.gram_rbf_centered(&x, &x, 0.02);
+    let b = native.gram_rbf_centered(&x, &x, 0.02);
+    let mut max_err = 0.0f64;
+    for (p, q) in a.as_slice().iter().zip(b.as_slice()) {
+        max_err = max_err.max((p - q).abs());
+    }
+    let (hits, misses) = pjrt.stats();
+    println!("gram 100x100: max|pjrt - native| = {max_err:.2e} (hits {hits}, misses {misses})");
+    if max_err < 1e-4 && hits >= 1 {
+        println!("artifacts OK");
+        0
+    } else {
+        println!("artifacts MISMATCH");
+        1
+    }
+}
+
+fn cmd_info(args: &[String]) -> i32 {
+    let cfg = match flag(args, "--config") {
+        Some(p) => ExperimentConfig::from_file(p).unwrap_or_default(),
+        None => ExperimentConfig::default(),
+    };
+    println!("dkpca {} — three-layer Rust + JAX + Pallas DKPCA", env!("CARGO_PKG_VERSION"));
+    println!("config: {cfg:?}");
+    let env = build_env(&cfg);
+    println!(
+        "topology: J={} edges={} diameter={} max_degree={}",
+        env.graph.len(),
+        env.graph.edge_count(),
+        env.graph.diameter(),
+        env.graph.max_degree()
+    );
+    let dir = default_artifacts_dir();
+    match dkpca::runtime::Registry::load(&dir) {
+        Ok(r) => println!("artifacts: {} entries (feat_dim {})", r.len(), r.feat_dim),
+        Err(_) => println!("artifacts: not built (run `make artifacts`)"),
+    }
+    0
+}

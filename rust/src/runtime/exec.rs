@@ -1,0 +1,255 @@
+//! PJRT execution backend (S8): loads the AOT HLO-text artifacts,
+//! compiles them once on the PJRT CPU client, and serves the
+//! [`ComputeBackend`] operations from the compiled executables —
+//! falling back to the native substrate for uncovered shapes.
+//!
+//! Python never runs here: artifacts were lowered once by `make
+//! artifacts` and the binary is self-contained afterwards.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::backend::{ComputeBackend, NativeBackend};
+use crate::linalg::Matrix;
+
+use super::registry::{ArtifactKey, Registry};
+
+/// Everything touching the PJRT client lives behind one mutex: the xla
+/// wrapper types hold raw pointers (not `Sync`), and a single in-order
+/// execution stream also mirrors how one device queue behaves.
+struct PjrtInner {
+    client: xla::PjRtClient,
+    cache: BTreeMap<ArtifactKey, xla::PjRtLoadedExecutable>,
+}
+
+/// PJRT-backed [`ComputeBackend`] with native fallback.
+pub struct PjrtBackend {
+    registry: Registry,
+    inner: Mutex<PjrtInner>,
+    native: NativeBackend,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Ops below this FLOP estimate run natively even when an artifact
+    /// covers the shape: PJRT buffer marshalling costs ~0.1-1 ms, which
+    /// dominates sub-megaflop ops (measured in `bench backend_pjrt`;
+    /// EXPERIMENTS.md §Perf L3). 0 = always use artifacts.
+    min_flops: f64,
+}
+
+// SAFETY: all xla raw-pointer state is owned by `inner` and only touched
+// while holding the mutex; the PJRT CPU client itself is thread-safe for
+// serialized access.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    /// Load the registry and create the PJRT CPU client. Every covered
+    /// shape is served from the artifacts (crosscheck/test mode).
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtBackend> {
+        let registry = Registry::load(artifacts_dir)
+            .map_err(|e| anyhow::anyhow!("registry: {e}"))?;
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        Ok(PjrtBackend {
+            registry,
+            inner: Mutex::new(PjrtInner { client, cache: BTreeMap::new() }),
+            native: NativeBackend,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            min_flops: 0.0,
+        })
+    }
+
+    /// Hybrid dispatch: artifacts only for ops whose FLOP estimate
+    /// exceeds `min_flops` (10 MFLOP is the measured crossover on this
+    /// host — the Gram ops go to PJRT, the per-iteration ADMM/z ops
+    /// stay native).
+    pub fn new_hybrid(artifacts_dir: &Path, min_flops: f64) -> Result<PjrtBackend> {
+        let mut b = Self::new(artifacts_dir)?;
+        b.min_flops = min_flops;
+        Ok(b)
+    }
+
+    /// (artifact hits, native fallbacks) served so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Execute the artifact for `key` on the given input literals,
+    /// returning the flattened output tuple. None when the shape is not
+    /// covered by the artifact set.
+    fn run(&self, key: &ArtifactKey, inputs: &[xla::Literal]) -> Option<Result<Vec<xla::Literal>>> {
+        let entry = self.registry.lookup(key)?;
+        let mut inner = self.inner.lock().expect("pjrt mutex poisoned");
+        if !inner.cache.contains_key(key) {
+            let compiled = (|| -> Result<xla::PjRtLoadedExecutable> {
+                let proto = xla::HloModuleProto::from_text_file(&entry.path)
+                    .with_context(|| format!("load {}", entry.path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                inner.client.compile(&comp).context("compile")
+            })();
+            match compiled {
+                Ok(exe) => {
+                    inner.cache.insert(key.clone(), exe);
+                }
+                Err(e) => return Some(Err(e)),
+            }
+        }
+        let exe = inner.cache.get(key).unwrap();
+        let out = (|| -> Result<Vec<xla::Literal>> {
+            let result = exe.execute::<xla::Literal>(inputs).context("execute")?;
+            let lit = result[0][0].to_literal_sync().context("to_literal")?;
+            // aot.py lowers with return_tuple=True.
+            lit.to_tuple().context("to_tuple")
+        })();
+        Some(out)
+    }
+}
+
+fn mat_literal(m: &Matrix) -> Result<xla::Literal> {
+    xla::Literal::vec1(&m.to_f32())
+        .reshape(&[m.rows() as i64, m.cols() as i64])
+        .context("reshape literal")
+}
+
+fn vec_literal(v: &[f64]) -> xla::Literal {
+    let f: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&f)
+}
+
+fn scalar_literal(v: f64) -> xla::Literal {
+    xla::Literal::from(v as f32)
+}
+
+fn literal_vec(l: &xla::Literal) -> Result<Vec<f64>> {
+    Ok(l.to_vec::<f32>().context("to_vec")?.into_iter().map(|v| v as f64).collect())
+}
+
+fn literal_mat(l: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let v = l.to_vec::<f32>().context("to_vec")?;
+    anyhow::ensure!(v.len() == rows * cols, "literal size mismatch");
+    Ok(Matrix::from_f32(rows, cols, &v))
+}
+
+fn literal_scalar(l: &xla::Literal) -> Result<f64> {
+    Ok(l.get_first_element::<f32>().context("scalar")? as f64)
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn gram_rbf_centered(&self, x: &Matrix, y: &Matrix, gamma: f64) -> Matrix {
+        let flops = 2.0 * (x.rows() * y.rows() * x.cols()) as f64;
+        if flops < self.min_flops {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return self.native.gram_rbf_centered(x, y, gamma);
+        }
+        let key = ArtifactKey::gram(x.rows(), y.rows(), x.cols());
+        let args = || -> Result<Vec<xla::Literal>> {
+            Ok(vec![mat_literal(x)?, mat_literal(y)?, scalar_literal(gamma)])
+        };
+        if let Ok(inputs) = args() {
+            if let Some(Ok(out)) = self.run(&key, &inputs) {
+                if let Ok(m) = literal_mat(&out[0], x.rows(), y.rows()) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return m;
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.native.gram_rbf_centered(x, y, gamma)
+    }
+
+    fn z_step(&self, g: &Matrix, c: &[f64]) -> (Vec<f64>, f64) {
+        let flops = 2.0 * (c.len() * c.len()) as f64;
+        if flops < self.min_flops {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return self.native.z_step(g, c);
+        }
+        let key = ArtifactKey::z_step(c.len());
+        let args = || -> Result<Vec<xla::Literal>> {
+            Ok(vec![mat_literal(g)?, vec_literal(c)])
+        };
+        if g.rows() == c.len() {
+            if let Ok(inputs) = args() {
+                if let Some(Ok(out)) = self.run(&key, &inputs) {
+                    if let (Ok(s), Ok(norm2)) =
+                        (literal_vec(&out[0]), literal_scalar(&out[1]))
+                    {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return (s, norm2);
+                    }
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.native.z_step(g, c)
+    }
+
+    fn admm_step(
+        &self,
+        kc: &Matrix,
+        ainv: &Matrix,
+        p: &Matrix,
+        b: &Matrix,
+        rho: &[f64],
+    ) -> (Vec<f64>, Matrix) {
+        let (n, d) = (p.rows(), p.cols());
+        let flops = 2.0 * (2 * n * n + 2 * n * d) as f64;
+        if flops < self.min_flops {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return self.native.admm_step(kc, ainv, p, b, rho);
+        }
+        let key = ArtifactKey::admm_step(n, d);
+        let args = || -> Result<Vec<xla::Literal>> {
+            Ok(vec![
+                mat_literal(kc)?,
+                mat_literal(ainv)?,
+                mat_literal(p)?,
+                mat_literal(b)?,
+                vec_literal(rho),
+            ])
+        };
+        if let Ok(inputs) = args() {
+            if let Some(Ok(out)) = self.run(&key, &inputs) {
+                if let (Ok(alpha), Ok(bn)) = (literal_vec(&out[0]), literal_mat(&out[1], n, d)) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return (alpha, bn);
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.native.admm_step(kc, ainv, p, b, rho)
+    }
+
+    fn power_iter_step(&self, k: &Matrix, v: &[f64]) -> (Vec<f64>, f64) {
+        let flops = 2.0 * (v.len() * v.len()) as f64;
+        if flops < self.min_flops {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return self.native.power_iter_step(k, v);
+        }
+        let key = ArtifactKey::power_iter(v.len());
+        let args = || -> Result<Vec<xla::Literal>> {
+            Ok(vec![mat_literal(k)?, vec_literal(v)])
+        };
+        if let Ok(inputs) = args() {
+            if let Some(Ok(out)) = self.run(&key, &inputs) {
+                if let (Ok(v2), Ok(r)) = (literal_vec(&out[0]), literal_scalar(&out[1])) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return (v2, r);
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.native.power_iter_step(k, v)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

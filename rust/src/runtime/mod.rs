@@ -1,0 +1,19 @@
+//! S8 — PJRT runtime: the AOT bridge.
+//!
+//! `python/compile/aot.py` lowers the L2/L1 JAX+Pallas graphs once to
+//! HLO *text* (the interchange format xla_extension 0.5.1 accepts, see
+//! DESIGN.md); [`Registry`] indexes the artifacts by (op, shape) and
+//! [`PjrtBackend`] compiles + executes them through the `xla` crate's
+//! PJRT CPU client, falling back to the native substrate for shapes
+//! outside the artifact set.
+
+pub mod exec;
+pub mod registry;
+
+pub use exec::PjrtBackend;
+pub use registry::{ArtifactKey, Registry};
+
+/// Default artifacts directory relative to the repo root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

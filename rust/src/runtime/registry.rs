@@ -1,0 +1,154 @@
+//! Artifact registry: maps (op, shape) to the HLO-text artifact emitted
+//! by `python/compile/aot.py` (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Lookup key: op name + the shape dims that parameterise it.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ArtifactKey {
+    pub op: String,
+    pub dims: Vec<usize>,
+}
+
+impl ArtifactKey {
+    pub fn gram(n: usize, p: usize, m: usize) -> ArtifactKey {
+        ArtifactKey { op: "gram_rbf_centered".into(), dims: vec![n, p, m] }
+    }
+
+    pub fn admm_step(n: usize, d: usize) -> ArtifactKey {
+        ArtifactKey { op: "admm_step".into(), dims: vec![n, d] }
+    }
+
+    pub fn z_step(dn: usize) -> ArtifactKey {
+        ArtifactKey { op: "z_step".into(), dims: vec![dn] }
+    }
+
+    pub fn power_iter(n: usize) -> ArtifactKey {
+        ArtifactKey { op: "power_iter".into(), dims: vec![n] }
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest: key -> artifact file.
+#[derive(Debug)]
+pub struct Registry {
+    pub feat_dim: usize,
+    entries: BTreeMap<ArtifactKey, ArtifactEntry>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Registry, String> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| format!("{}: {e}", manifest_path.display()))?;
+        let j = Json::parse(&text)?;
+        let feat_dim = j
+            .field("feat_dim")?
+            .as_usize()
+            .ok_or("feat_dim must be a number")?;
+        let mut entries = BTreeMap::new();
+        for art in j.field("artifacts")?.as_arr().ok_or("artifacts must be an array")? {
+            let op = art.field("op")?.as_str().ok_or("op must be a string")?.to_string();
+            let name = art.field("name")?.as_str().ok_or("bad name")?.to_string();
+            let file = art.field("file")?.as_str().ok_or("bad file")?.to_string();
+            let dims = match op.as_str() {
+                "gram_rbf_centered" => vec![
+                    art.field("n")?.as_usize().ok_or("bad n")?,
+                    art.field("p")?.as_usize().ok_or("bad p")?,
+                    art.field("m")?.as_usize().ok_or("bad m")?,
+                ],
+                "admm_step" => vec![
+                    art.field("n")?.as_usize().ok_or("bad n")?,
+                    art.field("d")?.as_usize().ok_or("bad d")?,
+                ],
+                "z_step" => vec![art.field("dn")?.as_usize().ok_or("bad dn")?],
+                "power_iter" => vec![art.field("n")?.as_usize().ok_or("bad n")?],
+                other => return Err(format!("unknown artifact op '{other}'")),
+            };
+            entries.insert(
+                ArtifactKey { op, dims },
+                ArtifactEntry { name, path: dir.join(file) },
+            );
+        }
+        Ok(Registry { feat_dim, entries })
+    }
+
+    pub fn lookup(&self, key: &ArtifactKey) -> Option<&ArtifactEntry> {
+        self.entries.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &ArtifactKey> {
+        self.entries.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("dkpca_registry_test");
+        write_manifest(
+            &dir,
+            r#"{"feat_dim": 784, "dtype": "f32", "artifacts": [
+                {"op": "gram_rbf_centered", "name": "g", "file": "g.hlo.txt",
+                 "n": 100, "p": 100, "m": 784, "inputs": [], "outputs": []},
+                {"op": "admm_step", "name": "a", "file": "a.hlo.txt",
+                 "n": 100, "d": 5, "inputs": [], "outputs": []},
+                {"op": "z_step", "name": "z", "file": "z.hlo.txt", "dn": 500},
+                {"op": "power_iter", "name": "p", "file": "p.hlo.txt", "n": 2000}
+            ]}"#,
+        );
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.feat_dim, 784);
+        assert_eq!(reg.len(), 4);
+        assert!(reg.lookup(&ArtifactKey::gram(100, 100, 784)).is_some());
+        assert!(reg.lookup(&ArtifactKey::admm_step(100, 5)).is_some());
+        assert!(reg.lookup(&ArtifactKey::z_step(500)).is_some());
+        assert!(reg.lookup(&ArtifactKey::power_iter(2000)).is_some());
+        assert!(reg.lookup(&ArtifactKey::admm_step(101, 5)).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let err = Registry::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.contains("manifest.json"));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // When `make artifacts` has run, the real manifest must parse.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let reg = Registry::load(&dir).unwrap();
+            assert!(reg.lookup(&ArtifactKey::admm_step(100, 5)).is_some());
+            assert_eq!(reg.feat_dim, 784);
+        }
+    }
+}

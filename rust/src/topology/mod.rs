@@ -1,0 +1,259 @@
+//! S3 — network topology substrate.
+//!
+//! Undirected, connected graphs (Assumption 1) describing which nodes
+//! may exchange messages. The ADMM constants of Alg. 1 (`xi_j`, `H`,
+//! `E_j`) are implicit in the adjacency lists: `xi_j` selects neighbor
+//! columns, `H = diag(1 / (rho |Omega_j|))` is realised by the
+//! `s_total` weights in `admm::update`.
+
+use std::collections::VecDeque;
+
+/// Undirected graph over nodes `0..n`.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    adj: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    /// Build from adjacency lists; validates symmetry and no self-loops.
+    pub fn from_adj(adj: Vec<Vec<usize>>) -> Graph {
+        let n = adj.len();
+        for (i, nbrs) in adj.iter().enumerate() {
+            for &q in nbrs {
+                assert!(q < n, "neighbor index out of range");
+                assert_ne!(q, i, "self-loop at node {i}");
+                assert!(adj[q].contains(&i), "asymmetric edge ({i}, {q})");
+            }
+        }
+        let mut g = Graph { adj };
+        for nbrs in g.adj.iter_mut() {
+            nbrs.sort_unstable();
+            nbrs.dedup();
+        }
+        g
+    }
+
+    /// Build from an undirected edge list.
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Graph {
+        let mut adj = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            assert!(a < n && b < n && a != b, "bad edge ({a}, {b})");
+            adj[a].push(b);
+            adj[b].push(a);
+        }
+        Graph::from_adj(adj)
+    }
+
+    /// Ring with `k` neighbors on each side (`|Omega_j| = 2k`) — the
+    /// paper's "communicates with the 4 closest nodes" is `ring(j, 2)`.
+    pub fn ring(n: usize, k: usize) -> Graph {
+        assert!(n >= 2, "ring needs >= 2 nodes");
+        assert!(2 * k < n, "ring(n={n}, k={k}) would wrap onto itself");
+        let mut adj = vec![Vec::new(); n];
+        for i in 0..n {
+            for o in 1..=k {
+                adj[i].push((i + o) % n);
+                adj[i].push((i + n - o) % n);
+            }
+        }
+        Graph::from_adj(adj)
+    }
+
+    /// Complete graph.
+    pub fn complete(n: usize) -> Graph {
+        let adj = (0..n)
+            .map(|i| (0..n).filter(|&j| j != i).collect())
+            .collect();
+        Graph::from_adj(adj)
+    }
+
+    /// Star with node 0 at the hub.
+    pub fn star(n: usize) -> Graph {
+        assert!(n >= 2);
+        let mut adj = vec![Vec::new(); n];
+        for i in 1..n {
+            adj[0].push(i);
+            adj[i].push(0);
+        }
+        Graph::from_adj(adj)
+    }
+
+    /// Random connected graph: a spanning random tree plus extra edges
+    /// until the average degree reaches `avg_degree`. Deterministic in
+    /// `seed`.
+    pub fn random_connected(n: usize, avg_degree: f64, seed: u64) -> Graph {
+        assert!(n >= 2);
+        let mut s = seed | 1;
+        let mut rand = move |m: usize| -> usize {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s % m as u64) as usize
+        };
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        // Random spanning tree: attach each node to a random earlier one.
+        for i in 1..n {
+            edges.push((i, rand(i)));
+        }
+        let target = ((avg_degree * n as f64) / 2.0).ceil() as usize;
+        let mut guard = 0;
+        while edges.len() < target && guard < 100 * target {
+            guard += 1;
+            let a = rand(n);
+            let b = rand(n);
+            if a != b && !edges.contains(&(a, b)) && !edges.contains(&(b, a)) {
+                edges.push((a, b));
+            }
+        }
+        Graph::from_edges(n, &edges)
+    }
+
+    pub fn len(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adj.is_empty()
+    }
+
+    /// Neighbors of node `j` (`Omega_j`), sorted.
+    pub fn neighbors(&self, j: usize) -> &[usize] {
+        &self.adj[j]
+    }
+
+    /// `|Omega_j|`.
+    pub fn degree(&self, j: usize) -> usize {
+        self.adj[j].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).max().unwrap_or(0)
+    }
+
+    /// Total undirected edge count.
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// BFS connectivity — Assumption 1 of the paper.
+    pub fn is_connected(&self) -> bool {
+        let n = self.adj.len();
+        if n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; n];
+        let mut q = VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = q.pop_front() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        count == n
+    }
+
+    /// Every node has at least one neighbor (required by Alg. 1's `H`).
+    pub fn min_degree_one(&self) -> bool {
+        self.adj.iter().all(|a| !a.is_empty())
+    }
+
+    /// Graph diameter via BFS from every node (usize::MAX when
+    /// disconnected).
+    pub fn diameter(&self) -> usize {
+        let n = self.adj.len();
+        let mut diam = 0;
+        for start in 0..n {
+            let mut dist = vec![usize::MAX; n];
+            dist[start] = 0;
+            let mut q = VecDeque::from([start]);
+            while let Some(u) = q.pop_front() {
+                for &v in &self.adj[u] {
+                    if dist[v] == usize::MAX {
+                        dist[v] = dist[u] + 1;
+                        q.push_back(v);
+                    }
+                }
+            }
+            let m = *dist.iter().max().unwrap();
+            if m == usize::MAX {
+                return usize::MAX;
+            }
+            diam = diam.max(m);
+        }
+        diam
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_structure() {
+        let g = Graph::ring(20, 2);
+        assert_eq!(g.len(), 20);
+        for j in 0..20 {
+            assert_eq!(g.degree(j), 4, "paper setting: 4 closest neighbors");
+        }
+        assert!(g.is_connected());
+        assert_eq!(g.neighbors(0), &[1, 2, 18, 19]);
+    }
+
+    #[test]
+    fn complete_and_star() {
+        let c = Graph::complete(5);
+        assert_eq!(c.edge_count(), 10);
+        assert!(c.is_connected());
+        let s = Graph::star(6);
+        assert_eq!(s.degree(0), 5);
+        assert_eq!(s.degree(3), 1);
+        assert!(s.is_connected());
+        assert_eq!(s.diameter(), 2);
+    }
+
+    #[test]
+    fn random_connected_is_connected() {
+        for seed in 0..10 {
+            let g = Graph::random_connected(15, 3.0, seed);
+            assert!(g.is_connected(), "seed {seed}");
+            assert!(g.min_degree_one());
+        }
+    }
+
+    #[test]
+    fn from_edges_symmetry() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.diameter(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "asymmetric")]
+    fn asymmetric_adj_rejected() {
+        let _ = Graph::from_adj(vec![vec![1], vec![]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn self_loop_rejected() {
+        let _ = Graph::from_adj(vec![vec![0]]);
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3)]);
+        assert!(!g.is_connected());
+        assert_eq!(g.diameter(), usize::MAX);
+    }
+
+    #[test]
+    fn ring_rejects_wrap() {
+        let r = std::panic::catch_unwind(|| Graph::ring(4, 2));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,3 @@
+//! Shared utilities (JSON parsing for configs and the artifact manifest).
+
+pub mod json;

@@ -1,0 +1,142 @@
+//! Integration: full Alg. 1 runs reproduce the paper's §6 claims on the
+//! native backend (the same instances the python reference
+//! implementation validates — python/tests/test_dkpca_ref.py).
+
+use dkpca::admm::{AdmmConfig, DkpcaSolver, ZNorm};
+use dkpca::backend::NativeBackend;
+use dkpca::central::{central_kpca, local_kpca, mean_similarity, similarity};
+use dkpca::data::synth::{blob_centers, degenerate_data, sample_blobs, BlobSpec};
+use dkpca::data::{NoiseModel, Rng};
+use dkpca::kernels::Kernel;
+use dkpca::linalg::Matrix;
+use dkpca::topology::Graph;
+
+const K: Kernel = Kernel::Rbf { gamma: 0.1 };
+
+fn blobs(j: usize, n: usize, seed: u64, skew: f64) -> Vec<Matrix> {
+    let spec = BlobSpec::default();
+    let centers = blob_centers(&spec, seed);
+    let mut rng = Rng::new(seed + 1);
+    (0..j)
+        .map(|node| {
+            let w = if skew > 0.0 {
+                let mut w = vec![(1.0 - skew) / 2.0; 2];
+                w[node % 2] += skew;
+                w
+            } else {
+                vec![1.0, 1.0]
+            };
+            sample_blobs(&spec, &centers, n, Some(&w), &mut rng).0
+        })
+        .collect()
+}
+
+fn run(xs: &[Matrix], graph: &Graph, cfg: &AdmmConfig) -> Vec<Vec<f64>> {
+    let mut solver = DkpcaSolver::new(xs, graph, &K, cfg, NoiseModel::None, 0);
+    solver.run(&NativeBackend).alphas
+}
+
+#[test]
+fn converges_to_central_on_shared_mixture() {
+    // Python reference reaches 0.996 on the analogous instance.
+    let xs = blobs(8, 30, 42, 0.0);
+    let graph = Graph::ring(8, 1);
+    let cfg = AdmmConfig { seed: 1, ..Default::default() };
+    let alphas = run(&xs, &graph, &cfg);
+    let c = central_kpca(&xs, &K);
+    let sim = mean_similarity(&alphas, &xs, &c, &K);
+    assert!(sim > 0.93, "mean similarity {sim}");
+}
+
+#[test]
+fn beats_local_under_heterogeneity() {
+    let xs = blobs(8, 12, 21, 0.5);
+    let graph = Graph::ring(8, 1);
+    let c = central_kpca(&xs, &K);
+    let local_mean: f64 = xs
+        .iter()
+        .map(|x| similarity(&local_kpca(x, &K), x, &c, &K))
+        .sum::<f64>()
+        / xs.len() as f64;
+    let cfg = AdmmConfig { seed: 2, ..Default::default() };
+    let dec = mean_similarity(&run(&xs, &graph, &cfg), &xs, &c, &K);
+    assert!(dec > local_mean, "DKPCA {dec} <= local {local_mean}");
+}
+
+#[test]
+fn plain_alg1_without_self_constraint_converges() {
+    // Alg. 1 exactly as printed: C_j = Omega_j, uniform rho.
+    let xs = blobs(6, 20, 3, 0.0);
+    let graph = Graph::ring(6, 1);
+    let cfg = AdmmConfig {
+        include_self: false,
+        rho2_schedule: vec![(0, 50.0)],
+        max_iters: 40,
+        seed: 3,
+        ..Default::default()
+    };
+    let alphas = run(&xs, &graph, &cfg);
+    let c = central_kpca(&xs, &K);
+    let sim = mean_similarity(&alphas, &xs, &c, &K);
+    assert!(sim > 0.9, "mean similarity {sim}");
+}
+
+#[test]
+fn sphere_mode_robust_to_degenerate_node_ball_collapses() {
+    // Fig. 1(c) ablation, matching the python reference behaviour.
+    let mut xs = blobs(5, 15, 23, 0.0);
+    let mut rng = Rng::new(99);
+    xs[0] = degenerate_data(5, 15, 1, 1.0, &mut rng);
+    let graph = Graph::ring(5, 1);
+    let c = central_kpca(&xs, &K);
+
+    let sphere_cfg = AdmmConfig { z_norm: ZNorm::Sphere, max_iters: 60, seed: 4, ..Default::default() };
+    let sphere = run(&xs, &graph, &sphere_cfg);
+    let healthy_sphere: f64 = (1..5)
+        .map(|j| similarity(&sphere[j], &xs[j], &c, &K))
+        .sum::<f64>()
+        / 4.0;
+    assert!(healthy_sphere > 0.9, "sphere healthy sim {healthy_sphere}");
+
+    let ball_cfg = AdmmConfig { z_norm: ZNorm::Ball, max_iters: 60, seed: 4, ..Default::default() };
+    let ball = run(&xs, &graph, &ball_cfg);
+    let healthy_ball: f64 = (1..5)
+        .map(|j| similarity(&ball[j], &xs[j], &c, &K))
+        .sum::<f64>()
+        / 4.0;
+    assert!(
+        healthy_ball < healthy_sphere,
+        "ball {healthy_ball} should trail sphere {healthy_sphere}"
+    );
+}
+
+#[test]
+fn channel_noise_degrades_gracefully() {
+    let xs = blobs(6, 20, 11, 0.0);
+    let graph = Graph::ring(6, 1);
+    let c = central_kpca(&xs, &K);
+    let cfg = AdmmConfig { seed: 5, ..Default::default() };
+
+    let clean = {
+        let mut s = DkpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 1);
+        mean_similarity(&s.run(&NativeBackend).alphas, &xs, &c, &K)
+    };
+    let noisy = {
+        let m = NoiseModel::Gaussian { sigma: 0.05 };
+        let mut s = DkpcaSolver::new(&xs, &graph, &K, &cfg, m, 1);
+        mean_similarity(&s.run(&NativeBackend).alphas, &xs, &c, &K)
+    };
+    assert!(noisy.is_finite());
+    // Mild channel noise must not destroy the solution.
+    assert!(noisy > 0.8 * clean, "noisy {noisy} vs clean {clean}");
+}
+
+#[test]
+fn more_neighbors_helps_or_ties() {
+    let xs = blobs(8, 20, 13, 0.4);
+    let c = central_kpca(&xs, &K);
+    let cfg = AdmmConfig { seed: 6, ..Default::default() };
+    let s1 = mean_similarity(&run(&xs, &Graph::ring(8, 1), &cfg), &xs, &c, &K);
+    let s2 = mean_similarity(&run(&xs, &Graph::ring(8, 2), &cfg), &xs, &c, &K);
+    assert!(s2 > s1 - 0.05, "k=2 {s2} much worse than k=1 {s1}");
+}

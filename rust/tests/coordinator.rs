@@ -1,0 +1,136 @@
+//! Integration: the truly-parallel coordinator (one thread per node)
+//! is bit-identical to the sequential reference driver, accounts
+//! traffic per §4.2, and scales across topologies and noise models.
+
+use std::sync::Arc;
+
+use dkpca::admm::{AdmmConfig, DkpcaSolver};
+use dkpca::backend::NativeBackend;
+use dkpca::coordinator::run_decentralized;
+use dkpca::data::synth::{blob_centers, sample_blobs, BlobSpec};
+use dkpca::data::{NoiseModel, Rng};
+use dkpca::kernels::Kernel;
+use dkpca::linalg::Matrix;
+use dkpca::topology::Graph;
+
+const K: Kernel = Kernel::Rbf { gamma: 0.1 };
+
+fn blobs(j: usize, n: usize, seed: u64) -> Vec<Matrix> {
+    let spec = BlobSpec::default();
+    let centers = blob_centers(&spec, seed);
+    let mut rng = Rng::new(seed + 1);
+    (0..j)
+        .map(|_| sample_blobs(&spec, &centers, n, None, &mut rng).0)
+        .collect()
+}
+
+#[test]
+fn parallel_matches_sequential_bit_exact() {
+    let xs = blobs(6, 12, 3);
+    let graph = Graph::ring(6, 1);
+    let cfg = AdmmConfig { max_iters: 8, seed: 1, ..Default::default() };
+
+    let mut seq = DkpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0);
+    let seq_res = seq.run(&NativeBackend);
+
+    let par = run_decentralized(
+        &xs,
+        &graph,
+        &K,
+        &cfg,
+        NoiseModel::None,
+        0,
+        Arc::new(NativeBackend),
+    );
+
+    assert_eq!(par.iterations, 8);
+    for (a, b) in par.alphas.iter().zip(&seq_res.alphas) {
+        assert_eq!(a, b, "parallel and sequential must agree bit-exactly");
+    }
+}
+
+#[test]
+fn parallel_matches_sequential_with_channel_noise() {
+    // The per-edge noise seeds are shared, so even noisy runs agree.
+    let xs = blobs(5, 10, 7);
+    let graph = Graph::ring(5, 1);
+    let cfg = AdmmConfig { max_iters: 5, seed: 2, ..Default::default() };
+    let noise = NoiseModel::Gaussian { sigma: 0.02 };
+
+    let mut seq = DkpcaSolver::new(&xs, &graph, &K, &cfg, noise, 11);
+    let seq_res = seq.run(&NativeBackend);
+    let par = run_decentralized(&xs, &graph, &K, &cfg, noise, 11, Arc::new(NativeBackend));
+    for (a, b) in par.alphas.iter().zip(&seq_res.alphas) {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn traffic_accounting_matches_section_4_2() {
+    // Setup moves N*M floats per directed edge; each iteration moves
+    // 2N (round A) + N (round B) per directed edge.
+    let (j, n, m, k, iters) = (6usize, 9usize, 5usize, 1usize, 4usize);
+    let xs = blobs(j, n, 13);
+    let graph = Graph::ring(j, k);
+    let cfg = AdmmConfig { max_iters: iters, ..Default::default() };
+    let rep = run_decentralized(
+        &xs,
+        &graph,
+        &K,
+        &cfg,
+        NoiseModel::None,
+        0,
+        Arc::new(NativeBackend),
+    );
+    let directed = (j * 2 * k) as u64;
+    let setup = directed * (n * m) as u64;
+    let per_iter = directed * (3 * n) as u64;
+    assert_eq!(rep.comm_floats_total, setup + per_iter * iters as u64);
+    // Per-node symmetry on a ring.
+    for node in 0..j {
+        assert_eq!(
+            rep.per_node_sent[node],
+            (2 * k) as u64 * ((n * m) + 3 * n * iters) as u64
+        );
+    }
+}
+
+#[test]
+fn works_on_star_and_random_topologies() {
+    let xs = blobs(7, 8, 17);
+    let cfg = AdmmConfig { max_iters: 4, ..Default::default() };
+    for graph in [Graph::star(7), Graph::random_connected(7, 3.0, 5)] {
+        let rep = run_decentralized(
+            &xs,
+            &graph,
+            &K,
+            &cfg,
+            NoiseModel::None,
+            0,
+            Arc::new(NativeBackend),
+        );
+        assert!(rep
+            .alphas
+            .iter()
+            .all(|a| !a.is_empty() && a.iter().all(|v| v.is_finite())));
+    }
+}
+
+#[test]
+fn compute_time_reported_per_node() {
+    let xs = blobs(4, 10, 19);
+    let graph = Graph::ring(4, 1);
+    let cfg = AdmmConfig { max_iters: 3, ..Default::default() };
+    let rep = run_decentralized(
+        &xs,
+        &graph,
+        &K,
+        &cfg,
+        NoiseModel::None,
+        0,
+        Arc::new(NativeBackend),
+    );
+    assert_eq!(rep.node_compute_secs.len(), 4);
+    assert!(rep.node_compute_secs.iter().all(|&s| s > 0.0));
+    assert!(rep.wall_secs >= rep.iter_secs);
+}

@@ -1,0 +1,116 @@
+//! Integration: the PJRT artifact backend must agree with the native
+//! substrate on every covered shape (f32 artifact vs f64 native, so
+//! tolerances are f32-scale). Skips gracefully when `make artifacts`
+//! has not been run.
+
+use dkpca::backend::{ComputeBackend, NativeBackend};
+use dkpca::data::Rng;
+use dkpca::linalg::Matrix;
+use dkpca::runtime::{default_artifacts_dir, PjrtBackend};
+
+fn backend_or_skip() -> Option<PjrtBackend> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(PjrtBackend::new(&dir).expect("pjrt backend"))
+}
+
+fn rand_matrix(r: usize, c: usize, rng: &mut Rng) -> Matrix {
+    Matrix::from_fn(r, c, |_, _| rng.gauss())
+}
+
+fn spd(n: usize, rng: &mut Rng) -> Matrix {
+    let a = rand_matrix(n, n, rng);
+    let mut g = dkpca::linalg::matmul(&a, &a.transpose());
+    g.symmetrize();
+    dkpca::linalg::ops::scale(&g, 1.0 / n as f64)
+}
+
+#[test]
+fn gram_artifact_matches_native() {
+    let Some(pjrt) = backend_or_skip() else { return };
+    let mut rng = Rng::new(1);
+    // Covered hot shape: (100, 784) x (100, 784).
+    let x = rand_matrix(100, 784, &mut rng);
+    let native = NativeBackend.gram_rbf_centered(&x, &x, 0.02);
+    let art = pjrt.gram_rbf_centered(&x, &x, 0.02);
+    let (hits, _) = pjrt.stats();
+    assert_eq!(hits, 1, "expected the artifact path to serve this shape");
+    let mut max_err = 0.0f64;
+    for (a, b) in art.as_slice().iter().zip(native.as_slice()) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-4, "gram mismatch {max_err}");
+}
+
+#[test]
+fn admm_step_artifact_matches_native() {
+    let Some(pjrt) = backend_or_skip() else { return };
+    let mut rng = Rng::new(2);
+    let (n, d) = (100usize, 5usize);
+    let kc = spd(n, &mut rng);
+    let ainv = spd(n, &mut rng);
+    let p = rand_matrix(n, d, &mut rng);
+    let b = rand_matrix(n, d, &mut rng);
+    let rho = vec![100.0, 10.0, 10.0, 10.0, 10.0];
+    let (a_nat, b_nat) = NativeBackend.admm_step(&kc, &ainv, &p, &b, &rho);
+    let (a_art, b_art) = pjrt.admm_step(&kc, &ainv, &p, &b, &rho);
+    let (hits, _) = pjrt.stats();
+    assert_eq!(hits, 1);
+    for (x, y) in a_art.iter().zip(&a_nat) {
+        assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "alpha {x} vs {y}");
+    }
+    for (x, y) in b_art.as_slice().iter().zip(b_nat.as_slice()) {
+        assert!((x - y).abs() < 1e-2 * (1.0 + y.abs()), "B {x} vs {y}");
+    }
+}
+
+#[test]
+fn z_step_artifact_matches_native() {
+    let Some(pjrt) = backend_or_skip() else { return };
+    let mut rng = Rng::new(3);
+    let dn = 500usize;
+    let g = spd(dn, &mut rng);
+    let c = rng.gauss_vec(dn);
+    let (s_nat, n_nat) = NativeBackend.z_step(&g, &c);
+    let (s_art, n_art) = pjrt.z_step(&g, &c);
+    let (hits, _) = pjrt.stats();
+    assert_eq!(hits, 1);
+    assert!((n_art - n_nat).abs() < 1e-2 * (1.0 + n_nat), "norm2 {n_art} vs {n_nat}");
+    for (x, y) in s_art.iter().zip(&s_nat) {
+        assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+    }
+}
+
+#[test]
+fn power_iter_artifact_matches_native() {
+    let Some(pjrt) = backend_or_skip() else { return };
+    let mut rng = Rng::new(4);
+    let n = 2000usize;
+    let k = spd(n, &mut rng);
+    let v = rng.gauss_vec(n);
+    let (v_nat, r_nat) = NativeBackend.power_iter_step(&k, &v);
+    let (v_art, r_art) = pjrt.power_iter_step(&k, &v);
+    let (hits, _) = pjrt.stats();
+    assert_eq!(hits, 1);
+    assert!((r_art - r_nat).abs() < 1e-2 * (1.0 + r_nat.abs()));
+    for (x, y) in v_art.iter().zip(&v_nat) {
+        assert!((x - y).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn uncovered_shape_falls_back_to_native() {
+    let Some(pjrt) = backend_or_skip() else { return };
+    let mut rng = Rng::new(5);
+    let g = spd(37, &mut rng); // no z_step_dn37 artifact
+    let c = rng.gauss_vec(37);
+    let (s_art, _) = pjrt.z_step(&g, &c);
+    let (hits, misses) = pjrt.stats();
+    assert_eq!(hits, 0);
+    assert_eq!(misses, 1);
+    let (s_nat, _) = NativeBackend.z_step(&g, &c);
+    assert_eq!(s_art, s_nat, "fallback must be bit-identical to native");
+}

@@ -1,0 +1,293 @@
+//! Property-style tests: randomized invariants over many seeded
+//! instances (proptest is not in the offline vendor set, so cases are
+//! driven by the crate's own deterministic RNG).
+
+use std::sync::Arc;
+
+use dkpca::admm::{AdmmConfig, DkpcaSolver};
+use dkpca::backend::NativeBackend;
+use dkpca::coordinator::run_decentralized;
+use dkpca::data::{partition, NoiseModel, Rng, Strategy};
+use dkpca::kernels::{center_gram, gram_sym, Kernel};
+use dkpca::linalg::ops::{dot, matvec, norm2};
+use dkpca::linalg::{eigen_sym, matmul, pinv_sym, Cholesky, Matrix};
+use dkpca::topology::Graph;
+use dkpca::util::json::Json;
+
+fn rand_matrix(r: usize, c: usize, rng: &mut Rng) -> Matrix {
+    Matrix::from_fn(r, c, |_, _| rng.gauss())
+}
+
+#[test]
+fn prop_gram_is_psd_symmetric_unit_diag() {
+    let mut rng = Rng::new(100);
+    for case in 0..20 {
+        let n = 2 + rng.below(25);
+        let m = 1 + rng.below(10);
+        let gamma = 0.01 + rng.uniform() * 3.0;
+        let x = rand_matrix(n, m, &mut rng);
+        let k = gram_sym(&Kernel::Rbf { gamma }, &x);
+        for i in 0..n {
+            assert!((k[(i, i)] - 1.0).abs() < 1e-12, "case {case}: diag");
+            for j in 0..n {
+                assert_eq!(k[(i, j)], k[(j, i)], "case {case}: symmetry");
+            }
+        }
+        let eig = eigen_sym(&k);
+        assert!(
+            eig.values.iter().all(|&v| v > -1e-9),
+            "case {case}: PSD violated ({:?})",
+            eig.values.first()
+        );
+    }
+}
+
+#[test]
+fn prop_centering_annihilates_marginals_any_shape() {
+    let mut rng = Rng::new(200);
+    for case in 0..20 {
+        let n = 1 + rng.below(30);
+        let p = 1 + rng.below(30);
+        let k = rand_matrix(n, p, &mut rng);
+        let c = center_gram(&k);
+        for i in 0..n {
+            assert!(c.row(i).iter().sum::<f64>().abs() < 1e-9, "case {case} row {i}");
+        }
+        for j in 0..p {
+            assert!(c.col(j).iter().sum::<f64>().abs() < 1e-9, "case {case} col {j}");
+        }
+    }
+}
+
+#[test]
+fn prop_eigen_reconstructs_and_is_orthonormal() {
+    let mut rng = Rng::new(300);
+    for case in 0..12 {
+        let n = 2 + rng.below(20);
+        let a = rand_matrix(n, n, &mut rng);
+        let mut s = matmul(&a, &a.transpose());
+        s.symmetrize();
+        let eig = eigen_sym(&s);
+        for j in 0..n {
+            let v = eig.vectors.col(j);
+            assert!((norm2(&v) - 1.0).abs() < 1e-8, "case {case}: unit");
+            let av = matvec(&s, &v);
+            for i in 0..n {
+                assert!(
+                    (av[i] - eig.values[j] * v[i]).abs() < 1e-7 * (1.0 + eig.values[j].abs()),
+                    "case {case}: residual"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cholesky_solves_spd_systems() {
+    let mut rng = Rng::new(400);
+    for case in 0..15 {
+        let n = 2 + rng.below(20);
+        let a = rand_matrix(n, n, &mut rng);
+        let mut s = matmul(&a, &a.transpose());
+        s.add_diag(0.5);
+        let x_true = rng.gauss_vec(n);
+        let b = matvec(&s, &x_true);
+        let x = Cholesky::new(&s).expect("SPD").solve(&b);
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!((g - w).abs() < 1e-7, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_pinv_is_weak_inverse() {
+    let mut rng = Rng::new(500);
+    for case in 0..12 {
+        let n = 2 + rng.below(15);
+        let rank = 1 + rng.below(n);
+        let b = rand_matrix(n, rank, &mut rng);
+        let mut a = matmul(&b, &b.transpose()); // PSD rank <= rank
+        a.symmetrize();
+        let p = pinv_sym(&a, 1e-12);
+        // A P A = A (Moore-Penrose condition 1).
+        let apa = matmul(&matmul(&a, &p), &a);
+        for (x, y) in apa.as_slice().iter().zip(a.as_slice()) {
+            assert!((x - y).abs() < 1e-6 * (1.0 + y.abs()), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_random_topologies_satisfy_assumption_1() {
+    for seed in 0..30u64 {
+        let n = 3 + (seed as usize % 20);
+        let g = Graph::random_connected(n, 2.0 + (seed % 4) as f64, seed);
+        assert!(g.is_connected(), "seed {seed}");
+        assert!(g.min_degree_one(), "seed {seed}");
+        // Symmetry of the neighbor relation.
+        for u in 0..n {
+            for &v in g.neighbors(u) {
+                assert!(g.neighbors(v).contains(&u), "seed {seed}: asymmetric");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_partition_preserves_row_multiset() {
+    let mut rng = Rng::new(600);
+    for case in 0..10 {
+        let n = 10 + rng.below(60);
+        let j = 2 + rng.below(5.min(n - 1));
+        let x = rand_matrix(n, 4, &mut rng);
+        let labels: Vec<usize> = (0..n).map(|i| i % 3).collect();
+        let strategy = match case % 3 {
+            0 => Strategy::Even,
+            1 => Strategy::Proportional,
+            _ => Strategy::LabelSkew { skew: 0.7 },
+        };
+        let parts = partition(&x, &labels, j, strategy, case as u64);
+        let total: usize = parts.iter().map(|p| p.rows()).sum();
+        assert_eq!(total, n, "case {case}: rows conserved");
+        let mut seen: Vec<Vec<u64>> = Vec::new();
+        for p in &parts {
+            for i in 0..p.rows() {
+                seen.push(p.row(i).iter().map(|v| v.to_bits()).collect());
+            }
+        }
+        seen.sort();
+        let mut want: Vec<Vec<u64>> = (0..n)
+            .map(|i| x.row(i).iter().map(|v| v.to_bits()).collect())
+            .collect();
+        want.sort();
+        assert_eq!(seen, want, "case {case}: multiset preserved");
+    }
+}
+
+#[test]
+fn prop_parallel_equals_sequential_random_instances() {
+    let kernel = Kernel::Rbf { gamma: 0.15 };
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(700 + seed);
+        let j = 3 + rng.below(5);
+        let n = 5 + rng.below(10);
+        let xs: Vec<Matrix> = (0..j).map(|_| rand_matrix(n, 3, &mut rng)).collect();
+        let graph = Graph::random_connected(j, 2.5, seed);
+        let cfg = AdmmConfig { max_iters: 4, seed, ..Default::default() };
+        let noise = if seed % 2 == 0 {
+            NoiseModel::None
+        } else {
+            NoiseModel::Gaussian { sigma: 0.01 }
+        };
+        let mut seq = DkpcaSolver::new(&xs, &graph, &kernel, &cfg, noise, seed);
+        let seq_res = seq.run(&NativeBackend);
+        let par =
+            run_decentralized(&xs, &graph, &kernel, &cfg, noise, seed, Arc::new(NativeBackend));
+        for (a, b) in par.alphas.iter().zip(&seq_res.alphas) {
+            assert_eq!(a, b, "seed {seed}: parallel != sequential");
+        }
+    }
+}
+
+#[test]
+fn prop_admm_iterates_stay_finite_across_configs() {
+    let kernel = Kernel::Rbf { gamma: 0.2 };
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(800 + seed);
+        let j = 3 + rng.below(4);
+        let n = 4 + rng.below(12);
+        let xs: Vec<Matrix> = (0..j).map(|_| rand_matrix(n, 3, &mut rng)).collect();
+        let graph = Graph::random_connected(j, 2.0, seed * 31);
+        let cfg = AdmmConfig {
+            include_self: seed % 2 == 0,
+            z_norm: if seed % 3 == 0 {
+                dkpca::admm::ZNorm::Sphere
+            } else {
+                dkpca::admm::ZNorm::Ball
+            },
+            init: if seed % 2 == 0 {
+                dkpca::admm::Init::Random
+            } else {
+                dkpca::admm::Init::LocalKpca
+            },
+            max_iters: 6,
+            seed,
+            ..Default::default()
+        };
+        let mut solver = DkpcaSolver::new(&xs, &graph, &kernel, &cfg, NoiseModel::None, seed);
+        let res = solver.run(&NativeBackend);
+        for (jj, alpha) in res.alphas.iter().enumerate() {
+            assert!(
+                alpha.iter().all(|v| v.is_finite()),
+                "seed {seed} node {jj}: non-finite alpha"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_similarity_bounded_and_scale_invariant() {
+    let kernel = Kernel::Rbf { gamma: 0.1 };
+    let mut rng = Rng::new(900);
+    for case in 0..8 {
+        let xs: Vec<Matrix> = (0..3).map(|_| rand_matrix(10, 4, &mut rng)).collect();
+        let central = dkpca::central::central_kpca(&xs, &kernel);
+        let a = rng.gauss_vec(10);
+        let s = dkpca::central::similarity(&a, &xs[0], &central, &kernel);
+        assert!((0.0..=1.0 + 1e-9).contains(&s), "case {case}: out of range {s}");
+        let scaled: Vec<f64> = a.iter().map(|v| v * 7.5).collect();
+        let s2 = dkpca::central::similarity(&scaled, &xs[0], &central, &kernel);
+        assert!((s - s2).abs() < 1e-9, "case {case}: not scale invariant");
+    }
+}
+
+#[test]
+fn prop_json_display_parse_roundtrip() {
+    let mut rng = Rng::new(1000);
+    for _ in 0..30 {
+        let v = random_json(&mut rng, 0);
+        let text = v.to_string();
+        let back = Json::parse(&text).expect("roundtrip parse");
+        assert_eq!(v, back, "roundtrip failed for {text}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    let choice = if depth > 3 { rng.below(4) } else { rng.below(6) };
+    match choice {
+        0 => Json::Null,
+        1 => Json::Bool(rng.uniform() < 0.5),
+        2 => Json::Num((rng.gauss() * 100.0 * 8.0).round() / 8.0),
+        3 => {
+            let n = rng.below(8);
+            Json::Str((0..n).map(|_| ['a', '"', '\\', 'é', '\n'][rng.below(5)]).collect())
+        }
+        4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth + 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..rng.below(4) {
+                m.insert(format!("k{i}"), random_json(rng, depth + 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_noise_models_preserve_shape_and_determinism() {
+    let mut rng = Rng::new(1100);
+    for case in 0..10 {
+        let x = rand_matrix(3 + rng.below(10), 2 + rng.below(6), &mut rng);
+        let models = [
+            NoiseModel::None,
+            NoiseModel::Gaussian { sigma: 0.1 },
+            NoiseModel::Quantize { levels: 4 + rng.below(60) as u32 },
+        ];
+        for m in models {
+            let y1 = m.apply(&x, case as u64);
+            let y2 = m.apply(&x, case as u64);
+            assert_eq!((y1.rows(), y1.cols()), (x.rows(), x.cols()));
+            assert_eq!(y1.as_slice(), y2.as_slice(), "determinism");
+        }
+    }
+}
