@@ -1,12 +1,16 @@
 //! Quickstart: run decentralized kernel PCA on a small synthetic
-//! network and compare against the central solution.
+//! network, compare against the central solution, then export a
+//! trained-model artifact and serve out-of-sample projections.
 //!
 //!     cargo run --release --example quickstart
 //!
 //! Five nodes observe samples from a shared two-blob mixture; the
 //! network is a ring. After 30 ADMM iterations every node's local
 //! direction w_j = phi(X_j) alpha_j aligns with the global kPCA
-//! direction it could never compute alone.
+//! direction it could never compute alone. The trained model is then
+//! frozen to a versioned artifact, reloaded, and a held-out batch is
+//! projected through the serve API on both the exact and the RFF fast
+//! path.
 
 use dkpca::admm::{AdmmConfig, DkpcaSolver};
 use dkpca::backend::NativeBackend;
@@ -14,6 +18,8 @@ use dkpca::central::{central_kpca, local_kpca, similarity};
 use dkpca::data::synth::{blob_centers, sample_blobs, BlobSpec};
 use dkpca::data::{NoiseModel, Rng};
 use dkpca::kernels::Kernel;
+use dkpca::model::DkpcaModel;
+use dkpca::serve::{ProjectionEngine, ProjectionPath, ProjectionRequest};
 use dkpca::topology::Graph;
 
 fn main() {
@@ -50,4 +56,52 @@ fn main() {
         "\ncommunication: {} floats total over {} iterations",
         result.comm_floats, result.iterations
     );
+
+    // 6. Freeze the trained model into a versioned artifact and reload
+    //    it — the train side ends here; everything below is inference.
+    let artifact_path = std::env::temp_dir().join("dkpca_quickstart.dkpm");
+    solver.to_model().save(&artifact_path).expect("save model artifact");
+    let model = DkpcaModel::load(&artifact_path).expect("load model artifact");
+    println!(
+        "\nmodel artifact: {} nodes, {} support rows/node, {} bytes at {}",
+        model.n_nodes(),
+        model.nodes[0].support_len(),
+        std::fs::metadata(&artifact_path).map(|m| m.len()).unwrap_or(0),
+        artifact_path.display()
+    );
+
+    // 7. Serve a held-out batch through the projection engine: exact
+    //    cross-Gram path vs the RFF fast path, per request.
+    let held_out = sample_blobs(&spec, &centers, 8, None, &mut rng).0;
+    let engine = ProjectionEngine::new(model, 2);
+    let exact = engine
+        .project(ProjectionRequest {
+            node: 0,
+            batch: held_out.clone(),
+            path: ProjectionPath::Exact,
+        })
+        .expect("exact projection");
+    let rff = engine
+        .project(ProjectionRequest {
+            node: 0,
+            batch: held_out,
+            path: ProjectionPath::Rff { dim: 2048, seed: 7 },
+        })
+        .expect("rff projection");
+    println!("\nheld-out projections through node 0 (exact vs RFF-2048):");
+    println!("point |     exact |       rff");
+    println!("------+-----------+----------");
+    for i in 0..exact.outputs.rows() {
+        println!(
+            "    {i} | {:>9.5} | {:>9.5}",
+            exact.outputs[(i, 0)],
+            rff.outputs[(i, 0)]
+        );
+    }
+    let stats = engine.stats();
+    println!(
+        "\nserved {} requests / {} points ({} exact, {} rff)",
+        stats.requests, stats.points, stats.exact_requests, stats.rff_requests
+    );
+    let _ = std::fs::remove_file(&artifact_path);
 }

@@ -1,0 +1,109 @@
+//! Bench: batched out-of-sample projection throughput (points/sec),
+//! exact cross-Gram path vs the collapsed RFF fast path, across batch
+//! sizes and support sizes.
+//!
+//!     cargo bench --bench serve_throughput
+//!
+//! The exact path costs O(m n M) per m-point batch against n support
+//! rows; the RFF path costs O(m D M) independent of n. The table makes
+//! the crossover visible: at the serving-relevant regime (large
+//! support, D << n) the RFF path wins by roughly n / D.
+
+use dkpca::data::Rng;
+use dkpca::kernels::Kernel;
+use dkpca::linalg::Matrix;
+use dkpca::metrics::{Stopwatch, Table};
+use dkpca::model::DkpcaModel;
+use dkpca::serve::{ProjectionEngine, ProjectionPath, ProjectionRequest};
+
+fn rand_matrix(r: usize, c: usize, rng: &mut Rng) -> Matrix {
+    Matrix::from_fn(r, c, |_, _| rng.gauss())
+}
+
+/// Points/sec for repeated engine requests at one configuration.
+fn throughput(
+    engine: &ProjectionEngine,
+    batch: &Matrix,
+    path: ProjectionPath,
+    reps: usize,
+) -> f64 {
+    // Warm up (compiles nothing, but fills the RFF projector cache so
+    // the steady-state number is what a server would see).
+    let _ = engine.project(ProjectionRequest { node: 0, batch: batch.clone(), path });
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        let out = engine
+            .project(ProjectionRequest { node: 0, batch: batch.clone(), path })
+            .expect("projection");
+        std::hint::black_box(out);
+    }
+    (reps * batch.rows()) as f64 / sw.elapsed_secs()
+}
+
+fn main() {
+    let gamma = 0.05;
+    let kernel = Kernel::Rbf { gamma };
+    let feat_dim = 16;
+    let rff_dim = 128;
+    let mut rng = Rng::new(7);
+
+    let mut table = Table::new(
+        "serve throughput (points/sec, single node model)",
+        &["support_n", "batch_m", "exact_pps", "rff_pps", "rff_speedup"],
+    );
+
+    for &support_n in &[256usize, 1024, 4096] {
+        // A model with one component over a synthetic support set; the
+        // serving cost does not depend on how alpha was obtained.
+        let support = rand_matrix(support_n, feat_dim, &mut rng);
+        let alpha = rng.gauss_vec(support_n);
+        let model = DkpcaModel::from_parts(&kernel, &[support], &[alpha]);
+        let engine = ProjectionEngine::new(model, 1);
+
+        for &batch_m in &[64usize, 256, 1024] {
+            let batch = rand_matrix(batch_m, feat_dim, &mut rng);
+            let reps = (20_000 / batch_m).max(3);
+            let exact = throughput(&engine, &batch, ProjectionPath::Exact, reps);
+            let rff = throughput(
+                &engine,
+                &batch,
+                ProjectionPath::Rff { dim: rff_dim, seed: 11 },
+                reps,
+            );
+            table.row(&[
+                support_n.to_string(),
+                batch_m.to_string(),
+                format!("{exact:.0}"),
+                format!("{rff:.0}"),
+                format!("{:.2}x", rff / exact),
+            ]);
+        }
+    }
+    println!("{table}");
+    println!(
+        "(exact ~ O(m*n*M); rff ~ O(m*D*M) with D = {rff_dim} — speedup tracks n/D)"
+    );
+
+    // Pool scaling: one oversized batch chunked across workers.
+    let support = rand_matrix(2048, feat_dim, &mut rng);
+    let alpha = rng.gauss_vec(2048);
+    let big = rand_matrix(8192, feat_dim, &mut rng);
+    let mut pool_table = Table::new(
+        "chunked 8192-point batch across worker pools (exact path)",
+        &["workers", "points_per_sec"],
+    );
+    for &workers in &[1usize, 2, 4] {
+        let model = DkpcaModel::from_parts(&kernel, &[support.clone()], &[alpha.clone()]);
+        let engine = ProjectionEngine::new(model, workers);
+        let sw = Stopwatch::start();
+        let out = engine
+            .project_chunked(0, &big, ProjectionPath::Exact, 512)
+            .expect("chunked projection");
+        std::hint::black_box(out);
+        pool_table.row(&[
+            workers.to_string(),
+            format!("{:.0}", big.rows() as f64 / sw.elapsed_secs()),
+        ]);
+    }
+    println!("{pool_table}");
+}

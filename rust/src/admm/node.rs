@@ -105,6 +105,11 @@ impl SpectralGram {
 pub struct NodeState {
     pub id: usize,
     pub n: usize,
+    /// The node's own (exact) training data — retained so a finished
+    /// run can be frozen into a `model::DkpcaModel` support set. This
+    /// copies N x M per node; negligible next to the (DN)^2 group Gram
+    /// `gz` the z-host already holds.
+    pub x: Matrix,
     /// Constraint set C_j: z ids, self first when `include_self`.
     pub cset: Vec<usize>,
     /// Neighbors Omega_j (cset minus self).
@@ -216,6 +221,7 @@ impl NodeState {
         NodeState {
             id,
             n,
+            x: x_own.clone(),
             cset,
             neighbors,
             kc,

@@ -8,6 +8,7 @@ use crate::backend::ComputeBackend;
 use crate::data::NoiseModel;
 use crate::kernels::Kernel;
 use crate::linalg::Matrix;
+use crate::model::DkpcaModel;
 use crate::topology::Graph;
 
 use super::config::AdmmConfig;
@@ -27,6 +28,8 @@ pub struct DkpcaResult {
 pub struct DkpcaSolver {
     pub nodes: Vec<NodeState>,
     pub cfg: AdmmConfig,
+    /// The kernel the Grams were assembled with (kept for model export).
+    pub kernel: Kernel,
     pub comm_floats: u64,
 }
 
@@ -42,7 +45,8 @@ impl DkpcaSolver {
         noise: NoiseModel,
         noise_seed: u64,
     ) -> DkpcaSolver {
-        Self::new_with_backend(xs, graph, kernel, cfg, noise, noise_seed, &crate::backend::NativeBackend)
+        let native = crate::backend::NativeBackend;
+        Self::new_with_backend(xs, graph, kernel, cfg, noise, noise_seed, &native)
     }
 
     /// Build with setup Gram assembly routed through `backend` (the L1
@@ -75,7 +79,20 @@ impl DkpcaSolver {
                 NodeState::new(j, &xs[j], nbrs, &received, kernel, cfg, backend)
             })
             .collect();
-        DkpcaSolver { nodes, cfg: cfg.clone(), comm_floats: 0 }
+        DkpcaSolver { nodes, cfg: cfg.clone(), kernel: *kernel, comm_floats: 0 }
+    }
+
+    /// Freeze the current per-node solution into a servable
+    /// [`DkpcaModel`]: each node contributes its exact training data as
+    /// the support set, its current `alpha_j` as the dual coefficient
+    /// column, and the training-Gram centering statistics. Call after
+    /// [`DkpcaSolver::run`]; serving the training set through the model
+    /// reproduces the training-time projections (see
+    /// `rust/tests/model_serve.rs`).
+    pub fn to_model(&self) -> DkpcaModel {
+        let xs: Vec<Matrix> = self.nodes.iter().map(|n| n.x.clone()).collect();
+        let alphas: Vec<Vec<f64>> = self.nodes.iter().map(|n| n.alpha.clone()).collect();
+        DkpcaModel::from_parts(&self.kernel, &xs, &alphas)
     }
 
     /// One full ADMM iteration (both communication rounds + updates).
@@ -228,6 +245,24 @@ mod tests {
         let res = solver.run(&NativeBackend);
         assert!(res.converged, "should reach tol before 500 iters");
         assert!(res.iterations < 500);
+    }
+
+    #[test]
+    fn to_model_freezes_current_alphas() {
+        let xs = blob_network(4, 8, 11);
+        let graph = Graph::ring(4, 1);
+        let kernel = Kernel::Rbf { gamma: 0.1 };
+        let cfg = AdmmConfig { max_iters: 3, ..Default::default() };
+        let mut solver =
+            DkpcaSolver::new(&xs, &graph, &kernel, &cfg, NoiseModel::None, 0);
+        let res = solver.run(&NativeBackend);
+        let model = solver.to_model();
+        assert_eq!(model.n_nodes(), 4);
+        assert_eq!(model.kernel, kernel);
+        for (j, comp) in model.nodes.iter().enumerate() {
+            assert_eq!(comp.support, xs[j], "support is the exact node data");
+            assert_eq!(comp.coeffs.col(0), res.alphas[j], "coeffs are the final alphas");
+        }
     }
 
     #[test]

@@ -9,7 +9,8 @@
 
 use crate::kernels::{center_gram, gram, gram_sym, Kernel};
 use crate::linalg::ops::dot;
-use crate::linalg::{top_eig, Matrix};
+use crate::linalg::{eigen_sym, top_eig, Matrix};
+use crate::model::{DkpcaModel, NodeComponent};
 
 /// Central kPCA solution over the full dataset.
 pub struct CentralKpca {
@@ -22,6 +23,10 @@ pub struct CentralKpca {
     pub kc: Matrix,
     /// The concatenated dataset (row order = node order).
     pub x: Matrix,
+    /// The kernel the Gram was assembled with — stored at training
+    /// time so model export cannot pair the solution with a mismatched
+    /// kernel spec.
+    pub kernel: Kernel,
 }
 
 /// Solve central kPCA on the concatenation of all node datasets.
@@ -30,7 +35,32 @@ pub fn central_kpca(xs: &[Matrix], kernel: &Kernel) -> CentralKpca {
     let x = Matrix::vstack(&refs);
     let kc = center_gram(&gram_sym(kernel, &x));
     let (lambda, alpha) = top_eig(&kc);
-    CentralKpca { alpha, lambda, kc, x }
+    CentralKpca { alpha, lambda, kc, x, kernel: *kernel }
+}
+
+impl CentralKpca {
+    /// Freeze the central solution into a servable one-component
+    /// [`DkpcaModel`] whose single "node" holds the full dataset as
+    /// support. Uses the kernel stored at training time.
+    pub fn to_model(&self) -> DkpcaModel {
+        DkpcaModel::from_parts(&self.kernel, &[self.x.clone()], &[self.alpha.clone()])
+    }
+
+    /// Like [`CentralKpca::to_model`] but exporting the top `k`
+    /// principal directions as coefficient columns (descending
+    /// eigenvalue order, each unit-norm in alpha space) — the multi-
+    /// component serving case the decentralized path (top-1 only)
+    /// cannot produce yet.
+    pub fn to_model_topk(&self, k: usize) -> DkpcaModel {
+        let n = self.kc.rows();
+        assert!(k >= 1 && k <= n, "need 1 <= k <= {n}");
+        // Re-decompose the retained centered Gram; eigen_sym sorts
+        // ascending, so the top-k live in the last k columns.
+        let eig = eigen_sym(&self.kc);
+        let coeffs = Matrix::from_fn(n, k, |i, c| eig.vectors[(i, n - 1 - c)]);
+        let comp = NodeComponent::from_training(0, &self.x, coeffs, &self.kernel);
+        DkpcaModel { kernel: self.kernel, nodes: vec![comp] }
+    }
 }
 
 /// Local-only kPCA at one node: top eigenvector of its centered Gram.
@@ -168,6 +198,32 @@ mod tests {
             gather_mean > local_mean,
             "gather {gather_mean} <= local {local_mean}"
         );
+    }
+
+    #[test]
+    fn to_model_serves_training_projection() {
+        let xs = blobs(2, 10, 9);
+        let c = central_kpca(&xs, &K);
+        let model = c.to_model();
+        assert_eq!(model.n_nodes(), 1);
+        // Served projection of the training set == Kc alpha.
+        let served = model.training_projection(0);
+        let want = crate::linalg::ops::matvec(&c.kc, &c.alpha);
+        for (a, b) in served.col(0).iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9, "served {a} vs trained {b}");
+        }
+    }
+
+    #[test]
+    fn to_model_topk_leads_with_top_eigenvector() {
+        let xs = blobs(2, 12, 10);
+        let c = central_kpca(&xs, &K);
+        let model = c.to_model_topk(3);
+        assert_eq!(model.nodes[0].n_components(), 3);
+        // Column 0 must match the top eigenvector up to sign.
+        let a0 = model.nodes[0].coeffs.col(0);
+        let overlap = dot(&a0, &c.alpha).abs();
+        assert!((overlap - 1.0).abs() < 1e-8, "top column overlap {overlap}");
     }
 
     #[test]

@@ -47,13 +47,43 @@ pub struct RunReport {
 /// oversubscribed box the wall clock charges descheduled time to
 /// whichever node happened to be preempted, which would make per-node
 /// "compute" grow with J. CPU time is the deployable per-node metric.
+/// Declared directly against the C library so the crate stays
+/// dependency-free (no `libc` crate in the offline vendor set). The
+/// `i64, i64` struct layout matches the 64-bit Linux ABI only, so the
+/// declaration is gated on pointer width — 32-bit targets (c_long
+/// tv_nsec, time64 variants) take the wall-clock fallback instead of
+/// reading a mislaid struct.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
 fn thread_cpu_secs() -> f64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    // SAFETY: ts is a valid out-pointer; the clock id is constant.
-    unsafe {
-        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
     }
-    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+    extern "C" {
+        fn clock_gettime(clk_id: i32, tp: *mut Timespec) -> i32;
+    }
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: ts is a valid out-pointer; the clock id is a Linux
+    // constant; clock_gettime writes ts and returns 0 on success.
+    let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    if rc == 0 {
+        ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+    } else {
+        0.0
+    }
+}
+
+/// Fallback (non-Linux or 32-bit): monotonic wall clock from first
+/// use. Only the differences are consumed, so a shared origin is fine;
+/// the metric degrades to wall time where the thread clock is
+/// unavailable.
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+fn thread_cpu_secs() -> f64 {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
 /// Per-edge noise seed — identical to the sequential driver so the two
@@ -160,7 +190,8 @@ fn node_main(
 
     let mut compute = 0.0f64;
     let t0 = thread_cpu_secs();
-    let mut node = NodeState::new(id, &x_own, nbrs.clone(), &received, &kernel, &cfg, backend.as_ref());
+    let mut node =
+        NodeState::new(id, &x_own, nbrs.clone(), &received, &kernel, &cfg, backend.as_ref());
     compute += thread_cpu_secs() - t0;
 
     // ---- ADMM iterations. ----

@@ -77,7 +77,7 @@ pub fn central_kpca_power(xs: &[Matrix], kernel: &Kernel, iters: usize) -> Centr
     let pr = crate::linalg::power_iteration(&kc, iters, 1e-10, 7);
     let mut alpha = pr.vector;
     normalize(&mut alpha);
-    CentralKpca { alpha, lambda: pr.value, kc, x }
+    CentralKpca { alpha, lambda: pr.value, kc, x, kernel: *kernel }
 }
 
 /// Default ADMM config used by all figure runners: paper §6.1 penalties

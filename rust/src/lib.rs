@@ -3,7 +3,9 @@
 //! Rust + JAX + Pallas reproduction of He, Yang, Shi, Huang (2022).
 //! Layer 3 (this crate) owns the decentralized coordinator; Layers 2/1
 //! (`python/compile/`) are build-time JAX/Pallas graphs AOT-lowered to
-//! the HLO-text artifacts executed by [`runtime`]. See DESIGN.md.
+//! the HLO-text artifacts executed by [`runtime`]. Training ends in a
+//! [`model::DkpcaModel`] artifact that [`serve`] projects new points
+//! through. See DESIGN.md.
 
 pub mod admm;
 pub mod backend;
@@ -15,6 +17,8 @@ pub mod linalg;
 pub mod config;
 pub mod coordinator;
 pub mod metrics;
+pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod topology;
 pub mod util;

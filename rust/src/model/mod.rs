@@ -1,0 +1,298 @@
+//! S11 — the trained-model artifact: everything inference needs, and
+//! nothing training-only.
+//!
+//! Training (ADMM / central / coordinator) produces dual coefficients
+//! `alpha_j` over each node's support set. Projecting a *new* point x
+//! onto the learned direction at node j is
+//!
+//! ```text
+//! y(x) = sum_i alpha_j[i] * Kc(x, x_i)
+//! ```
+//!
+//! where `Kc` is the *out-of-sample* centered kernel. The classic
+//! pitfall (see the ooskpca reference in SNIPPETS.md) is re-centering
+//! the cross-Gram `K(X_new, X_sup)` with its own marginals; the correct
+//! centering mixes the new block's row means with the **training**
+//! Gram's column means and grand mean:
+//!
+//! ```text
+//! Kc(x_i, x_j) = K(x_i, x_j) - rowmean_i(K_new)
+//!                - colmean_j(K_train) + grandmean(K_train)
+//! ```
+//!
+//! [`DkpcaModel`] therefore freezes, per node: the support set, the
+//! dual coefficient columns, and the training-Gram column means + grand
+//! mean. [`artifact`] serializes the bundle to a compact versioned
+//! binary file; [`project`] holds the exact and RFF projection math;
+//! `serve::` (S12) batches it behind a worker pool. See DESIGN.md
+//! §Model & serving.
+
+pub mod artifact;
+pub mod project;
+
+pub use artifact::ModelError;
+pub use project::RffProjector;
+
+use crate::kernels::{gram_sym, Kernel};
+use crate::linalg::Matrix;
+
+/// Current on-disk artifact version (see [`artifact`]).
+pub const MODEL_VERSION: u32 = 1;
+
+/// One node's frozen inference state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeComponent {
+    /// Original network node id (informational; serving indexes the
+    /// model's `nodes` vector positionally).
+    pub node_id: usize,
+    /// Support set: the node's training samples (n x m, one per row).
+    pub support: Matrix,
+    /// Dual coefficient columns (n x k): k = 1 for Alg. 1 output, k > 1
+    /// for central top-k exports.
+    pub coeffs: Matrix,
+    /// Column means of the *uncentered* training Gram `K(support,
+    /// support)` — the `1_m K / n` term of out-of-sample centering.
+    pub col_means: Vec<f64>,
+    /// Grand mean of the uncentered training Gram.
+    pub grand_mean: f64,
+}
+
+impl NodeComponent {
+    /// Freeze a component from training data + solved coefficients.
+    pub fn from_training(
+        node_id: usize,
+        support: &Matrix,
+        coeffs: Matrix,
+        kernel: &Kernel,
+    ) -> NodeComponent {
+        assert_eq!(coeffs.rows(), support.rows(), "one dual weight per support row");
+        let k = gram_sym(kernel, support);
+        let n = k.rows();
+        let mut col_means = vec![0.0; n];
+        let mut grand = 0.0;
+        for i in 0..n {
+            for (j, &v) in k.row(i).iter().enumerate() {
+                col_means[j] += v;
+                grand += v;
+            }
+        }
+        for c in col_means.iter_mut() {
+            *c /= n as f64;
+        }
+        grand /= (n * n) as f64;
+        NodeComponent {
+            node_id,
+            support: support.clone(),
+            coeffs,
+            col_means,
+            grand_mean: grand,
+        }
+    }
+
+    /// Support size n.
+    pub fn support_len(&self) -> usize {
+        self.support.rows()
+    }
+
+    /// Number of projection components k.
+    pub fn n_components(&self) -> usize {
+        self.coeffs.cols()
+    }
+}
+
+/// A trained DKPCA model: kernel spec + one frozen component per node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DkpcaModel {
+    pub kernel: Kernel,
+    pub nodes: Vec<NodeComponent>,
+}
+
+impl DkpcaModel {
+    /// Assemble a model from per-node training data and solved dual
+    /// coefficients (the shape every training path produces):
+    /// `alphas[j]` pairs with `xs[j]`.
+    pub fn from_parts(kernel: &Kernel, xs: &[Matrix], alphas: &[Vec<f64>]) -> DkpcaModel {
+        assert_eq!(xs.len(), alphas.len(), "one alpha per node dataset");
+        let nodes = xs
+            .iter()
+            .zip(alphas)
+            .enumerate()
+            .map(|(j, (x, a))| {
+                let coeffs = Matrix::from_vec(a.len(), 1, a.clone());
+                NodeComponent::from_training(j, x, coeffs, kernel)
+            })
+            .collect();
+        DkpcaModel { kernel: *kernel, nodes }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Input feature dimension m (all supports share it).
+    pub fn feat_dim(&self) -> usize {
+        self.nodes.first().map_or(0, |c| c.support.cols())
+    }
+
+    /// Exact out-of-sample projection of `batch` (rows = points)
+    /// through node `node`: returns (batch rows x k).
+    pub fn project(&self, node: usize, batch: &Matrix) -> Matrix {
+        project::project_exact(&self.kernel, &self.nodes[node], batch)
+    }
+
+    /// Exact projection through every node; entry j is (batch rows x
+    /// k_j).
+    pub fn project_all(&self, batch: &Matrix) -> Vec<Matrix> {
+        (0..self.n_nodes()).map(|j| self.project(j, batch)).collect()
+    }
+
+    /// Projection of node `node`'s own support set — by construction
+    /// identical (up to rounding) to the training-time projection
+    /// `center_gram(K_j) @ coeffs`.
+    pub fn training_projection(&self, node: usize) -> Matrix {
+        self.project(node, &self.nodes[node].support)
+    }
+
+    /// Build the RFF fast-path projector for one node (strictly
+    /// positive-bandwidth RBF kernels only). `dim >= 1` random
+    /// features, deterministic in `seed`.
+    pub fn rff_projector(
+        &self,
+        node: usize,
+        dim: usize,
+        seed: u64,
+    ) -> Result<RffProjector, ModelError> {
+        // Validate here, not in the caller: RffMap::sample asserts on
+        // these and a Result-returning API must not panic instead.
+        let gamma = match self.kernel {
+            Kernel::Rbf { gamma } if gamma > 0.0 => gamma,
+            _ => return Err(ModelError::RffNeedsRbf),
+        };
+        if dim == 0 {
+            return Err(ModelError::BadRffDim(dim));
+        }
+        Ok(RffProjector::build(&self.nodes[node], gamma, dim, seed))
+    }
+
+    /// Serialize to the versioned binary artifact (see [`artifact`]).
+    pub fn to_bytes(&self) -> Result<Vec<u8>, ModelError> {
+        artifact::encode(self)
+    }
+
+    /// Deserialize from artifact bytes (checksum + version checked).
+    pub fn from_bytes(bytes: &[u8]) -> Result<DkpcaModel, ModelError> {
+        artifact::decode(bytes)
+    }
+
+    /// Write the artifact to disk.
+    pub fn save(&self, path: &std::path::Path) -> Result<(), ModelError> {
+        let bytes = self.to_bytes()?;
+        std::fs::write(path, bytes).map_err(|e| ModelError::Io(format!("{}: {e}", path.display())))
+    }
+
+    /// Read an artifact from disk.
+    pub fn load(path: &std::path::Path) -> Result<DkpcaModel, ModelError> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| ModelError::Io(format!("{}: {e}", path.display())))?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::kernels::center_gram;
+    use crate::linalg::matmul;
+
+    fn data(n: usize, m: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, m, |_, _| rng.gauss())
+    }
+
+    #[test]
+    fn component_stats_match_training_gram() {
+        let kernel = Kernel::Rbf { gamma: 0.3 };
+        let x = data(12, 4, 1);
+        let coeffs = Matrix::from_vec(12, 1, (0..12).map(|i| i as f64).collect());
+        let c = NodeComponent::from_training(0, &x, coeffs, &kernel);
+        let k = gram_sym(&kernel, &x);
+        for j in 0..12 {
+            let want: f64 = k.col(j).iter().sum::<f64>() / 12.0;
+            assert!((c.col_means[j] - want).abs() < 1e-12);
+        }
+        let grand: f64 = k.as_slice().iter().sum::<f64>() / 144.0;
+        assert!((c.grand_mean - grand).abs() < 1e-12);
+    }
+
+    #[test]
+    fn training_projection_matches_centered_gram() {
+        // The acceptance-critical identity: serving the support set
+        // reproduces center_gram(K) @ coeffs.
+        let kernel = Kernel::Rbf { gamma: 0.5 };
+        let x = data(15, 3, 2);
+        let mut rng = Rng::new(3);
+        let alphas = vec![rng.gauss_vec(15)];
+        let model = DkpcaModel::from_parts(&kernel, &[x.clone()], &alphas);
+        let served = model.training_projection(0);
+        let kc = center_gram(&gram_sym(&kernel, &x));
+        let coeffs = Matrix::from_vec(15, 1, alphas[0].clone());
+        let want = matmul(&kc, &coeffs);
+        for (a, b) in served.as_slice().iter().zip(want.as_slice()) {
+            assert!((a - b).abs() < 1e-10, "served {a} vs trained {b}");
+        }
+    }
+
+    #[test]
+    fn from_parts_shapes() {
+        let kernel = Kernel::Rbf { gamma: 0.2 };
+        let xs = vec![data(8, 3, 4), data(10, 3, 5)];
+        let alphas = vec![vec![0.1; 8], vec![0.2; 10]];
+        let model = DkpcaModel::from_parts(&kernel, &xs, &alphas);
+        assert_eq!(model.n_nodes(), 2);
+        assert_eq!(model.feat_dim(), 3);
+        assert_eq!(model.nodes[0].support_len(), 8);
+        assert_eq!(model.nodes[1].support_len(), 10);
+        assert_eq!(model.nodes[0].n_components(), 1);
+    }
+
+    #[test]
+    fn rff_projector_rejects_non_rbf() {
+        let kernel = Kernel::Linear;
+        let model = DkpcaModel::from_parts(&kernel, &[data(6, 2, 6)], &[vec![1.0; 6]]);
+        assert!(matches!(model.rff_projector(0, 64, 1), Err(ModelError::RffNeedsRbf)));
+    }
+
+    #[test]
+    fn rff_projector_rejects_degenerate_inputs_without_panicking() {
+        let ok = DkpcaModel::from_parts(
+            &Kernel::Rbf { gamma: 0.5 },
+            &[data(6, 2, 7)],
+            &[vec![1.0; 6]],
+        );
+        assert!(matches!(ok.rff_projector(0, 0, 1), Err(ModelError::BadRffDim(0))));
+        let degenerate = DkpcaModel::from_parts(
+            &Kernel::Rbf { gamma: 0.0 },
+            &[data(6, 2, 8)],
+            &[vec![1.0; 6]],
+        );
+        assert!(matches!(degenerate.rff_projector(0, 64, 1), Err(ModelError::RffNeedsRbf)));
+    }
+
+    #[test]
+    fn non_rbf_kernels_still_project_exactly() {
+        // gram() cosine-normalises non-unit-diagonal kernels; the model
+        // must be consistent because both training stats and serving go
+        // through the same gram/gram_sym pair.
+        let kernel = Kernel::Polynomial { degree: 2, c: 1.0 };
+        let x = data(10, 3, 7);
+        let mut rng = Rng::new(8);
+        let model = DkpcaModel::from_parts(&kernel, &[x.clone()], &[rng.gauss_vec(10)]);
+        let served = model.training_projection(0);
+        let kc = center_gram(&gram_sym(&kernel, &x));
+        let want = matmul(&kc, &model.nodes[0].coeffs);
+        for (a, b) in served.as_slice().iter().zip(want.as_slice()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Out-of-sample projection math: exact cross-Gram path and the
+//! collapsed random-Fourier-feature fast path.
+//!
+//! Exact path per batch (m points, n support rows, k components):
+//! assemble `R = K(X_new, X_sup)` (m x n) via `kernels::gram`, apply
+//! out-of-sample double-centering against the stored training stats,
+//! then one GEMM into the dual coefficients — O(m n (M + k)).
+//!
+//! RFF path: with features `z(x)` (D-dim) approximating the RBF kernel,
+//! the whole chain `R alpha - rowmean(R) sum(alpha) - const` collapses
+//! algebraically into a single precomputed D x k matrix `u` and a k
+//! offset `c0`:
+//!
+//! ```text
+//! y = z(X_new) u - 1_m c0^T,   u = Z_sup^T A - zbar (1^T A),
+//! c0 = A^T mu - g A^T 1
+//! ```
+//!
+//! so serving costs O(m D (M + k)) — *independent of the support size
+//! n*. That is the communication-efficient serving trick the
+//! representative-point sketches of Balcan et al. point at: the model
+//! ships D numbers per component instead of n support rows.
+
+use crate::kernels::{gram, Kernel};
+use crate::kernels::rff::RffMap;
+use crate::linalg::{matmul, Matrix};
+
+use super::NodeComponent;
+
+/// Out-of-sample centering of a cross-Gram block `r = K(X_new, X_sup)`
+/// against training statistics: subtract the *new* block's row means
+/// and the *training* Gram's column means, add the training grand mean.
+pub fn oos_center(r: &Matrix, train_col_means: &[f64], train_grand_mean: f64) -> Matrix {
+    let (m, n) = (r.rows(), r.cols());
+    assert_eq!(n, train_col_means.len(), "support size mismatch");
+    let mut out = r.clone();
+    for i in 0..m {
+        let row = out.row_mut(i);
+        let rm: f64 = row.iter().sum::<f64>() / n as f64;
+        for (j, v) in row.iter_mut().enumerate() {
+            *v += train_grand_mean - rm - train_col_means[j];
+        }
+    }
+    out
+}
+
+/// Exact projection of `batch` through one frozen component.
+pub fn project_exact(kernel: &Kernel, comp: &NodeComponent, batch: &Matrix) -> Matrix {
+    assert_eq!(
+        batch.cols(),
+        comp.support.cols(),
+        "batch feature dimension must match the support set"
+    );
+    let r = gram(kernel, batch, &comp.support);
+    let rc = oos_center(&r, &comp.col_means, comp.grand_mean);
+    matmul(&rc, &comp.coeffs)
+}
+
+/// Precomputed RFF fast-path state for one component (RBF only).
+pub struct RffProjector {
+    map: RffMap,
+    /// Collapsed projection matrix (D x k).
+    u: Matrix,
+    /// Per-component constant offsets (k).
+    c0: Vec<f64>,
+}
+
+impl RffProjector {
+    /// Collapse a component against a sampled feature map. The map is
+    /// deterministic in `seed`, so repeated builds (or remote replicas)
+    /// agree bit-for-bit.
+    pub fn build(comp: &NodeComponent, gamma: f64, dim: usize, seed: u64) -> RffProjector {
+        let map = RffMap::sample(comp.support.cols(), dim, gamma, seed);
+        let z = map.features(&comp.support); // n x D
+        let n = z.rows();
+        let k = comp.coeffs.cols();
+        // w = Z^T A (D x k).
+        let w = matmul(&z.transpose(), &comp.coeffs);
+        // zbar: column means of Z (D).
+        let mut zbar = vec![0.0; z.cols()];
+        for i in 0..n {
+            for (d, &v) in z.row(i).iter().enumerate() {
+                zbar[d] += v;
+            }
+        }
+        for v in zbar.iter_mut() {
+            *v /= n as f64;
+        }
+        // Column sums of the coefficients (k).
+        let mut a_sum = vec![0.0; k];
+        for i in 0..comp.coeffs.rows() {
+            for (c, &v) in comp.coeffs.row(i).iter().enumerate() {
+                a_sum[c] += v;
+            }
+        }
+        // u = w - zbar a_sum^T; c0 = A^T mu - g A^T 1.
+        let mut u = w;
+        for d in 0..u.rows() {
+            let zd = zbar[d];
+            for (c, v) in u.row_mut(d).iter_mut().enumerate() {
+                *v -= zd * a_sum[c];
+            }
+        }
+        let c0: Vec<f64> = (0..k)
+            .map(|c| {
+                let mu_dot: f64 = comp
+                    .col_means
+                    .iter()
+                    .zip(comp.coeffs.col(c))
+                    .map(|(m, a)| m * a)
+                    .sum();
+                mu_dot - comp.grand_mean * a_sum[c]
+            })
+            .collect();
+        RffProjector { map, u, c0 }
+    }
+
+    /// Number of random features D.
+    pub fn dim(&self) -> usize {
+        self.u.rows()
+    }
+
+    /// Number of components k.
+    pub fn n_components(&self) -> usize {
+        self.u.cols()
+    }
+
+    /// Approximate projection of `batch` (m x M) -> (m x k).
+    pub fn project(&self, batch: &Matrix) -> Matrix {
+        let z = self.map.features(batch); // m x D
+        let mut y = matmul(&z, &self.u);
+        for i in 0..y.rows() {
+            for (c, v) in y.row_mut(i).iter_mut().enumerate() {
+                *v -= self.c0[c];
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::kernels::{center_gram, gram_sym};
+    use crate::linalg::ops::dot;
+
+    fn data(n: usize, m: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, m, |_, _| rng.gauss())
+    }
+
+    fn component(n: usize, m: usize, k: usize, seed: u64, kernel: &Kernel) -> NodeComponent {
+        let x = data(n, m, seed);
+        let mut rng = Rng::new(seed + 100);
+        let coeffs = Matrix::from_fn(n, k, |_, _| rng.gauss());
+        NodeComponent::from_training(0, &x, coeffs, kernel)
+    }
+
+    #[test]
+    fn oos_center_on_training_block_equals_center_gram() {
+        // Feeding the training Gram itself through oos centering must
+        // reproduce the symmetric double-centering (the classic
+        // consistency check the naive re-centering fails).
+        let kernel = Kernel::Rbf { gamma: 0.4 };
+        let x = data(13, 4, 1);
+        let k = gram_sym(&kernel, &x);
+        let want = center_gram(&k);
+        let comp = component(13, 4, 1, 1, &kernel);
+        let got = oos_center(&k, &comp.col_means, comp.grand_mean);
+        for (a, b) in got.as_slice().iter().zip(want.as_slice()) {
+            assert!((a - b).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn oos_center_differs_from_naive_recentering() {
+        // On a genuinely new batch the correct centering and the naive
+        // "center the rectangular block by its own marginals" disagree —
+        // guards against regressing into the pitfall.
+        let kernel = Kernel::Rbf { gamma: 0.4 };
+        let comp = component(12, 4, 1, 2, &kernel);
+        let batch = data(7, 4, 3);
+        let r = gram(&kernel, &batch, &comp.support);
+        let correct = oos_center(&r, &comp.col_means, comp.grand_mean);
+        let naive = center_gram(&r);
+        let diff: f64 = correct
+            .as_slice()
+            .iter()
+            .zip(naive.as_slice())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(diff > 1e-6, "expected the centerings to differ, max diff {diff}");
+    }
+
+    #[test]
+    fn rff_projection_tracks_exact() {
+        let gamma = 0.3;
+        let kernel = Kernel::Rbf { gamma };
+        let comp = component(40, 5, 2, 4, &kernel);
+        let batch = data(25, 5, 5);
+        let exact = project_exact(&kernel, &comp, &batch);
+        let rff = RffProjector::build(&comp, gamma, 8192, 7);
+        let approx = rff.project(&batch);
+        // Direction agreement per component (Monte-Carlo noise shrinks
+        // as 1/sqrt(D); cosine is the robust check).
+        for c in 0..2 {
+            let e = exact.col(c);
+            let a = approx.col(c);
+            let cos = dot(&e, &a) / (dot(&e, &e).sqrt() * dot(&a, &a).sqrt()).max(1e-30);
+            assert!(cos > 0.95, "component {c} cosine {cos}");
+        }
+    }
+
+    #[test]
+    fn rff_error_shrinks_with_dim() {
+        let gamma = 0.5;
+        let kernel = Kernel::Rbf { gamma };
+        let comp = component(30, 4, 1, 6, &kernel);
+        let batch = data(20, 4, 7);
+        let exact = project_exact(&kernel, &comp, &batch);
+        let err = |dim: usize| -> f64 {
+            let p = RffProjector::build(&comp, gamma, dim, 11);
+            let y = p.project(&batch);
+            y.as_slice()
+                .iter()
+                .zip(exact.as_slice())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt()
+        };
+        assert!(err(8192) < err(64), "no Monte-Carlo improvement");
+    }
+
+    #[test]
+    fn rff_projector_shapes() {
+        let gamma = 1.0;
+        let kernel = Kernel::Rbf { gamma };
+        let comp = component(10, 3, 2, 8, &kernel);
+        let p = RffProjector::build(&comp, gamma, 128, 1);
+        assert_eq!(p.dim(), 128);
+        assert_eq!(p.n_components(), 2);
+        let y = p.project(&data(5, 3, 9));
+        assert_eq!(y.rows(), 5);
+        assert_eq!(y.cols(), 2);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let kernel = Kernel::Rbf { gamma: 0.2 };
+        let comp = component(8, 3, 1, 10, &kernel);
+        let y = project_exact(&kernel, &comp, &Matrix::zeros(0, 3));
+        assert_eq!(y.rows(), 0);
+        assert_eq!(y.cols(), 1);
+    }
+}

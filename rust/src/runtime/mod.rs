@@ -7,10 +7,19 @@
 //! PJRT CPU client, falling back to the native substrate for shapes
 //! outside the artifact set.
 
+// The real PJRT bridge needs the `xla` + `anyhow` crates; the default
+// build ships a stub with the same surface that always reports
+// "unavailable", keeping the crate dependency-free (see rust/Cargo.toml).
+#[cfg(feature = "pjrt")]
 pub mod exec;
 pub mod registry;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use exec::PjrtBackend;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtBackend;
 pub use registry::{ArtifactKey, Registry};
 
 /// Default artifacts directory relative to the repo root.

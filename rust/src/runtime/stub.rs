@@ -1,0 +1,85 @@
+//! Build-time stub for [`PjrtBackend`] when the crate is compiled
+//! without the `pjrt` feature (the dependency-free default — the real
+//! backend needs the `xla` and `anyhow` crates, which the offline
+//! vendor set may not carry).
+//!
+//! Same public surface as `runtime::exec::PjrtBackend`, but
+//! construction always fails with a clear message, so every caller
+//! (CLI, benches, crosscheck tests, examples) takes its existing
+//! "artifacts unavailable -> native fallback / skip" branch and the
+//! whole crate builds and tests with zero external dependencies.
+
+use std::path::Path;
+
+use crate::backend::{ComputeBackend, NativeBackend};
+use crate::linalg::Matrix;
+
+use super::registry::Registry;
+
+/// Unavailable PJRT backend (crate built without the `pjrt` feature).
+pub struct PjrtBackend {
+    _unconstructable: std::convert::Infallible,
+}
+
+impl PjrtBackend {
+    /// Always fails: rebuild with `--features pjrt` (and the `xla` +
+    /// `anyhow` dependencies) for the real artifact backend.
+    pub fn new(_artifacts_dir: &Path) -> Result<PjrtBackend, String> {
+        Err("built without the `pjrt` feature; artifacts unavailable (see rust/Cargo.toml)"
+            .into())
+    }
+
+    /// Always fails (see [`PjrtBackend::new`]).
+    pub fn new_hybrid(artifacts_dir: &Path, _min_flops: f64) -> Result<PjrtBackend, String> {
+        Self::new(artifacts_dir)
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    pub fn registry(&self) -> &Registry {
+        // `new` never succeeds, so no instance can exist.
+        match self._unconstructable {}
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn gram_rbf_centered(&self, x: &Matrix, y: &Matrix, gamma: f64) -> Matrix {
+        NativeBackend.gram_rbf_centered(x, y, gamma)
+    }
+
+    fn z_step(&self, g: &Matrix, c: &[f64]) -> (Vec<f64>, f64) {
+        NativeBackend.z_step(g, c)
+    }
+
+    fn admm_step(
+        &self,
+        kc: &Matrix,
+        ainv: &Matrix,
+        p: &Matrix,
+        b: &Matrix,
+        rho: &[f64],
+    ) -> (Vec<f64>, Matrix) {
+        NativeBackend.admm_step(kc, ainv, p, b, rho)
+    }
+
+    fn power_iter_step(&self, k: &Matrix, v: &[f64]) -> (Vec<f64>, f64) {
+        NativeBackend.power_iter_step(k, v)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_reports_missing_feature() {
+        let err = PjrtBackend::new(Path::new("/nonexistent")).err().unwrap();
+        assert!(err.contains("pjrt"), "unhelpful error: {err}");
+    }
+}

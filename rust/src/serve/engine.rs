@@ -1,0 +1,553 @@
+//! The batched projection engine: mpsc request queue, OS-thread worker
+//! pool, per-request path dispatch, and an RFF projector cache.
+//!
+//! Concurrency shape: submitters push [`Job`]s into one mpsc channel;
+//! workers pull from the shared receiver (behind a mutex — the queue
+//! pop is O(1) next to the O(m n M) projection it hands out) and reply
+//! through a per-request channel, so responses never serialize behind
+//! each other. Dropping the engine closes the queue and joins the
+//! workers.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::kernels::Kernel;
+use crate::linalg::Matrix;
+use crate::model::{DkpcaModel, RffProjector};
+
+/// Which execution path serves a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectionPath {
+    /// Exact cross-Gram + out-of-sample centering + GEMM.
+    Exact,
+    /// Random-Fourier-feature approximation with `dim` features sampled
+    /// deterministically from `seed` (RBF kernels only).
+    Rff { dim: usize, seed: u64 },
+}
+
+/// One unit of serving work: project `batch` through node `node`.
+#[derive(Clone, Debug)]
+pub struct ProjectionRequest {
+    pub node: usize,
+    pub batch: Matrix,
+    pub path: ProjectionPath,
+}
+
+/// A served projection.
+#[derive(Clone, Debug)]
+pub struct Projection {
+    /// (batch rows x k) projection values.
+    pub outputs: Matrix,
+    pub node: usize,
+    pub path: ProjectionPath,
+    /// Worker-side compute time for this request.
+    pub compute_secs: f64,
+}
+
+/// Hard cap on requested RFF feature counts: a D x M frequency matrix
+/// is materialised per (node, dim, seed), so an unchecked
+/// caller-supplied dim is a single-request memory bomb.
+pub const MAX_RFF_DIM: usize = 1 << 20;
+
+/// Upper bound on cached RFF projectors; beyond it the oldest key is
+/// evicted so adversarial (seed, dim) churn cannot grow memory without
+/// limit.
+const MAX_CACHED_PROJECTORS: usize = 64;
+
+/// Serving failures (bad requests; the engine itself never dies).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    UnknownNode { node: usize, n_nodes: usize },
+    DimMismatch { got: usize, want: usize },
+    /// RFF path requested for a non-RBF kernel.
+    RffNeedsRbf,
+    /// RFF dim outside `1..=MAX_RFF_DIM`.
+    BadRffDim { dim: usize },
+    /// The engine shut down before replying.
+    Canceled,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownNode { node, n_nodes } => {
+                write!(f, "node {node} out of range (model has {n_nodes})")
+            }
+            ServeError::DimMismatch { got, want } => {
+                write!(f, "batch feature dim {got}, model expects {want}")
+            }
+            ServeError::RffNeedsRbf => write!(f, "RFF path requires an RBF kernel"),
+            ServeError::BadRffDim { dim } => {
+                write!(f, "rff dim {dim} outside 1..={MAX_RFF_DIM}")
+            }
+            ServeError::Canceled => write!(f, "engine shut down before the reply"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Snapshot of the engine's served-traffic counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub points: u64,
+    pub exact_requests: u64,
+    pub rff_requests: u64,
+    pub errors: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    points: AtomicU64,
+    exact_requests: AtomicU64,
+    rff_requests: AtomicU64,
+    errors: AtomicU64,
+}
+
+struct Job {
+    req: ProjectionRequest,
+    reply: Sender<Result<Projection, ServeError>>,
+}
+
+type RffKey = (usize, usize, u64);
+
+/// Bounded FIFO cache of collapsed RFF projectors, keyed by
+/// (node, dim, seed). Built once on first use; subsequent requests at
+/// the same key are pure GEMM. At capacity the *oldest inserted* entry
+/// is evicted.
+#[derive(Default)]
+struct RffCache {
+    map: BTreeMap<RffKey, Arc<RffProjector>>,
+    /// Insertion order for eviction (no duplicates: keys are checked
+    /// against `map` before insert).
+    order: VecDeque<RffKey>,
+}
+
+impl RffCache {
+    fn insert_bounded(&mut self, key: RffKey, value: Arc<RffProjector>) {
+        while self.map.len() >= MAX_CACHED_PROJECTORS {
+            match self.order.pop_front() {
+                Some(oldest) => {
+                    self.map.remove(&oldest);
+                }
+                None => break,
+            }
+        }
+        self.map.insert(key, value);
+        self.order.push_back(key);
+    }
+}
+
+/// Shared worker state: the model, the projector cache, the counters.
+struct Shared {
+    model: Arc<DkpcaModel>,
+    rff_cache: Mutex<RffCache>,
+    counters: Counters,
+}
+
+/// A ticket for an in-flight request.
+pub struct PendingProjection {
+    rx: Receiver<Result<Projection, ServeError>>,
+}
+
+impl PendingProjection {
+    /// Block until the worker replies.
+    pub fn wait(self) -> Result<Projection, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::Canceled))
+    }
+}
+
+/// The engine: a queue feeding a pool of projection workers.
+pub struct ProjectionEngine {
+    shared: Arc<Shared>,
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ProjectionEngine {
+    /// Spin up `workers` projection threads over the model.
+    pub fn new(model: DkpcaModel, workers: usize) -> ProjectionEngine {
+        assert!(workers >= 1, "need at least one worker");
+        let shared = Arc::new(Shared {
+            model: Arc::new(model),
+            rff_cache: Mutex::new(RffCache::default()),
+            counters: Counters::default(),
+        });
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = shared.clone();
+                let rx = rx.clone();
+                std::thread::spawn(move || worker_main(shared, rx))
+            })
+            .collect();
+        ProjectionEngine { shared, tx: Some(tx), workers: handles }
+    }
+
+    /// Pool sized to the host's parallelism.
+    pub fn with_default_workers(model: DkpcaModel) -> ProjectionEngine {
+        let n = std::thread::available_parallelism().map_or(2, |p| p.get());
+        Self::new(model, n)
+    }
+
+    /// The model being served.
+    pub fn model(&self) -> &DkpcaModel {
+        &self.shared.model
+    }
+
+    /// Enqueue a request; returns immediately with a ticket.
+    pub fn submit(&self, req: ProjectionRequest) -> PendingProjection {
+        let (reply, rx) = channel();
+        let tx = self.tx.as_ref().expect("engine already shut down");
+        // Send cannot fail while `tx` is alive; a closed queue surfaces
+        // as `Canceled` at wait() time anyway.
+        let _ = tx.send(Job { req, reply });
+        PendingProjection { rx }
+    }
+
+    /// Synchronous convenience: submit + wait.
+    pub fn project(&self, req: ProjectionRequest) -> Result<Projection, ServeError> {
+        self.submit(req).wait()
+    }
+
+    /// Split one large batch into `chunk_rows`-row sub-requests, serve
+    /// them across the pool, and reassemble in order. This is how a
+    /// single oversized request exploits every worker.
+    pub fn project_chunked(
+        &self,
+        node: usize,
+        batch: &Matrix,
+        path: ProjectionPath,
+        chunk_rows: usize,
+    ) -> Result<Matrix, ServeError> {
+        assert!(chunk_rows >= 1, "chunk_rows must be positive");
+        let m = batch.rows();
+        if m <= chunk_rows {
+            return self
+                .project(ProjectionRequest { node, batch: batch.clone(), path })
+                .map(|p| p.outputs);
+        }
+        let mut pending = Vec::new();
+        let mut r0 = 0;
+        while r0 < m {
+            let r1 = (r0 + chunk_rows).min(m);
+            let chunk = batch.block(r0, r1, 0, batch.cols());
+            pending.push(self.submit(ProjectionRequest { node, batch: chunk, path }));
+            r0 = r1;
+        }
+        let parts = pending
+            .into_iter()
+            .map(|p| p.wait().map(|proj| proj.outputs))
+            .collect::<Result<Vec<_>, _>>()?;
+        let refs: Vec<&Matrix> = parts.iter().collect();
+        Ok(Matrix::vstack(&refs))
+    }
+
+    /// Traffic counters so far.
+    pub fn stats(&self) -> ServeStats {
+        let c = &self.shared.counters;
+        ServeStats {
+            requests: c.requests.load(Ordering::Relaxed),
+            points: c.points.load(Ordering::Relaxed),
+            exact_requests: c.exact_requests.load(Ordering::Relaxed),
+            rff_requests: c.rff_requests.load(Ordering::Relaxed),
+            errors: c.errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for ProjectionEngine {
+    fn drop(&mut self) {
+        // Closing the sender drains the queue: workers finish in-flight
+        // jobs, then their recv() errors and they exit.
+        drop(self.tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(shared: Arc<Shared>, rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        // Hold the lock only for the pop, never during compute.
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return,
+        };
+        let Ok(Job { req, reply }) = job else { return };
+        let result = serve_one(&shared, &req);
+        let c = &shared.counters;
+        c.requests.fetch_add(1, Ordering::Relaxed);
+        match &result {
+            Ok(_) => {
+                c.points.fetch_add(req.batch.rows() as u64, Ordering::Relaxed);
+                match req.path {
+                    ProjectionPath::Exact => c.exact_requests.fetch_add(1, Ordering::Relaxed),
+                    ProjectionPath::Rff { .. } => c.rff_requests.fetch_add(1, Ordering::Relaxed),
+                };
+            }
+            Err(_) => {
+                c.errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // The submitter may have dropped its ticket; that's fine.
+        let _ = reply.send(result);
+    }
+}
+
+fn serve_one(shared: &Shared, req: &ProjectionRequest) -> Result<Projection, ServeError> {
+    let model = &shared.model;
+    if req.node >= model.n_nodes() {
+        return Err(ServeError::UnknownNode { node: req.node, n_nodes: model.n_nodes() });
+    }
+    let want = model.nodes[req.node].support.cols();
+    if req.batch.cols() != want {
+        return Err(ServeError::DimMismatch { got: req.batch.cols(), want });
+    }
+    let clock = Instant::now();
+    let outputs = match req.path {
+        ProjectionPath::Exact => model.project(req.node, &req.batch),
+        ProjectionPath::Rff { dim, seed } => {
+            // Bochner sampling needs a strictly positive bandwidth, so a
+            // degenerate gamma has no RFF representation either.
+            if !matches!(model.kernel, Kernel::Rbf { gamma } if gamma > 0.0) {
+                return Err(ServeError::RffNeedsRbf);
+            }
+            if dim == 0 || dim > MAX_RFF_DIM {
+                return Err(ServeError::BadRffDim { dim });
+            }
+            let projector = cached_projector(shared, req.node, dim, seed);
+            projector.project(&req.batch)
+        }
+    };
+    Ok(Projection {
+        outputs,
+        node: req.node,
+        path: req.path,
+        compute_secs: clock.elapsed().as_secs_f64(),
+    })
+}
+
+/// Fetch or build the collapsed projector for (node, dim, seed).
+///
+/// The O(n D M) build runs *outside* the cache lock so a first request
+/// at a new key cannot stall cache hits for other keys; two workers
+/// racing on the same new key both build, one insert wins (the map is
+/// deterministic in the seed, so the results are identical bits).
+/// A poisoned lock is recovered with `into_inner` — the cache holds
+/// plain data, so a worker that panicked mid-insert leaves it valid.
+fn cached_projector(
+    shared: &Shared,
+    node: usize,
+    dim: usize,
+    seed: u64,
+) -> Arc<RffProjector> {
+    let key = (node, dim, seed);
+    if let Some(p) = shared
+        .rff_cache
+        .lock()
+        .unwrap_or_else(|poison| poison.into_inner())
+        .map
+        .get(&key)
+    {
+        return p.clone();
+    }
+    let built = Arc::new(
+        shared
+            .model
+            .rff_projector(node, dim, seed)
+            .expect("kernel and dim validated by the caller"),
+    );
+    let mut cache = shared
+        .rff_cache
+        .lock()
+        .unwrap_or_else(|poison| poison.into_inner());
+    if let Some(existing) = cache.map.get(&key) {
+        return existing.clone();
+    }
+    cache.insert_bounded(key, built.clone());
+    built
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn data(n: usize, m: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, m, |_, _| rng.gauss())
+    }
+
+    fn toy_model() -> DkpcaModel {
+        let kernel = Kernel::Rbf { gamma: 0.3 };
+        let mut rng = Rng::new(1);
+        let xs: Vec<Matrix> = (0..3).map(|i| data(12, 4, 10 + i)).collect();
+        let alphas: Vec<Vec<f64>> = (0..3).map(|_| rng.gauss_vec(12)).collect();
+        DkpcaModel::from_parts(&kernel, &xs, &alphas)
+    }
+
+    #[test]
+    fn engine_matches_direct_projection() {
+        let model = toy_model();
+        let direct: Vec<Matrix> = (0..3).map(|j| model.project(j, &data(9, 4, 99))).collect();
+        let engine = ProjectionEngine::new(toy_model(), 3);
+        for j in 0..3 {
+            let got = engine
+                .project(ProjectionRequest {
+                    node: j,
+                    batch: data(9, 4, 99),
+                    path: ProjectionPath::Exact,
+                })
+                .unwrap();
+            assert_eq!(got.outputs, direct[j], "node {j}");
+            assert_eq!(got.node, j);
+        }
+        let s = engine.stats();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.points, 27);
+        assert_eq!(s.exact_requests, 3);
+        assert_eq!(s.errors, 0);
+    }
+
+    #[test]
+    fn many_concurrent_submissions_all_complete() {
+        let engine = ProjectionEngine::new(toy_model(), 4);
+        let tickets: Vec<PendingProjection> = (0..32)
+            .map(|i| {
+                engine.submit(ProjectionRequest {
+                    node: i % 3,
+                    batch: data(5, 4, 200 + i as u64),
+                    path: ProjectionPath::Exact,
+                })
+            })
+            .collect();
+        for t in tickets {
+            let p = t.wait().unwrap();
+            assert_eq!(p.outputs.rows(), 5);
+            assert!(p.outputs.is_finite());
+        }
+        assert_eq!(engine.stats().requests, 32);
+    }
+
+    #[test]
+    fn chunked_equals_single_shot() {
+        let engine = ProjectionEngine::new(toy_model(), 4);
+        let batch = data(50, 4, 7);
+        let single = engine
+            .project(ProjectionRequest {
+                node: 1,
+                batch: batch.clone(),
+                path: ProjectionPath::Exact,
+            })
+            .unwrap()
+            .outputs;
+        let chunked = engine
+            .project_chunked(1, &batch, ProjectionPath::Exact, 7)
+            .unwrap();
+        assert_eq!(chunked, single);
+    }
+
+    #[test]
+    fn rff_path_serves_and_caches() {
+        let engine = ProjectionEngine::new(toy_model(), 2);
+        let batch = data(6, 4, 8);
+        let a = engine
+            .project(ProjectionRequest {
+                node: 0,
+                batch: batch.clone(),
+                path: ProjectionPath::Rff { dim: 256, seed: 5 },
+            })
+            .unwrap();
+        let b = engine
+            .project(ProjectionRequest {
+                node: 0,
+                batch,
+                path: ProjectionPath::Rff { dim: 256, seed: 5 },
+            })
+            .unwrap();
+        // Deterministic map + cache: identical bits both times.
+        assert_eq!(a.outputs, b.outputs);
+        assert_eq!(engine.stats().rff_requests, 2);
+    }
+
+    #[test]
+    fn bad_requests_error_cleanly() {
+        let engine = ProjectionEngine::new(toy_model(), 1);
+        let err = engine
+            .project(ProjectionRequest {
+                node: 9,
+                batch: data(3, 4, 1),
+                path: ProjectionPath::Exact,
+            })
+            .unwrap_err();
+        assert_eq!(err, ServeError::UnknownNode { node: 9, n_nodes: 3 });
+        let err = engine
+            .project(ProjectionRequest {
+                node: 0,
+                batch: data(3, 5, 1),
+                path: ProjectionPath::Exact,
+            })
+            .unwrap_err();
+        assert_eq!(err, ServeError::DimMismatch { got: 5, want: 4 });
+        assert_eq!(engine.stats().errors, 2);
+    }
+
+    #[test]
+    fn zero_and_oversized_rff_dims_error_without_killing_workers() {
+        let engine = ProjectionEngine::new(toy_model(), 1);
+        for dim in [0usize, MAX_RFF_DIM + 1] {
+            let err = engine
+                .project(ProjectionRequest {
+                    node: 0,
+                    batch: data(2, 4, 1),
+                    path: ProjectionPath::Rff { dim, seed: 0 },
+                })
+                .unwrap_err();
+            assert_eq!(err, ServeError::BadRffDim { dim });
+        }
+        // The single worker must still be alive and serving.
+        let ok = engine
+            .project(ProjectionRequest {
+                node: 0,
+                batch: data(2, 4, 1),
+                path: ProjectionPath::Exact,
+            })
+            .unwrap();
+        assert_eq!(ok.outputs.rows(), 2);
+    }
+
+    #[test]
+    fn rff_on_non_rbf_kernel_errors() {
+        let kernel = Kernel::Linear;
+        let model =
+            DkpcaModel::from_parts(&kernel, &[data(8, 3, 1)], &[vec![0.5; 8]]);
+        let engine = ProjectionEngine::new(model, 1);
+        let err = engine
+            .project(ProjectionRequest {
+                node: 0,
+                batch: data(2, 3, 2),
+                path: ProjectionPath::Rff { dim: 64, seed: 0 },
+            })
+            .unwrap_err();
+        assert_eq!(err, ServeError::RffNeedsRbf);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let engine = ProjectionEngine::new(toy_model(), 2);
+        let _ = engine.project(ProjectionRequest {
+            node: 0,
+            batch: data(4, 4, 3),
+            path: ProjectionPath::Exact,
+        });
+        drop(engine); // must not hang or panic
+    }
+}

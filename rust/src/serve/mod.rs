@@ -1,0 +1,30 @@
+//! S12 — the serving side: batched out-of-sample projection behind a
+//! request queue and worker pool.
+//!
+//! Training ends at a [`crate::model::DkpcaModel`]; this module turns
+//! that artifact into a long-lived [`ProjectionEngine`] that accepts
+//! [`ProjectionRequest`]s (a batch of new points + a node + a path
+//! choice), fans them out over OS-thread workers, and returns
+//! projections. Two execution paths, selected *per request*:
+//!
+//! * [`ProjectionPath::Exact`] — assemble `K(X_new, X_sup)` through
+//!   `kernels::gram`, out-of-sample center, GEMM into the dual
+//!   coefficients. O(m n M) per batch; exact to f64 rounding.
+//! * [`ProjectionPath::Rff`] — the collapsed random-Fourier-feature
+//!   projector (`model::RffProjector`, cached per (node, dim, seed)):
+//!   O(m D M), independent of the support size, at Monte-Carlo
+//!   accuracy ~ 1/sqrt(D). The throughput winner once n >> D — see
+//!   `benches/serve_throughput.rs`.
+//!
+//! The engine is the single-process skeleton of the ROADMAP's
+//! "serve projections to millions of users" north star: stateless
+//! workers over an immutable `Arc<DkpcaModel>` shard horizontally, and
+//! `project_chunked` splits one oversized batch across the pool. See
+//! DESIGN.md §Model & serving.
+
+pub mod engine;
+
+pub use engine::{
+    PendingProjection, Projection, ProjectionEngine, ProjectionPath, ProjectionRequest,
+    ServeError, ServeStats,
+};

@@ -1,0 +1,224 @@
+//! Integration: the full train -> export -> serialize -> deserialize ->
+//! serve round-trip, and the out-of-sample centering consistency
+//! contract — serving the training points must reproduce the
+//! training-time projections, and the RFF fast path must track the
+//! exact path within Monte-Carlo error.
+
+use dkpca::admm::{AdmmConfig, DkpcaSolver};
+use dkpca::backend::NativeBackend;
+use dkpca::central::central_kpca;
+use dkpca::data::synth::{blob_centers, sample_blobs, BlobSpec};
+use dkpca::data::{NoiseModel, Rng};
+use dkpca::kernels::{center_gram, gram_sym, Kernel};
+use dkpca::linalg::ops::dot;
+use dkpca::linalg::{matmul, Matrix};
+use dkpca::model::DkpcaModel;
+use dkpca::serve::{ProjectionEngine, ProjectionPath, ProjectionRequest};
+use dkpca::topology::Graph;
+
+const KERNEL: Kernel = Kernel::Rbf { gamma: 0.1 };
+
+fn blob_network(j: usize, n: usize, seed: u64) -> Vec<Matrix> {
+    let spec = BlobSpec::default();
+    let centers = blob_centers(&spec, seed);
+    let mut rng = Rng::new(seed + 1);
+    (0..j)
+        .map(|_| sample_blobs(&spec, &centers, n, None, &mut rng).0)
+        .collect()
+}
+
+fn held_out_batch(m: usize, seed: u64) -> Matrix {
+    let spec = BlobSpec::default();
+    let centers = blob_centers(&spec, seed);
+    let mut rng = Rng::new(seed + 99);
+    sample_blobs(&spec, &centers, m, None, &mut rng).0
+}
+
+/// Training-time projection of node data: `center_gram(K_j) @ alpha_j`.
+fn training_projection(x: &Matrix, alpha: &[f64]) -> Vec<f64> {
+    let kc = center_gram(&gram_sym(&KERNEL, x));
+    let coeffs = Matrix::from_vec(alpha.len(), 1, alpha.to_vec());
+    matmul(&kc, &coeffs).col(0)
+}
+
+#[test]
+fn end_to_end_roundtrip_reproduces_training_projections() {
+    // Train (sequential path) -> to_model -> bytes -> model -> serve.
+    let xs = blob_network(5, 20, 3);
+    let graph = Graph::ring(5, 1);
+    let cfg = AdmmConfig { max_iters: 15, ..Default::default() };
+    let mut solver = DkpcaSolver::new(&xs, &graph, &KERNEL, &cfg, NoiseModel::None, 0);
+    let res = solver.run(&NativeBackend);
+    let model = solver.to_model();
+
+    // Serialize -> deserialize: bit-exact.
+    let restored = DkpcaModel::from_bytes(&model.to_bytes().unwrap()).unwrap();
+    assert_eq!(restored, model);
+
+    // Serve every node's own training batch through the engine; the
+    // projections must match training-time values to tight tolerance.
+    let engine = ProjectionEngine::new(restored, 3);
+    for (j, x) in xs.iter().enumerate() {
+        let served = engine
+            .project(ProjectionRequest {
+                node: j,
+                batch: x.clone(),
+                path: ProjectionPath::Exact,
+            })
+            .unwrap();
+        let want = training_projection(x, &res.alphas[j]);
+        for (a, b) in served.outputs.col(0).iter().zip(&want) {
+            assert!(
+                (a - b).abs() < 1e-8,
+                "node {j}: served {a} vs trained {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn file_roundtrip_through_disk() {
+    let xs = blob_network(3, 12, 5);
+    let graph = Graph::ring(3, 1);
+    let cfg = AdmmConfig { max_iters: 5, ..Default::default() };
+    let mut solver = DkpcaSolver::new(&xs, &graph, &KERNEL, &cfg, NoiseModel::None, 0);
+    let _ = solver.run(&NativeBackend);
+    let model = solver.to_model();
+    let path = std::env::temp_dir().join("dkpca_model_serve_test.dkpm");
+    model.save(&path).unwrap();
+    let restored = DkpcaModel::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(restored, model);
+}
+
+#[test]
+fn central_model_reproduces_training_projections() {
+    let xs = blob_network(3, 15, 7);
+    let central = central_kpca(&xs, &KERNEL);
+    let model = central.to_model();
+    let engine = ProjectionEngine::new(model, 2);
+    let served = engine
+        .project(ProjectionRequest {
+            node: 0,
+            batch: central.x.clone(),
+            path: ProjectionPath::Exact,
+        })
+        .unwrap();
+    let want = dkpca::linalg::ops::matvec(&central.kc, &central.alpha);
+    for (a, b) in served.outputs.col(0).iter().zip(&want) {
+        assert!((a - b).abs() < 1e-8, "served {a} vs trained {b}");
+    }
+}
+
+#[test]
+fn rff_path_agrees_within_approximation_bound() {
+    // Exact vs RFF on a held-out batch: high-D agreement, and the
+    // error must shrink as the feature count grows.
+    let xs = blob_network(1, 60, 11);
+    let central = central_kpca(&xs, &KERNEL);
+    let model = central.to_model();
+    let batch = held_out_batch(40, 11);
+    let exact = model.project(0, &batch).col(0);
+
+    let rff_cols = |dim: usize| -> Vec<f64> {
+        let engine = ProjectionEngine::new(model.clone(), 2);
+        engine
+            .project(ProjectionRequest {
+                node: 0,
+                batch: batch.clone(),
+                path: ProjectionPath::Rff { dim, seed: 17 },
+            })
+            .unwrap()
+            .outputs
+            .col(0)
+    };
+
+    let hi = rff_cols(8192);
+    let cos = dot(&exact, &hi) / (dot(&exact, &exact).sqrt() * dot(&hi, &hi).sqrt()).max(1e-30);
+    assert!(cos > 0.95, "high-D RFF path diverges from exact: cosine {cos}");
+
+    let err = |y: &[f64]| -> f64 {
+        y.iter()
+            .zip(&exact)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    };
+    let lo = rff_cols(64);
+    assert!(
+        err(&hi) < err(&lo),
+        "no Monte-Carlo improvement: err(8192)={} err(64)={}",
+        err(&hi),
+        err(&lo)
+    );
+}
+
+#[test]
+fn parallel_engine_load_is_consistent() {
+    // Saturate a small pool with mixed exact/RFF requests and check
+    // every reply against the direct computation.
+    let xs = blob_network(4, 16, 13);
+    let graph = Graph::ring(4, 1);
+    let cfg = AdmmConfig { max_iters: 8, ..Default::default() };
+    let mut solver = DkpcaSolver::new(&xs, &graph, &KERNEL, &cfg, NoiseModel::None, 0);
+    let _ = solver.run(&NativeBackend);
+    let model = solver.to_model();
+    let engine = ProjectionEngine::new(model.clone(), 4);
+
+    let batches: Vec<Matrix> = (0..20).map(|i| held_out_batch(9, 100 + i)).collect();
+    let tickets: Vec<_> = batches
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            let path = if i % 2 == 0 {
+                ProjectionPath::Exact
+            } else {
+                ProjectionPath::Rff { dim: 512, seed: 3 }
+            };
+            (i, engine.submit(ProjectionRequest { node: i % 4, batch: b.clone(), path }))
+        })
+        .collect();
+    for (i, t) in tickets {
+        let got = t.wait().unwrap();
+        match got.path {
+            ProjectionPath::Exact => {
+                let want = model.project(i % 4, &batches[i]);
+                assert_eq!(got.outputs, want, "request {i}");
+            }
+            ProjectionPath::Rff { dim, seed } => {
+                let want = model
+                    .rff_projector(i % 4, dim, seed)
+                    .unwrap()
+                    .project(&batches[i]);
+                assert_eq!(got.outputs, want, "request {i}");
+            }
+        }
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.requests, 20);
+    assert_eq!(stats.points, 180);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn chunked_large_batch_matches_single_request() {
+    let xs = blob_network(2, 14, 19);
+    let central = central_kpca(&xs, &KERNEL);
+    let model = central.to_model_topk(2);
+    let engine = ProjectionEngine::new(model, 3);
+    let batch = held_out_batch(101, 19);
+    let single = engine
+        .project(ProjectionRequest {
+            node: 0,
+            batch: batch.clone(),
+            path: ProjectionPath::Exact,
+        })
+        .unwrap()
+        .outputs;
+    let chunked = engine
+        .project_chunked(0, &batch, ProjectionPath::Exact, 16)
+        .unwrap();
+    assert_eq!(chunked, single);
+    assert_eq!(chunked.rows(), 101);
+    assert_eq!(chunked.cols(), 2);
+}
