@@ -1,0 +1,92 @@
+//! Privacy-preserving training via the feature-space setup exchange
+//! (the paper's §7 future-work direction, now a config switch):
+//!
+//!     cargo run --release --example private_training
+//!
+//! In the classic Alg. 1 setup every node ships its raw samples to all
+//! neighbors — `N*M` floats per directed edge and total disclosure. In
+//! `SetupExchange::RffFeatures` mode the nodes agree on a shared seed,
+//! sample the same random-Fourier feature map, and transmit only the
+//! featurized `z(X_j)`: raw readings never leave their node, the setup
+//! traffic drops from `N*M` to `N*D` (here 784-dim images vs 256
+//! features — a 3x cut), and every Gram block downstream is assembled
+//! from the transmitted features. The run compares both modes on the
+//! same network, then serves a held-out batch through the feature-space
+//! model — the exported artifact is a plain linear-kernel model over
+//! `z(x)`, so the serving stack needs no changes at all.
+
+use dkpca::admm::{AdmmConfig, DkpcaSolver, SetupExchange};
+use dkpca::backend::NativeBackend;
+use dkpca::central::{central_kpca, mean_similarity};
+use dkpca::data::mnist_like::{self, PAPER_DIGITS};
+use dkpca::data::{partition, NoiseModel, Strategy};
+use dkpca::kernels::Kernel;
+use dkpca::serve::{ProjectionEngine, ProjectionPath, ProjectionRequest};
+use dkpca::topology::Graph;
+
+fn main() {
+    // 6 nodes, 25 MNIST-like 784-dim images each, ring network.
+    let (j, n) = (6usize, 25usize);
+    let (x, labels) = mnist_like::generate(&PAPER_DIGITS, j * n + 5, 17);
+    let labels: Vec<usize> = labels.into_iter().map(|l| l as usize).collect();
+    let held_out = x.block(j * n, j * n + 5, 0, x.cols());
+    let train = x.block(0, j * n, 0, x.cols());
+    let xs = partition(&train, &labels[..j * n], j, Strategy::Even, 5151);
+    let graph = Graph::ring(j, 1);
+    let kernel = Kernel::Rbf { gamma: 0.02 };
+    let central = central_kpca(&xs, &kernel);
+
+    println!("setup mode | per-edge setup floats | mean similarity to central");
+    println!("-----------+-----------------------+---------------------------");
+    let directed_edges = (2 * graph.edge_count()) as u64;
+
+    // Raw-data mode: Alg. 1 as printed — neighbors see every image.
+    let raw_cfg = AdmmConfig { max_iters: 30, seed: 1, ..Default::default() };
+    let mut raw = DkpcaSolver::new(&xs, &graph, &kernel, &raw_cfg, NoiseModel::None, 0);
+    let raw_res = raw.run(&NativeBackend);
+    let raw_sim = mean_similarity(&raw_res.alphas, &xs, &central, &kernel);
+    println!(
+        "raw data   | {:>21} | {raw_sim:.4}",
+        raw_res.setup_floats / directed_edges
+    );
+
+    // Feature-space mode: neighbors only ever see z(X_j).
+    let dim = 256;
+    let rff_cfg = AdmmConfig {
+        max_iters: 30,
+        seed: 1,
+        setup: SetupExchange::RffFeatures { dim, seed: 99 },
+        ..Default::default()
+    };
+    let mut rff = DkpcaSolver::new(&xs, &graph, &kernel, &rff_cfg, NoiseModel::None, 0);
+    let rff_res = rff.run(&NativeBackend);
+    let rff_sim = mean_similarity(&rff_res.alphas, &xs, &central, &kernel);
+    println!(
+        "rff-{dim}    | {:>21} | {rff_sim:.4}",
+        rff_res.setup_floats / directed_edges
+    );
+
+    // Serve held-out points through the feature-space model: the
+    // artifact is a linear-kernel model over z(x), so the PR-1 serving
+    // stack works unchanged — the client featurizes with the shared map.
+    let model = rff.to_model();
+    let map = rff.rff_map().expect("feature mode exposes the shared map");
+    let engine = ProjectionEngine::new(model, 2);
+    let served = engine
+        .project(ProjectionRequest {
+            node: 0,
+            batch: map.features(&held_out),
+            path: ProjectionPath::Exact,
+        })
+        .expect("serve featurized batch");
+    println!("\nheld-out projections through node 0 (feature-space model):");
+    for i in 0..served.outputs.rows() {
+        println!("  image {i}: {:>9.5}", served.outputs[(i, 0)]);
+    }
+    println!(
+        "\nRaw images never crossed an edge: each neighbor received the\n\
+         {dim}-dim shared-seed features z(X_j) instead of the 784-dim\n\
+         pixels, and every Gram block was assembled from those\n\
+         transmitted features."
+    );
+}

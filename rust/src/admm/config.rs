@@ -1,5 +1,7 @@
 //! DKPCA-ADMM hyper-parameters (paper §6.1 defaults).
 
+use crate::kernels::{Kernel, RffMap};
+
 /// z-feasibility handling in the z-update.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ZNorm {
@@ -22,6 +24,45 @@ pub enum Init {
     /// already eigendecomposes K_j) and places every node in the basin
     /// of the global top component.
     LocalKpca,
+}
+
+/// What the one-time setup exchange transmits to neighbors.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SetupExchange {
+    /// Ship each node's raw `X_j` (Alg. 1 as printed): `N*M` floats per
+    /// directed edge and full data disclosure to every neighbor.
+    RawData,
+    /// Ship shared-seed random Fourier features `z(X_j)` instead (the
+    /// paper's §7 future-work direction): `N*dim` floats per directed
+    /// edge and raw samples never leave their node. All Gram blocks are
+    /// then assembled as (cosine-normalised) `Z_a Z_b^T` from the
+    /// transmitted features. Requires an RBF kernel with `gamma > 0`;
+    /// every node must use the same `dim` and `seed` so the sampled
+    /// feature maps are mutually compatible.
+    RffFeatures { dim: usize, seed: u64 },
+}
+
+impl SetupExchange {
+    /// The shared feature map this mode prescribes for `m`-dim inputs
+    /// (`None` under `RawData`). Every participant sampling from the
+    /// same `(dim, seed)` is what makes transmitted features mutually
+    /// compatible, so all setup-exchange sites derive the map through
+    /// this one helper. Panics unless the kernel is RBF with
+    /// `gamma > 0` — Bochner sampling has no map otherwise.
+    pub fn shared_map(&self, kernel: &Kernel, m: usize) -> Option<RffMap> {
+        match *self {
+            SetupExchange::RawData => None,
+            SetupExchange::RffFeatures { dim, seed } => {
+                let gamma = match *kernel {
+                    Kernel::Rbf { gamma } if gamma > 0.0 => gamma,
+                    _ => panic!(
+                        "SetupExchange::RffFeatures needs an RBF kernel with gamma > 0"
+                    ),
+                };
+                Some(RffMap::sample(m, dim, gamma, seed))
+            }
+        }
+    }
 }
 
 /// Hyper-parameters of Alg. 1.
@@ -53,6 +94,8 @@ pub struct AdmmConfig {
     pub seed: u64,
     /// alpha initialisation strategy.
     pub init: Init,
+    /// What the setup exchange transmits (raw data or RFF features).
+    pub setup: SetupExchange,
 }
 
 impl Default for AdmmConfig {
@@ -67,27 +110,62 @@ impl Default for AdmmConfig {
             tol: 0.0,
             seed: 0,
             init: Init::LocalKpca,
+            setup: SetupExchange::RawData,
         }
     }
 }
 
 impl AdmmConfig {
-    /// rho^(2) in force at iteration `t`.
+    /// rho^(2) in force at iteration `t`: the *latest-starting* stage
+    /// whose start iteration is `<= t` — NOT the last listed one, so an
+    /// unsorted schedule (e.g. from a hand-written JSON config) still
+    /// applies the intended penalties. Before the earliest stage the
+    /// earliest-starting value applies.
     pub fn rho2_at(&self, t: usize) -> f64 {
-        let mut val = self
-            .rho2_schedule
-            .first()
-            .map(|&(_, v)| v)
-            .expect("empty rho2 schedule");
+        assert!(!self.rho2_schedule.is_empty(), "empty rho2 schedule");
+        let mut active: Option<(usize, f64)> = None;
+        let mut earliest = self.rho2_schedule[0];
         for &(start, v) in &self.rho2_schedule {
-            if t >= start {
-                val = v;
+            let later = match active {
+                None => true,
+                Some((s, _)) => start >= s,
+            };
+            if start <= t && later {
+                active = Some((start, v));
+            }
+            if start < earliest.0 {
+                earliest = (start, v);
             }
         }
-        val
+        match active {
+            Some((_, v)) => v,
+            None => earliest.1,
+        }
     }
 
-    /// Distinct (first-iteration, rho2) stages in order.
+    /// Sort the rho2 schedule by start iteration and reject empty or
+    /// duplicate-start schedules. Config-construction boundaries (the
+    /// JSON loader) call this so a misordered schedule cannot silently
+    /// misapply penalties downstream.
+    pub fn normalize_schedule(&mut self) -> Result<(), String> {
+        if self.rho2_schedule.is_empty() {
+            return Err("rho2_schedule needs at least one [iter, value] stage".into());
+        }
+        self.rho2_schedule.sort_by_key(|&(start, _)| start);
+        for w in self.rho2_schedule.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(format!(
+                    "rho2_schedule lists start iteration {} twice",
+                    w[0].0
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Distinct (first-iteration, rho2) stages as listed — callers that
+    /// need chronological order should run [`AdmmConfig::
+    /// normalize_schedule`] first.
     pub fn stages(&self) -> &[(usize, f64)] {
         &self.rho2_schedule
     }
@@ -113,5 +191,54 @@ mod tests {
         let c = AdmmConfig { rho2_schedule: vec![(0, 42.0)], ..Default::default() };
         assert_eq!(c.rho2_at(0), 42.0);
         assert_eq!(c.rho2_at(1000), 42.0);
+    }
+
+    #[test]
+    fn unsorted_schedule_applies_latest_starting_stage() {
+        // Regression: the old implementation returned the last *listed*
+        // matching entry, so this schedule silently applied 10.0 from
+        // iteration 20 onward.
+        let c = AdmmConfig {
+            rho2_schedule: vec![(20, 100.0), (0, 10.0), (10, 50.0)],
+            ..Default::default()
+        };
+        assert_eq!(c.rho2_at(0), 10.0);
+        assert_eq!(c.rho2_at(9), 10.0);
+        assert_eq!(c.rho2_at(10), 50.0);
+        assert_eq!(c.rho2_at(19), 50.0);
+        assert_eq!(c.rho2_at(20), 100.0);
+        assert_eq!(c.rho2_at(1000), 100.0);
+    }
+
+    #[test]
+    fn schedule_starting_late_uses_earliest_value_before_it() {
+        let c = AdmmConfig { rho2_schedule: vec![(5, 7.0), (2, 3.0)], ..Default::default() };
+        assert_eq!(c.rho2_at(0), 3.0, "before every stage: earliest-starting value");
+        assert_eq!(c.rho2_at(2), 3.0);
+        assert_eq!(c.rho2_at(5), 7.0);
+    }
+
+    #[test]
+    fn normalize_schedule_sorts_and_validates() {
+        let mut c = AdmmConfig {
+            rho2_schedule: vec![(20, 100.0), (0, 10.0), (10, 50.0)],
+            ..Default::default()
+        };
+        c.normalize_schedule().unwrap();
+        assert_eq!(c.rho2_schedule, vec![(0, 10.0), (10, 50.0), (20, 100.0)]);
+
+        let mut empty = AdmmConfig { rho2_schedule: vec![], ..Default::default() };
+        assert!(empty.normalize_schedule().is_err());
+
+        let mut dup = AdmmConfig {
+            rho2_schedule: vec![(0, 1.0), (0, 2.0)],
+            ..Default::default()
+        };
+        assert!(dup.normalize_schedule().unwrap_err().contains("twice"));
+    }
+
+    #[test]
+    fn default_setup_is_raw_data() {
+        assert_eq!(AdmmConfig::default().setup, SetupExchange::RawData);
     }
 }

@@ -7,7 +7,7 @@ pub mod lagrangian;
 pub mod node;
 pub mod solver;
 
-pub use config::{AdmmConfig, Init, ZNorm};
+pub use config::{AdmmConfig, Init, SetupExchange, ZNorm};
 pub use lagrangian::lagrangian;
 pub use node::{NodeState, RoundA, RoundB};
 pub use solver::{DkpcaResult, DkpcaSolver};

@@ -2,8 +2,13 @@
 //!
 //! A node j holds:
 //!   * its own data X_j and exact centered Gram `kc`,
-//!   * (possibly noisy) copies of each neighbor's data, exchanged once
-//!     at setup (Alg. 1 "Distributes X_j to neighbors"),
+//!   * (possibly noisy) copies of each neighbor's *setup payload*,
+//!     exchanged once at setup — raw data under
+//!     `SetupExchange::RawData` (Alg. 1 "Distributes X_j to
+//!     neighbors"), shared-seed RFF features `z(X_j)` under
+//!     `SetupExchange::RffFeatures` (paper §7: raw samples never leave
+//!     the node; every Gram block becomes a linear kernel over
+//!     transmitted features),
 //!   * the z-host state for its own z_j: the group Gram `gz` over
 //!     {X_l : l in contributors(j)} and each contributor's truncated
 //!     Gram pseudo-inverse,
@@ -110,6 +115,11 @@ pub struct NodeState {
     /// copies N x M per node; negligible next to the (DN)^2 group Gram
     /// `gz` the z-host already holds.
     pub x: Matrix,
+    /// The node's own RFF features `z(X_j)` in feature-space setup mode
+    /// (`None` under `SetupExchange::RawData`). All Grams were built
+    /// over these, so model export in feature mode freezes `zx` — not
+    /// `x` — as the servable support (linear kernel over `z(x)`).
+    pub zx: Option<Matrix>,
     /// Constraint set C_j: z ids, self first when `include_self`.
     pub cset: Vec<usize>,
     /// Neighbors Omega_j (cset minus self).
@@ -140,8 +150,10 @@ pub struct NodeState {
 impl NodeState {
     /// Construct node `id`.
     ///
-    /// `received`: the (noisy) data copies of every neighbor, in
-    /// `neighbors` order — what the setup exchange delivered.
+    /// `received`: the (noisy) setup payload of every neighbor, in
+    /// `neighbors` order — raw data copies under
+    /// `SetupExchange::RawData`, shared-seed RFF feature matrices under
+    /// `SetupExchange::RffFeatures`.
     pub fn new(
         id: usize,
         x_own: &Matrix,
@@ -160,7 +172,33 @@ impl NodeState {
         }
         cset.extend_from_slice(&neighbors);
 
-        let mut kc = gram_centered_via(backend, kernel, x_own, x_own);
+        // Feature-space setup mode (paper §7): every Gram block becomes
+        // a linear kernel over shared-seed RFF features, so the blocks
+        // are (cosine-normalised) `Z_a Z_b^T` of what the setup
+        // exchange actually transmitted — raw data never enters any
+        // cross-node computation. Re-deriving the own features from the
+        // shared map (rather than taking them as a parameter) keeps the
+        // constructor's contract mode-agnostic; the map is
+        // deterministic, so this matches what the driver transmitted
+        // bit-for-bit.
+        let (zx, gram_kernel): (Option<Matrix>, Kernel) =
+            match cfg.setup.shared_map(kernel, x_own.cols()) {
+                None => (None, *kernel),
+                Some(map) => {
+                    let dim = map.dim();
+                    for r in received {
+                        assert_eq!(
+                            r.cols(),
+                            dim,
+                            "setup payload is not a {dim}-dim feature matrix"
+                        );
+                    }
+                    (Some(map.features(x_own)), Kernel::Linear)
+                }
+            };
+        let gram_own: &Matrix = zx.as_ref().unwrap_or(x_own);
+
+        let mut kc = gram_centered_via(backend, &gram_kernel, gram_own, gram_own);
         kc.symmetrize();
         let spectral = SpectralGram::new(&kc);
         let kinv = spectral.pinv(cfg.pinv_rcond);
@@ -171,7 +209,7 @@ impl NodeState {
             .iter()
             .map(|&l| {
                 if l == id {
-                    x_own
+                    gram_own
                 } else {
                     let pos = neighbors.iter().position(|&q| q == l).unwrap();
                     &received[pos]
@@ -185,7 +223,7 @@ impl NodeState {
             .map(|a| {
                 datasets
                     .iter()
-                    .map(|bm| gram_centered_via(backend, kernel, a, bm))
+                    .map(|bm| gram_centered_via(backend, &gram_kernel, a, bm))
                     .collect()
             })
             .collect();
@@ -199,7 +237,7 @@ impl NodeState {
                 if l == id {
                     kinv.clone()
                 } else {
-                    let mut kcl = gram_centered_via(backend, kernel, d, d);
+                    let mut kcl = gram_centered_via(backend, &gram_kernel, d, d);
                     kcl.symmetrize();
                     SpectralGram::new(&kcl).pinv(cfg.pinv_rcond)
                 }
@@ -222,6 +260,7 @@ impl NodeState {
             id,
             n,
             x: x_own.clone(),
+            zx,
             cset,
             neighbors,
             kc,
@@ -376,7 +415,9 @@ impl NodeState {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::admm::SetupExchange;
     use crate::backend::NativeBackend;
+    use crate::kernels::RffMap;
 
     fn toy_nodes() -> Vec<NodeState> {
         // 3-node complete graph over tiny 2-D blobs.
@@ -459,5 +500,56 @@ mod tests {
     fn col_of_unknown_panics() {
         let nodes = toy_nodes();
         let _ = nodes[0].col_of(99);
+    }
+
+    #[test]
+    fn rff_setup_mode_builds_feature_space_grams() {
+        let gamma = 0.5;
+        let kernel = Kernel::Rbf { gamma };
+        let dim = 64usize;
+        let cfg = AdmmConfig {
+            setup: SetupExchange::RffFeatures { dim, seed: 5 },
+            ..AdmmConfig::default()
+        };
+        let mut rng = Rng::new(2);
+        let xs: Vec<Matrix> =
+            (0..3).map(|_| Matrix::from_fn(6, 2, |_, _| rng.gauss())).collect();
+        // What each node actually transmits: its shared-seed features.
+        let map = RffMap::sample(2, dim, gamma, 5);
+        let zs: Vec<Matrix> = xs.iter().map(|x| map.features(x)).collect();
+        let nodes: Vec<NodeState> = (0..3)
+            .map(|j| {
+                let nbrs: Vec<usize> = (0..3).filter(|&q| q != j).collect();
+                let recv: Vec<Matrix> = nbrs.iter().map(|&q| zs[q].clone()).collect();
+                NodeState::new(j, &xs[j], nbrs, &recv, &kernel, &cfg, &NativeBackend)
+            })
+            .collect();
+        for node in &nodes {
+            let zx = node.zx.as_ref().expect("feature mode stores zx");
+            assert_eq!(zx.rows(), 6);
+            assert_eq!(zx.cols(), dim);
+            assert_eq!(zx, &zs[node.id], "own features come from the shared map");
+            assert_eq!(node.gz.rows(), 18);
+            // The local Gram is the centered linear kernel over the
+            // node's own transmitted features — raw data untouched.
+            let want = center_gram(&gram(&Kernel::Linear, zx, zx));
+            for (a, b) in node.kc.as_slice().iter().zip(want.as_slice()) {
+                assert!((a - b).abs() < 1e-9, "kc {a} vs feature-space {b}");
+            }
+            assert!(node.alpha.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "RBF kernel")]
+    fn rff_setup_mode_rejects_non_rbf_kernels() {
+        let cfg = AdmmConfig {
+            setup: SetupExchange::RffFeatures { dim: 8, seed: 1 },
+            ..AdmmConfig::default()
+        };
+        let mut rng = Rng::new(3);
+        let x = Matrix::from_fn(5, 2, |_, _| rng.gauss());
+        let recv = vec![Matrix::zeros(5, 8)];
+        let _ = NodeState::new(0, &x, vec![1], &recv, &Kernel::Linear, &cfg, &NativeBackend);
     }
 }

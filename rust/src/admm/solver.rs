@@ -6,12 +6,12 @@
 
 use crate::backend::ComputeBackend;
 use crate::data::NoiseModel;
-use crate::kernels::Kernel;
+use crate::kernels::{Kernel, RffMap};
 use crate::linalg::Matrix;
 use crate::model::DkpcaModel;
 use crate::topology::Graph;
 
-use super::config::AdmmConfig;
+use super::config::{AdmmConfig, SetupExchange};
 use super::node::{NodeState, RoundA};
 
 /// Outcome of a DKPCA run.
@@ -20,8 +20,13 @@ pub struct DkpcaResult {
     pub alphas: Vec<Vec<f64>>,
     pub iterations: usize,
     pub converged: bool,
-    /// Floats transmitted over the (simulated) network, total.
+    /// Floats transmitted over the (simulated) network by the iteration
+    /// protocol (§4.2 accounting; excludes the one-time setup).
     pub comm_floats: u64,
+    /// Floats moved by the one-time setup exchange: `N*M` per directed
+    /// edge under `SetupExchange::RawData`, `N*D` under
+    /// `SetupExchange::RffFeatures` — the paper-§7 communication drop.
+    pub setup_floats: u64,
 }
 
 /// Sequential solver holding the node states.
@@ -31,6 +36,14 @@ pub struct DkpcaSolver {
     /// The kernel the Grams were assembled with (kept for model export).
     pub kernel: Kernel,
     pub comm_floats: u64,
+    /// One-time setup-exchange traffic (see [`DkpcaResult::setup_floats`]).
+    pub setup_floats: u64,
+    /// Iterations the decentralized stopping rule lags behind the local
+    /// signal: the graph diameter, i.e. how long max-consensus
+    /// piggybacked on round-A messages needs to cover the network. The
+    /// parallel coordinator uses the identical rule, so both drivers
+    /// stop at the same iteration.
+    pub stop_lag: usize,
 }
 
 impl DkpcaSolver {
@@ -63,6 +76,14 @@ impl DkpcaSolver {
         assert_eq!(xs.len(), graph.len(), "one dataset per node");
         assert!(graph.is_connected(), "Assumption 1: connected network");
         assert!(graph.min_degree_one(), "Alg. 1 needs |Omega_j| >= 1");
+        // What each node transmits at setup: its raw data, or — in
+        // feature-space mode — its shared-seed RFF features, so raw
+        // samples never cross an edge (paper §7).
+        let payloads: Vec<Matrix> = match cfg.setup.shared_map(kernel, xs[0].cols()) {
+            None => xs.to_vec(),
+            Some(map) => xs.iter().map(|x| map.features(x)).collect(),
+        };
+        let mut setup_floats = 0u64;
         let nodes = (0..xs.len())
             .map(|j| {
                 let nbrs = graph.neighbors(j).to_vec();
@@ -73,26 +94,61 @@ impl DkpcaSolver {
                         let seed = noise_seed
                             .wrapping_mul(0x9E3779B97F4A7C15)
                             .wrapping_add((l * graph.len() + j) as u64);
-                        noise.apply(&xs[l], seed)
+                        let p = &payloads[l];
+                        setup_floats += (p.rows() * p.cols()) as u64;
+                        noise.apply(p, seed)
                     })
                     .collect();
                 NodeState::new(j, &xs[j], nbrs, &received, kernel, cfg, backend)
             })
             .collect();
-        DkpcaSolver { nodes, cfg: cfg.clone(), kernel: *kernel, comm_floats: 0 }
+        DkpcaSolver {
+            nodes,
+            cfg: cfg.clone(),
+            kernel: *kernel,
+            comm_floats: 0,
+            setup_floats,
+            stop_lag: graph.diameter().max(1),
+        }
     }
 
     /// Freeze the current per-node solution into a servable
-    /// [`DkpcaModel`]: each node contributes its exact training data as
-    /// the support set, its current `alpha_j` as the dual coefficient
-    /// column, and the training-Gram centering statistics. Call after
-    /// [`DkpcaSolver::run`]; serving the training set through the model
-    /// reproduces the training-time projections (see
+    /// [`DkpcaModel`]: each node contributes its training support, its
+    /// current `alpha_j` as the dual coefficient column, and the
+    /// training-Gram centering statistics. Under
+    /// `SetupExchange::RawData` the support is the node's raw data;
+    /// under `SetupExchange::RffFeatures` training happened entirely in
+    /// feature space, so the support is `z(X_j)` with a linear kernel —
+    /// the PR-1 serve path works unchanged, callers featurize held-out
+    /// batches through [`DkpcaSolver::rff_map`] first. Call after
+    /// [`DkpcaSolver::run`]; serving the training support through the
+    /// model reproduces the training-time projections (see
     /// `rust/tests/model_serve.rs`).
     pub fn to_model(&self) -> DkpcaModel {
-        let xs: Vec<Matrix> = self.nodes.iter().map(|n| n.x.clone()).collect();
         let alphas: Vec<Vec<f64>> = self.nodes.iter().map(|n| n.alpha.clone()).collect();
-        DkpcaModel::from_parts(&self.kernel, &xs, &alphas)
+        match self.cfg.setup {
+            SetupExchange::RawData => {
+                let xs: Vec<Matrix> = self.nodes.iter().map(|n| n.x.clone()).collect();
+                DkpcaModel::from_parts(&self.kernel, &xs, &alphas)
+            }
+            SetupExchange::RffFeatures { .. } => {
+                let zs: Vec<Matrix> = self
+                    .nodes
+                    .iter()
+                    .map(|n| n.zx.clone().expect("feature mode stores zx"))
+                    .collect();
+                DkpcaModel::from_parts(&Kernel::Linear, &zs, &alphas)
+            }
+        }
+    }
+
+    /// The shared feature map in `SetupExchange::RffFeatures` mode
+    /// (`None` in raw mode): featurize held-out batches with it before
+    /// serving them through the feature-space model from
+    /// [`DkpcaSolver::to_model`].
+    pub fn rff_map(&self) -> Option<RffMap> {
+        let m = self.nodes.first().map_or(0, |n| n.x.cols());
+        self.cfg.setup.shared_map(&self.kernel, m)
     }
 
     /// One full ADMM iteration (both communication rounds + updates).
@@ -101,11 +157,17 @@ impl DkpcaSolver {
         let j = self.nodes.len();
 
         // Round A: alpha + B column toward each neighboring z-host.
+        // With tol > 0 each message also piggybacks the convergence
+        // gossip window (`min(t, stop_lag)` running maxima — see
+        // run_with); account those floats so both drivers agree.
+        let gossip_floats =
+            if self.cfg.tol > 0.0 { t.min(self.stop_lag) as u64 } else { 0 };
         let mut inbox: Vec<Vec<(usize, RoundA)>> = vec![Vec::new(); j];
         for node in &self.nodes {
             for &to in &node.neighbors {
                 let msg = node.round_a_message(to);
-                self.comm_floats += (msg.alpha.len() + msg.bcol.len()) as u64;
+                self.comm_floats +=
+                    (msg.alpha.len() + msg.bcol.len()) as u64 + gossip_floats;
                 inbox[to].push((node.id, msg));
             }
         }
@@ -136,6 +198,15 @@ impl DkpcaSolver {
     }
 
     /// Run to completion with a per-iteration observer.
+    ///
+    /// Early stop (`tol > 0`) uses the *decentralized* stopping rule:
+    /// stop after iteration `t` once the network-wide
+    /// `max_j alpha_delta_j` of iteration `t - stop_lag` is below
+    /// `tol`. The lag is the graph diameter — exactly how long the
+    /// max-consensus gossip piggybacked on round-A messages needs to
+    /// reach every node — so the truly-parallel coordinator reaches
+    /// the identical decision at the identical iteration with no
+    /// global barrier (asserted by rust/tests/coordinator.rs).
     pub fn run_with(
         &mut self,
         backend: &dyn ComputeBackend,
@@ -143,13 +214,18 @@ impl DkpcaSolver {
     ) -> DkpcaResult {
         let mut iterations = 0;
         let mut converged = false;
+        // g_hist[s] = max_j alpha_delta_j after iteration s.
+        let mut g_hist: Vec<f64> = Vec::new();
         for t in 0..self.cfg.max_iters {
             self.step(t, backend);
             iterations = t + 1;
             observer(t, &self.nodes);
-            if self.cfg.tol > 0.0 && self.max_alpha_delta() < self.cfg.tol {
-                converged = true;
-                break;
+            if self.cfg.tol > 0.0 {
+                g_hist.push(self.max_alpha_delta());
+                if t >= self.stop_lag && g_hist[t - self.stop_lag] < self.cfg.tol {
+                    converged = true;
+                    break;
+                }
             }
         }
         DkpcaResult {
@@ -157,6 +233,7 @@ impl DkpcaSolver {
             iterations,
             converged,
             comm_floats: self.comm_floats,
+            setup_floats: self.setup_floats,
         }
     }
 
@@ -263,6 +340,74 @@ mod tests {
             assert_eq!(comp.support, xs[j], "support is the exact node data");
             assert_eq!(comp.coeffs.col(0), res.alphas[j], "coeffs are the final alphas");
         }
+    }
+
+    #[test]
+    fn setup_floats_drop_from_nm_to_nd_in_rff_mode() {
+        // BlobSpec::default() data is 5-dim; the feature-space setup
+        // exchange replaces the N*M raw payload per directed edge with
+        // N*D features.
+        let (j, n, m, dim) = (5usize, 8usize, 5usize, 32usize);
+        let xs = blob_network(j, n, 21);
+        let graph = Graph::ring(j, 1);
+        let kernel = Kernel::Rbf { gamma: 0.1 };
+        let directed = (j * 2) as u64;
+
+        let raw = DkpcaSolver::new(
+            &xs,
+            &graph,
+            &kernel,
+            &AdmmConfig { max_iters: 1, ..Default::default() },
+            NoiseModel::None,
+            0,
+        );
+        assert_eq!(raw.setup_floats, directed * (n * m) as u64);
+
+        let rff_cfg = AdmmConfig {
+            max_iters: 1,
+            setup: SetupExchange::RffFeatures { dim, seed: 9 },
+            ..Default::default()
+        };
+        let rff = DkpcaSolver::new(&xs, &graph, &kernel, &rff_cfg, NoiseModel::None, 0);
+        assert_eq!(rff.setup_floats, directed * (n * dim) as u64);
+    }
+
+    #[test]
+    fn rff_mode_runs_and_exports_feature_space_model() {
+        let xs = blob_network(4, 8, 3);
+        let graph = Graph::ring(4, 1);
+        let kernel = Kernel::Rbf { gamma: 0.1 };
+        let cfg = AdmmConfig {
+            max_iters: 3,
+            setup: SetupExchange::RffFeatures { dim: 64, seed: 2 },
+            ..Default::default()
+        };
+        let mut solver = DkpcaSolver::new(&xs, &graph, &kernel, &cfg, NoiseModel::None, 0);
+        let res = solver.run(&NativeBackend);
+        assert!(res.alphas.iter().all(|a| a.iter().all(|v| v.is_finite())));
+        let model = solver.to_model();
+        assert_eq!(model.kernel, Kernel::Linear, "feature-space support serves linearly");
+        let map = solver.rff_map().expect("rff mode exposes the shared map");
+        for (j, comp) in model.nodes.iter().enumerate() {
+            assert_eq!(comp.support.cols(), 64, "support lives in feature space");
+            assert_eq!(comp.support, map.features(&xs[j]));
+            assert_eq!(comp.coeffs.col(0), res.alphas[j]);
+        }
+    }
+
+    #[test]
+    fn raw_mode_has_no_rff_map() {
+        let xs = blob_network(4, 6, 5);
+        let graph = Graph::ring(4, 1);
+        let solver = DkpcaSolver::new(
+            &xs,
+            &graph,
+            &Kernel::Rbf { gamma: 0.1 },
+            &AdmmConfig::default(),
+            NoiseModel::None,
+            0,
+        );
+        assert!(solver.rff_map().is_none());
     }
 
     #[test]

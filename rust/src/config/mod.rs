@@ -2,7 +2,7 @@
 //! the CLI launcher (`dkpca run --config file.json`). Every field has a
 //! paper-faithful default so `{}` is a valid config.
 
-use crate::admm::{AdmmConfig, Init, ZNorm};
+use crate::admm::{AdmmConfig, Init, SetupExchange, ZNorm};
 use crate::data::NoiseModel;
 use crate::kernels::Kernel;
 use crate::util::json::Json;
@@ -231,6 +231,38 @@ fn parse_admm(j: &Json, base: AdmmConfig) -> Result<AdmmConfig, String> {
             other => return Err(format!("unknown init {other:?}")),
         };
     }
+    if let Some(v) = j.get("setup") {
+        cfg.setup = match v.field("kind")?.as_str() {
+            Some("raw") => SetupExchange::RawData,
+            Some("rff") => {
+                // Present-but-invalid values must error, not silently
+                // fall back — a mistyped dim/seed would change the
+                // sampled feature map and the experiment's results.
+                let dim = match v.get("dim") {
+                    Some(d) => d.as_usize().ok_or("setup dim must be a number")?,
+                    None => 4096,
+                };
+                let seed = match v.get("seed") {
+                    Some(s) => {
+                        let sf = s.as_f64().ok_or("setup seed must be a number")?;
+                        if sf < 0.0 || sf.fract() != 0.0 {
+                            return Err(
+                                "setup seed must be a non-negative integer".into()
+                            );
+                        }
+                        sf as u64
+                    }
+                    None => 0,
+                };
+                SetupExchange::RffFeatures { dim, seed }
+            }
+            other => return Err(format!("unknown setup kind {other:?}")),
+        };
+    }
+    // Construction boundary: a hand-written schedule may be unsorted or
+    // list a start iteration twice — normalize so downstream stage
+    // logic cannot silently misapply penalties.
+    cfg.normalize_schedule()?;
     Ok(cfg)
 }
 
@@ -287,5 +319,60 @@ mod tests {
     fn kernel_from_data_spec() {
         let cfg = ExperimentConfig::default();
         assert_eq!(cfg.kernel(), Kernel::Rbf { gamma: 0.02 });
+    }
+
+    #[test]
+    fn setup_exchange_parses() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"admm": {"setup": {"kind": "rff", "dim": 512, "seed": 7}}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.admm.setup, SetupExchange::RffFeatures { dim: 512, seed: 7 });
+        let raw = ExperimentConfig::from_json(r#"{"admm": {"setup": {"kind": "raw"}}}"#)
+            .unwrap();
+        assert_eq!(raw.admm.setup, SetupExchange::RawData);
+        assert!(
+            ExperimentConfig::from_json(r#"{"admm": {"setup": {"kind": "carrier"}}}"#)
+                .is_err()
+        );
+        // Present-but-invalid values error instead of silently taking
+        // the default.
+        assert!(ExperimentConfig::from_json(
+            r#"{"admm": {"setup": {"kind": "rff", "dim": "big"}}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            r#"{"admm": {"setup": {"kind": "rff", "seed": []}}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            r#"{"admm": {"setup": {"kind": "rff", "seed": -3}}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            r#"{"admm": {"setup": {"kind": "rff", "seed": 7.5}}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn unsorted_schedule_is_normalized_at_parse() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"admm": {"rho2_schedule": [[20, 100], [0, 10], [10, 50]]}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.admm.rho2_schedule,
+            vec![(0, 10.0), (10, 50.0), (20, 100.0)],
+            "loader sorts by start iteration"
+        );
+        let err = ExperimentConfig::from_json(
+            r#"{"admm": {"rho2_schedule": [[5, 1], [5, 2]]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("twice"), "{err}");
+        assert!(
+            ExperimentConfig::from_json(r#"{"admm": {"rho2_schedule": []}}"#).is_err()
+        );
     }
 }

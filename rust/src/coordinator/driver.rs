@@ -3,17 +3,29 @@
 //!
 //! No fusion center and no global barrier: each node follows the Alg. 1
 //! protocol purely through point-to-point messages —
-//!   setup:   distribute own raw data (through the channel noise model)
-//!   round A: alpha + multiplier column to every neighboring z-host
+//!   setup:   distribute own setup payload (raw data, or shared-seed
+//!            RFF features under `SetupExchange::RffFeatures`) through
+//!            the channel noise model
+//!   round A: alpha + multiplier column to every neighboring z-host,
+//!            piggybacking the convergence-gossip window when `tol > 0`
 //!   z-solve: analytic z-update for the node's own z
 //!   round B: scatter projections back; collect own projections
 //!   update:  analytic alpha/eta updates
 //! Messages are matched by (iteration, phase); early arrivals are
 //! stashed by the endpoint, so no lock-step synchronisation is needed.
 //!
+//! Early stop with `tol > 0` is fully decentralized: every round-A
+//! message carries a sliding window of running max-consensus estimates
+//! of the network-wide alpha delta. After `stop_lag = diameter(G)`
+//! exchange rounds the head of the window has been folded across the
+//! whole network, so all nodes see the identical settled value and make
+//! the identical stop decision at the identical iteration — the same
+//! delayed rule the sequential driver applies centrally.
+//!
 //! The run is bit-identical to the sequential reference driver
 //! (`admm::DkpcaSolver`) — asserted by rust/tests/coordinator.rs.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -40,7 +52,12 @@ pub struct RunReport {
     pub comm_floats_total: u64,
     /// Floats sent per node.
     pub per_node_sent: Vec<u64>,
+    /// Iterations actually run — identical at every node (the
+    /// decentralized stop rule is deterministic; asserted at join).
     pub iterations: usize,
+    /// Whether the run stopped on the `tol` criterion before
+    /// `max_iters`.
+    pub converged: bool,
 }
 
 /// Per-thread CPU time in seconds (CLOCK_THREAD_CPUTIME_ID): on an
@@ -107,6 +124,10 @@ pub fn run_decentralized(
     assert_eq!(xs.len(), graph.len());
     assert!(graph.is_connected(), "Assumption 1: connected network");
     let j = xs.len();
+    // How many exchange rounds max-consensus needs to cover the network
+    // — the lag of the decentralized stop rule (shared with the
+    // sequential driver so both stop at the same iteration).
+    let stop_lag = graph.diameter().max(1);
     let (endpoints, stats) = build_fabric(graph);
     let wall = Instant::now();
 
@@ -119,21 +140,40 @@ pub fn run_decentralized(
         let backend = backend.clone();
         let n_nodes = j;
         handles.push(std::thread::spawn(move || {
-            node_main(id, endpoint, x_own, nbrs, kernel, cfg, noise, noise_seed, n_nodes, backend)
+            node_main(
+                id, endpoint, x_own, nbrs, kernel, cfg, noise, noise_seed, n_nodes, stop_lag,
+                backend,
+            )
         }));
     }
 
     let mut alphas = vec![Vec::new(); j];
     let mut node_compute_secs = vec![0.0; j];
     let mut iter_secs = 0.0f64;
-    let mut iterations = 0;
+    let mut iteration_counts = vec![0usize; j];
+    let mut converged_flags = vec![false; j];
     for handle in handles {
         let out = handle.join().expect("node thread panicked");
         alphas[out.id] = out.alpha;
         node_compute_secs[out.id] = out.compute_secs;
         iter_secs = iter_secs.max(out.iter_secs);
-        iterations = out.iterations;
+        iteration_counts[out.id] = out.iterations;
+        converged_flags[out.id] = out.converged;
     }
+    let iterations = iteration_counts.iter().copied().max().unwrap_or(0);
+    let converged = converged_flags.iter().any(|&c| c);
+    // The stop decision is a deterministic function of network-wide
+    // state every node has observed by decision time; any disagreement
+    // — on the iteration count or on the convergence verdict — means
+    // the consensus-stop protocol broke.
+    assert!(
+        iteration_counts.iter().all(|&c| c == iterations),
+        "nodes disagree on the stop iteration: {iteration_counts:?}"
+    );
+    assert!(
+        converged_flags.iter().all(|&c| c == converged),
+        "nodes disagree on convergence: {converged_flags:?}"
+    );
     let per_node_sent = (0..j).map(|i| stats.sent_by(i)).collect();
     RunReport {
         alphas,
@@ -143,6 +183,7 @@ pub fn run_decentralized(
         comm_floats_total: stats.total(),
         per_node_sent,
         iterations,
+        converged,
     }
 }
 
@@ -152,6 +193,7 @@ struct NodeOutput {
     compute_secs: f64,
     iter_secs: f64,
     iterations: usize,
+    converged: bool,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -165,15 +207,37 @@ fn node_main(
     noise: NoiseModel,
     noise_seed: u64,
     n_nodes: usize,
+    stop_lag: usize,
     backend: Arc<dyn ComputeBackend>,
 ) -> NodeOutput {
-    // ---- Setup: exchange raw data over noisy channels. ----
-    for &to in &nbrs {
-        let copy = noise.apply(&x_own, edge_seed(noise_seed, id, to, n_nodes));
-        endpoint.send(to, data_env(id, copy));
+    // ---- Setup: exchange the setup payload over noisy channels — raw
+    // data (Alg. 1 as printed) or shared-seed RFF features (paper §7:
+    // raw samples never leave the node, N*D floats per edge). ----
+    match cfg.setup.shared_map(&kernel, x_own.cols()) {
+        None => {
+            for &to in &nbrs {
+                let copy = noise.apply(&x_own, edge_seed(noise_seed, id, to, n_nodes));
+                endpoint.send(to, data_env(id, copy));
+            }
+        }
+        Some(map) => {
+            let z_own = map.features(&x_own);
+            for &to in &nbrs {
+                let copy = noise.apply(&z_own, edge_seed(noise_seed, id, to, n_nodes));
+                endpoint.send(
+                    to,
+                    Envelope {
+                        from: id,
+                        iter: 0,
+                        phase: Phase::Setup,
+                        payload: Payload::Features(copy),
+                    },
+                );
+            }
+        }
     }
     let data_msgs = endpoint.collect(0, Phase::Setup, nbrs.len());
-    // Reorder received datasets into `nbrs` order.
+    // Reorder received setup payloads into `nbrs` order.
     let received: Vec<Matrix> = nbrs
         .iter()
         .map(|&from| {
@@ -181,7 +245,7 @@ fn node_main(
                 .iter()
                 .find(|e| e.from == from)
                 .map(|e| match &e.payload {
-                    Payload::Data(m) => m.clone(),
+                    Payload::Data(m) | Payload::Features(m) => m.clone(),
                     _ => unreachable!("setup phase carries data"),
                 })
                 .expect("missing setup data")
@@ -197,26 +261,58 @@ fn node_main(
     // ---- ADMM iterations. ----
     let iter_clock = Instant::now();
     let mut iterations = 0;
+    let mut converged = false;
+    // Convergence gossip (tol > 0): sliding window of running
+    // max-consensus estimates of the network-wide alpha delta, one
+    // entry per iteration s in [t - stop_lag, t - 1]. By round A of
+    // iteration t the head entry has been folded through `stop_lag >=
+    // diameter` exchange rounds, so it IS the settled network-wide max
+    // of iteration t - stop_lag — every node computes the identical
+    // value and the identical stop decision, with no global barrier.
+    let mut gossip: VecDeque<f64> = VecDeque::new();
     for t in 0..cfg.max_iters {
         let rho2 = cfg.rho2_at(t);
 
-        // Round A out.
+        // Round A out, piggybacking the gossip window.
+        let window: Vec<f64> = gossip.iter().copied().collect();
         for &to in &nbrs {
             let msg = node.round_a_message(to);
             endpoint.send(
                 to,
-                Envelope { from: id, iter: t, phase: Phase::RoundA, payload: Payload::A(msg) },
+                Envelope {
+                    from: id,
+                    iter: t,
+                    phase: Phase::RoundA,
+                    payload: Payload::A(msg, window.clone()),
+                },
             );
         }
-        // Round A in.
+        // Round A in; fold neighbor windows into ours (positionally —
+        // all nodes' windows cover the same iteration range).
         let a_msgs = endpoint.collect(t, Phase::RoundA, nbrs.len());
-        let inbox: Vec<(usize, crate::admm::RoundA)> = a_msgs
-            .into_iter()
-            .map(|e| match e.payload {
-                Payload::A(a) => (e.from, a),
+        let mut inbox: Vec<(usize, crate::admm::RoundA)> =
+            Vec::with_capacity(a_msgs.len());
+        for e in a_msgs {
+            match e.payload {
+                Payload::A(a, w) => {
+                    debug_assert_eq!(w.len(), gossip.len());
+                    for (mine, theirs) in gossip.iter_mut().zip(&w) {
+                        if *theirs > *mine {
+                            *mine = *theirs;
+                        }
+                    }
+                    inbox.push((e.from, a));
+                }
                 _ => unreachable!(),
-            })
-            .collect();
+            }
+        }
+        // Decentralized stopping rule: stop after this iteration once
+        // the settled network-wide max of iteration t - stop_lag is
+        // below tol (the sequential driver applies the same delayed
+        // rule, so both stop at the same iteration).
+        let stop_after_this_iter = cfg.tol > 0.0
+            && t >= stop_lag
+            && gossip.front().copied().unwrap_or(f64::INFINITY) < cfg.tol;
 
         // z-solve for the own z; scatter segments.
         let tz = thread_cpu_secs();
@@ -245,7 +341,19 @@ fn node_main(
         let tu = thread_cpu_secs();
         node.local_update(rho2, backend.as_ref());
         compute += thread_cpu_secs() - tu;
+        // Maintain the gossip window: drop the decided head, seed the
+        // running max for this iteration with the own delta.
+        if cfg.tol > 0.0 {
+            if gossip.len() == stop_lag {
+                gossip.pop_front();
+            }
+            gossip.push_back(node.alpha_delta());
+        }
         iterations = t + 1;
+        if stop_after_this_iter {
+            converged = true;
+            break;
+        }
     }
     NodeOutput {
         id,
@@ -253,5 +361,6 @@ fn node_main(
         compute_secs: compute,
         iter_secs: iter_clock.elapsed().as_secs_f64(),
         iterations,
+        converged,
     }
 }

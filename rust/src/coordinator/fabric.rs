@@ -134,7 +134,7 @@ mod tests {
             from,
             iter,
             phase: Phase::RoundA,
-            payload: Payload::A(RoundA { alpha: vec![0.0; len], bcol: vec![0.0; len] }),
+            payload: Payload::A(RoundA { alpha: vec![0.0; len], bcol: vec![0.0; len] }, Vec::new()),
         }
     }
 

@@ -26,9 +26,17 @@ pub struct Envelope {
 /// Message payloads.
 #[derive(Debug)]
 pub enum Payload {
-    /// Raw (noisy) dataset copy, setup only.
+    /// Raw (noisy) dataset copy, setup only (`SetupExchange::RawData`).
     Data(Matrix),
-    A(RoundA),
+    /// Shared-seed RFF features `z(X_j)` of the sender's data, setup
+    /// only (`SetupExchange::RffFeatures`) — the §7 feature-space
+    /// exchange: `N*D` floats instead of `N*M`, raw samples never cross
+    /// the edge.
+    Features(Matrix),
+    /// Round-A protocol message plus the convergence-gossip window:
+    /// running max-consensus estimates of the network-wide alpha delta
+    /// for the last `stop_lag` iterations (empty when `tol == 0`).
+    A(RoundA, Vec<f64>),
     B(RoundB),
 }
 
@@ -36,8 +44,10 @@ impl Envelope {
     /// Payload size in transmitted floats (the §4.2 accounting unit).
     pub fn floats(&self) -> u64 {
         match &self.payload {
-            Payload::Data(m) => (m.rows() * m.cols()) as u64,
-            Payload::A(a) => (a.alpha.len() + a.bcol.len()) as u64,
+            Payload::Data(m) | Payload::Features(m) => (m.rows() * m.cols()) as u64,
+            Payload::A(a, gossip) => {
+                (a.alpha.len() + a.bcol.len() + gossip.len()) as u64
+            }
             Payload::B(b) => b.segment.len() as u64,
         }
     }
@@ -53,7 +63,7 @@ mod tests {
             from: 0,
             iter: 0,
             phase: Phase::RoundA,
-            payload: Payload::A(RoundA { alpha: vec![0.0; 7], bcol: vec![0.0; 7] }),
+            payload: Payload::A(RoundA { alpha: vec![0.0; 7], bcol: vec![0.0; 7] }, Vec::new()),
         };
         assert_eq!(e.floats(), 14);
         let d = Envelope {
@@ -63,5 +73,26 @@ mod tests {
             payload: Payload::Data(Matrix::zeros(3, 5)),
         };
         assert_eq!(d.floats(), 15);
+    }
+
+    #[test]
+    fn gossip_and_feature_floats_accounted() {
+        let a = Envelope {
+            from: 0,
+            iter: 3,
+            phase: Phase::RoundA,
+            payload: Payload::A(
+                RoundA { alpha: vec![0.0; 5], bcol: vec![0.0; 5] },
+                vec![0.0; 2],
+            ),
+        };
+        assert_eq!(a.floats(), 12, "window floats ride the round-A message");
+        let z = Envelope {
+            from: 1,
+            iter: 0,
+            phase: Phase::Setup,
+            payload: Payload::Features(Matrix::zeros(4, 8)),
+        };
+        assert_eq!(z.floats(), 32, "feature payloads count N*D");
     }
 }

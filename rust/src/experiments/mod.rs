@@ -8,6 +8,7 @@ pub mod comm;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
+pub mod rff_sweep;
 pub mod timing;
 
 use crate::admm::AdmmConfig;

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   run              one DKPCA run from a JSON config (or flags)
 //!   sweep            regenerate a paper figure/table (fig3|fig4|fig5|
-//!                    timing|comm|ablation)
+//!                    timing|comm|ablation|rff)
 //!   central          central-kPCA baseline only
 //!   artifacts-check  verify the AOT artifact set loads, compiles and
 //!                    agrees with the native backend
@@ -54,7 +54,7 @@ fn print_usage() {
          \n\
          run flags:    --config <file.json> --nodes <J> --samples <N>\n\
          \u{20}             --iters <T> --parallel --pjrt --seed <S>\n\
-         sweep flags:  --experiment <fig3|fig4|fig5|timing|comm|ablation>\n\
+         sweep flags:  --experiment <fig3|fig4|fig5|timing|comm|ablation|rff>\n\
          \u{20}             --full --pjrt --seed <S>\n\
          central flags: --nodes <J> --samples <N> --seed <S>"
     );
@@ -208,6 +208,11 @@ fn cmd_sweep(args: &[String]) -> i32 {
             let rows =
                 experiments::comm::run(20, &[2, 4, 6], &[50, 100, 200], 5, backend, seed);
             println!("{}", experiments::comm::table(&rows));
+        }
+        "rff" => {
+            let dims: &[usize] = if full { &[64, 256, 1024, 4096] } else { &[32, 128] };
+            let rows = experiments::rff_sweep::run(10, 40, dims, 30, backend.as_ref(), seed);
+            println!("{}", experiments::rff_sweep::table(&rows));
         }
         "ablation" => {
             let d = experiments::ablation::degenerate(5, 15, 40, backend.as_ref(), 23);

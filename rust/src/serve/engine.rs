@@ -541,6 +541,63 @@ mod tests {
     }
 
     #[test]
+    fn rff_cache_eviction_stays_bounded_and_correct() {
+        let engine = ProjectionEngine::new(toy_model(), 2);
+        let batch = data(4, 4, 50);
+        // Churn well past the cache bound with distinct (node, dim,
+        // seed) keys — the adversarial pattern the FIFO bound guards
+        // against.
+        let churn = MAX_CACHED_PROJECTORS + 10;
+        for i in 0..churn {
+            let (node, dim, seed) = (i % 3, 16 + (i % 4), 1000 + i as u64);
+            let got = engine
+                .project(ProjectionRequest {
+                    node,
+                    batch: batch.clone(),
+                    path: ProjectionPath::Rff { dim, seed },
+                })
+                .unwrap();
+            // Evictions must never corrupt results: every reply matches
+            // a freshly built projector bit-for-bit (the map is
+            // deterministic in the seed).
+            let fresh = engine
+                .model()
+                .rff_projector(node, dim, seed)
+                .unwrap()
+                .project(&batch);
+            assert_eq!(got.outputs, fresh, "churn step {i}");
+        }
+        {
+            let cache = engine
+                .shared
+                .rff_cache
+                .lock()
+                .unwrap_or_else(|poison| poison.into_inner());
+            assert!(
+                cache.map.len() <= MAX_CACHED_PROJECTORS,
+                "cache grew to {} entries",
+                cache.map.len()
+            );
+            assert_eq!(
+                cache.map.len(),
+                cache.order.len(),
+                "eviction order desynced from the map"
+            );
+        }
+        // A long-evicted early key still serves correctly (rebuilt).
+        let again = engine
+            .project(ProjectionRequest {
+                node: 0,
+                batch: batch.clone(),
+                path: ProjectionPath::Rff { dim: 16, seed: 1000 },
+            })
+            .unwrap();
+        let fresh = engine.model().rff_projector(0, 16, 1000).unwrap().project(&batch);
+        assert_eq!(again.outputs, fresh);
+        assert_eq!(engine.stats().rff_requests, churn as u64 + 1);
+    }
+
+    #[test]
     fn drop_joins_workers() {
         let engine = ProjectionEngine::new(toy_model(), 2);
         let _ = engine.project(ProjectionRequest {

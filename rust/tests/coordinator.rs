@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use dkpca::admm::{AdmmConfig, DkpcaSolver};
+use dkpca::admm::{AdmmConfig, DkpcaSolver, SetupExchange};
 use dkpca::backend::NativeBackend;
 use dkpca::coordinator::run_decentralized;
 use dkpca::data::synth::{blob_centers, sample_blobs, BlobSpec};
@@ -114,6 +114,112 @@ fn works_on_star_and_random_topologies() {
             .iter()
             .all(|a| !a.is_empty() && a.iter().all(|v| v.is_finite())));
     }
+}
+
+#[test]
+fn early_stop_matches_sequential_iteration_count() {
+    // The decentralized stopping rule (max-consensus gossip on round-A
+    // messages, decision lagged by the graph diameter) reproduces the
+    // sequential driver's delayed rule exactly: same stop iteration,
+    // bit-identical alphas, matching traffic accounting.
+    let xs = blobs(4, 8, 7);
+    let graph = Graph::ring(4, 1);
+    let cfg = AdmmConfig {
+        max_iters: 500,
+        tol: 1e-6,
+        rho2_schedule: vec![(0, 100.0)],
+        seed: 3,
+        ..Default::default()
+    };
+
+    let mut seq = DkpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0);
+    let seq_res = seq.run(&NativeBackend);
+    assert!(seq_res.converged, "sequential run should reach tol before 500 iters");
+    assert!(seq_res.iterations < 500);
+
+    let par = run_decentralized(
+        &xs,
+        &graph,
+        &K,
+        &cfg,
+        NoiseModel::None,
+        0,
+        Arc::new(NativeBackend),
+    );
+    assert!(par.converged, "parallel run must early-stop too");
+    assert_eq!(
+        par.iterations, seq_res.iterations,
+        "both drivers must stop at the same iteration"
+    );
+    for (a, b) in par.alphas.iter().zip(&seq_res.alphas) {
+        assert_eq!(a, b, "early-stopped runs stay bit-identical");
+    }
+    // Traffic parity including the gossip floats: the fabric total is
+    // the setup exchange plus the sequential driver's §4.2 accounting.
+    assert_eq!(par.comm_floats_total, seq_res.setup_floats + seq_res.comm_floats);
+}
+
+#[test]
+fn no_tol_runs_all_iterations_on_both_drivers() {
+    let xs = blobs(4, 8, 9);
+    let graph = Graph::ring(4, 1);
+    let cfg = AdmmConfig { max_iters: 6, seed: 1, ..Default::default() };
+    let par = run_decentralized(
+        &xs,
+        &graph,
+        &K,
+        &cfg,
+        NoiseModel::None,
+        0,
+        Arc::new(NativeBackend),
+    );
+    assert_eq!(par.iterations, 6);
+    assert!(!par.converged);
+}
+
+#[test]
+fn rff_setup_parallel_matches_sequential_and_traffic_drops() {
+    let (j, n, dim) = (5usize, 9usize, 64usize);
+    let xs = blobs(j, n, 33);
+    let graph = Graph::ring(j, 1);
+    let cfg = AdmmConfig {
+        max_iters: 4,
+        seed: 2,
+        setup: SetupExchange::RffFeatures { dim, seed: 11 },
+        ..Default::default()
+    };
+
+    let mut seq = DkpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0);
+    let seq_res = seq.run(&NativeBackend);
+    let par = run_decentralized(
+        &xs,
+        &graph,
+        &K,
+        &cfg,
+        NoiseModel::None,
+        0,
+        Arc::new(NativeBackend),
+    );
+    for (a, b) in par.alphas.iter().zip(&seq_res.alphas) {
+        assert_eq!(a, b, "feature-space runs stay bit-identical across drivers");
+    }
+
+    // Per-edge setup traffic is N*D floats (a zero-iteration run leaves
+    // only the setup exchange on the fabric).
+    let setup_only = AdmmConfig { max_iters: 0, ..cfg.clone() };
+    let rep = run_decentralized(
+        &xs,
+        &graph,
+        &K,
+        &setup_only,
+        NoiseModel::None,
+        0,
+        Arc::new(NativeBackend),
+    );
+    let directed = (j * 2) as u64;
+    assert_eq!(rep.comm_floats_total, directed * (n * dim) as u64);
+    // And it is independent of the raw feature width M — the §7 drop.
+    assert_eq!(seq_res.setup_floats, directed * (n * dim) as u64);
 }
 
 #[test]
