@@ -1,0 +1,72 @@
+//! Bench: multi-component training cost vs component count k, under
+//! the raw-data and the feature-space (RFF) setup exchange.
+//!
+//!     cargo bench --bench topk_scaling
+//!
+//! Each extra component costs one full ADMM pass plus per-node
+//! re-eigendecompositions at the deflation step. The feature-space
+//! mode pays the same per-pass protocol but assembles every Gram from
+//! `N x D` features, so its setup traffic stays independent of the raw
+//! feature width — the PR-2 win, now multiplied by k.
+
+use dkpca::admm::{AdmmConfig, SetupExchange};
+use dkpca::backend::NativeBackend;
+use dkpca::data::synth::{blob_centers, sample_blobs, BlobSpec};
+use dkpca::data::{NoiseModel, Rng};
+use dkpca::kernels::Kernel;
+use dkpca::linalg::Matrix;
+use dkpca::metrics::{Stopwatch, Table};
+use dkpca::multik::MultiKpcaSolver;
+use dkpca::topology::Graph;
+
+fn main() {
+    let (nodes, samples, iters) = (8usize, 40usize, 30usize);
+    let spec = BlobSpec { dim: 20, n_classes: 4, ..Default::default() };
+    let centers = blob_centers(&spec, 5);
+    let mut rng = Rng::new(6);
+    let xs: Vec<Matrix> = (0..nodes)
+        .map(|_| sample_blobs(&spec, &centers, samples, None, &mut rng).0)
+        .collect();
+    let graph = Graph::ring(nodes, 2);
+    let kernel = Kernel::Rbf { gamma: 0.05 };
+
+    let mut table = Table::new(
+        "top-k training scaling (sequential driver)",
+        &["k", "setup", "train_s", "iters_total", "comm_floats", "setup_floats"],
+    );
+    for &k in &[1usize, 2, 4] {
+        for (label, setup) in [
+            ("raw", SetupExchange::RawData),
+            ("rff-256", SetupExchange::RffFeatures { dim: 256, seed: 11 }),
+        ] {
+            let cfg = AdmmConfig {
+                max_iters: iters,
+                seed: 3,
+                setup,
+                z_norm: dkpca::admm::ZNorm::Sphere,
+                ..Default::default()
+            };
+            let mut solver = MultiKpcaSolver::new(
+                &xs,
+                &graph,
+                &kernel,
+                &cfg,
+                NoiseModel::None,
+                0,
+                k,
+            );
+            let sw = Stopwatch::start();
+            let res = solver.run(&NativeBackend);
+            let secs = sw.elapsed_secs();
+            table.row(&[
+                k.to_string(),
+                label.to_string(),
+                format!("{secs:.3}"),
+                res.per_component_iterations.iter().sum::<usize>().to_string(),
+                res.comm_floats.to_string(),
+                res.setup_floats.to_string(),
+            ]);
+        }
+    }
+    println!("{table}");
+}

@@ -38,7 +38,7 @@ fn gram_centered_via(
     }
 }
 use crate::linalg::eigen::eigen_sym;
-use crate::linalg::ops::normalize;
+use crate::linalg::ops::{dot, matvec, normalize};
 use crate::linalg::Matrix;
 
 use super::config::{AdmmConfig, ZNorm};
@@ -106,6 +106,49 @@ impl SpectralGram {
     }
 }
 
+/// Initial alpha for ADMM pass `component` (0 = the first pass):
+/// unit-norm, deterministic, identical across both drivers.
+fn seed_alpha(
+    cfg: &AdmmConfig,
+    id: usize,
+    n: usize,
+    spectral: &SpectralGram,
+    component: usize,
+) -> Vec<f64> {
+    let mut alpha = match cfg.init {
+        super::config::Init::Random => {
+            // Component 0 keeps the historical seed derivation exactly;
+            // later passes fold the component index in so each pass
+            // starts from an independent draw.
+            let mut rng = Rng::new(
+                cfg.seed
+                    .wrapping_add(id as u64)
+                    .wrapping_mul(0x9E37)
+                    .wrapping_add((component as u64).wrapping_mul(0x9E3779B9)),
+            );
+            rng.gauss_vec(n)
+        }
+        // Warm start: top eigenvector of the (deflated) local centered
+        // Gram (eigen_sym sorts ascending -> last column).
+        super::config::Init::LocalKpca => spectral.vectors.col(n - 1),
+    };
+    normalize(&mut alpha);
+    alpha
+}
+
+/// Rank-one Hotelling update `M <- M - (u u^T) * inv` (the one
+/// deflation kernel every Gram-block update shares).
+fn rank_one_deflate(m: &mut Matrix, u: &[f64], inv: f64) {
+    debug_assert_eq!(m.rows(), u.len());
+    for i in 0..m.rows() {
+        let ui = u[i] * inv;
+        let row = m.row_mut(i);
+        for (j, r) in row.iter_mut().enumerate() {
+            *r -= ui * u[j];
+        }
+    }
+}
+
 /// Full per-node state.
 pub struct NodeState {
     pub id: usize,
@@ -124,8 +167,16 @@ pub struct NodeState {
     pub cset: Vec<usize>,
     /// Neighbors Omega_j (cset minus self).
     pub neighbors: Vec<usize>,
-    /// Exact centered local Gram.
+    /// Centered local Gram the current pass runs on (Hotelling-deflated
+    /// once per extracted component in multik runs).
     pub kc: Matrix,
+    /// The *original* (pass-0) centered local Gram — the metric
+    /// [`NodeState::bank_component`] maps deflated-coordinate duals
+    /// back through.
+    kc0: Matrix,
+    /// Component columns banked so far (original dual coordinates, one
+    /// per finished pass; empty on single-component runs).
+    pub components: Vec<Vec<f64>>,
     /// Truncated pseudo-inverse of `kc`.
     pub kinv: Matrix,
     /// z-host group Gram over contributors' data (cset order).
@@ -244,17 +295,7 @@ impl NodeState {
             })
             .collect();
 
-        let mut alpha = match cfg.init {
-            super::config::Init::Random => {
-                let mut rng =
-                    Rng::new(cfg.seed.wrapping_add(id as u64).wrapping_mul(0x9E37));
-                rng.gauss_vec(n)
-            }
-            // Warm start: top eigenvector of the local centered Gram
-            // (eigen_sym sorts ascending -> last column).
-            super::config::Init::LocalKpca => spectral.vectors.col(n - 1),
-        };
-        normalize(&mut alpha);
+        let alpha = seed_alpha(cfg, id, n, &spectral, 0);
         let d = cset.len();
         NodeState {
             id,
@@ -263,6 +304,8 @@ impl NodeState {
             zx,
             cset,
             neighbors,
+            kc0: kc.clone(),
+            components: Vec::new(),
             kc,
             kinv,
             gz,
@@ -409,6 +452,169 @@ impl NodeState {
     /// Assumption-2 lower bound on rho for this node's Gram spectrum.
     pub fn assumption2_bound(&self) -> f64 {
         super::assumption::rho_bound(&self.spectral.values, self.neighbors.len())
+    }
+
+    /// Row offset of each contributor's block inside `gz` (cset order).
+    fn gz_offsets(&self) -> Vec<usize> {
+        let mut offs = Vec::with_capacity(self.contrib_sizes.len());
+        let mut acc = 0;
+        for &s in &self.contrib_sizes {
+            offs.push(acc);
+            acc += s;
+        }
+        offs
+    }
+
+    /// Bank the just-converged `alpha` as the next component column in
+    /// *original* dual coordinates.
+    ///
+    /// A dual converged on a c-times-deflated operator carries an
+    /// arbitrary gauge component along the annihilated directions (the
+    /// deflated operators simply do not see it); mapping the deflated
+    /// direction `phi_defl(X_j)^T alpha` back to the original feature
+    /// map is exactly a Gram-Schmidt step against the previously banked
+    /// columns in the original-Gram metric. Call once per pass, after
+    /// convergence and *before* [`NodeState::deflate_and_reseed`].
+    /// Purely local and shared by both drivers, so banked columns stay
+    /// bit-identical.
+    pub fn bank_component(&mut self) {
+        let scale = self.kc0.max_abs().max(1.0);
+        let mut col = self.alpha.clone();
+        for prev in &self.components {
+            let kprev = matvec(&self.kc0, prev);
+            let s = dot(prev, &kprev);
+            if s.abs() <= scale * 1e-12 {
+                continue;
+            }
+            let w = dot(&kprev, &col) / s;
+            for (c, &p) in col.iter_mut().zip(prev) {
+                *c -= w * p;
+            }
+        }
+        self.components.push(col);
+    }
+
+    /// Hotelling-deflate every Gram block this node holds with the
+    /// consensus projection of the pass that just converged, then
+    /// re-seed the ADMM state for pass `component`.
+    ///
+    /// The agreed component lives on the z-host group support: in dual
+    /// coordinates it is the stacked vector `v` whose segment for
+    /// contributor `l` is `alpha_l / ||alpha_l||_K` (per-contributor
+    /// K-normalisation makes every segment carry the direction at equal
+    /// weight, so `v` averages the per-node consensus errors down).
+    /// One rank-one step deflates the whole group Gram:
+    ///
+    /// ```text
+    /// G' = (I - v v^T G / s)^T G (I - v v^T G / s) = G - (Gv)(Gv)^T / s,
+    /// s = v^T G v = ||w||^2_K
+    /// ```
+    ///
+    /// and the own local Gram is deflated by the same direction through
+    /// its segment of `t = Gv` (the self diagonal block of `G'`).
+    /// Everything is computed from Gram blocks the node already holds
+    /// plus the transmitted converged `alpha_l` (N floats per directed
+    /// edge), so both drivers deflate bit-identically.
+    ///
+    /// `neighbor_alphas`: each neighbor's converged alpha as received;
+    /// the node's own `self.alpha` is used for its own segment.
+    pub fn deflate_and_reseed(
+        &mut self,
+        neighbor_alphas: &[(usize, Vec<f64>)],
+        component: usize,
+    ) {
+        // Converged dual per contributor, cset order.
+        let duals: Vec<&[f64]> = self
+            .cset
+            .iter()
+            .map(|&l| {
+                if l == self.id {
+                    self.alpha.as_slice()
+                } else {
+                    let (_, a) = neighbor_alphas
+                        .iter()
+                        .find(|(from, _)| *from == l)
+                        .unwrap_or_else(|| panic!("missing converged alpha from {l}"));
+                    a.as_slice()
+                }
+            })
+            .collect();
+
+        // Stacked consensus dual: per-contributor K-normalised alphas.
+        // A (near-)zero K-norm means that contributor's direction left
+        // the span already — drop its segment instead of dividing by ~0.
+        let offs = self.gz_offsets();
+        let d = self.cset.len();
+        let total = self.gz.rows();
+        let mut v = vec![0.0; total];
+        for pos in 0..d {
+            let n_l = self.contrib_sizes[pos];
+            assert_eq!(duals[pos].len(), n_l, "alpha length mismatch at cset pos {pos}");
+            let diag = self.gz.block(offs[pos], offs[pos] + n_l, offs[pos], offs[pos] + n_l);
+            let c = matvec(&diag, duals[pos]);
+            let s = dot(duals[pos], &c);
+            if s.abs() > diag.max_abs().max(1.0) * 1e-12 {
+                let inv = 1.0 / s.abs().sqrt();
+                for (slot, &a) in v[offs[pos]..offs[pos] + n_l].iter_mut().zip(duals[pos]) {
+                    *slot = a * inv;
+                }
+            }
+        }
+
+        // Rank-one Hotelling step on the group Gram: G <- G - t t^T / s.
+        let t = matvec(&self.gz, &v);
+        let s = dot(&v, &t);
+        let self_pos = self.cset.iter().position(|&l| l == self.id);
+        if s.abs() > self.gz.max_abs().max(1.0) * 1e-12 {
+            let inv = 1.0 / s;
+            rank_one_deflate(&mut self.gz, &t, inv);
+            // The own exact Gram is the self diagonal block; deflate it
+            // by the same direction through its segment of t.
+            match self_pos {
+                Some(pos) => {
+                    let seg = &t[offs[pos]..offs[pos] + self.n];
+                    rank_one_deflate(&mut self.kc, seg, inv);
+                }
+                // Without the self constraint the own data is not in
+                // the group; fall back to deflating by the own dual.
+                None => {
+                    let c = matvec(&self.kc, &self.alpha);
+                    let s_own = dot(&self.alpha, &c);
+                    if s_own.abs() > self.kc.max_abs().max(1.0) * 1e-12 {
+                        rank_one_deflate(&mut self.kc, &c, 1.0 / s_own);
+                    }
+                }
+            }
+        }
+        self.kc.symmetrize();
+
+        // Rebuild every spectral operator derived from the Grams.
+        self.spectral = SpectralGram::new(&self.kc);
+        self.kinv = self.spectral.pinv(self.cfg.pinv_rcond);
+        self.contrib_kinv = self
+            .cset
+            .iter()
+            .enumerate()
+            .map(|(pos, &l)| {
+                if l == self.id {
+                    self.kinv.clone()
+                } else {
+                    let n_l = self.contrib_sizes[pos];
+                    let mut kcl =
+                        self.gz.block(offs[pos], offs[pos] + n_l, offs[pos], offs[pos] + n_l);
+                    kcl.symmetrize();
+                    SpectralGram::new(&kcl).pinv(self.cfg.pinv_rcond)
+                }
+            })
+            .collect();
+
+        // Fresh ADMM state for the next pass.
+        self.alpha = seed_alpha(&self.cfg, self.id, self.n, &self.spectral, component);
+        self.alpha_prev = self.alpha.clone();
+        self.b = Matrix::zeros(self.n, d);
+        self.p = Matrix::zeros(self.n, d);
+        self.a_inv = Matrix::zeros(0, 0);
+        self.a_inv_rho_sum = f64::NAN;
     }
 }
 

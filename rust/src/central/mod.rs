@@ -9,7 +9,7 @@
 
 use crate::kernels::{center_gram, gram, gram_sym, Kernel};
 use crate::linalg::ops::dot;
-use crate::linalg::{eigen_sym, top_eig, Matrix};
+use crate::linalg::{eigen_sym, matmul, top_eig, Matrix};
 use crate::model::{DkpcaModel, NodeComponent};
 
 /// Central kPCA solution over the full dataset.
@@ -46,19 +46,18 @@ impl CentralKpca {
         DkpcaModel::from_parts(&self.kernel, &[self.x.clone()], &[self.alpha.clone()])
     }
 
+    /// Top-`k` dual coefficient columns of the centered global Gram
+    /// (descending eigenvalue order, each unit-norm in alpha space).
+    pub fn topk_coeffs(&self, k: usize) -> Matrix {
+        topk_cols(&self.kc, k)
+    }
+
     /// Like [`CentralKpca::to_model`] but exporting the top `k`
-    /// principal directions as coefficient columns (descending
-    /// eigenvalue order, each unit-norm in alpha space) — the multi-
-    /// component serving case the decentralized path (top-1 only)
-    /// cannot produce yet.
+    /// principal directions as coefficient columns — the serving shape
+    /// the decentralized multik drivers also produce.
     pub fn to_model_topk(&self, k: usize) -> DkpcaModel {
-        let n = self.kc.rows();
-        assert!(k >= 1 && k <= n, "need 1 <= k <= {n}");
-        // Re-decompose the retained centered Gram; eigen_sym sorts
-        // ascending, so the top-k live in the last k columns.
-        let eig = eigen_sym(&self.kc);
-        let coeffs = Matrix::from_fn(n, k, |i, c| eig.vectors[(i, n - 1 - c)]);
-        let comp = NodeComponent::from_training(0, &self.x, coeffs, &self.kernel);
+        let comp =
+            NodeComponent::from_training(0, &self.x, self.topk_coeffs(k), &self.kernel);
         DkpcaModel { kernel: self.kernel, nodes: vec![comp] }
     }
 }
@@ -67,6 +66,25 @@ impl CentralKpca {
 pub fn local_kpca(x: &Matrix, kernel: &Kernel) -> Vec<f64> {
     let kc = center_gram(&gram_sym(kernel, x));
     top_eig(&kc).1
+}
+
+/// Top-`k` eigenvector columns of a centered Gram, descending
+/// eigenvalue order (eigen_sym sorts ascending, so the top-k live in
+/// the last k columns) — shared by the central exporter and the local
+/// baseline so ordering/threshold logic cannot drift apart.
+fn topk_cols(kc: &Matrix, k: usize) -> Matrix {
+    let n = kc.rows();
+    assert!(k >= 1 && k <= n, "need 1 <= k <= {n}");
+    let eig = eigen_sym(kc);
+    Matrix::from_fn(n, k, |i, c| eig.vectors[(i, n - 1 - c)])
+}
+
+/// Local-only top-k kPCA at one node: the top `k` eigenvectors of its
+/// centered Gram as coefficient columns (descending eigenvalue order)
+/// — the per-node baseline the decentralized multik subspace is
+/// measured against.
+pub fn local_kpca_topk(x: &Matrix, kernel: &Kernel, k: usize) -> Matrix {
+    topk_cols(&center_gram(&gram_sym(kernel, x)), k)
 }
 
 /// Neighbor-gather baseline `(alpha_j)_Nei`: pool the node's own data
@@ -107,6 +125,7 @@ pub fn similarity(
 }
 
 /// Mean similarity of per-node solutions against the central solution.
+/// An empty slice yields 0.0 (no nodes — nothing aligns).
 pub fn mean_similarity(
     alphas: &[Vec<f64>],
     xs: &[Matrix],
@@ -114,12 +133,120 @@ pub fn mean_similarity(
     kernel: &Kernel,
 ) -> f64 {
     assert_eq!(alphas.len(), xs.len());
+    if alphas.is_empty() {
+        return 0.0;
+    }
     let total: f64 = alphas
         .iter()
         .zip(xs)
         .map(|(a, x)| similarity(a, x, central, kernel))
         .sum();
     total / alphas.len() as f64
+}
+
+/// `G^{-1/2}` of a small (k x k) symmetric PSD Gram via its
+/// eigendecomposition, dropping near-null directions.
+fn inv_sqrt_sym(g: &Matrix) -> Matrix {
+    let eig = eigen_sym(g);
+    let lmax = eig.values.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1e-300);
+    let k = g.rows();
+    let mut out = Matrix::zeros(k, k);
+    for idx in 0..k {
+        let lam = eig.values[idx];
+        if lam <= lmax * 1e-12 {
+            continue;
+        }
+        let w = 1.0 / lam.sqrt();
+        let v = eig.vectors.col(idx);
+        for i in 0..k {
+            for j in 0..k {
+                out[(i, j)] += w * v[i] * v[j];
+            }
+        }
+    }
+    out
+}
+
+/// The central side of the subspace metric, computed once per
+/// evaluation batch: top-`k` coefficient columns `B` and their k x k
+/// feature-space Gram `G_g = B^T K_c B` (one `eigen_sym` of the full
+/// centered Gram instead of one per node).
+struct CentralSubspace {
+    b: Matrix,
+    g_g_inv_sqrt: Matrix,
+}
+
+impl CentralSubspace {
+    fn new(central: &CentralKpca, k: usize) -> CentralSubspace {
+        let b = central.topk_coeffs(k);
+        let g_g = matmul(&matmul(&b.transpose(), &central.kc), &b);
+        CentralSubspace { g_g_inv_sqrt: inv_sqrt_sym(&g_g), b }
+    }
+}
+
+/// One node's affinity against a precomputed [`CentralSubspace`].
+fn subspace_affinity_against(
+    coeffs_w: &Matrix,
+    x_w: &Matrix,
+    central: &CentralKpca,
+    sub: &CentralSubspace,
+    kernel: &Kernel,
+) -> f64 {
+    let k = sub.b.cols();
+    assert_eq!(coeffs_w.cols(), k, "need one coefficient column per component");
+    let k_w = center_gram(&gram_sym(kernel, x_w));
+    let k_cross = center_gram(&gram(kernel, x_w, &central.x));
+    let g_w = matmul(&matmul(&coeffs_w.transpose(), &k_w), coeffs_w);
+    let c = matmul(&matmul(&coeffs_w.transpose(), &k_cross), &sub.b);
+    let m = matmul(&matmul(&inv_sqrt_sym(&g_w), &c), &sub.g_g_inv_sqrt);
+    // Singular values of the k x k overlap via eigen of M^T M; rounding
+    // can push a cosine epsilon past 1, so clamp.
+    let eig = eigen_sym(&matmul(&m.transpose(), &m));
+    let total: f64 = eig.values.iter().map(|&l| l.max(0.0).sqrt().min(1.0)).sum();
+    total / k as f64
+}
+
+/// §6.1 similarity generalized to subspaces: mean cosine of the
+/// principal angles between `span{phi(X_w) a_c}` (columns `a_c` of
+/// `coeffs_w`) and the central top-`k` subspace.
+///
+/// All inner products live in feature space through the kernel:
+/// `G_w = A^T K_w A`, `G_g = B^T K_c B`, `C = A^T K_cross B`; the
+/// singular values of `G_w^{-1/2} C G_g^{-1/2}` are the principal-angle
+/// cosines. For `k = 1` this reduces exactly to [`similarity`].
+/// Degenerate (zero K-norm) directions are dropped by the
+/// pseudo-inverse square roots and pull the mean toward 0.
+pub fn subspace_affinity(
+    coeffs_w: &Matrix,
+    x_w: &Matrix,
+    central: &CentralKpca,
+    k: usize,
+    kernel: &Kernel,
+) -> f64 {
+    subspace_affinity_against(coeffs_w, x_w, central, &CentralSubspace::new(central, k), kernel)
+}
+
+/// Mean per-node [`subspace_affinity`] against the central top-`k`
+/// subspace (the central eigendecomposition is shared across nodes).
+/// An empty slice yields 0.0.
+pub fn mean_subspace_affinity(
+    coeffs: &[Matrix],
+    xs: &[Matrix],
+    central: &CentralKpca,
+    k: usize,
+    kernel: &Kernel,
+) -> f64 {
+    assert_eq!(coeffs.len(), xs.len());
+    if coeffs.is_empty() {
+        return 0.0;
+    }
+    let sub = CentralSubspace::new(central, k);
+    let total: f64 = coeffs
+        .iter()
+        .zip(xs)
+        .map(|(a, x)| subspace_affinity_against(a, x, central, &sub, kernel))
+        .sum();
+    total / coeffs.len() as f64
 }
 
 #[cfg(test)]
@@ -231,5 +358,52 @@ mod tests {
         let xs = blobs(2, 12, 7);
         let c = central_kpca(&xs, &K);
         assert!(c.lambda > 0.0);
+    }
+
+    #[test]
+    fn mean_similarity_of_no_nodes_is_zero() {
+        // Regression: used to divide by zero and return NaN.
+        let xs = blobs(2, 8, 12);
+        let c = central_kpca(&xs, &K);
+        let s = mean_similarity(&[], &[], &c, &K);
+        assert_eq!(s, 0.0);
+        assert!(mean_subspace_affinity(&[], &[], &c, 2, &K) == 0.0);
+    }
+
+    #[test]
+    fn subspace_affinity_reduces_to_similarity_at_k1() {
+        let xs = blobs(3, 10, 14);
+        let c = central_kpca(&xs, &K);
+        let a = local_kpca(&xs[0], &K);
+        let sim = similarity(&a, &xs[0], &c, &K);
+        let coeffs = Matrix::from_vec(a.len(), 1, a.clone());
+        let aff = subspace_affinity(&coeffs, &xs[0], &c, 1, &K);
+        assert!((sim - aff).abs() < 1e-9, "sim {sim} vs affinity {aff}");
+    }
+
+    #[test]
+    fn central_self_subspace_affinity_is_one() {
+        // The central top-k evaluated as a "node" holding all data
+        // spans itself: every principal angle is zero.
+        let xs = blobs(2, 12, 15);
+        let c = central_kpca(&xs, &K);
+        for k in [1usize, 2, 3] {
+            let aff = subspace_affinity(&c.topk_coeffs(k), &c.x, &c, k, &K);
+            assert!((aff - 1.0).abs() < 1e-7, "k={k} affinity {aff}");
+        }
+    }
+
+    #[test]
+    fn affinity_invariant_to_column_sign_and_order() {
+        let xs = blobs(3, 10, 16);
+        let c = central_kpca(&xs, &K);
+        let a = local_kpca_topk(&xs[0], &K, 2);
+        // Swap the columns and flip a sign: the span is unchanged.
+        let swapped = Matrix::from_fn(a.rows(), 2, |i, j| {
+            if j == 0 { -a[(i, 1)] } else { a[(i, 0)] }
+        });
+        let f1 = subspace_affinity(&a, &xs[0], &c, 2, &K);
+        let f2 = subspace_affinity(&swapped, &xs[0], &c, 2, &K);
+        assert!((f1 - f2).abs() < 1e-9, "{f1} vs {f2}");
     }
 }

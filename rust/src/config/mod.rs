@@ -239,7 +239,13 @@ fn parse_admm(j: &Json, base: AdmmConfig) -> Result<AdmmConfig, String> {
                 // fall back — a mistyped dim/seed would change the
                 // sampled feature map and the experiment's results.
                 let dim = match v.get("dim") {
-                    Some(d) => d.as_usize().ok_or("setup dim must be a number")?,
+                    Some(d) => {
+                        let df = d.as_f64().ok_or("setup dim must be a number")?;
+                        if df < 1.0 || df.fract() != 0.0 || df > u32::MAX as f64 {
+                            return Err("setup dim must be a positive integer".into());
+                        }
+                        df as usize
+                    }
                     None => 4096,
                 };
                 let seed = match v.get("seed") {
@@ -353,6 +359,13 @@ mod tests {
             r#"{"admm": {"setup": {"kind": "rff", "seed": 7.5}}}"#
         )
         .is_err());
+        // dim must be a positive integer — 0, negative, and fractional
+        // values all changed the sampled map silently before erroring
+        // much later (or not at all).
+        for bad in ["0", "-5", "2.7"] {
+            let json = format!(r#"{{"admm": {{"setup": {{"kind": "rff", "dim": {bad}}}}}}}"#);
+            assert!(ExperimentConfig::from_json(&json).is_err(), "dim {bad} accepted");
+        }
     }
 
     #[test]

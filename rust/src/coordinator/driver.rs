@@ -111,6 +111,24 @@ fn edge_seed(noise_seed: u64, from: usize, to: usize, n: usize) -> u64 {
         .wrapping_add((from * n + to) as u64)
 }
 
+/// Outcome of a parallel multi-component (multik) run: one deflated
+/// consensus pass per component, `Payload::Converged` exchanges in
+/// between.
+pub struct MultiRunReport {
+    /// Per-node dual coefficients, one `N_j x k` matrix per node.
+    pub alphas: Vec<Matrix>,
+    /// Iterations each component pass ran — identical at every node
+    /// (asserted at join, exactly like the single-component rule).
+    pub per_component_iterations: Vec<usize>,
+    /// Whether each pass stopped on the `tol` criterion.
+    pub converged: Vec<bool>,
+    pub wall_secs: f64,
+    pub iter_secs: f64,
+    pub node_compute_secs: Vec<f64>,
+    pub comm_floats_total: u64,
+    pub per_node_sent: Vec<u64>,
+}
+
 /// Run Alg. 1 on one OS thread per node.
 pub fn run_decentralized(
     xs: &[Matrix],
@@ -121,8 +139,36 @@ pub fn run_decentralized(
     noise_seed: u64,
     backend: Arc<dyn ComputeBackend>,
 ) -> RunReport {
+    let rep = run_decentralized_multik(xs, graph, kernel, cfg, noise, noise_seed, 1, backend);
+    RunReport {
+        alphas: rep.alphas.iter().map(|a| a.col(0)).collect(),
+        wall_secs: rep.wall_secs,
+        iter_secs: rep.iter_secs,
+        node_compute_secs: rep.node_compute_secs,
+        comm_floats_total: rep.comm_floats_total,
+        per_node_sent: rep.per_node_sent,
+        iterations: rep.per_component_iterations[0],
+        converged: rep.converged[0],
+    }
+}
+
+/// Run K deflated consensus passes on one OS thread per node — the
+/// parallel twin of `multik::MultiKpcaSolver` (bit-identical per
+/// component; asserted by rust/tests/multik.rs).
+#[allow(clippy::too_many_arguments)]
+pub fn run_decentralized_multik(
+    xs: &[Matrix],
+    graph: &Graph,
+    kernel: &Kernel,
+    cfg: &AdmmConfig,
+    noise: NoiseModel,
+    noise_seed: u64,
+    n_components: usize,
+    backend: Arc<dyn ComputeBackend>,
+) -> MultiRunReport {
     assert_eq!(xs.len(), graph.len());
     assert!(graph.is_connected(), "Assumption 1: connected network");
+    assert!(n_components >= 1, "need at least one component");
     let j = xs.len();
     // How many exchange rounds max-consensus needs to cover the network
     // — the lag of the decentralized stop rule (shared with the
@@ -142,58 +188,61 @@ pub fn run_decentralized(
         handles.push(std::thread::spawn(move || {
             node_main(
                 id, endpoint, x_own, nbrs, kernel, cfg, noise, noise_seed, n_nodes, stop_lag,
-                backend,
+                n_components, backend,
             )
         }));
     }
 
-    let mut alphas = vec![Vec::new(); j];
+    let mut alphas: Vec<Matrix> = vec![Matrix::zeros(0, 0); j];
     let mut node_compute_secs = vec![0.0; j];
     let mut iter_secs = 0.0f64;
-    let mut iteration_counts = vec![0usize; j];
-    let mut converged_flags = vec![false; j];
+    let mut iteration_counts: Vec<Vec<usize>> = vec![Vec::new(); j];
+    let mut converged_flags: Vec<Vec<bool>> = vec![Vec::new(); j];
     for handle in handles {
         let out = handle.join().expect("node thread panicked");
-        alphas[out.id] = out.alpha;
+        let n = out.alpha_cols.first().map_or(0, Vec::len);
+        alphas[out.id] =
+            Matrix::from_fn(n, n_components, |i, c| out.alpha_cols[c][i]);
         node_compute_secs[out.id] = out.compute_secs;
         iter_secs = iter_secs.max(out.iter_secs);
         iteration_counts[out.id] = out.iterations;
         converged_flags[out.id] = out.converged;
     }
-    let iterations = iteration_counts.iter().copied().max().unwrap_or(0);
-    let converged = converged_flags.iter().any(|&c| c);
-    // The stop decision is a deterministic function of network-wide
-    // state every node has observed by decision time; any disagreement
-    // — on the iteration count or on the convergence verdict — means
-    // the consensus-stop protocol broke.
+    // The stop decision of every pass is a deterministic function of
+    // network-wide state each node has observed by decision time; any
+    // disagreement — on an iteration count or a convergence verdict —
+    // means the consensus-stop protocol broke.
+    let per_component_iterations = iteration_counts[0].clone();
+    let converged = converged_flags[0].clone();
     assert!(
-        iteration_counts.iter().all(|&c| c == iterations),
-        "nodes disagree on the stop iteration: {iteration_counts:?}"
+        iteration_counts.iter().all(|c| *c == per_component_iterations),
+        "nodes disagree on the stop iterations: {iteration_counts:?}"
     );
     assert!(
-        converged_flags.iter().all(|&c| c == converged),
+        converged_flags.iter().all(|c| *c == converged),
         "nodes disagree on convergence: {converged_flags:?}"
     );
     let per_node_sent = (0..j).map(|i| stats.sent_by(i)).collect();
-    RunReport {
+    MultiRunReport {
         alphas,
+        per_component_iterations,
+        converged,
         wall_secs: wall.elapsed().as_secs_f64(),
         iter_secs,
         node_compute_secs,
         comm_floats_total: stats.total(),
         per_node_sent,
-        iterations,
-        converged,
     }
 }
 
 struct NodeOutput {
     id: usize,
-    alpha: Vec<f64>,
+    /// One converged alpha per component pass.
+    alpha_cols: Vec<Vec<f64>>,
     compute_secs: f64,
     iter_secs: f64,
-    iterations: usize,
-    converged: bool,
+    iterations: Vec<usize>,
+    converged: Vec<bool>,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -208,6 +257,7 @@ fn node_main(
     noise_seed: u64,
     n_nodes: usize,
     stop_lag: usize,
+    n_components: usize,
     backend: Arc<dyn ComputeBackend>,
 ) -> NodeOutput {
     // ---- Setup: exchange the setup payload over noisy channels — raw
@@ -258,106 +308,156 @@ fn node_main(
         NodeState::new(id, &x_own, nbrs.clone(), &received, &kernel, &cfg, backend.as_ref());
     compute += thread_cpu_secs() - t0;
 
-    // ---- ADMM iterations. ----
+    // ---- ADMM iterations: one deflated pass per component. ----
     let iter_clock = Instant::now();
-    let mut iterations = 0;
-    let mut converged = false;
-    // Convergence gossip (tol > 0): sliding window of running
-    // max-consensus estimates of the network-wide alpha delta, one
-    // entry per iteration s in [t - stop_lag, t - 1]. By round A of
-    // iteration t the head entry has been folded through `stop_lag >=
-    // diameter` exchange rounds, so it IS the settled network-wide max
-    // of iteration t - stop_lag — every node computes the identical
-    // value and the identical stop decision, with no global barrier.
-    let mut gossip: VecDeque<f64> = VecDeque::new();
-    for t in 0..cfg.max_iters {
-        let rho2 = cfg.rho2_at(t);
+    let mut alpha_cols = Vec::with_capacity(n_components);
+    let mut iterations = Vec::with_capacity(n_components);
+    let mut converged = Vec::with_capacity(n_components);
+    for comp in 0..n_components {
+        // Round A/B envelopes of pass `comp` use iteration numbers in a
+        // disjoint band so they can never match another pass's collect.
+        let base = comp * (cfg.max_iters + 1);
+        let mut pass_iterations = 0;
+        let mut pass_converged = false;
+        // Convergence gossip (tol > 0): sliding window of running
+        // max-consensus estimates of the network-wide alpha delta, one
+        // entry per iteration s in [t - stop_lag, t - 1]. By round A of
+        // iteration t the head entry has been folded through `stop_lag
+        // >= diameter` exchange rounds, so it IS the settled
+        // network-wide max of iteration t - stop_lag — every node
+        // computes the identical value and the identical stop decision,
+        // with no global barrier. The window restarts with each pass.
+        let mut gossip: VecDeque<f64> = VecDeque::new();
+        for t in 0..cfg.max_iters {
+            let rho2 = cfg.rho2_at(t);
 
-        // Round A out, piggybacking the gossip window.
-        let window: Vec<f64> = gossip.iter().copied().collect();
-        for &to in &nbrs {
-            let msg = node.round_a_message(to);
-            endpoint.send(
-                to,
-                Envelope {
-                    from: id,
-                    iter: t,
-                    phase: Phase::RoundA,
-                    payload: Payload::A(msg, window.clone()),
-                },
-            );
-        }
-        // Round A in; fold neighbor windows into ours (positionally —
-        // all nodes' windows cover the same iteration range).
-        let a_msgs = endpoint.collect(t, Phase::RoundA, nbrs.len());
-        let mut inbox: Vec<(usize, crate::admm::RoundA)> =
-            Vec::with_capacity(a_msgs.len());
-        for e in a_msgs {
-            match e.payload {
-                Payload::A(a, w) => {
-                    debug_assert_eq!(w.len(), gossip.len());
-                    for (mine, theirs) in gossip.iter_mut().zip(&w) {
-                        if *theirs > *mine {
-                            *mine = *theirs;
-                        }
-                    }
-                    inbox.push((e.from, a));
-                }
-                _ => unreachable!(),
-            }
-        }
-        // Decentralized stopping rule: stop after this iteration once
-        // the settled network-wide max of iteration t - stop_lag is
-        // below tol (the sequential driver applies the same delayed
-        // rule, so both stop at the same iteration).
-        let stop_after_this_iter = cfg.tol > 0.0
-            && t >= stop_lag
-            && gossip.front().copied().unwrap_or(f64::INFINITY) < cfg.tol;
-
-        // z-solve for the own z; scatter segments.
-        let tz = thread_cpu_secs();
-        let segments = node.z_solve(&inbox, rho2, backend.as_ref());
-        compute += thread_cpu_secs() - tz;
-        for (to, seg) in segments {
-            if to == id {
-                node.receive_z(id, &seg);
-            } else {
+            // Round A out, piggybacking the gossip window.
+            let window: Vec<f64> = gossip.iter().copied().collect();
+            for &to in &nbrs {
+                let msg = node.round_a_message(to);
                 endpoint.send(
                     to,
-                    Envelope { from: id, iter: t, phase: Phase::RoundB, payload: Payload::B(seg) },
+                    Envelope {
+                        from: id,
+                        iter: base + t,
+                        phase: Phase::RoundA,
+                        payload: Payload::A(msg, window.clone()),
+                    },
                 );
             }
-        }
-        // Round B in: projections of neighbors' z onto our data.
-        let b_msgs = endpoint.collect(t, Phase::RoundB, nbrs.len());
-        for e in b_msgs {
-            match e.payload {
-                Payload::B(seg) => node.receive_z(e.from, &seg),
-                _ => unreachable!(),
+            // Round A in; fold neighbor windows into ours (positionally
+            // — all nodes' windows cover the same iteration range).
+            let a_msgs = endpoint.collect(base + t, Phase::RoundA, nbrs.len());
+            let mut inbox: Vec<(usize, crate::admm::RoundA)> =
+                Vec::with_capacity(a_msgs.len());
+            for e in a_msgs {
+                match e.payload {
+                    Payload::A(a, w) => {
+                        debug_assert_eq!(w.len(), gossip.len());
+                        for (mine, theirs) in gossip.iter_mut().zip(&w) {
+                            if *theirs > *mine {
+                                *mine = *theirs;
+                            }
+                        }
+                        inbox.push((e.from, a));
+                    }
+                    _ => unreachable!(),
+                }
             }
-        }
+            // Decentralized stopping rule: stop after this iteration
+            // once the settled network-wide max of iteration t -
+            // stop_lag is below tol (the sequential driver applies the
+            // same delayed rule, so both stop at the same iteration).
+            let stop_after_this_iter = cfg.tol > 0.0
+                && t >= stop_lag
+                && gossip.front().copied().unwrap_or(f64::INFINITY) < cfg.tol;
 
-        // Local updates.
-        let tu = thread_cpu_secs();
-        node.local_update(rho2, backend.as_ref());
-        compute += thread_cpu_secs() - tu;
-        // Maintain the gossip window: drop the decided head, seed the
-        // running max for this iteration with the own delta.
-        if cfg.tol > 0.0 {
-            if gossip.len() == stop_lag {
-                gossip.pop_front();
+            // z-solve for the own z; scatter segments.
+            let tz = thread_cpu_secs();
+            let segments = node.z_solve(&inbox, rho2, backend.as_ref());
+            compute += thread_cpu_secs() - tz;
+            for (to, seg) in segments {
+                if to == id {
+                    node.receive_z(id, &seg);
+                } else {
+                    endpoint.send(
+                        to,
+                        Envelope {
+                            from: id,
+                            iter: base + t,
+                            phase: Phase::RoundB,
+                            payload: Payload::B(seg),
+                        },
+                    );
+                }
             }
-            gossip.push_back(node.alpha_delta());
+            // Round B in: projections of neighbors' z onto our data.
+            let b_msgs = endpoint.collect(base + t, Phase::RoundB, nbrs.len());
+            for e in b_msgs {
+                match e.payload {
+                    Payload::B(seg) => node.receive_z(e.from, &seg),
+                    _ => unreachable!(),
+                }
+            }
+
+            // Local updates.
+            let tu = thread_cpu_secs();
+            node.local_update(rho2, backend.as_ref());
+            compute += thread_cpu_secs() - tu;
+            // Maintain the gossip window: drop the decided head, seed
+            // the running max for this iteration with the own delta.
+            if cfg.tol > 0.0 {
+                if gossip.len() == stop_lag {
+                    gossip.pop_front();
+                }
+                gossip.push_back(node.alpha_delta());
+            }
+            pass_iterations = t + 1;
+            if stop_after_this_iter {
+                pass_converged = true;
+                break;
+            }
         }
-        iterations = t + 1;
-        if stop_after_this_iter {
-            converged = true;
-            break;
+        // Bank the converged component in original dual coordinates
+        // (same local Gram-Schmidt the sequential driver applies).
+        node.bank_component();
+        alpha_cols.push(node.components[comp].clone());
+        iterations.push(pass_iterations);
+        converged.push(pass_converged);
+
+        if comp + 1 < n_components {
+            // Deflation exchange: ship the converged alpha to every
+            // neighbor (N floats per directed edge), collect theirs,
+            // and deflate all Gram copies with the identical duals —
+            // the same data the sequential driver hands each node, so
+            // the next pass stays bit-identical.
+            for &to in &nbrs {
+                endpoint.send(
+                    to,
+                    Envelope {
+                        from: id,
+                        iter: comp,
+                        phase: Phase::Deflate,
+                        payload: Payload::Converged(node.alpha.clone()),
+                    },
+                );
+            }
+            let msgs = endpoint.collect(comp, Phase::Deflate, nbrs.len());
+            let received: Vec<(usize, Vec<f64>)> = msgs
+                .into_iter()
+                .map(|e| match e.payload {
+                    Payload::Converged(a) => (e.from, a),
+                    _ => unreachable!("deflate phase carries converged alphas"),
+                })
+                .collect();
+            let td = thread_cpu_secs();
+            node.deflate_and_reseed(&received, comp + 1);
+            compute += thread_cpu_secs() - td;
         }
     }
     NodeOutput {
         id,
-        alpha: node.alpha.clone(),
+        alpha_cols,
         compute_secs: compute,
         iter_secs: iter_clock.elapsed().as_secs_f64(),
         iterations,

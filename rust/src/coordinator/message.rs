@@ -12,6 +12,9 @@ pub enum Phase {
     RoundA,
     /// z projections back from a z-host.
     RoundB,
+    /// Converged-component exchange between multik passes (`iter` is
+    /// the finished component index).
+    Deflate,
 }
 
 /// One envelope on a directed link.
@@ -38,6 +41,11 @@ pub enum Payload {
     /// for the last `stop_lag` iterations (empty when `tol == 0`).
     A(RoundA, Vec<f64>),
     B(RoundB),
+    /// The sender's converged alpha for the component that just
+    /// finished — the multik deflation exchange (`N` floats per
+    /// directed edge per pass transition), so every neighbor deflates
+    /// its Gram copies with the identical dual.
+    Converged(Vec<f64>),
 }
 
 impl Envelope {
@@ -49,6 +57,7 @@ impl Envelope {
                 (a.alpha.len() + a.bcol.len() + gossip.len()) as u64
             }
             Payload::B(b) => b.segment.len() as u64,
+            Payload::Converged(alpha) => alpha.len() as u64,
         }
     }
 }
@@ -94,5 +103,16 @@ mod tests {
             payload: Payload::Features(Matrix::zeros(4, 8)),
         };
         assert_eq!(z.floats(), 32, "feature payloads count N*D");
+    }
+
+    #[test]
+    fn deflation_floats_accounted() {
+        let e = Envelope {
+            from: 0,
+            iter: 1,
+            phase: Phase::Deflate,
+            payload: Payload::Converged(vec![0.0; 9]),
+        };
+        assert_eq!(e.floats(), 9, "deflation exchange moves N floats per edge");
     }
 }

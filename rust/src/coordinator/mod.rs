@@ -8,6 +8,6 @@ pub mod driver;
 pub mod fabric;
 pub mod message;
 
-pub use driver::{run_decentralized, RunReport};
+pub use driver::{run_decentralized, run_decentralized_multik, MultiRunReport, RunReport};
 pub use fabric::{build_fabric, TrafficStats};
 pub use message::{Envelope, Payload, Phase};

@@ -10,6 +10,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod rff_sweep;
 pub mod timing;
+pub mod topk;
 
 use crate::admm::AdmmConfig;
 use crate::central::CentralKpca;

@@ -26,6 +26,7 @@ pub mod config;
 pub mod coordinator;
 pub mod metrics;
 pub mod model;
+pub mod multik;
 pub mod runtime;
 pub mod serve;
 pub mod topology;

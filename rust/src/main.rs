@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   run              one DKPCA run from a JSON config (or flags)
 //!   sweep            regenerate a paper figure/table (fig3|fig4|fig5|
-//!                    timing|comm|ablation|rff)
+//!                    timing|comm|ablation|rff|topk)
 //!   central          central-kPCA baseline only
 //!   artifacts-check  verify the AOT artifact set loads, compiles and
 //!                    agrees with the native backend
@@ -46,15 +46,26 @@ fn main() {
     std::process::exit(code);
 }
 
+/// Experiment arms `dkpca sweep --experiment` accepts.
+const SWEEP_EXPERIMENTS: &str = "fig3|fig4|fig5|timing|comm|ablation|rff|topk";
+
 fn print_usage() {
     println!(
         "dkpca — Decentralized Kernel PCA with Projection Consensus Constraints\n\
          \n\
          USAGE: dkpca <run|sweep|central|artifacts-check|info> [flags]\n\
          \n\
+         subcommands:\n\
+         \u{20} run              one DKPCA run from a JSON config (or flags)\n\
+         \u{20} sweep            regenerate a paper figure/table\n\
+         \u{20} central          central-kPCA baseline only\n\
+         \u{20} artifacts-check  verify the AOT artifact set against the native backend\n\
+         \u{20} info             print environment/topology/config information\n\
+         \u{20} --help, -h       this listing\n\
+         \n\
          run flags:    --config <file.json> --nodes <J> --samples <N>\n\
          \u{20}             --iters <T> --parallel --pjrt --seed <S>\n\
-         sweep flags:  --experiment <fig3|fig4|fig5|timing|comm|ablation|rff>\n\
+         sweep flags:  --experiment <{SWEEP_EXPERIMENTS}>\n\
          \u{20}             --full --pjrt --seed <S>\n\
          central flags: --nodes <J> --samples <N> --seed <S>"
     );
@@ -214,6 +225,13 @@ fn cmd_sweep(args: &[String]) -> i32 {
             let rows = experiments::rff_sweep::run(10, 40, dims, 30, backend.as_ref(), seed);
             println!("{}", experiments::rff_sweep::table(&rows));
         }
+        "topk" => {
+            let ks: &[usize] = if full { &[1, 2, 3, 4, 6] } else { &[1, 2, 3] };
+            let (nodes, samples, iters) = if full { (10, 40, 200) } else { (6, 16, 80) };
+            let rows =
+                experiments::topk::run(nodes, samples, ks, iters, backend.as_ref(), seed);
+            println!("{}", experiments::topk::table(&rows));
+        }
         "ablation" => {
             let d = experiments::ablation::degenerate(5, 15, 40, backend.as_ref(), 23);
             println!("{}", experiments::ablation::degenerate_table(&d));
@@ -236,7 +254,10 @@ fn cmd_sweep(args: &[String]) -> i32 {
             println!("{}", experiments::ablation::init_table(&i));
         }
         other => {
-            eprintln!("unknown experiment '{other}'");
+            eprintln!(
+                "unknown experiment '{other}'\n\
+                 USAGE: dkpca sweep --experiment <{SWEEP_EXPERIMENTS}> [--full] [--pjrt] [--seed <S>]"
+            );
             return 2;
         }
     }

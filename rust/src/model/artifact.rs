@@ -298,6 +298,78 @@ mod tests {
     }
 
     #[test]
+    fn truncation_variants_are_typed_not_panics() {
+        // Below the fixed header the codec can say "truncated" outright;
+        // past it, the checksum (over the shortened body) fails first.
+        // Both must be typed errors — never a slice-index panic.
+        let model = toy_model(Kernel::Rbf { gamma: 0.5 });
+        let bytes = encode(&model).unwrap();
+        for cut in 0..16usize.min(bytes.len()) {
+            assert!(
+                matches!(decode(&bytes[..cut]), Err(ModelError::Format(_))),
+                "sub-header cut at {cut} must be Format"
+            );
+        }
+        for cut in [20usize, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                matches!(
+                    decode(&bytes[..cut]),
+                    Err(ModelError::Format(_) | ModelError::Checksum)
+                ),
+                "cut at {cut} must be Format or Checksum"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_body_with_valid_checksum_returns_format() {
+        // Re-stamp a valid checksum over a truncated body so decode
+        // gets past the integrity check and the *reader* must catch the
+        // missing bytes (the truncated-buffer error path proper).
+        let model = toy_model(Kernel::Rbf { gamma: 0.5 });
+        let bytes = encode(&model).unwrap();
+        let body_len = bytes.len() - 8;
+        for keep in [17usize, 40, body_len / 2, body_len - 1] {
+            let mut cut = bytes[..keep].to_vec();
+            cut.extend_from_slice(&fnv1a(&bytes[..keep]).to_le_bytes());
+            match decode(&cut) {
+                Err(ModelError::Format(msg)) => {
+                    assert!(
+                        msg.contains("truncated") || msg.contains("trailing"),
+                        "keep {keep}: unexpected Format message '{msg}'"
+                    );
+                }
+                other => panic!("keep {keep}: expected Format, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn corrupted_checksum_returns_checksum_variant() {
+        // Flip bits in the stored checksum itself (body intact).
+        let model = toy_model(Kernel::Rbf { gamma: 0.5 });
+        let mut bytes = encode(&model).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF;
+        assert_eq!(decode(&bytes), Err(ModelError::Checksum));
+    }
+
+    #[test]
+    fn unknown_version_returns_version_variant() {
+        // Version 0 (below current) and a high unknown version both
+        // surface as ModelError::Version carrying the stored value.
+        for v in [0u32, 7, u32::MAX] {
+            let model = toy_model(Kernel::Rbf { gamma: 0.5 });
+            let mut bytes = encode(&model).unwrap();
+            bytes[4..8].copy_from_slice(&v.to_le_bytes());
+            let n = bytes.len();
+            let sum = fnv1a(&bytes[..n - 8]);
+            bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+            assert_eq!(decode(&bytes), Err(ModelError::Version(v)));
+        }
+    }
+
+    #[test]
     fn bad_magic_rejected() {
         let model = toy_model(Kernel::Rbf { gamma: 0.5 });
         let mut bytes = encode(&model).unwrap();

@@ -125,6 +125,20 @@ impl DkpcaModel {
         DkpcaModel { kernel: *kernel, nodes }
     }
 
+    /// Assemble a model from per-node training data and k-column dual
+    /// coefficient matrices (`coeffs[j]` pairs with `xs[j]`; one column
+    /// per extracted component, as the multik drivers produce).
+    pub fn from_coeff_parts(kernel: &Kernel, xs: &[Matrix], coeffs: &[Matrix]) -> DkpcaModel {
+        assert_eq!(xs.len(), coeffs.len(), "one coefficient matrix per node dataset");
+        let nodes = xs
+            .iter()
+            .zip(coeffs)
+            .enumerate()
+            .map(|(j, (x, c))| NodeComponent::from_training(j, x, c.clone(), kernel))
+            .collect();
+        DkpcaModel { kernel: *kernel, nodes }
+    }
+
     pub fn n_nodes(&self) -> usize {
         self.nodes.len()
     }

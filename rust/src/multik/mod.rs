@@ -1,0 +1,344 @@
+//! S13 — multi-component decentralized training: top-k subspaces by
+//! Hotelling deflation of the consensus-ADMM pass.
+//!
+//! Alg. 1 extracts the leading projection direction only. This
+//! subsystem runs K successive passes: after pass `c` converges, every
+//! node deflates its local and cross Gram blocks with the consensus
+//! projection in dual coordinates (see
+//! [`crate::admm::NodeState::deflate_and_reseed`]), re-seeds, and runs the next
+//! pass on the deflated operator — whose top direction is the next
+//! principal component. Each node accumulates a k-column `alpha`
+//! matrix that exports through the existing model artifact, serve
+//! engine, and RFF projector unchanged.
+//!
+//! [`MultiKpcaSolver`] wraps the sequential [`DkpcaSolver`];
+//! `coordinator::run_decentralized_multik` runs the same node code on
+//! real parallel actors with a deflation exchange round (one
+//! `Payload::Converged` per directed edge) between passes. The two
+//! drivers stay bit-identical per component, exactly like the
+//! single-component path — asserted by rust/tests/multik.rs.
+
+use crate::admm::{DkpcaSolver, SetupExchange};
+use crate::backend::ComputeBackend;
+use crate::data::NoiseModel;
+use crate::kernels::{Kernel, RffMap};
+use crate::linalg::Matrix;
+use crate::model::DkpcaModel;
+use crate::topology::Graph;
+
+/// Outcome of a k-component DKPCA run.
+pub struct MultiKpcaResult {
+    /// Per-node dual coefficients, one `N_j x k` matrix per node;
+    /// column `c` is pass `c`'s converged component *banked back in
+    /// original dual coordinates* (K-metric Gram-Schmidt against the
+    /// earlier columns — see `NodeState::bank_component`), not the raw
+    /// deflated-coordinate alpha.
+    pub alphas: Vec<Matrix>,
+    /// Iterations each component pass ran (the decentralized stop rule
+    /// decides per pass).
+    pub per_component_iterations: Vec<usize>,
+    /// Whether each pass stopped on the `tol` criterion.
+    pub converged: Vec<bool>,
+    /// Iteration-protocol floats (§4.2) plus the `N` floats per
+    /// directed edge each deflation exchange moves.
+    pub comm_floats: u64,
+    /// One-time setup-exchange floats (see `DkpcaResult::setup_floats`).
+    pub setup_floats: u64,
+}
+
+/// Sequential driver for top-k extraction: K deflated single-component
+/// passes over one shared network state.
+pub struct MultiKpcaSolver {
+    pub inner: DkpcaSolver,
+    pub k: usize,
+    /// Deflation mutates the Grams irreversibly, so a solver supports
+    /// exactly one [`MultiKpcaSolver::run`].
+    ran: bool,
+}
+
+impl MultiKpcaSolver {
+    /// Build the network exactly as [`DkpcaSolver::new`] does.
+    pub fn new(
+        xs: &[Matrix],
+        graph: &Graph,
+        kernel: &Kernel,
+        cfg: &crate::admm::AdmmConfig,
+        noise: NoiseModel,
+        noise_seed: u64,
+        k: usize,
+    ) -> MultiKpcaSolver {
+        let native = crate::backend::NativeBackend;
+        Self::new_with_backend(xs, graph, kernel, cfg, noise, noise_seed, k, &native)
+    }
+
+    /// Build with setup Gram assembly routed through `backend`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_with_backend(
+        xs: &[Matrix],
+        graph: &Graph,
+        kernel: &Kernel,
+        cfg: &crate::admm::AdmmConfig,
+        noise: NoiseModel,
+        noise_seed: u64,
+        k: usize,
+        backend: &dyn ComputeBackend,
+    ) -> MultiKpcaSolver {
+        assert!(k >= 1, "need at least one component");
+        let inner =
+            DkpcaSolver::new_with_backend(xs, graph, kernel, cfg, noise, noise_seed, backend);
+        MultiKpcaSolver { inner, k, ran: false }
+    }
+
+    /// Run all K passes: solve, bank the converged component, exchange
+    /// converged alphas (N floats per directed edge), deflate, re-seed,
+    /// repeat. Single-use: deflation rewrites the Gram state, so a
+    /// second call would extract components of the already-deflated
+    /// operator while looking like a fresh run — build a new solver
+    /// instead (panics on reuse).
+    pub fn run(&mut self, backend: &dyn ComputeBackend) -> MultiKpcaResult {
+        assert!(!self.ran, "MultiKpcaSolver::run is single-use: deflation consumed the Grams");
+        self.ran = true;
+        let mut per_component_iterations = Vec::with_capacity(self.k);
+        let mut converged = Vec::with_capacity(self.k);
+        for c in 0..self.k {
+            let res = self.inner.run(backend);
+            per_component_iterations.push(res.iterations);
+            converged.push(res.converged);
+            for node in self.inner.nodes.iter_mut() {
+                node.bank_component();
+            }
+            if c + 1 < self.k {
+                // Deflation exchange: every node ships its converged
+                // alpha (N floats) to each neighbor, then all deflate.
+                let all: Vec<Vec<f64>> =
+                    self.inner.nodes.iter().map(|n| n.alpha.clone()).collect();
+                for node in self.inner.nodes.iter_mut() {
+                    self.inner.comm_floats +=
+                        (node.neighbors.len() * node.n) as u64;
+                    let received: Vec<(usize, Vec<f64>)> = node
+                        .neighbors
+                        .iter()
+                        .map(|&l| (l, all[l].clone()))
+                        .collect();
+                    node.deflate_and_reseed(&received, c + 1);
+                }
+            }
+        }
+        MultiKpcaResult {
+            alphas: self.alpha_matrices(),
+            per_component_iterations,
+            converged,
+            comm_floats: self.inner.comm_floats,
+            setup_floats: self.inner.setup_floats,
+        }
+    }
+
+    /// The banked per-node coefficient matrices (`N_j x
+    /// n_components_done`, original dual coordinates).
+    fn alpha_matrices(&self) -> Vec<Matrix> {
+        self.inner
+            .nodes
+            .iter()
+            .map(|node| {
+                let k = node.components.len();
+                Matrix::from_fn(node.n, k, |i, c| node.components[c][i])
+            })
+            .collect()
+    }
+
+    /// Freeze the run into a servable k-column [`DkpcaModel`]: same
+    /// support-set contract as [`DkpcaSolver::to_model`] (raw data, or
+    /// `z(X_j)` with a linear kernel in feature-space mode), with the
+    /// accumulated component columns as dual coefficients. Call after
+    /// [`MultiKpcaSolver::run`].
+    pub fn to_model(&self) -> DkpcaModel {
+        let coeffs = self.alpha_matrices();
+        match self.inner.cfg.setup {
+            SetupExchange::RawData => {
+                let xs: Vec<Matrix> =
+                    self.inner.nodes.iter().map(|n| n.x.clone()).collect();
+                DkpcaModel::from_coeff_parts(&self.inner.kernel, &xs, &coeffs)
+            }
+            SetupExchange::RffFeatures { .. } => {
+                let zs: Vec<Matrix> = self
+                    .inner
+                    .nodes
+                    .iter()
+                    .map(|n| n.zx.clone().expect("feature mode stores zx"))
+                    .collect();
+                DkpcaModel::from_coeff_parts(&Kernel::Linear, &zs, &coeffs)
+            }
+        }
+    }
+
+    /// The shared feature map in `SetupExchange::RffFeatures` mode (see
+    /// [`DkpcaSolver::rff_map`]).
+    pub fn rff_map(&self) -> Option<RffMap> {
+        self.inner.rff_map()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::AdmmConfig;
+    use crate::backend::NativeBackend;
+    use crate::central::{central_kpca, mean_subspace_affinity};
+    use crate::data::synth::{blob_centers, sample_blobs, BlobSpec};
+    use crate::data::Rng;
+
+    const K: Kernel = Kernel::Rbf { gamma: 0.1 };
+
+    fn blob_network(j: usize, n: usize, seed: u64) -> Vec<Matrix> {
+        let spec = BlobSpec::default();
+        let centers = blob_centers(&spec, seed);
+        let mut rng = Rng::new(seed + 1);
+        (0..j)
+            .map(|_| sample_blobs(&spec, &centers, n, None, &mut rng).0)
+            .collect()
+    }
+
+    #[test]
+    fn k1_matches_single_component_solver() {
+        let xs = blob_network(4, 10, 3);
+        let graph = Graph::ring(4, 1);
+        let cfg = AdmmConfig { max_iters: 6, ..Default::default() };
+        let mut single = DkpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0);
+        let sres = single.run(&NativeBackend);
+        let mut multi = MultiKpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0, 1);
+        let mres = multi.run(&NativeBackend);
+        assert_eq!(mres.per_component_iterations, vec![6]);
+        assert_eq!(mres.comm_floats, sres.comm_floats, "k=1 adds no deflation traffic");
+        for (m, a) in mres.alphas.iter().zip(&sres.alphas) {
+            assert_eq!(m.cols(), 1);
+            assert_eq!(&m.col(0), a, "k=1 column is the single-component alpha");
+        }
+    }
+
+    #[test]
+    fn components_are_k_orthogonal_per_node() {
+        // Banking maps each pass's dual back to original coordinates by
+        // a K-metric Gram-Schmidt, so the exported per-node columns are
+        // exactly K-orthogonal (to rounding), whatever the dynamics did.
+        let xs = blob_network(4, 14, 5);
+        let graph = Graph::complete(4);
+        let cfg = AdmmConfig { max_iters: 40, ..Default::default() };
+        let mut solver = MultiKpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0, 3);
+        let res = solver.run(&NativeBackend);
+        for (node, coeffs) in solver.inner.nodes.iter().zip(&res.alphas) {
+            let kc = crate::kernels::center_gram(&crate::kernels::gram_sym(&K, &node.x));
+            for c in 0..3 {
+                let kac = crate::linalg::ops::matvec(&kc, &coeffs.col(c));
+                let norm_c = crate::linalg::ops::dot(&coeffs.col(c), &kac).abs().sqrt();
+                for d0 in 0..c {
+                    let cross = crate::linalg::ops::dot(&coeffs.col(d0), &kac).abs();
+                    let norm_d = {
+                        let kad = crate::linalg::ops::matvec(&kc, &coeffs.col(d0));
+                        crate::linalg::ops::dot(&coeffs.col(d0), &kad).abs().sqrt()
+                    };
+                    assert!(
+                        cross < 1e-8 * (norm_c * norm_d).max(1e-6),
+                        "node {}: components {c} and {d0} not K-orthogonal ({cross})",
+                        node.id
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deflated_components_track_central_subspace() {
+        // Top-2 needs data with two strong components: a 4-class blob
+        // mixture (the k-th component of a c-cluster RBF Gram is only
+        // well-separated for k < c). Sphere z-normalisation because
+        // deflation flattens the spectrum (see DESIGN.md §Multi-
+        // component training); validated against a numpy reference
+        // implementation of the same pipeline.
+        let spec = BlobSpec { n_classes: 4, ..Default::default() };
+        let centers = blob_centers(&spec, 13);
+        let mut rng = Rng::new(14);
+        let xs: Vec<Matrix> = (0..4)
+            .map(|_| sample_blobs(&spec, &centers, 32, None, &mut rng).0)
+            .collect();
+        let graph = Graph::complete(4);
+        let cfg = AdmmConfig {
+            max_iters: 500,
+            tol: 1e-6,
+            z_norm: crate::admm::ZNorm::Sphere,
+            ..Default::default()
+        };
+        let mut solver = MultiKpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0, 2);
+        let res = solver.run(&NativeBackend);
+        let central = central_kpca(&xs, &K);
+        let aff = mean_subspace_affinity(&res.alphas, &xs, &central, 2, &K);
+        assert!(aff > 0.9, "top-2 affinity unexpectedly low: {aff}");
+    }
+
+    #[test]
+    fn to_model_exports_k_columns() {
+        let xs = blob_network(3, 10, 11);
+        let graph = Graph::ring(3, 1);
+        let cfg = AdmmConfig { max_iters: 4, ..Default::default() };
+        let mut solver = MultiKpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0, 3);
+        let res = solver.run(&NativeBackend);
+        let model = solver.to_model();
+        assert_eq!(model.n_nodes(), 3);
+        for (j, comp) in model.nodes.iter().enumerate() {
+            assert_eq!(comp.n_components(), 3);
+            assert_eq!(comp.support, xs[j]);
+            assert_eq!(comp.coeffs, res.alphas[j]);
+        }
+    }
+
+    #[test]
+    fn rff_mode_exports_feature_space_topk_model() {
+        let xs = blob_network(3, 10, 13);
+        let graph = Graph::ring(3, 1);
+        let cfg = AdmmConfig {
+            max_iters: 3,
+            setup: SetupExchange::RffFeatures { dim: 32, seed: 4 },
+            ..Default::default()
+        };
+        let mut solver = MultiKpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0, 2);
+        let res = solver.run(&NativeBackend);
+        let model = solver.to_model();
+        assert_eq!(model.kernel, Kernel::Linear);
+        let map = solver.rff_map().expect("rff mode exposes the shared map");
+        for (j, comp) in model.nodes.iter().enumerate() {
+            assert_eq!(comp.support, map.features(&xs[j]));
+            assert_eq!(comp.coeffs, res.alphas[j]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "single-use")]
+    fn rerun_is_rejected() {
+        // A second run() would silently extract components of the
+        // already-deflated operator — refuse instead.
+        let xs = blob_network(3, 8, 19);
+        let graph = Graph::ring(3, 1);
+        let cfg = AdmmConfig { max_iters: 2, ..Default::default() };
+        let mut solver = MultiKpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0, 2);
+        let _ = solver.run(&NativeBackend);
+        let _ = solver.run(&NativeBackend);
+    }
+
+    #[test]
+    fn deflation_traffic_accounted() {
+        // k passes add (k-1) deflation exchanges of N floats per
+        // directed edge on top of the §4.2 iteration traffic.
+        let (j, n, iters, k) = (5usize, 8usize, 2usize, 3usize);
+        let xs = blob_network(j, n, 17);
+        let graph = Graph::ring(j, 1);
+        let cfg = AdmmConfig { max_iters: iters, ..Default::default() };
+        let mut solver = MultiKpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0, k);
+        let res = solver.run(&NativeBackend);
+        let directed = (j * 2) as u64;
+        let per_iter = directed * (3 * n) as u64;
+        let deflate = directed * n as u64;
+        assert_eq!(
+            res.comm_floats,
+            per_iter * (iters * k) as u64 + deflate * (k - 1) as u64
+        );
+    }
+}
