@@ -1,31 +1,97 @@
 //! Bench: S1 linalg microbenchmarks — the perf-pass instrument for the
 //! L3 hot paths (GEMM throughput, Gram assembly, eigensolve, the ADMM
-//! per-iteration ops at hot shapes).
+//! per-iteration ops at hot shapes), plus the serial-vs-pool GEMM
+//! trajectory, emitted machine-readably to `BENCH_gemm.json`.
 //!
 //!     cargo bench --bench linalg_micro
+//!
+//! Env knobs: `DKPCA_THREADS` sizes the pool;
+//! `DKPCA_BENCH_GEMM_SIZES=512,2048` trims the trajectory sizes.
 
 use dkpca::backend::{ComputeBackend, NativeBackend};
 use dkpca::data::Rng;
 use dkpca::kernels::{center_gram, gram_sym, Kernel};
-use dkpca::linalg::{eigen_sym, matmul, matmul_nt, Matrix};
+use dkpca::linalg::{eigen_sym, matmul, matmul_nt, par_matmul_nt, pool, Matrix};
 use dkpca::metrics::Stopwatch;
 
 fn rand_matrix(r: usize, c: usize, rng: &mut Rng) -> Matrix {
     Matrix::from_fn(r, c, |_, _| rng.gauss())
 }
 
-fn time<T>(label: &str, flops: f64, reps: usize, mut f: impl FnMut() -> T) {
+fn time_secs<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
     // Warm up once, then time.
     let _ = f();
     let sw = Stopwatch::start();
     for _ in 0..reps {
         std::hint::black_box(f());
     }
-    let secs = sw.elapsed_secs() / reps as f64;
+    sw.elapsed_secs() / reps as f64
+}
+
+fn time<T>(label: &str, flops: f64, reps: usize, f: impl FnMut() -> T) {
+    let secs = time_secs(reps, f);
     if flops > 0.0 {
         println!("{label:<42} {:>9.3} ms   {:>7.2} GFLOP/s", secs * 1e3, flops / secs / 1e9);
     } else {
         println!("{label:<42} {:>9.3} ms", secs * 1e3);
+    }
+}
+
+/// Serial vs pool-parallel `matmul_nt` at the trajectory sizes; writes
+/// `BENCH_gemm.json` (sizes, threads, GFLOP/s, speedup) so the perf
+/// trajectory is machine-readable run over run.
+fn gemm_trajectory(rng: &mut Rng) {
+    let threads = pool::configured_threads();
+    let sizes: Vec<usize> = match std::env::var("DKPCA_BENCH_GEMM_SIZES") {
+        Err(_) => vec![512, 2048, 4096],
+        Ok(s) => {
+            // Dropped entries must be loud: a silent fall-through to
+            // the default re-introduces the expensive 4096 point the
+            // trim knob exists to avoid.
+            let mut sizes = Vec::new();
+            for tok in s.split(',') {
+                match tok.trim().parse::<usize>() {
+                    Ok(n) if n >= 1 => sizes.push(n),
+                    _ => eprintln!("ignoring bad DKPCA_BENCH_GEMM_SIZES entry '{tok}'"),
+                }
+            }
+            if sizes.is_empty() {
+                eprintln!("DKPCA_BENCH_GEMM_SIZES='{s}' has no usable sizes; using defaults");
+                vec![512, 2048, 4096]
+            } else {
+                sizes
+            }
+        }
+    };
+    let mut entries = Vec::new();
+    for &n in &sizes {
+        let a = rand_matrix(n, n, rng);
+        let b = rand_matrix(n, n, rng);
+        let flops = 2.0 * (n as f64).powi(3);
+        let reps = if n <= 512 { 3 } else { 1 };
+        let serial = time_secs(reps, || matmul_nt(&a, &b));
+        let par = time_secs(reps, || par_matmul_nt(&a, &b));
+        let (sg, pg) = (flops / serial / 1e9, flops / par / 1e9);
+        let speedup = serial / par;
+        println!(
+            "matmul_nt {n:>4}x{n:<4} serial {sg:>6.2} GFLOP/s   pool({threads}) {pg:>6.2} \
+             GFLOP/s   x{speedup:.2}"
+        );
+        entries.push(format!(
+            "{{\"size\": {n}, \"serial_secs\": {serial:.6}, \"parallel_secs\": {par:.6}, \
+             \"serial_gflops\": {sg:.3}, \"parallel_gflops\": {pg:.3}, \
+             \"speedup\": {speedup:.3}}}"
+        ));
+    }
+    let json = format!(
+        "{{\"bench\": \"par_matmul_nt\", \"threads\": {threads}, \"band_rows\": {}, \
+         \"results\": [{}]}}\n",
+        pool::PAR_BAND_ROWS,
+        entries.join(", ")
+    );
+    match std::fs::write("BENCH_gemm.json", &json) {
+        Ok(()) => println!("wrote BENCH_gemm.json"),
+        Err(e) => eprintln!("could not write BENCH_gemm.json: {e}"),
     }
 }
 
@@ -78,4 +144,7 @@ fn main() {
     };
     let c = rng.gauss_vec(500);
     time("z_step dn=500 (native)", 0.0, 50, || backend.z_step(&g500, &c));
+
+    // Serial vs pool-parallel GEMM trajectory -> BENCH_gemm.json.
+    gemm_trajectory(&mut rng);
 }

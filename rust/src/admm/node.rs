@@ -38,8 +38,8 @@ fn gram_centered_via(
     }
 }
 use crate::linalg::eigen::eigen_sym;
-use crate::linalg::ops::{dot, matvec, normalize};
-use crate::linalg::Matrix;
+use crate::linalg::ops::{dot, normalize, par_matvec};
+use crate::linalg::{pool, Matrix};
 
 use super::config::{AdmmConfig, ZNorm};
 
@@ -73,9 +73,17 @@ impl SpectralGram {
     }
 
     /// `V f(lambda) V^T` with directions below `cutoff` dropped.
+    ///
+    /// Output rows are banded through the compute pool at large `n`
+    /// (the setup/deflation rebuild hot spot): for a fixed element the
+    /// kept modes accumulate in ascending-`k` order exactly as the
+    /// serial loop does, so the operator is bit-identical for any
+    /// thread count.
     fn apply_spectrum(&self, cutoff: f64, f: impl Fn(f64) -> f64) -> Matrix {
         let n = self.values.len();
         let mut out = Matrix::zeros(n, n);
+        let mut kept: Vec<usize> = Vec::new();
+        let mut weights: Vec<f64> = Vec::new();
         for k in 0..n {
             let lam = self.values[k];
             if lam.abs() <= cutoff {
@@ -85,18 +93,32 @@ impl SpectralGram {
             if !g.is_finite() {
                 continue;
             }
-            let v = self.vectors.col(k);
-            for i in 0..n {
-                let vi = v[i] * g;
-                if vi == 0.0 {
-                    continue;
-                }
-                let row = out.row_mut(i);
-                for (jj, &vj) in v.iter().enumerate() {
-                    row[jj] += vi * vj;
+            kept.push(k);
+            weights.push(g);
+        }
+        if kept.is_empty() {
+            return out;
+        }
+        // Mode-major copies of the kept eigenvectors: contiguous
+        // streams for the rank-one accumulation below.
+        let vt = Matrix::from_fn(kept.len(), n, |t, i| self.vectors[(i, kept[t])]);
+        let accumulate = |r0: usize, band: &mut [f64]| {
+            for (bi, row) in band.chunks_mut(n).enumerate() {
+                let i = r0 + bi;
+                for (t, &w) in weights.iter().enumerate() {
+                    let vrow = vt.row(t);
+                    let vi = vrow[i] * w;
+                    if vi == 0.0 {
+                        continue;
+                    }
+                    for (jj, r) in row.iter_mut().enumerate() {
+                        *r += vi * vrow[jj];
+                    }
                 }
             }
-        }
+        };
+        let worth_it = 2.0 * (kept.len() * n * n) as f64 >= pool::PAR_MIN_FLOPS;
+        pool::par_row_chunks_if(worth_it, out.as_mut_slice(), n, pool::PAR_BAND_ROWS, &accumulate);
         out
     }
 
@@ -137,16 +159,25 @@ fn seed_alpha(
 }
 
 /// Rank-one Hotelling update `M <- M - (u u^T) * inv` (the one
-/// deflation kernel every Gram-block update shares).
+/// deflation kernel every Gram-block update shares). Row-banded over
+/// the compute pool at large sizes; elementwise, so bit-identical for
+/// any thread count.
 fn rank_one_deflate(m: &mut Matrix, u: &[f64], inv: f64) {
     debug_assert_eq!(m.rows(), u.len());
-    for i in 0..m.rows() {
-        let ui = u[i] * inv;
-        let row = m.row_mut(i);
-        for (j, r) in row.iter_mut().enumerate() {
-            *r -= ui * u[j];
-        }
+    let cols = m.cols();
+    if m.rows() == 0 || cols == 0 {
+        return;
     }
+    let apply = |r0: usize, band: &mut [f64]| {
+        for (bi, row) in band.chunks_mut(cols).enumerate() {
+            let ui = u[r0 + bi] * inv;
+            for (j, r) in row.iter_mut().enumerate() {
+                *r -= ui * u[j];
+            }
+        }
+    };
+    let worth_it = 2.0 * (m.rows() * cols) as f64 >= pool::PAR_MIN_FLOPS;
+    pool::par_row_chunks_if(worth_it, m.as_mut_slice(), cols, pool::PAR_BAND_ROWS, &apply);
 }
 
 /// Full per-node state.
@@ -376,7 +407,7 @@ impl NodeState {
             assert_eq!(alpha_l.len(), self.contrib_sizes[pos], "size mismatch from {l}");
             // c_l = K_l^+ (bcol / S) + (rho_lk / S) alpha_l
             let scaled: Vec<f64> = bcol_l.iter().map(|v| v / s_k).collect();
-            let mut cl = crate::linalg::ops::matvec(&self.contrib_kinv[pos], &scaled);
+            let mut cl = par_matvec(&self.contrib_kinv[pos], &scaled);
             let w = rho_lk / s_k;
             for (ci, &ai) in cl.iter_mut().zip(alpha_l) {
                 *ci += w * ai;
@@ -481,7 +512,7 @@ impl NodeState {
         let scale = self.kc0.max_abs().max(1.0);
         let mut col = self.alpha.clone();
         for prev in &self.components {
-            let kprev = matvec(&self.kc0, prev);
+            let kprev = par_matvec(&self.kc0, prev);
             let s = dot(prev, &kprev);
             if s.abs() <= scale * 1e-12 {
                 continue;
@@ -551,7 +582,7 @@ impl NodeState {
             let n_l = self.contrib_sizes[pos];
             assert_eq!(duals[pos].len(), n_l, "alpha length mismatch at cset pos {pos}");
             let diag = self.gz.block(offs[pos], offs[pos] + n_l, offs[pos], offs[pos] + n_l);
-            let c = matvec(&diag, duals[pos]);
+            let c = par_matvec(&diag, duals[pos]);
             let s = dot(duals[pos], &c);
             if s.abs() > diag.max_abs().max(1.0) * 1e-12 {
                 let inv = 1.0 / s.abs().sqrt();
@@ -562,7 +593,7 @@ impl NodeState {
         }
 
         // Rank-one Hotelling step on the group Gram: G <- G - t t^T / s.
-        let t = matvec(&self.gz, &v);
+        let t = par_matvec(&self.gz, &v);
         let s = dot(&v, &t);
         let self_pos = self.cset.iter().position(|&l| l == self.id);
         if s.abs() > self.gz.max_abs().max(1.0) * 1e-12 {
@@ -578,7 +609,7 @@ impl NodeState {
                 // Without the self constraint the own data is not in
                 // the group; fall back to deflating by the own dual.
                 None => {
-                    let c = matvec(&self.kc, &self.alpha);
+                    let c = par_matvec(&self.kc, &self.alpha);
                     let s_own = dot(&self.alpha, &c);
                     if s_own.abs() > self.kc.max_abs().max(1.0) * 1e-12 {
                         rank_one_deflate(&mut self.kc, &c, 1.0 / s_own);

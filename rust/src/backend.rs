@@ -2,9 +2,14 @@
 //! through this trait so the coordinator can run identically on the
 //! native linalg substrate (S1) or on the AOT-compiled PJRT artifacts
 //! (S8, `runtime::PjrtBackend`). Integration tests cross-check the two.
+//!
+//! The native hot ops run on the shared compute pool: Gram assembly
+//! through the parallel GEMM, and the `admm_step`/`z_step`/
+//! `power_iter_step` matvecs banded per output row — all bit-identical
+//! to the serial kernels for any thread count (rust/tests/threads.rs).
 
 use crate::kernels::{center_gram_inplace, gram, Kernel};
-use crate::linalg::ops::{dot, matvec, normalize};
+use crate::linalg::ops::{dot, matvec, normalize, par_matvec};
 use crate::linalg::{matmul, Matrix};
 
 /// The four compute graphs of DESIGN.md's artifact set.
@@ -47,7 +52,9 @@ impl ComputeBackend for NativeBackend {
     }
 
     fn z_step(&self, g: &Matrix, c: &[f64]) -> (Vec<f64>, f64) {
-        let mut s = matvec(g, c);
+        // The (DN x DN) group-Gram matvec is the z-host's dominant
+        // per-iteration cost — banded through the pool.
+        let mut s = par_matvec(g, c);
         let norm2 = dot(c, &s).max(0.0);
         if norm2 > 1.0 {
             let inv = 1.0 / norm2.sqrt();
@@ -79,8 +86,8 @@ impl ComputeBackend for NativeBackend {
             }
             rhs[i] = acc;
         }
-        let alpha = matvec(ainv, &rhs);
-        let kalpha = matvec(kc, &alpha);
+        let alpha = par_matvec(ainv, &rhs);
+        let kalpha = par_matvec(kc, &alpha);
         let mut b_next = b.clone();
         for i in 0..n {
             let ka = kalpha[i];
@@ -95,7 +102,7 @@ impl ComputeBackend for NativeBackend {
     }
 
     fn power_iter_step(&self, k: &Matrix, v: &[f64]) -> (Vec<f64>, f64) {
-        let mut w = matvec(k, v);
+        let mut w = par_matvec(k, v);
         let rayleigh = dot(v, &w);
         normalize(&mut w);
         (w, rayleigh)

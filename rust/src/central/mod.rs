@@ -8,8 +8,8 @@
 //! * the similarity metric.
 
 use crate::kernels::{center_gram, gram, gram_sym, Kernel};
-use crate::linalg::ops::dot;
-use crate::linalg::{eigen_sym, matmul, top_eig, Matrix};
+use crate::linalg::ops::{dot, par_matvec};
+use crate::linalg::{eigen_sym, par_matmul, top_eig, Matrix};
 use crate::model::{DkpcaModel, NodeComponent};
 
 /// Central kPCA solution over the full dataset.
@@ -114,13 +114,9 @@ pub fn similarity(
 ) -> f64 {
     let k_cross = center_gram(&gram(kernel, x_w, &central.x));
     let k_w = center_gram(&gram_sym(kernel, x_w));
-    let num = dot(alpha_w, &crate::linalg::ops::matvec(&k_cross, &central.alpha)).abs();
-    let den_w = dot(alpha_w, &crate::linalg::ops::matvec(&k_w, alpha_w)).abs();
-    let den_g = dot(
-        &central.alpha,
-        &crate::linalg::ops::matvec(&central.kc, &central.alpha),
-    )
-    .abs();
+    let num = dot(alpha_w, &par_matvec(&k_cross, &central.alpha)).abs();
+    let den_w = dot(alpha_w, &par_matvec(&k_w, alpha_w)).abs();
+    let den_g = dot(&central.alpha, &par_matvec(&central.kc, &central.alpha)).abs();
     num / (den_w * den_g).sqrt().max(1e-30)
 }
 
@@ -179,7 +175,12 @@ struct CentralSubspace {
 impl CentralSubspace {
     fn new(central: &CentralKpca, k: usize) -> CentralSubspace {
         let b = central.topk_coeffs(k);
-        let g_g = matmul(&matmul(&b.transpose(), &central.kc), &b);
+        // Associate as B^T (K_c B): the dominant (N x N) @ (N x k)
+        // product has an N-row output the pool can band — a k-row
+        // output (B^T K_c first) is below one band and would always
+        // run serially. The closing B^T product is a tiny k x k.
+        let kcb = par_matmul(&central.kc, &b);
+        let g_g = par_matmul(&b.transpose(), &kcb);
         CentralSubspace { g_g_inv_sqrt: inv_sqrt_sym(&g_g), b }
     }
 }
@@ -196,12 +197,16 @@ fn subspace_affinity_against(
     assert_eq!(coeffs_w.cols(), k, "need one coefficient column per component");
     let k_w = center_gram(&gram_sym(kernel, x_w));
     let k_cross = center_gram(&gram(kernel, x_w, &central.x));
-    let g_w = matmul(&matmul(&coeffs_w.transpose(), &k_w), coeffs_w);
-    let c = matmul(&matmul(&coeffs_w.transpose(), &k_cross), &sub.b);
-    let m = matmul(&matmul(&inv_sqrt_sym(&g_w), &c), &sub.g_g_inv_sqrt);
+    // Gram-matrix-first association: the wide products get n_w-row
+    // outputs the pool can band (see CentralSubspace::new).
+    let kwa = par_matmul(&k_w, coeffs_w);
+    let g_w = par_matmul(&coeffs_w.transpose(), &kwa);
+    let kcb = par_matmul(&k_cross, &sub.b);
+    let c = par_matmul(&coeffs_w.transpose(), &kcb);
+    let m = par_matmul(&par_matmul(&inv_sqrt_sym(&g_w), &c), &sub.g_g_inv_sqrt);
     // Singular values of the k x k overlap via eigen of M^T M; rounding
     // can push a cosine epsilon past 1, so clamp.
-    let eig = eigen_sym(&matmul(&m.transpose(), &m));
+    let eig = eigen_sym(&par_matmul(&m.transpose(), &m));
     let total: f64 = eig.values.iter().map(|&l| l.max(0.0).sqrt().min(1.0)).sum();
     total / k as f64
 }

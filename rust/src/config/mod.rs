@@ -5,6 +5,7 @@
 use crate::admm::{AdmmConfig, Init, SetupExchange, ZNorm};
 use crate::data::NoiseModel;
 use crate::kernels::Kernel;
+use crate::topology::{Graph, TopologyError};
 use crate::util::json::Json;
 
 /// Dataset family for an experiment.
@@ -25,6 +26,74 @@ pub enum TopoSpec {
     Complete,
     Star,
     Random { avg_degree: f64 },
+    /// Explicit undirected edge list — the only family that can
+    /// describe an arbitrary (possibly invalid) deployment graph, so it
+    /// is exactly where the typed connectivity validation earns its
+    /// keep.
+    Edges { edges: Vec<(usize, usize)> },
+}
+
+impl TopoSpec {
+    /// Materialise the topology for `nodes` nodes and validate
+    /// Assumption 1 (connected, every node has a neighbor) with a
+    /// typed [`TopologyError`]. The decentralized stopping rule lags
+    /// decisions by the graph diameter, which silently never settles on
+    /// a disconnected graph — so an invalid topology must be rejected
+    /// here, at config load, not discovered as a hang at run time.
+    pub fn build(&self, nodes: usize, seed: u64) -> Result<Graph, TopologyError> {
+        if nodes < 2 {
+            return Err(TopologyError::TooFewNodes { nodes, min: 2 });
+        }
+        let graph = match *self {
+            TopoSpec::Ring { k } => {
+                // Deliberate: an oversized k is CLAMPED, not rejected —
+                // the historical build_env contract that lets one config
+                // sweep node counts without re-tuning k (a clamped ring
+                // is still a valid, connected topology, unlike the
+                // disconnected graphs this validation exists to refuse).
+                // After the clamp only nodes == 2 has no valid ring at
+                // all, which is what RingWraps reports.
+                let k = k.min((nodes - 1) / 2).max(1);
+                if 2 * k >= nodes {
+                    return Err(TopologyError::RingWraps { nodes, k });
+                }
+                Graph::ring(nodes, k)
+            }
+            TopoSpec::Complete => Graph::complete(nodes),
+            TopoSpec::Star => Graph::star(nodes),
+            TopoSpec::Random { avg_degree } => Graph::random_connected(nodes, avg_degree, seed),
+            TopoSpec::Edges { ref edges } => Graph::try_from_edges(nodes, edges)?,
+        };
+        graph.validate_connected()?;
+        Ok(graph)
+    }
+}
+
+/// Compute-substrate knobs (the shared worker pool of
+/// `linalg::pool`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ComputeSpec {
+    /// Pool width for the parallel linalg tier. `None`: the
+    /// `DKPCA_THREADS` env var, else `available_parallelism`. Results
+    /// are bit-identical at any width — this is purely a performance
+    /// knob.
+    pub threads: Option<usize>,
+    /// Request-level workers `serve::ProjectionEngine::
+    /// with_default_workers` spawns. `None`: half the compute budget.
+    pub serve_workers: Option<usize>,
+}
+
+impl ComputeSpec {
+    /// Install the knobs into the process-wide pool. Applies to every
+    /// subsequent parallel op (the pool grows workers on demand).
+    pub fn apply(&self) {
+        if let Some(t) = self.threads {
+            crate::linalg::pool::set_threads(t);
+        }
+        if let Some(w) = self.serve_workers {
+            crate::linalg::pool::set_serve_workers(w);
+        }
+    }
 }
 
 /// Full experiment configuration.
@@ -38,6 +107,8 @@ pub struct ExperimentConfig {
     pub topo: TopoSpec,
     pub admm: AdmmConfig,
     pub noise: NoiseModel,
+    /// Worker-pool sizing for the parallel compute substrate.
+    pub compute: ComputeSpec,
     /// Run the decentralized protocol on parallel OS threads
     /// (coordinator) instead of the sequential reference driver.
     pub parallel: bool,
@@ -64,6 +135,7 @@ impl Default for ExperimentConfig {
                 ..AdmmConfig::default()
             },
             noise: NoiseModel::None,
+            compute: ComputeSpec::default(),
             parallel: false,
             use_pjrt: false,
             seed: 0,
@@ -94,6 +166,7 @@ impl ExperimentConfig {
             "topo",
             "admm",
             "noise",
+            "compute",
             "parallel",
             "use_pjrt",
             "seed",
@@ -131,6 +204,15 @@ impl ExperimentConfig {
         if let Some(a) = j.get("admm") {
             cfg.admm = parse_admm(a, cfg.admm.clone())?;
         }
+        if let Some(c) = j.get("compute") {
+            cfg.compute = parse_compute(c)?;
+        }
+        // Typed topology validation at the construction boundary: the
+        // diameter-lagged decentralized stop rule silently misbehaves
+        // on a disconnected graph, so reject it here.
+        cfg.topo
+            .build(cfg.nodes, cfg.seed)
+            .map_err(|e| format!("invalid topology: {e}"))?;
         Ok(cfg)
     }
 
@@ -165,8 +247,45 @@ fn parse_topo(j: &Json) -> Result<TopoSpec, String> {
         Some("random") => Ok(TopoSpec::Random {
             avg_degree: j.get("avg_degree").and_then(Json::as_f64).unwrap_or(4.0),
         }),
+        Some("edges") => {
+            let arr = j
+                .get("edges")
+                .and_then(Json::as_arr)
+                .ok_or("edges topo needs an \"edges\" array")?;
+            let mut edges = Vec::with_capacity(arr.len());
+            for pair in arr {
+                let p = pair.as_arr().ok_or("edges entries are [a, b]")?;
+                if p.len() != 2 {
+                    return Err("edges entries are [a, b]".into());
+                }
+                edges.push((
+                    p[0].as_usize().ok_or("bad edge endpoint")?,
+                    p[1].as_usize().ok_or("bad edge endpoint")?,
+                ));
+            }
+            Ok(TopoSpec::Edges { edges })
+        }
         other => Err(format!("unknown topo kind {other:?}")),
     }
+}
+
+fn parse_compute(j: &Json) -> Result<ComputeSpec, String> {
+    let mut spec = ComputeSpec::default();
+    if let Some(v) = j.get("threads") {
+        let t = v.as_usize().ok_or("compute threads must be a number")?;
+        if t == 0 {
+            return Err("compute threads must be >= 1".into());
+        }
+        spec.threads = Some(t);
+    }
+    if let Some(v) = j.get("serve_workers") {
+        let w = v.as_usize().ok_or("compute serve_workers must be a number")?;
+        if w == 0 {
+            return Err("compute serve_workers must be >= 1".into());
+        }
+        spec.serve_workers = Some(w);
+    }
+    Ok(spec)
 }
 
 fn parse_noise(j: &Json) -> Result<NoiseModel, String> {
@@ -366,6 +485,75 @@ mod tests {
             let json = format!(r#"{{"admm": {{"setup": {{"kind": "rff", "dim": {bad}}}}}}}"#);
             assert!(ExperimentConfig::from_json(&json).is_err(), "dim {bad} accepted");
         }
+    }
+
+    #[test]
+    fn compute_spec_parses_and_validates() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"compute": {"threads": 4, "serve_workers": 2}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.compute, ComputeSpec { threads: Some(4), serve_workers: Some(2) });
+        let dflt = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(dflt.compute, ComputeSpec::default());
+        assert!(ExperimentConfig::from_json(r#"{"compute": {"threads": 0}}"#).is_err());
+        assert!(
+            ExperimentConfig::from_json(r#"{"compute": {"serve_workers": "many"}}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn edges_topology_parses_and_builds() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"nodes": 3, "topo": {"kind": "edges", "edges": [[0, 1], [1, 2]]}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.topo, TopoSpec::Edges { edges: vec![(0, 1), (1, 2)] });
+        let g = cfg.topo.build(cfg.nodes, cfg.seed).unwrap();
+        assert_eq!(g.edge_count(), 2);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn disconnected_topology_rejected_at_load_with_typed_error() {
+        // 4 nodes in two components: the diameter-lagged stop rule
+        // would never settle — reject at config load.
+        let err = ExperimentConfig::from_json(
+            r#"{"nodes": 4, "topo": {"kind": "edges", "edges": [[0, 1], [2, 3]]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("disconnected"), "{err}");
+        // The typed error is observable through TopoSpec::build too.
+        let spec = TopoSpec::Edges { edges: vec![(0, 1), (2, 3)] };
+        assert_eq!(
+            spec.build(4, 0).unwrap_err(),
+            crate::topology::TopologyError::Disconnected { reached: 2, nodes: 4 }
+        );
+        // Isolated node (never mentioned in the edge list).
+        let err = ExperimentConfig::from_json(
+            r#"{"nodes": 3, "topo": {"kind": "edges", "edges": [[0, 1]]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("no neighbors"), "{err}");
+        // Out-of-range endpoint.
+        let err = ExperimentConfig::from_json(
+            r#"{"nodes": 3, "topo": {"kind": "edges", "edges": [[0, 7]]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("bad edge"), "{err}");
+    }
+
+    #[test]
+    fn too_few_nodes_rejected_at_load() {
+        for json in [r#"{"nodes": 0}"#, r#"{"nodes": 1}"#] {
+            let err = ExperimentConfig::from_json(json).unwrap_err();
+            assert!(err.contains("at least"), "{err}");
+        }
+        // nodes = 2 on the default ring would wrap onto itself.
+        let err = ExperimentConfig::from_json(r#"{"nodes": 2}"#).unwrap_err();
+        assert!(err.contains("wrap"), "{err}");
+        assert!(ExperimentConfig::from_json(r#"{"nodes": 3}"#).is_ok());
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub mod topk;
 
 use crate::admm::AdmmConfig;
 use crate::central::CentralKpca;
-use crate::config::{DataSpec, ExperimentConfig, TopoSpec};
+use crate::config::{DataSpec, ExperimentConfig};
 use crate::data::mnist_like::{self, PAPER_DIGITS};
 use crate::data::synth::{blob_centers, sample_blobs, BlobSpec};
 use crate::data::{partition, Rng, Strategy};
@@ -58,13 +58,12 @@ pub fn build_env(cfg: &ExperimentConfig) -> Env {
                 .collect()
         }
     };
-    let graph = match cfg.topo {
-        // Clamp k so tiny test networks stay valid rings.
-        TopoSpec::Ring { k } => Graph::ring(j, k.min((j - 1) / 2).max(1)),
-        TopoSpec::Complete => Graph::complete(j),
-        TopoSpec::Star => Graph::star(j),
-        TopoSpec::Random { avg_degree } => Graph::random_connected(j, avg_degree, cfg.seed),
-    };
+    // The same typed validation the JSON loader applies (a
+    // hand-constructed config may bypass from_json).
+    let graph = cfg
+        .topo
+        .build(j, cfg.seed)
+        .unwrap_or_else(|e| panic!("invalid topology: {e}"));
     Env { xs, graph, kernel: cfg.kernel() }
 }
 

@@ -6,8 +6,8 @@
 //! native/PJRT cross-checks in `rust/tests/` compare like against like.
 
 use super::Kernel;
-use crate::linalg::gemm::matmul_nt;
-use crate::linalg::Matrix;
+use crate::linalg::gemm::par_matmul_nt;
+use crate::linalg::{pool, Matrix};
 
 /// Gram block `K[i, j] = K(x_i, y_j)` for `x` (n x m), `y` (p x m).
 pub fn gram(kernel: &Kernel, x: &Matrix, y: &Matrix) -> Matrix {
@@ -44,19 +44,28 @@ pub fn gram_sym(kernel: &Kernel, x: &Matrix) -> Matrix {
 }
 
 /// RBF Gram via one GEMM + rank-1 corrections (mirrors the Pallas tile).
+/// Both the GEMM and the exp pass run over the compute pool at large
+/// sizes; each element's arithmetic is band-independent, so the result
+/// is bit-identical for any thread count.
 fn rbf_gram_fast(x: &Matrix, y: &Matrix, gamma: f64) -> Matrix {
-    let xy = matmul_nt(x, y); // x @ y^T
+    let mut out = par_matmul_nt(x, y); // x @ y^T
+    let n = out.cols();
+    if out.rows() == 0 || n == 0 {
+        return out;
+    }
     let xn: Vec<f64> = (0..x.rows()).map(|i| sq_norm(x.row(i))).collect();
     let yn: Vec<f64> = (0..y.rows()).map(|j| sq_norm(y.row(j))).collect();
-    let mut out = xy;
-    for i in 0..out.rows() {
-        let xi = xn[i];
-        let row = out.row_mut(i);
-        for (j, v) in row.iter_mut().enumerate() {
-            let d2 = (xi + yn[j] - 2.0 * *v).max(0.0);
-            *v = (-gamma * d2).exp();
+    let expand = |r0: usize, band: &mut [f64]| {
+        for (bi, row) in band.chunks_mut(n).enumerate() {
+            let xi = xn[r0 + bi];
+            for (j, v) in row.iter_mut().enumerate() {
+                let d2 = (xi + yn[j] - 2.0 * *v).max(0.0);
+                *v = (-gamma * d2).exp();
+            }
         }
-    }
+    };
+    let worth_it = out.rows() * n >= pool::PAR_MIN_ELEMS;
+    pool::par_row_chunks_if(worth_it, out.as_mut_slice(), n, pool::PAR_BAND_ROWS, &expand);
     out
 }
 
@@ -67,6 +76,7 @@ fn sq_norm(v: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::gemm::matmul_nt;
 
     fn data(n: usize, m: usize, seed: u64) -> Matrix {
         let mut s = seed | 1;

@@ -14,8 +14,8 @@
 //! `Z_a Z_b^T` from transmitted features.
 
 use crate::data::Rng;
-use crate::linalg::gemm::matmul_nt;
-use crate::linalg::Matrix;
+use crate::linalg::gemm::par_matmul_nt;
+use crate::linalg::{pool, Matrix};
 
 /// A sampled random-Fourier feature map approximating an RBF kernel.
 pub struct RffMap {
@@ -48,23 +48,33 @@ impl RffMap {
     }
 
     /// Feature-map a dataset: returns Z with rows `z(x_i)` (n x D).
+    /// The `x W^T` GEMM and the cosine pass both run over the compute
+    /// pool at large sizes (bit-identical for any thread count — the
+    /// per-element arithmetic is band-independent).
     pub fn features(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols(), self.w.cols(), "feature dim mismatch");
-        let proj = matmul_nt(x, &self.w); // (n x D): rows x_i . w_d
-        let scale = (2.0 / self.dim() as f64).sqrt();
-        let mut z = proj;
-        for i in 0..z.rows() {
-            let row = z.row_mut(i);
-            for (d, v) in row.iter_mut().enumerate() {
-                *v = scale * (*v + self.b[d]).cos();
-            }
+        let mut z = par_matmul_nt(x, &self.w); // (n x D): rows x_i . w_d
+        if z.rows() == 0 {
+            return z;
         }
+        let scale = (2.0 / self.dim() as f64).sqrt();
+        let d = z.cols();
+        let wave = |_r0: usize, band: &mut [f64]| {
+            for row in band.chunks_mut(d) {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = scale * (*v + self.b[j]).cos();
+                }
+            }
+        };
+        let worth_it = z.rows() * d >= pool::PAR_MIN_ELEMS;
+        pool::par_row_chunks_if(worth_it, z.as_mut_slice(), d, pool::PAR_BAND_ROWS, &wave);
         z
     }
 
-    /// Approximate Gram block from transmitted features: `Z_a Z_b^T`.
+    /// Approximate Gram block from transmitted features: `Z_a Z_b^T`
+    /// (pool-parallel — the widest products of the RFF setup mode).
     pub fn gram_from_features(za: &Matrix, zb: &Matrix) -> Matrix {
-        matmul_nt(za, zb)
+        par_matmul_nt(za, zb)
     }
 
     /// Convenience: approximate `K(x, y)` directly.

@@ -1,12 +1,20 @@
-//! Blocked matrix multiplication.
+//! Blocked matrix multiplication — serial kernels plus the pool-
+//! parallel tier.
 //!
 //! Cache-blocked, transpose-packed GEMM. For the paper's problem sizes
 //! (Gram matrices up to a few thousand) this stays within a small factor
 //! of a tuned BLAS while keeping the crate dependency-free. The kernel
 //! packs the RHS by columns so the innermost loop is two contiguous
 //! streams (auto-vectorisable).
+//!
+//! The `par_*` entry points run the *same* band kernel over disjoint
+//! row bands of the output through [`pool`]: for a fixed output element
+//! the k-blocks accumulate in the same order whatever the row banding,
+//! so the parallel results are bit-identical to the serial kernel for
+//! any thread count. Ops below [`pool::PAR_MIN_FLOPS`] stay serial.
 
 use super::matrix::Matrix;
+use super::pool;
 
 /// Tile edge used by the blocked kernel (elements, not bytes). 64x64
 /// f64 tiles = 32 KiB per operand tile, comfortably inside L1+L2.
@@ -32,56 +40,6 @@ fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
         tail += a[j] * b[j];
     }
     (s0 + s1) + (s2 + s3) + tail
-}
-
-/// `A @ B`.
-pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
-    let mut out = Matrix::zeros(a.rows(), b.cols());
-    matmul_into(a, b, &mut out);
-    out
-}
-
-/// `A @ B` into a caller-provided output (hot path: allocation-free
-/// apart from the packed RHS scratch).
-pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
-    assert_eq!((out.rows(), out.cols()), (m, n), "output shape mismatch");
-    out.as_mut_slice().fill(0.0);
-    // Pack B^T so each (j, :) stream is contiguous.
-    let bt = b.transpose();
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
-        for j0 in (0..n).step_by(BLOCK) {
-            let j1 = (j0 + BLOCK).min(n);
-            for k0 in (0..k).step_by(BLOCK) {
-                let k1 = (k0 + BLOCK).min(k);
-                for i in i0..i1 {
-                    let arow = &a.row(i)[k0..k1];
-                    let mut j = j0;
-                    while j + 4 <= j1 {
-                        let q = dot4(
-                            arow,
-                            &bt.row(j)[k0..k1],
-                            &bt.row(j + 1)[k0..k1],
-                            &bt.row(j + 2)[k0..k1],
-                            &bt.row(j + 3)[k0..k1],
-                        );
-                        out[(i, j)] += q[0];
-                        out[(i, j + 1)] += q[1];
-                        out[(i, j + 2)] += q[2];
-                        out[(i, j + 3)] += q[3];
-                        j += 4;
-                    }
-                    while j < j1 {
-                        out[(i, j)] += dot_unrolled(arow, &bt.row(j)[k0..k1]);
-                        j += 1;
-                    }
-                }
-            }
-        }
-    }
 }
 
 /// 1x4 micro-kernel: one `a` stream against four `b` streams — each
@@ -115,19 +73,64 @@ fn dot4(arow: &[f64], b0: &[f64], b1: &[f64], b2: &[f64], b3: &[f64]) -> [f64; 4
     [s0 + t0, s1 + t1, s2 + t2, s3 + t3]
 }
 
-/// `A @ B^T` without materialising the transpose (both row-major).
-pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols(), b.cols(), "matmul_nt inner-dim mismatch");
-    let (m, k, n) = (a.rows(), a.cols(), b.rows());
-    let mut out = Matrix::zeros(m, n);
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
+/// Rows `[r0, r1)` of `A @ B` against the pre-packed `bt = B^T`,
+/// overwritten into `out_band` (the matching row slice of the output).
+/// Shared by the serial and pool-parallel entry points, so the two are
+/// literally the same arithmetic.
+fn matmul_rows_packed(a: &Matrix, bt: &Matrix, out_band: &mut [f64], r0: usize, r1: usize) {
+    let k = a.cols();
+    let n = bt.rows();
+    debug_assert_eq!(out_band.len(), (r1 - r0) * n);
+    out_band.fill(0.0);
+    for i0 in (r0..r1).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(r1);
         for j0 in (0..n).step_by(BLOCK) {
             let j1 = (j0 + BLOCK).min(n);
             for k0 in (0..k).step_by(BLOCK) {
                 let k1 = (k0 + BLOCK).min(k);
                 for i in i0..i1 {
                     let arow = &a.row(i)[k0..k1];
+                    let orow = &mut out_band[(i - r0) * n..(i - r0) * n + n];
+                    let mut j = j0;
+                    while j + 4 <= j1 {
+                        let q = dot4(
+                            arow,
+                            &bt.row(j)[k0..k1],
+                            &bt.row(j + 1)[k0..k1],
+                            &bt.row(j + 2)[k0..k1],
+                            &bt.row(j + 3)[k0..k1],
+                        );
+                        orow[j] += q[0];
+                        orow[j + 1] += q[1];
+                        orow[j + 2] += q[2];
+                        orow[j + 3] += q[3];
+                        j += 4;
+                    }
+                    while j < j1 {
+                        orow[j] += dot_unrolled(arow, &bt.row(j)[k0..k1]);
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Rows `[r0, r1)` of `A @ B^T` (both row-major, no packing needed).
+fn matmul_nt_rows(a: &Matrix, b: &Matrix, out_band: &mut [f64], r0: usize, r1: usize) {
+    let k = a.cols();
+    let n = b.rows();
+    debug_assert_eq!(out_band.len(), (r1 - r0) * n);
+    out_band.fill(0.0);
+    for i0 in (r0..r1).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(r1);
+        for j0 in (0..n).step_by(BLOCK) {
+            let j1 = (j0 + BLOCK).min(n);
+            for k0 in (0..k).step_by(BLOCK) {
+                let k1 = (k0 + BLOCK).min(k);
+                for i in i0..i1 {
+                    let arow = &a.row(i)[k0..k1];
+                    let orow = &mut out_band[(i - r0) * n..(i - r0) * n + n];
                     let mut j = j0;
                     while j + 4 <= j1 {
                         let q = dot4(
@@ -137,20 +140,96 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
                             &b.row(j + 2)[k0..k1],
                             &b.row(j + 3)[k0..k1],
                         );
-                        out[(i, j)] += q[0];
-                        out[(i, j + 1)] += q[1];
-                        out[(i, j + 2)] += q[2];
-                        out[(i, j + 3)] += q[3];
+                        orow[j] += q[0];
+                        orow[j + 1] += q[1];
+                        orow[j + 2] += q[2];
+                        orow[j + 3] += q[3];
                         j += 4;
                     }
                     while j < j1 {
-                        out[(i, j)] += dot_unrolled(arow, &b.row(j)[k0..k1]);
+                        orow[j] += dot_unrolled(arow, &b.row(j)[k0..k1]);
                         j += 1;
                     }
                 }
             }
         }
     }
+}
+
+/// FLOP count of an `(m x k) @ (k x n)` product.
+fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+/// `A @ B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let mut out = Matrix::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// `A @ B` into a caller-provided output (hot path: allocation-free
+/// apart from the packed RHS scratch).
+pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, n) = (a.rows(), b.cols());
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    assert_eq!((out.rows(), out.cols()), (m, n), "output shape mismatch");
+    // Pack B^T so each (j, :) stream is contiguous.
+    let bt = b.transpose();
+    matmul_rows_packed(a, &bt, out.as_mut_slice(), 0, m);
+}
+
+/// `A @ B^T` without materialising the transpose (both row-major).
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt inner-dim mismatch");
+    let mut out = Matrix::zeros(a.rows(), b.rows());
+    matmul_nt_rows(a, b, out.as_mut_slice(), 0, a.rows());
+    out
+}
+
+/// `A @ B` through the shared compute pool. Bit-identical to [`matmul`]
+/// for any thread count (disjoint row bands, identical per-element
+/// accumulation order); serial below [`pool::PAR_MIN_FLOPS`].
+pub fn par_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let mut out = Matrix::zeros(a.rows(), b.cols());
+    par_matmul_into(a, b, &mut out);
+    out
+}
+
+/// `A @ B` into a caller-provided output through the pool (see
+/// [`par_matmul`]).
+pub fn par_matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    assert_eq!((out.rows(), out.cols()), (m, n), "output shape mismatch");
+    if n == 0 {
+        return;
+    }
+    let bt = b.transpose();
+    let band = |r0: usize, out_band: &mut [f64]| {
+        matmul_rows_packed(a, &bt, out_band, r0, r0 + out_band.len() / n);
+    };
+    let worth_it = gemm_flops(m, k, n) >= pool::PAR_MIN_FLOPS;
+    pool::par_row_chunks_if(worth_it, out.as_mut_slice(), n, pool::PAR_BAND_ROWS, &band);
+}
+
+/// `A @ B^T` through the shared compute pool — the Gram-assembly hot
+/// path (bit-identical to [`matmul_nt`] for any thread count; serial
+/// below [`pool::PAR_MIN_FLOPS`]).
+pub fn par_matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt inner-dim mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let mut out = Matrix::zeros(m, n);
+    if n == 0 {
+        return out;
+    }
+    let band = |r0: usize, out_band: &mut [f64]| {
+        matmul_nt_rows(a, b, out_band, r0, r0 + out_band.len() / n);
+    };
+    let worth_it = gemm_flops(m, k, n) >= pool::PAR_MIN_FLOPS;
+    pool::par_row_chunks_if(worth_it, out.as_mut_slice(), n, pool::PAR_BAND_ROWS, &band);
     out
 }
 
@@ -256,5 +335,47 @@ mod tests {
         for (x, y) in got.as_slice().iter().zip(want.as_slice()) {
             assert!((x - y).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn par_matmul_bits_match_serial_above_threshold() {
+        // 213 x 167 @ 167 x 190 = 13.5 MFLOP: well past PAR_MIN_FLOPS,
+        // spans several 64-row bands with a ragged tail.
+        let a = pseudo_random(213, 167, 9);
+        let b = pseudo_random(167, 190, 10);
+        let serial = matmul(&a, &b);
+        let par = par_matmul(&a, &b);
+        assert_eq!(serial.as_slice(), par.as_slice(), "parallel GEMM must be bit-identical");
+    }
+
+    #[test]
+    fn par_matmul_nt_bits_match_serial() {
+        let a = pseudo_random(213, 167, 11);
+        let b = pseudo_random(201, 167, 12);
+        let serial = matmul_nt(&a, &b);
+        let par = par_matmul_nt(&a, &b);
+        assert_eq!(serial.as_slice(), par.as_slice());
+    }
+
+    #[test]
+    fn par_small_ops_take_the_serial_path() {
+        let a = pseudo_random(9, 5, 13);
+        let b = pseudo_random(5, 4, 14);
+        let serial = matmul(&a, &b);
+        let par = par_matmul(&a, &b);
+        assert_eq!(serial.as_slice(), par.as_slice());
+        let empty = par_matmul(&Matrix::zeros(0, 3), &Matrix::zeros(3, 2));
+        assert_eq!(empty.rows(), 0);
+        assert_eq!(empty.cols(), 2);
+    }
+
+    #[test]
+    fn par_matmul_into_overwrites_dirty_buffers() {
+        let a = pseudo_random(130, 140, 15);
+        let b = pseudo_random(140, 150, 16);
+        let want = matmul(&a, &b);
+        let mut out = Matrix::full(130, 150, f64::NAN);
+        par_matmul_into(&a, &b, &mut out);
+        assert_eq!(want.as_slice(), out.as_slice());
     }
 }

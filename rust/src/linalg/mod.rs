@@ -2,6 +2,14 @@
 //!
 //! `f64` throughout; the PJRT boundary (`runtime::exec`) converts to
 //! `f32`. See DESIGN.md §System inventory.
+//!
+//! Two tiers: the serial blocked kernels (`matmul`, `matmul_nt`,
+//! `ops::matvec`) and a pool-parallel tier (`par_matmul`,
+//! `par_matmul_nt`, `ops::par_matvec`) that runs the same band kernels
+//! over disjoint output row bands through the process-wide [`pool`] —
+//! bit-identical for any thread count, falling back to the serial
+//! kernel below `pool::PAR_MIN_FLOPS`. See DESIGN.md §Parallel compute
+//! substrate.
 
 pub mod cholesky;
 pub mod eigen;
@@ -9,11 +17,12 @@ pub mod gemm;
 pub mod matrix;
 pub mod ops;
 pub mod pinv;
+pub mod pool;
 pub mod power;
 
 pub use cholesky::Cholesky;
 pub use eigen::{eigen_sym, top_eig, EigenSym};
-pub use gemm::{matmul, matmul_into, matmul_nt};
+pub use gemm::{matmul, matmul_into, matmul_nt, par_matmul, par_matmul_into, par_matmul_nt};
 pub use matrix::Matrix;
 pub use pinv::pinv_sym;
 pub use power::{power_iteration, PowerResult};

@@ -1,6 +1,13 @@
 //! Element-wise and vector operations on [`Matrix`] and `&[f64]`.
+//!
+//! `par_matvec`/`par_matvec_into` run the same per-row kernel over
+//! disjoint row bands of `y` through the shared compute pool
+//! ([`crate::linalg::pool`]); every `y[i]` is computed by exactly one
+//! band with the identical arithmetic, so the results are bit-identical
+//! to the serial kernel for any thread count.
 
 use super::matrix::Matrix;
+use super::pool;
 
 /// `a + b` (shapes must match).
 pub fn add(a: &Matrix, b: &Matrix) -> Matrix {
@@ -52,8 +59,14 @@ pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
 pub fn matvec_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.cols(), x.len());
     assert_eq!(a.rows(), y.len());
-    for i in 0..a.rows() {
-        let row = a.row(i);
+    matvec_rows(a, x, y, 0);
+}
+
+/// Rows `[r0, r0 + y_band.len())` of `A x` into `y_band` — the band
+/// kernel shared by the serial and pool-parallel entry points.
+fn matvec_rows(a: &Matrix, x: &[f64], y_band: &mut [f64], r0: usize) {
+    for (bi, yi) in y_band.iter_mut().enumerate() {
+        let row = a.row(r0 + bi);
         // 4 independent accumulators keep multiple FMAs in flight
         // (perf pass, EXPERIMENTS.md §Perf L3).
         let chunks = row.len() / 4;
@@ -69,8 +82,29 @@ pub fn matvec_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
         for j in chunks * 4..row.len() {
             tail += row[j] * x[j];
         }
-        y[i] = (s0 + s1) + (s2 + s3) + tail;
+        *yi = (s0 + s1) + (s2 + s3) + tail;
     }
+}
+
+/// `A x` through the shared compute pool (bit-identical to [`matvec`]
+/// for any thread count; serial below [`pool::PAR_MIN_FLOPS`]).
+pub fn par_matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    let mut y = vec![0.0; a.rows()];
+    par_matvec_into(a, x, &mut y);
+    y
+}
+
+/// `A x` into a caller-provided buffer through the pool (see
+/// [`par_matvec`]).
+pub fn par_matvec_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.cols(), x.len());
+    assert_eq!(a.rows(), y.len());
+    let band = |r0: usize, y_band: &mut [f64]| {
+        matvec_rows(a, x, y_band, r0);
+    };
+    let worth_it = 2.0 * a.rows() as f64 * a.cols() as f64 >= pool::PAR_MIN_FLOPS;
+    pool::par_row_chunks_if(worth_it, y, 1, pool::PAR_BAND_ROWS, &band);
 }
 
 /// `A^T x` without materialising the transpose.
@@ -155,6 +189,26 @@ mod tests {
         let n = normalize(&mut v);
         assert!((n - 5.0).abs() < 1e-15);
         assert!((norm2(&v) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn par_matvec_bits_match_serial() {
+        // 1100 x 950 = 2.09 MFLOP: past the parallel threshold, ragged
+        // final band.
+        let mut s = 41u64;
+        let a = Matrix::from_fn(1100, 950, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as f64 / u64::MAX as f64) - 0.5
+        });
+        let x: Vec<f64> = (0..950).map(|i| (i as f64).sin()).collect();
+        let serial = matvec(&a, &x);
+        let par = par_matvec(&a, &x);
+        assert_eq!(serial, par, "parallel matvec must be bit-identical");
+        // Small op: serial fallback, same answer.
+        let b = m22(1.0, 2.0, 3.0, 4.0);
+        assert_eq!(par_matvec(&b, &[1.0, 1.0]), matvec(&b, &[1.0, 1.0]));
     }
 
     #[test]

@@ -1,0 +1,492 @@
+//! S1.5 — the process-wide compute pool behind the parallel linalg
+//! tier.
+//!
+//! One lazily-initialized pool of OS worker threads is shared by every
+//! parallel numeric op in the crate (GEMM row bands, matvec bands,
+//! elementwise kernel passes) *and* budgeted against the serve-side
+//! request workers, so those two families together stay near the
+//! configured width instead of oversubscribing the host. The parallel
+//! coordinator still runs one OS thread per network node by design
+//! (the paper's "truly parallel architecture" fidelity claim); its
+//! node threads spend most of their life blocked on message
+//! collection, and the numeric work they submit lands on this one
+//! pool, so compute-active threads remain bounded by the pool width
+//! plus the submitters of in-flight tasks.
+//!
+//! Sizing, in priority order: [`set_threads`] (the config/CLI knob) >
+//! the `DKPCA_THREADS` environment variable > `available_parallelism`.
+//! Workers are spawned on demand up to `threads - 1` (the submitting
+//! thread always participates, so a width-1 pool runs inline with zero
+//! threads) and parked on a condvar between tasks.
+//!
+//! Determinism contract: the pool only *schedules*; callers partition
+//! their output into disjoint fixed-size row bands whose per-element
+//! arithmetic is independent of the band split, so every result is
+//! bit-identical for any pool width — asserted end-to-end by
+//! rust/tests/threads.rs.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Minimum floating-point work before a parallel op leaves the serial
+/// kernel: below this the queue handshake costs more than the op.
+pub const PAR_MIN_FLOPS: f64 = 2.0e6;
+
+/// Minimum element count before an elementwise pass (exp/cos loops) is
+/// banded through the pool.
+pub const PAR_MIN_ELEMS: usize = 1 << 15;
+
+/// Rows per output band. Matches the GEMM tile edge so a band is a
+/// whole number of cache blocks; fixed (never derived from the thread
+/// count) so the work split itself is width-independent.
+pub const PAR_BAND_ROWS: usize = 64;
+
+/// Type-erased pointer to the caller's band closure. Soundness: a
+/// worker dereferences it only after claiming an index below `total`,
+/// which can only happen while the spawning [`ComputePool::parallel_for`]
+/// is still blocked waiting for that index to complete — so the borrow
+/// behind the pointer is alive for every dereference.
+struct RawFn(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for RawFn {}
+unsafe impl Sync for RawFn {}
+
+/// One fan-out: `total` indices handed to at most `worker_budget`
+/// helpers plus the submitting thread.
+struct Task {
+    f: RawFn,
+    total: usize,
+    /// Next unclaimed index (monotone; claims at or past `total` are
+    /// no-ops).
+    next: AtomicUsize,
+    /// Indices fully executed.
+    completed: AtomicUsize,
+    /// Pool workers still allowed to join (mutated under the queue
+    /// lock; the submitter is not counted).
+    worker_budget: AtomicUsize,
+    /// First panic payload from a band — resumed on the submitting
+    /// thread so the original message/location is not lost.
+    panicked: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl Task {
+    /// Claim and execute indices until none remain.
+    fn run_indices(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::SeqCst);
+            if i >= self.total {
+                return;
+            }
+            // SAFETY: an index below `total` was claimed, so the
+            // submitting parallel_for is still blocked in its
+            // completion wait and the closure borrow is alive (see
+            // `RawFn`).
+            let f = unsafe { &*self.f.0 };
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                // Keep the first payload; the submitter re-raises it so
+                // the original message survives. Remaining bands still
+                // run (completion counts to `total`) — wasted work on a
+                // path that is already failing, but no extra accounting.
+                let mut slot = self.panicked.lock().unwrap_or_else(|p| p.into_inner());
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            let done = self.completed.fetch_add(1, Ordering::SeqCst) + 1;
+            if done == self.total {
+                let mut flag = self.done.lock().unwrap_or_else(|p| p.into_inner());
+                *flag = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Queue + wakeup shared between the pool handle and its workers.
+struct Inner {
+    queue: Mutex<VecDeque<Arc<Task>>>,
+    work_cv: Condvar,
+    /// Set by `ComputePool::drop`; woken workers exit instead of
+    /// re-parking.
+    shutdown: std::sync::atomic::AtomicBool,
+}
+
+/// A pool of compute workers. Use [`global`] for the shared
+/// process-wide instance (never dropped); standalone instances join
+/// their workers on drop.
+pub struct ComputePool {
+    inner: Arc<Inner>,
+    /// Workers spawned so far — grown on demand, parked between tasks,
+    /// joined on drop.
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Default for ComputePool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ComputePool {
+    /// An empty pool; workers are spawned lazily by the first wide
+    /// `parallel_for`.
+    pub fn new() -> ComputePool {
+        ComputePool {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(VecDeque::new()),
+                work_cv: Condvar::new(),
+                shutdown: std::sync::atomic::AtomicBool::new(false),
+            }),
+            workers: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Run `f(0), ..., f(total - 1)` across the pool at the configured
+    /// width, returning when every index has completed. Indices are
+    /// claimed dynamically, so the *assignment* of index to thread is
+    /// nondeterministic — callers must make each index own a disjoint
+    /// slice of the output (see [`par_row_chunks`]).
+    pub fn parallel_for(&self, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.parallel_for_threads(configured_threads(), total, f);
+    }
+
+    /// [`ComputePool::parallel_for`] at an explicit width (test hook;
+    /// production code goes through the configured width).
+    pub fn parallel_for_threads(&self, threads: usize, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        if threads <= 1 || total == 1 {
+            for i in 0..total {
+                f(i);
+            }
+            return;
+        }
+        self.ensure_workers(threads - 1);
+        let task = Arc::new(Task {
+            f: RawFn(f as *const (dyn Fn(usize) + Sync)),
+            total,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            worker_budget: AtomicUsize::new(threads - 1),
+            panicked: Mutex::new(None),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut queue = self.inner.queue.lock().unwrap_or_else(|p| p.into_inner());
+            queue.push_back(task.clone());
+        }
+        self.inner.work_cv.notify_all();
+        // The submitter is a full participant: a task can never stall
+        // waiting for busy workers, and nested fan-out from inside a
+        // band completes through its own submitter (no deadlock).
+        task.run_indices();
+        {
+            let mut flag = task.done.lock().unwrap_or_else(|p| p.into_inner());
+            while !*flag {
+                flag = task.done_cv.wait(flag).unwrap_or_else(|p| p.into_inner());
+            }
+        }
+        {
+            let mut queue = self.inner.queue.lock().unwrap_or_else(|p| p.into_inner());
+            queue.retain(|t| !Arc::ptr_eq(t, &task));
+        }
+        let payload = task.panicked.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Grow the worker set to at least `want` threads.
+    fn ensure_workers(&self, want: usize) {
+        let mut workers = self.workers.lock().unwrap_or_else(|p| p.into_inner());
+        while workers.len() < want {
+            let inner = self.inner.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("dkpca-pool-{}", workers.len()))
+                .spawn(move || worker_main(inner))
+                .expect("spawn compute-pool worker");
+            workers.push(handle);
+        }
+    }
+}
+
+impl Drop for ComputePool {
+    /// Wake every parked worker and join it so standalone pools do not
+    /// leak threads. Runs only between tasks: `parallel_for` borrows
+    /// the pool, so no task can be in flight while it drops.
+    fn drop(&mut self) {
+        {
+            // Under the queue lock: a worker's shutdown check and its
+            // entry into the condvar wait are atomic w.r.t. this store,
+            // so the wakeup below cannot be lost.
+            let _queue = self.inner.queue.lock().unwrap_or_else(|p| p.into_inner());
+            self.inner.shutdown.store(true, Ordering::SeqCst);
+        }
+        self.inner.work_cv.notify_all();
+        let mut workers = self.workers.lock().unwrap_or_else(|p| p.into_inner());
+        for handle in workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_main(inner: Arc<Inner>) {
+    loop {
+        let task = {
+            let mut queue = inner.queue.lock().unwrap_or_else(|p| p.into_inner());
+            'find: loop {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                for t in queue.iter() {
+                    if t.next.load(Ordering::SeqCst) < t.total {
+                        let budget = t.worker_budget.load(Ordering::SeqCst);
+                        if budget > 0 {
+                            // Participation slots are claimed under the
+                            // queue lock, so plain load/store is safe.
+                            t.worker_budget.store(budget - 1, Ordering::SeqCst);
+                            break 'find t.clone();
+                        }
+                    }
+                }
+                queue = inner.work_cv.wait(queue).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        task.run_indices();
+    }
+}
+
+/// Config/CLI override; 0 = unset.
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+/// Serve-worker override; 0 = unset (derive from the compute budget).
+static SERVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Environment/hardware default, resolved once. An unusable
+/// `DKPCA_THREADS` value cannot hard-error from deep inside a linalg
+/// op the way `--threads`/`compute.threads` do at their parse
+/// boundaries, but it must not *silently* fall back either — a run
+/// the operator meant to pin would otherwise proceed at full host
+/// width unnoticed.
+fn default_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        if let Ok(v) = std::env::var("DKPCA_THREADS") {
+            match v.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => return n,
+                _ => eprintln!(
+                    "[dkpca] DKPCA_THREADS='{v}' is not a positive integer; \
+                     falling back to available_parallelism"
+                ),
+            }
+        }
+        std::thread::available_parallelism().map_or(1, |p| p.get())
+    })
+}
+
+/// The pool width in force: [`set_threads`] > `DKPCA_THREADS` >
+/// `available_parallelism`.
+pub fn configured_threads() -> usize {
+    match CONFIGURED.load(Ordering::SeqCst) {
+        0 => default_threads(),
+        n => n,
+    }
+}
+
+/// Override the pool width (config `compute.threads`, CLI `--threads`).
+/// Takes effect for every subsequent parallel op; results are
+/// bit-identical at any width, so this is purely a performance knob.
+pub fn set_threads(threads: usize) {
+    CONFIGURED.store(threads.max(1), Ordering::SeqCst);
+}
+
+/// Override the request-level serve worker count
+/// (config `compute.serve_workers`).
+pub fn set_serve_workers(workers: usize) {
+    SERVE_WORKERS.store(workers.max(1), Ordering::SeqCst);
+}
+
+/// Request-level workers `serve::ProjectionEngine::with_default_workers`
+/// spawns: the explicit override, else half the compute budget — the
+/// heavy per-request math runs on this shared pool anyway, so engine
+/// workers + pool workers together stay near the configured width
+/// instead of `2 x available_parallelism`.
+pub fn serve_worker_budget() -> usize {
+    match SERVE_WORKERS.load(Ordering::SeqCst) {
+        0 => configured_threads().div_ceil(2),
+        n => n,
+    }
+}
+
+/// The process-wide pool every parallel linalg op submits to.
+pub fn global() -> &'static ComputePool {
+    static POOL: OnceLock<ComputePool> = OnceLock::new();
+    POOL.get_or_init(ComputePool::new)
+}
+
+/// Raw pointer that may cross threads (each band touches a disjoint
+/// region).
+struct SendPtr(*mut f64);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Split `data` (row-major, `row_width` elements per row) into bands of
+/// `band_rows` rows and run `f(first_row, band)` over the global pool,
+/// each band a disjoint `&mut` slice. The band boundaries are a pure
+/// function of the shape — never of the pool width — so any
+/// band-local computation that is deterministic per row yields
+/// bit-identical results at any width.
+pub fn par_row_chunks(
+    data: &mut [f64],
+    row_width: usize,
+    band_rows: usize,
+    f: &(dyn Fn(usize, &mut [f64]) + Sync),
+) {
+    assert!(band_rows >= 1, "band_rows must be positive");
+    if data.is_empty() {
+        return;
+    }
+    assert!(row_width >= 1, "row_width must be positive for non-empty data");
+    assert_eq!(data.len() % row_width, 0, "data is not a whole number of rows");
+    let rows = data.len() / row_width;
+    let n_bands = rows.div_ceil(band_rows);
+    if n_bands <= 1 || configured_threads() <= 1 {
+        f(0, data);
+        return;
+    }
+    let ptr = SendPtr(data.as_mut_ptr());
+    let body = move |band_idx: usize| {
+        let r0 = band_idx * band_rows;
+        let r1 = (r0 + band_rows).min(rows);
+        // SAFETY: bands are disjoint row ranges of `data`, and
+        // parallel_for does not return while any band is running, so
+        // the exclusive borrow of `data` outlives every band slice.
+        let band = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(r0 * row_width), (r1 - r0) * row_width)
+        };
+        f(r0, band);
+    };
+    global().parallel_for(n_bands, &body);
+}
+
+/// [`par_row_chunks`] behind a caller-supplied worth-it predicate —
+/// the one place the "parallel above a cost threshold, else run the
+/// same band closure once over the whole slice" fallback lives, so
+/// GEMM/matvec (FLOP thresholds) and the elementwise passes (element
+/// thresholds) cannot drift apart. `parallel = false` (or an empty
+/// slice) runs `f(0, data)` inline.
+pub fn par_row_chunks_if(
+    parallel: bool,
+    data: &mut [f64],
+    row_width: usize,
+    band_rows: usize,
+    f: &(dyn Fn(usize, &mut [f64]) + Sync),
+) {
+    if parallel {
+        par_row_chunks(data, row_width, band_rows, f);
+    } else if !data.is_empty() {
+        f(0, data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let pool = ComputePool::new();
+        for threads in [1usize, 2, 5] {
+            let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+            let body = |i: usize| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            };
+            pool.parallel_for_threads(threads, hits.len(), &body);
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "index {i} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn par_row_chunks_writes_disjoint_bands() {
+        let rows = 201;
+        let width = 7;
+        let mut data = vec![0.0f64; rows * width];
+        let body = |r0: usize, band: &mut [f64]| {
+            for (bi, row) in band.chunks_mut(width).enumerate() {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = ((r0 + bi) * width + j) as f64;
+                }
+            }
+        };
+        par_row_chunks(&mut data, width, 16, &body);
+        for (idx, v) in data.iter().enumerate() {
+            assert_eq!(*v, idx as f64);
+        }
+    }
+
+    #[test]
+    fn nested_parallel_for_completes() {
+        let pool = ComputePool::new();
+        let total = AtomicUsize::new(0);
+        let outer = |_: usize| {
+            let inner_body = |_: usize| {
+                total.fetch_add(1, Ordering::SeqCst);
+            };
+            global().parallel_for_threads(2, 8, &inner_body);
+        };
+        pool.parallel_for_threads(3, 4, &outer);
+        assert_eq!(total.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn band_panic_resumes_on_the_submitter_with_its_payload() {
+        let pool = ComputePool::new();
+        let body = |i: usize| {
+            if i == 3 {
+                panic!("boom");
+            }
+        };
+        pool.parallel_for_threads(2, 8, &body);
+    }
+
+    #[test]
+    fn zero_and_one_sized_tasks_run_inline() {
+        let pool = ComputePool::new();
+        let count = AtomicUsize::new(0);
+        let body = |_: usize| {
+            count.fetch_add(1, Ordering::SeqCst);
+        };
+        pool.parallel_for_threads(4, 0, &body);
+        assert_eq!(count.load(Ordering::SeqCst), 0);
+        pool.parallel_for_threads(4, 1, &body);
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn serve_budget_is_positive() {
+        assert!(serve_worker_budget() >= 1);
+        assert!(configured_threads() >= 1);
+    }
+
+    #[test]
+    fn dropping_a_pool_joins_its_workers() {
+        let pool = ComputePool::new();
+        let count = AtomicUsize::new(0);
+        let body = |_: usize| {
+            count.fetch_add(1, Ordering::SeqCst);
+        };
+        pool.parallel_for_threads(4, 32, &body);
+        assert_eq!(count.load(Ordering::SeqCst), 32);
+        drop(pool); // must not hang or leak parked workers
+    }
+}

@@ -3,7 +3,7 @@
 //! shape is covered; see `runtime::exec`).
 
 use super::matrix::Matrix;
-use super::ops::{dot, matvec_into, normalize};
+use super::ops::{dot, normalize, par_matvec_into};
 
 /// Result of a power-iteration run.
 pub struct PowerResult {
@@ -36,7 +36,9 @@ pub fn power_iteration(a: &Matrix, max_iters: usize, tol: f64, seed: u64) -> Pow
     let mut w = vec![0.0; n];
     let mut value = 0.0;
     for it in 0..max_iters {
-        matvec_into(a, &v, &mut w);
+        // Pool-parallel at large N (the central-baseline hot loop);
+        // bit-identical to the serial matvec for any thread count.
+        par_matvec_into(a, &v, &mut w);
         value = dot(&v, &w);
         let nrm = normalize(&mut w);
         if nrm <= 1e-300 {

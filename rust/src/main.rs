@@ -19,7 +19,7 @@ use std::sync::Arc;
 use dkpca::admm::DkpcaSolver;
 use dkpca::backend::{ComputeBackend, NativeBackend};
 use dkpca::central::similarity;
-use dkpca::config::ExperimentConfig;
+use dkpca::config::{ComputeSpec, ExperimentConfig};
 use dkpca::coordinator::run_decentralized;
 use dkpca::experiments::{self, build_env, central_kpca_power};
 use dkpca::metrics::{f, Stats, Stopwatch, Table};
@@ -64,10 +64,14 @@ fn print_usage() {
          \u{20} --help, -h       this listing\n\
          \n\
          run flags:    --config <file.json> --nodes <J> --samples <N>\n\
-         \u{20}             --iters <T> --parallel --pjrt --seed <S>\n\
+         \u{20}             --iters <T> --parallel --pjrt --seed <S> --threads <T>\n\
          sweep flags:  --experiment <{SWEEP_EXPERIMENTS}>\n\
-         \u{20}             --full --pjrt --seed <S>\n\
-         central flags: --nodes <J> --samples <N> --seed <S>"
+         \u{20}             --full --pjrt --seed <S> --threads <T>\n\
+         central flags: --nodes <J> --samples <N> --seed <S> --threads <T>\n\
+         \n\
+         --threads sizes the shared compute pool (default: DKPCA_THREADS\n\
+         env var, else the host parallelism); results are bit-identical\n\
+         at any width."
     );
 }
 
@@ -81,6 +85,19 @@ fn flag<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
 
 fn has(args: &[String], key: &str) -> bool {
     args.iter().any(|a| a == key)
+}
+
+/// Parse the shared `--threads` flag. Invalid values are a hard error
+/// — the same contract as `compute.threads` in a JSON config — so a
+/// long run can never silently proceed at an unintended width.
+fn threads_flag(args: &[String]) -> Result<Option<usize>, String> {
+    match flag(args, "--threads") {
+        None => Ok(None),
+        Some(v) => match v.parse::<usize>() {
+            Ok(t) if t >= 1 => Ok(Some(t)),
+            _ => Err(format!("--threads must be a positive integer, got '{v}'")),
+        },
+    }
 }
 
 fn parse_or<T: std::str::FromStr>(s: Option<&str>, default: T) -> T {
@@ -130,17 +147,36 @@ fn cmd_run(args: &[String]) -> i32 {
     if has(args, "--pjrt") {
         cfg.use_pjrt = true;
     }
+    match threads_flag(args) {
+        Ok(Some(t)) => cfg.compute.threads = Some(t),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+    // Install the pool width before the first parallel op.
+    cfg.compute.apply();
+    // Re-validate the *effective* topology: CLI flags may have changed
+    // the node count after the config file was checked at load, and an
+    // invalid result should be the same typed exit-2 error, not a
+    // build_env panic.
+    if let Err(e) = cfg.topo.build(cfg.nodes, cfg.seed) {
+        eprintln!("config error: invalid topology: {e}");
+        return 2;
+    }
 
     let backend = make_backend(cfg.use_pjrt);
     let env = build_env(&cfg);
     eprintln!(
-        "[dkpca] J={} N_j={} |Omega|={} kernel={:?} backend={} mode={}",
+        "[dkpca] J={} N_j={} |Omega|={} kernel={:?} backend={} mode={} pool_threads={}",
         cfg.nodes,
         cfg.samples_per_node,
         env.graph.degree(0),
         env.kernel,
         backend.name(),
-        if cfg.parallel { "parallel" } else { "sequential" }
+        if cfg.parallel { "parallel" } else { "sequential" },
+        dkpca::linalg::pool::configured_threads()
     );
 
     let sw = Stopwatch::start();
@@ -193,6 +229,15 @@ fn cmd_sweep(args: &[String]) -> i32 {
     let exp = flag(args, "--experiment").unwrap_or("fig3");
     let full = has(args, "--full");
     let seed: u64 = parse_or(flag(args, "--seed"), 0);
+    // Same knob path as cmd_run so future compute settings reach
+    // sweeps too.
+    match threads_flag(args) {
+        Ok(threads) => ComputeSpec { threads, serve_workers: None }.apply(),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
     let backend = make_backend(has(args, "--pjrt"));
     match exp {
         "fig3" => {
@@ -269,6 +314,19 @@ fn cmd_central(args: &[String]) -> i32 {
     cfg.nodes = parse_or(flag(args, "--nodes"), 20);
     cfg.samples_per_node = parse_or(flag(args, "--samples"), 100);
     cfg.seed = parse_or(flag(args, "--seed"), 0);
+    // The central baseline IS the pool-parallel power-iteration hot
+    // loop, so it honors --threads like run/sweep do.
+    match threads_flag(args) {
+        Ok(threads) => ComputeSpec { threads, serve_workers: None }.apply(),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+    if let Err(e) = cfg.topo.build(cfg.nodes, cfg.seed) {
+        eprintln!("config error: invalid topology: {e}");
+        return 2;
+    }
     let env = build_env(&cfg);
     let sw = Stopwatch::start();
     let central = central_kpca_power(&env.xs, &env.kernel, 500);

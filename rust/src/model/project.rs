@@ -23,7 +23,7 @@
 
 use crate::kernels::{gram, Kernel};
 use crate::kernels::rff::RffMap;
-use crate::linalg::{matmul, Matrix};
+use crate::linalg::{par_matmul, Matrix};
 
 use super::NodeComponent;
 
@@ -53,7 +53,7 @@ pub fn project_exact(kernel: &Kernel, comp: &NodeComponent, batch: &Matrix) -> M
     );
     let r = gram(kernel, batch, &comp.support);
     let rc = oos_center(&r, &comp.col_means, comp.grand_mean);
-    matmul(&rc, &comp.coeffs)
+    par_matmul(&rc, &comp.coeffs)
 }
 
 /// Precomputed RFF fast-path state for one component (RBF only).
@@ -75,7 +75,7 @@ impl RffProjector {
         let n = z.rows();
         let k = comp.coeffs.cols();
         // w = Z^T A (D x k).
-        let w = matmul(&z.transpose(), &comp.coeffs);
+        let w = par_matmul(&z.transpose(), &comp.coeffs);
         // zbar: column means of Z (D).
         let mut zbar = vec![0.0; z.cols()];
         for i in 0..n {
@@ -128,7 +128,7 @@ impl RffProjector {
     /// Approximate projection of `batch` (m x M) -> (m x k).
     pub fn project(&self, batch: &Matrix) -> Matrix {
         let z = self.map.features(batch); // m x D
-        let mut y = matmul(&z, &self.u);
+        let mut y = par_matmul(&z, &self.u);
         for i in 0..y.rows() {
             for (c, v) in y.row_mut(i).iter_mut().enumerate() {
                 *v -= self.c0[c];

@@ -191,10 +191,16 @@ impl ProjectionEngine {
         ProjectionEngine { shared, tx: Some(tx), workers: handles }
     }
 
-    /// Pool sized to the host's parallelism.
+    /// Request-level workers budgeted against the shared compute pool
+    /// (`linalg::pool::serve_worker_budget()`: the `compute.
+    /// serve_workers` config override, else half the configured compute
+    /// width). The heavy per-request math — Gram assembly and the
+    /// projection GEMMs — runs on the shared pool regardless of which
+    /// engine worker dequeued the request, so engine workers + pool
+    /// workers stay near the configured budget instead of
+    /// oversubscribing the host at 2x `available_parallelism`.
     pub fn with_default_workers(model: DkpcaModel) -> ProjectionEngine {
-        let n = std::thread::available_parallelism().map_or(2, |p| p.get());
-        Self::new(model, n)
+        Self::new(model, crate::linalg::pool::serve_worker_budget())
     }
 
     /// The model being served.

@@ -7,6 +7,53 @@
 //! `s_total` weights in `admm::update`.
 
 use std::collections::VecDeque;
+use std::fmt;
+
+/// Typed rejection of an invalid network topology — surfaced at the
+/// config-construction boundary instead of a panic (or worse, a silent
+/// runtime misbehavior: the diameter-lagged decentralized stopping rule
+/// never settles on a disconnected graph).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TopologyError {
+    /// Assumption 1 violated: BFS from node 0 reaches only `reached` of
+    /// `nodes` nodes.
+    Disconnected { reached: usize, nodes: usize },
+    /// Alg. 1 needs `|Omega_j| >= 1`; this node has no neighbors.
+    IsolatedNode { node: usize },
+    /// Edge endpoint out of range, or a self-loop.
+    BadEdge { a: usize, b: usize, nodes: usize },
+    /// Too few nodes for the requested family.
+    TooFewNodes { nodes: usize, min: usize },
+    /// `ring(n, k)` with `2k >= n` would wrap onto itself.
+    RingWraps { nodes: usize, k: usize },
+}
+
+impl fmt::Display for TopologyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            TopologyError::Disconnected { reached, nodes } => write!(
+                f,
+                "disconnected graph: only {reached} of {nodes} nodes reachable from node 0 \
+                 (Assumption 1 requires a connected network; the diameter-lagged stop rule \
+                 never settles otherwise)"
+            ),
+            TopologyError::IsolatedNode { node } => {
+                write!(f, "node {node} has no neighbors (Alg. 1 requires |Omega_j| >= 1)")
+            }
+            TopologyError::BadEdge { a, b, nodes } => {
+                write!(f, "bad edge ({a}, {b}) for a {nodes}-node graph")
+            }
+            TopologyError::TooFewNodes { nodes, min } => {
+                write!(f, "{nodes} nodes, but the topology needs at least {min}")
+            }
+            TopologyError::RingWraps { nodes, k } => {
+                write!(f, "ring(n={nodes}, k={k}) would wrap onto itself (needs 2k < n)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TopologyError {}
 
 /// Undirected graph over nodes `0..n`.
 #[derive(Clone, Debug)]
@@ -42,6 +89,17 @@ impl Graph {
             adj[b].push(a);
         }
         Graph::from_adj(adj)
+    }
+
+    /// Like [`Graph::from_edges`] but returning a typed error instead
+    /// of panicking — the config-load path.
+    pub fn try_from_edges(n: usize, edges: &[(usize, usize)]) -> Result<Graph, TopologyError> {
+        for &(a, b) in edges {
+            if a >= n || b >= n || a == b {
+                return Err(TopologyError::BadEdge { a, b, nodes: n });
+            }
+        }
+        Ok(Graph::from_edges(n, edges))
     }
 
     /// Ring with `k` neighbors on each side (`|Omega_j| = 2k`) — the
@@ -135,11 +193,11 @@ impl Graph {
         self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
     }
 
-    /// BFS connectivity — Assumption 1 of the paper.
-    pub fn is_connected(&self) -> bool {
+    /// Nodes reachable from node 0 by BFS (0 for the empty graph).
+    fn reachable_from_zero(&self) -> usize {
         let n = self.adj.len();
         if n == 0 {
-            return true;
+            return 0;
         }
         let mut seen = vec![false; n];
         let mut q = VecDeque::from([0usize]);
@@ -154,7 +212,33 @@ impl Graph {
                 }
             }
         }
-        count == n
+        count
+    }
+
+    /// BFS connectivity — Assumption 1 of the paper.
+    pub fn is_connected(&self) -> bool {
+        let n = self.adj.len();
+        n == 0 || self.reachable_from_zero() == n
+    }
+
+    /// Typed Assumption-1 validation: at least 2 nodes, no isolated
+    /// node, every node reachable. Unlike [`Graph::is_connected`] (which
+    /// vacuously accepts the empty graph) this is the strict form the
+    /// solvers require, surfaced as a [`TopologyError`] at construction
+    /// boundaries.
+    pub fn validate_connected(&self) -> Result<(), TopologyError> {
+        let n = self.adj.len();
+        if n < 2 {
+            return Err(TopologyError::TooFewNodes { nodes: n, min: 2 });
+        }
+        if let Some(node) = (0..n).find(|&j| self.adj[j].is_empty()) {
+            return Err(TopologyError::IsolatedNode { node });
+        }
+        let reached = self.reachable_from_zero();
+        if reached != n {
+            return Err(TopologyError::Disconnected { reached, nodes: n });
+        }
+        Ok(())
     }
 
     /// Every node has at least one neighbor (required by Alg. 1's `H`).
@@ -249,6 +333,41 @@ mod tests {
         let g = Graph::from_edges(4, &[(0, 1), (2, 3)]);
         assert!(!g.is_connected());
         assert_eq!(g.diameter(), usize::MAX);
+    }
+
+    #[test]
+    fn validate_connected_reports_typed_errors() {
+        let ok = Graph::ring(6, 1);
+        assert_eq!(ok.validate_connected(), Ok(()));
+
+        let split = Graph::from_edges(5, &[(0, 1), (1, 2), (3, 4)]);
+        let err = split.validate_connected().unwrap_err();
+        assert_eq!(err, TopologyError::Disconnected { reached: 3, nodes: 5 });
+
+        let lonely = Graph::from_edges(3, &[(0, 1)]);
+        let err = lonely.validate_connected().unwrap_err();
+        assert_eq!(err, TopologyError::IsolatedNode { node: 2 });
+
+        let tiny = Graph::from_adj(vec![vec![]]);
+        let err = tiny.validate_connected().unwrap_err();
+        assert_eq!(err, TopologyError::TooFewNodes { nodes: 1, min: 2 });
+    }
+
+    #[test]
+    fn try_from_edges_rejects_bad_edges_without_panicking() {
+        assert_eq!(
+            Graph::try_from_edges(3, &[(0, 3)]).unwrap_err(),
+            TopologyError::BadEdge { a: 0, b: 3, nodes: 3 }
+        );
+        assert_eq!(
+            Graph::try_from_edges(3, &[(1, 1)]).unwrap_err(),
+            TopologyError::BadEdge { a: 1, b: 1, nodes: 3 }
+        );
+        let g = Graph::try_from_edges(3, &[(0, 1), (1, 2)]).unwrap();
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        // The error type renders a human-readable reason.
+        let msg = TopologyError::Disconnected { reached: 1, nodes: 4 }.to_string();
+        assert!(msg.contains("disconnected"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Thread-count invariance of the parallel compute substrate.
+//!
+//! The pool partitions every parallel op into fixed row bands whose
+//! per-element arithmetic is independent of the band-to-thread
+//! assignment, so every result must be bit-identical at any pool
+//! width. This file drives (a) the parallel linalg ops directly and
+//! (b) the full train -> artifact -> serve path — both drivers, raw
+//! and RFF setup exchange, k = 1 and k = 3 — at 1, 2, and 8 threads
+//! and asserts every byte agrees.
+//!
+//! Everything lives in ONE #[test]: the pool width is process-global
+//! (`pool::set_threads`), so the sweep must not interleave with other
+//! tests in this binary.
+
+use std::sync::Arc;
+
+use dkpca::admm::{AdmmConfig, SetupExchange, ZNorm};
+use dkpca::backend::NativeBackend;
+use dkpca::coordinator::run_decentralized_multik;
+use dkpca::data::synth::{blob_centers, sample_blobs, BlobSpec};
+use dkpca::data::{NoiseModel, Rng};
+use dkpca::kernels::Kernel;
+use dkpca::linalg::ops::{matvec, par_matvec};
+use dkpca::linalg::{matmul, matmul_nt, par_matmul, par_matmul_nt, pool, Matrix};
+use dkpca::multik::MultiKpcaSolver;
+use dkpca::serve::{ProjectionEngine, ProjectionPath, ProjectionRequest};
+use dkpca::topology::Graph;
+
+fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(rows, cols, |_, _| rng.gauss())
+}
+
+fn blob_network(j: usize, n: usize, seed: u64) -> Vec<Matrix> {
+    let spec = BlobSpec { n_classes: 4, ..Default::default() };
+    let centers = blob_centers(&spec, seed);
+    let mut rng = Rng::new(seed + 1);
+    (0..j)
+        .map(|_| sample_blobs(&spec, &centers, n, None, &mut rng).0)
+        .collect()
+}
+
+fn push_matrix(bytes: &mut Vec<u8>, m: &Matrix) {
+    for v in m.as_slice() {
+        bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// One full train -> artifact -> serve run at the current pool width,
+/// flattened to bytes. Also asserts the two drivers stay bit-identical
+/// to each other at this width.
+fn pipeline_bytes(
+    xs: &[Matrix],
+    graph: &Graph,
+    kernel: &Kernel,
+    cfg: &AdmmConfig,
+    k: usize,
+    batch: &Matrix,
+) -> Vec<u8> {
+    let mut solver = MultiKpcaSolver::new(xs, graph, kernel, cfg, NoiseModel::None, 0, k);
+    let res = solver.run(&NativeBackend);
+    let par = run_decentralized_multik(
+        xs,
+        graph,
+        kernel,
+        cfg,
+        NoiseModel::None,
+        0,
+        k,
+        Arc::new(NativeBackend),
+    );
+    assert_eq!(
+        par.per_component_iterations,
+        res.per_component_iterations,
+        "drivers disagree on stop iterations"
+    );
+    for (node, (a, b)) in par.alphas.iter().zip(&res.alphas).enumerate() {
+        assert_eq!(a.as_slice(), b.as_slice(), "drivers disagree at node {node}");
+    }
+
+    let model = solver.to_model();
+    let mut bytes = model.to_bytes().expect("artifact encodes");
+    // The RFF serve fast path needs a strictly positive-gamma RBF
+    // model (feature-space models serve linearly).
+    let rff_serve = matches!(model.kernel, Kernel::Rbf { gamma } if gamma > 0.0);
+    // Feature-space models expect featurized batches.
+    let served_batch = match solver.rff_map() {
+        Some(map) => map.features(batch),
+        None => batch.clone(),
+    };
+    let engine = ProjectionEngine::new(model, 2);
+    for node in 0..xs.len() {
+        let exact = engine
+            .project(ProjectionRequest {
+                node,
+                batch: served_batch.clone(),
+                path: ProjectionPath::Exact,
+            })
+            .expect("exact serve");
+        push_matrix(&mut bytes, &exact.outputs);
+        if rff_serve {
+            let rff = engine
+                .project(ProjectionRequest {
+                    node,
+                    batch: served_batch.clone(),
+                    path: ProjectionPath::Rff { dim: 64, seed: 9 },
+                })
+                .expect("rff serve");
+            push_matrix(&mut bytes, &rff.outputs);
+        }
+    }
+    bytes
+}
+
+/// All scenarios at the current pool width. Scenario 0 uses wide
+/// 784-dim data so Gram assembly, serving, and the RFF feature maps
+/// all cross `pool::PAR_MIN_FLOPS` and genuinely exercise the parallel
+/// tier; the small scenarios cover k = 3 deflation and both setup
+/// modes (their ops fall back to the serial kernel — which must also
+/// be unaffected by the pool width).
+fn run_all_scenarios() -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+
+    // Scenario 0: raw setup, k = 1, wide data, parallel GEMM active.
+    {
+        let xs: Vec<Matrix> = (0..3u64).map(|j| rand_matrix(96, 784, 100 + j)).collect();
+        let graph = Graph::complete(3);
+        let kernel = Kernel::Rbf { gamma: 0.02 };
+        let cfg = AdmmConfig { max_iters: 2, ..Default::default() };
+        let batch = rand_matrix(128, 784, 999);
+        out.push(pipeline_bytes(&xs, &graph, &kernel, &cfg, 1, &batch));
+    }
+
+    // Scenario 1: RFF setup exchange, k = 1, 1024-dim feature Grams
+    // cross the parallel threshold.
+    {
+        let xs: Vec<Matrix> = (0..3u64).map(|j| rand_matrix(96, 24, 200 + j)).collect();
+        let graph = Graph::ring(3, 1);
+        let kernel = Kernel::Rbf { gamma: 0.3 };
+        let cfg = AdmmConfig {
+            max_iters: 2,
+            setup: SetupExchange::RffFeatures { dim: 1024, seed: 7 },
+            ..Default::default()
+        };
+        let batch = rand_matrix(32, 24, 998);
+        out.push(pipeline_bytes(&xs, &graph, &kernel, &cfg, 1, &batch));
+    }
+
+    // Scenario 2: raw setup, k = 3 (deflation exchange + spectral
+    // rebuilds), small blobs, early stop active.
+    {
+        let xs = blob_network(4, 12, 5);
+        let graph = Graph::ring(4, 1);
+        let kernel = Kernel::Rbf { gamma: 0.1 };
+        let cfg = AdmmConfig {
+            max_iters: 60,
+            tol: 1e-4,
+            z_norm: ZNorm::Sphere,
+            ..Default::default()
+        };
+        let batch = rand_matrix(9, xs[0].cols(), 997);
+        out.push(pipeline_bytes(&xs, &graph, &kernel, &cfg, 3, &batch));
+    }
+
+    // Scenario 3: RFF setup, k = 3.
+    {
+        let xs = blob_network(3, 10, 8);
+        let graph = Graph::complete(3);
+        let kernel = Kernel::Rbf { gamma: 0.1 };
+        let cfg = AdmmConfig {
+            max_iters: 4,
+            z_norm: ZNorm::Sphere,
+            setup: SetupExchange::RffFeatures { dim: 32, seed: 3 },
+            ..Default::default()
+        };
+        let batch = rand_matrix(9, xs[0].cols(), 996);
+        out.push(pipeline_bytes(&xs, &graph, &kernel, &cfg, 3, &batch));
+    }
+
+    out
+}
+
+#[test]
+fn everything_is_bit_identical_across_pool_widths() {
+    let widths = [1usize, 2, 8];
+
+    // -- direct op invariance: serial kernels are width-independent by
+    // construction, so compute the expected bits once, then sweep. --
+    let a = rand_matrix(213, 167, 1);
+    let b = rand_matrix(167, 190, 2);
+    let bn = rand_matrix(201, 167, 3);
+    let big = rand_matrix(1100, 950, 4);
+    let x: Vec<f64> = (0..950).map(|i| (i as f64).sin()).collect();
+    let want_mm = matmul(&a, &b);
+    let want_nt = matmul_nt(&a, &bn);
+    let want_mv = matvec(&big, &x);
+
+    for &w in &widths {
+        pool::set_threads(w);
+        assert_eq!(pool::configured_threads(), w);
+        assert_eq!(par_matmul(&a, &b).as_slice(), want_mm.as_slice(), "matmul at {w}");
+        assert_eq!(par_matmul_nt(&a, &bn).as_slice(), want_nt.as_slice(), "matmul_nt at {w}");
+        assert_eq!(par_matvec(&big, &x), want_mv, "matvec at {w}");
+    }
+
+    // -- full-pipeline invariance --
+    let mut baselines: Vec<Option<Vec<u8>>> = Vec::new();
+    for &w in &widths {
+        pool::set_threads(w);
+        let runs = run_all_scenarios();
+        if baselines.is_empty() {
+            baselines = runs.into_iter().map(Some).collect();
+            continue;
+        }
+        assert_eq!(baselines.len(), runs.len());
+        for (si, bytes) in runs.into_iter().enumerate() {
+            assert_eq!(
+                baselines[si].as_ref().unwrap(),
+                &bytes,
+                "scenario {si} differs at {w} threads"
+            );
+        }
+    }
+}
