@@ -1,5 +1,8 @@
 //! Bench: §4.2 communication-cost accounting — measured fabric traffic
-//! vs the closed form O(|Omega_j| N) per node per iteration.
+//! vs the closed form O(|Omega_j| N) per node per iteration, plus the
+//! machine-readable per-edge trajectory (floats per edge vs N, RawData
+//! vs RffFeatures, k = 1 vs k = 3) written to `BENCH_comm.json` so CI
+//! tracks the §4.2/§7 communication economics run over run.
 //!
 //!     cargo bench --bench comm_cost
 
@@ -13,5 +16,26 @@ fn main() {
     let sw = Stopwatch::start();
     let rows = comm::run(20, &[2, 4, 6, 8], &[50, 100, 200], 5, Arc::new(NativeBackend), 0);
     println!("{}", comm::table(&rows));
+
+    // Per-edge trajectory: setup vs iteration vs deflation floats,
+    // measured off the fabric's per-phase counters.
+    let entries = comm::trajectory(8, &[25, 50, 100], 3, &[1, 3], 64, Arc::new(NativeBackend), 0);
+    for e in &entries {
+        println!(
+            "comm {}/k={} N={:>3}: setup {:>7.0} f/edge, iter {:>6.0} f/edge/it, \
+             deflate {:>5.0} f/edge",
+            e.setup,
+            e.k,
+            e.samples_per_node,
+            e.setup_floats_per_edge,
+            e.iter_floats_per_edge_per_iter,
+            e.deflate_floats_per_edge,
+        );
+    }
+    let json = comm::trajectory_json(&entries);
+    match std::fs::write("BENCH_comm.json", &json) {
+        Ok(()) => println!("wrote BENCH_comm.json"),
+        Err(e) => eprintln!("could not write BENCH_comm.json: {e}"),
+    }
     println!("bench wall time: {:.1}s", sw.elapsed_secs());
 }

@@ -8,8 +8,10 @@ use crate::linalg::ops::{dot, matvec};
 
 use super::node::NodeState;
 
-/// Augmented Lagrangian over the whole network at the current iterate.
-pub fn lagrangian(nodes: &[NodeState], rho2: f64) -> f64 {
+/// Augmented Lagrangian over the whole network at the current iterate
+/// (takes node references as the solver facades expose them — e.g. the
+/// slice handed to `DkpcaSolver::run_with` observers).
+pub fn lagrangian(nodes: &[&NodeState], rho2: f64) -> f64 {
     let mut total = 0.0;
     for node in nodes {
         let ka = matvec(&node.kc, &node.alpha);
@@ -60,15 +62,12 @@ mod tests {
         let mut solver =
             DkpcaSolver::new(&xs, &graph, &Kernel::Rbf { gamma: 0.1 }, &cfg, NoiseModel::None, 0);
         // rho clears Assumption 2 on this instance.
-        for node in &solver.nodes {
+        for node in solver.nodes() {
             assert!(500.0 >= node.assumption2_bound());
         }
         let backend = NativeBackend;
         let mut vals = Vec::new();
-        for t in 0..25 {
-            solver.step(t, &backend);
-            vals.push(lagrangian(&solver.nodes, 500.0));
-        }
+        solver.run_with(&backend, |_t, nodes| vals.push(lagrangian(nodes, 500.0)));
         let total_drop = vals[0] - vals[24];
         assert!(total_drop > 0.0, "no overall decrease");
         let max_late_inc = vals

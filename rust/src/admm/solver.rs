@@ -1,18 +1,22 @@
-//! Sequential in-process driver for Alg. 1 — the reference execution
-//! path. It performs exactly the message pattern of the decentralized
-//! protocol (setup data exchange, round A, z-solve, round B, local
-//! update) in one thread; `coordinator::` runs the same node code on
-//! real parallel actors.
+//! Sequential in-process driver for Alg. 1 — a thin facade over the
+//! protocol engine. It builds one `protocol::NodeProgram` per node and
+//! pumps them over the lockstep in-memory transport
+//! (`protocol::LockstepNet`), so it executes exactly the message
+//! pattern of the decentralized protocol (setup exchange, round A,
+//! z-solve, round B, local update, diameter-lagged gossip stop) with
+//! the SAME node code `coordinator::` runs on real parallel actors —
+//! bit-identity between the drivers is by construction.
 
 use crate::backend::ComputeBackend;
 use crate::data::NoiseModel;
 use crate::kernels::{Kernel, RffMap};
 use crate::linalg::Matrix;
 use crate::model::DkpcaModel;
+use crate::protocol::LockstepNet;
 use crate::topology::Graph;
 
 use super::config::{AdmmConfig, SetupExchange};
-use super::node::{NodeState, RoundA};
+use super::node::NodeState;
 
 /// Outcome of a DKPCA run.
 pub struct DkpcaResult {
@@ -29,15 +33,13 @@ pub struct DkpcaResult {
     pub setup_floats: u64,
 }
 
-/// Sequential solver holding the node states.
+/// Sequential solver: the k = 1 lockstep facade of the protocol
+/// engine.
 pub struct DkpcaSolver {
-    pub nodes: Vec<NodeState>,
+    net: LockstepNet,
     pub cfg: AdmmConfig,
     /// The kernel the Grams were assembled with (kept for model export).
     pub kernel: Kernel,
-    pub comm_floats: u64,
-    /// One-time setup-exchange traffic (see [`DkpcaResult::setup_floats`]).
-    pub setup_floats: u64,
     /// Iterations the decentralized stopping rule lags behind the local
     /// signal: the graph diameter, i.e. how long max-consensus
     /// piggybacked on round-A messages needs to cover the network. The
@@ -47,9 +49,10 @@ pub struct DkpcaSolver {
 }
 
 impl DkpcaSolver {
-    /// Build the network: distributes each node's data to its neighbors
-    /// through the noise model (one independent noisy copy per directed
-    /// edge, as over a physical channel), then constructs node states.
+    /// Build the network: the setup exchange runs immediately (each
+    /// node's payload crosses every directed edge through the noise
+    /// model — one independent noisy copy per edge, as over a physical
+    /// channel), then node states are constructed.
     pub fn new(
         xs: &[Matrix],
         graph: &Graph,
@@ -73,43 +76,30 @@ impl DkpcaSolver {
         noise_seed: u64,
         backend: &dyn ComputeBackend,
     ) -> DkpcaSolver {
-        assert_eq!(xs.len(), graph.len(), "one dataset per node");
-        assert!(graph.is_connected(), "Assumption 1: connected network");
-        assert!(graph.min_degree_one(), "Alg. 1 needs |Omega_j| >= 1");
-        // What each node transmits at setup: its raw data, or — in
-        // feature-space mode — its shared-seed RFF features, so raw
-        // samples never cross an edge (paper §7).
-        let payloads: Vec<Matrix> = match cfg.setup.shared_map(kernel, xs[0].cols()) {
-            None => xs.to_vec(),
-            Some(map) => xs.iter().map(|x| map.features(x)).collect(),
-        };
-        let mut setup_floats = 0u64;
-        let nodes = (0..xs.len())
-            .map(|j| {
-                let nbrs = graph.neighbors(j).to_vec();
-                let received: Vec<Matrix> = nbrs
-                    .iter()
-                    .map(|&l| {
-                        // Edge (l -> j) channel seed.
-                        let seed = noise_seed
-                            .wrapping_mul(0x9E3779B97F4A7C15)
-                            .wrapping_add((l * graph.len() + j) as u64);
-                        let p = &payloads[l];
-                        setup_floats += (p.rows() * p.cols()) as u64;
-                        noise.apply(p, seed)
-                    })
-                    .collect();
-                NodeState::new(j, &xs[j], nbrs, &received, kernel, cfg, backend)
-            })
-            .collect();
-        DkpcaSolver {
-            nodes,
-            cfg: cfg.clone(),
-            kernel: *kernel,
-            comm_floats: 0,
-            setup_floats,
-            stop_lag: graph.diameter().max(1),
-        }
+        let net = LockstepNet::new(xs, graph, kernel, cfg, noise, noise_seed, 1, backend, None);
+        let stop_lag = net.stop_lag();
+        DkpcaSolver { net, cfg: cfg.clone(), kernel: *kernel, stop_lag }
+    }
+
+    /// Every node's state, in node order.
+    pub fn nodes(&self) -> Vec<&NodeState> {
+        self.net.nodes()
+    }
+
+    /// One node's state.
+    pub fn node(&self, j: usize) -> &NodeState {
+        self.net.node(j)
+    }
+
+    /// Iteration-protocol floats transmitted so far (§4.2; excludes
+    /// the one-time setup).
+    pub fn comm_floats(&self) -> u64 {
+        self.net.comm_floats()
+    }
+
+    /// One-time setup-exchange traffic (see [`DkpcaResult::setup_floats`]).
+    pub fn setup_floats(&self) -> u64 {
+        self.net.setup_floats()
     }
 
     /// Freeze the current per-node solution into a servable
@@ -125,15 +115,15 @@ impl DkpcaSolver {
     /// model reproduces the training-time projections (see
     /// `rust/tests/model_serve.rs`).
     pub fn to_model(&self) -> DkpcaModel {
-        let alphas: Vec<Vec<f64>> = self.nodes.iter().map(|n| n.alpha.clone()).collect();
+        let nodes = self.net.nodes();
+        let alphas: Vec<Vec<f64>> = nodes.iter().map(|n| n.alpha.clone()).collect();
         match self.cfg.setup {
             SetupExchange::RawData => {
-                let xs: Vec<Matrix> = self.nodes.iter().map(|n| n.x.clone()).collect();
+                let xs: Vec<Matrix> = nodes.iter().map(|n| n.x.clone()).collect();
                 DkpcaModel::from_parts(&self.kernel, &xs, &alphas)
             }
             SetupExchange::RffFeatures { .. } => {
-                let zs: Vec<Matrix> = self
-                    .nodes
+                let zs: Vec<Matrix> = nodes
                     .iter()
                     .map(|n| n.zx.clone().expect("feature mode stores zx"))
                     .collect();
@@ -147,93 +137,39 @@ impl DkpcaSolver {
     /// serving them through the feature-space model from
     /// [`DkpcaSolver::to_model`].
     pub fn rff_map(&self) -> Option<RffMap> {
-        let m = self.nodes.first().map_or(0, |n| n.x.cols());
-        self.cfg.setup.shared_map(&self.kernel, m)
+        self.net.rff_map()
     }
 
-    /// One full ADMM iteration (both communication rounds + updates).
-    pub fn step(&mut self, t: usize, backend: &dyn ComputeBackend) {
-        let rho2 = self.cfg.rho2_at(t);
-        let j = self.nodes.len();
-
-        // Round A: alpha + B column toward each neighboring z-host.
-        // With tol > 0 each message also piggybacks the convergence
-        // gossip window (`min(t, stop_lag)` running maxima — see
-        // run_with); account those floats so both drivers agree.
-        let gossip_floats =
-            if self.cfg.tol > 0.0 { t.min(self.stop_lag) as u64 } else { 0 };
-        let mut inbox: Vec<Vec<(usize, RoundA)>> = vec![Vec::new(); j];
-        for node in &self.nodes {
-            for &to in &node.neighbors {
-                let msg = node.round_a_message(to);
-                self.comm_floats +=
-                    (msg.alpha.len() + msg.bcol.len()) as u64 + gossip_floats;
-                inbox[to].push((node.id, msg));
-            }
-        }
-
-        // z-solve at every host, scatter round-B segments.
-        let mut deliveries = Vec::new();
-        for (k, node) in self.nodes.iter().enumerate() {
-            for (l, seg) in node.z_solve(&inbox[k], rho2, backend) {
-                if l != k {
-                    self.comm_floats += seg.segment.len() as u64;
-                }
-                deliveries.push((k, l, seg));
-            }
-        }
-        for (from_z, to, seg) in deliveries {
-            self.nodes[to].receive_z(from_z, &seg);
-        }
-
-        // Local alpha/eta updates.
-        for node in self.nodes.iter_mut() {
-            node.local_update(rho2, backend);
-        }
-    }
-
-    /// Max relative alpha change across nodes for the last step.
-    pub fn max_alpha_delta(&self) -> f64 {
-        self.nodes.iter().map(|n| n.alpha_delta()).fold(0.0, f64::max)
-    }
-
-    /// Run to completion with a per-iteration observer.
+    /// Run to completion with a per-iteration observer (fired after
+    /// every completed protocol iteration with each node's post-update
+    /// state).
     ///
-    /// Early stop (`tol > 0`) uses the *decentralized* stopping rule:
-    /// stop after iteration `t` once the network-wide
-    /// `max_j alpha_delta_j` of iteration `t - stop_lag` is below
-    /// `tol`. The lag is the graph diameter — exactly how long the
-    /// max-consensus gossip piggybacked on round-A messages needs to
-    /// reach every node — so the truly-parallel coordinator reaches
-    /// the identical decision at the identical iteration with no
-    /// global barrier (asserted by rust/tests/coordinator.rs).
+    /// Runs the protocol once, to completion. Unlike the pre-engine
+    /// step-loop driver, a second call does NOT continue for another
+    /// `max_iters` — the protocol is finished, so it returns the same
+    /// result without iterating (and without firing the observer).
+    ///
+    /// Early stop (`tol > 0`) uses the *decentralized* stopping rule
+    /// owned by `protocol::NodeProgram`: stop after iteration `t` once
+    /// the settled network-wide `max_j alpha_delta_j` of iteration
+    /// `t - stop_lag` is below `tol`. The lag is the graph diameter —
+    /// exactly how long the max-consensus gossip piggybacked on round-A
+    /// messages needs to reach every node — so the truly-parallel
+    /// coordinator reaches the identical decision at the identical
+    /// iteration with no global barrier (asserted by
+    /// rust/tests/coordinator.rs).
     pub fn run_with(
         &mut self,
         backend: &dyn ComputeBackend,
-        mut observer: impl FnMut(usize, &[NodeState]),
+        observer: impl FnMut(usize, &[&NodeState]),
     ) -> DkpcaResult {
-        let mut iterations = 0;
-        let mut converged = false;
-        // g_hist[s] = max_j alpha_delta_j after iteration s.
-        let mut g_hist: Vec<f64> = Vec::new();
-        for t in 0..self.cfg.max_iters {
-            self.step(t, backend);
-            iterations = t + 1;
-            observer(t, &self.nodes);
-            if self.cfg.tol > 0.0 {
-                g_hist.push(self.max_alpha_delta());
-                if t >= self.stop_lag && g_hist[t - self.stop_lag] < self.cfg.tol {
-                    converged = true;
-                    break;
-                }
-            }
-        }
+        self.net.run(backend, observer);
         DkpcaResult {
-            alphas: self.nodes.iter().map(|n| n.alpha.clone()).collect(),
-            iterations,
-            converged,
-            comm_floats: self.comm_floats,
-            setup_floats: self.setup_floats,
+            alphas: self.net.nodes().iter().map(|n| n.alpha.clone()).collect(),
+            iterations: self.net.per_component_iterations()[0],
+            converged: self.net.converged_flags()[0],
+            comm_floats: self.net.comm_floats(),
+            setup_floats: self.net.setup_floats(),
         }
     }
 
@@ -302,6 +238,29 @@ mod tests {
     }
 
     #[test]
+    fn observer_fires_once_per_iteration_with_post_update_state() {
+        let xs = blob_network(4, 8, 13);
+        let graph = Graph::ring(4, 1);
+        let cfg = AdmmConfig { max_iters: 4, ..Default::default() };
+        let mut solver = DkpcaSolver::new(
+            &xs,
+            &graph,
+            &Kernel::Rbf { gamma: 0.1 },
+            &cfg,
+            NoiseModel::None,
+            0,
+        );
+        let mut seen = Vec::new();
+        let res = solver.run_with(&NativeBackend, |t, nodes| {
+            assert_eq!(nodes.len(), 4);
+            assert!(nodes.iter().all(|n| n.alpha.iter().all(|v| v.is_finite())));
+            seen.push(t);
+        });
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        assert_eq!(res.iterations, 4);
+    }
+
+    #[test]
     fn tol_early_stop() {
         let xs = blob_network(4, 8, 7);
         let graph = Graph::ring(4, 1);
@@ -361,7 +320,7 @@ mod tests {
             NoiseModel::None,
             0,
         );
-        assert_eq!(raw.setup_floats, directed * (n * m) as u64);
+        assert_eq!(raw.setup_floats(), directed * (n * m) as u64);
 
         let rff_cfg = AdmmConfig {
             max_iters: 1,
@@ -369,7 +328,7 @@ mod tests {
             ..Default::default()
         };
         let rff = DkpcaSolver::new(&xs, &graph, &kernel, &rff_cfg, NoiseModel::None, 0);
-        assert_eq!(rff.setup_floats, directed * (n * dim) as u64);
+        assert_eq!(rff.setup_floats(), directed * (n * dim) as u64);
     }
 
     #[test]

@@ -1,43 +1,30 @@
 //! Truly parallel decentralized runtime: one OS thread per network node
 //! (the paper ran one MPI rank per node; DESIGN.md §Substitutions).
 //!
-//! No fusion center and no global barrier: each node follows the Alg. 1
-//! protocol purely through point-to-point messages —
-//!   setup:   distribute own setup payload (raw data, or shared-seed
-//!            RFF features under `SetupExchange::RffFeatures`) through
-//!            the channel noise model
-//!   round A: alpha + multiplier column to every neighboring z-host,
-//!            piggybacking the convergence-gossip window when `tol > 0`
-//!   z-solve: analytic z-update for the node's own z
-//!   round B: scatter projections back; collect own projections
-//!   update:  analytic alpha/eta updates
-//! Messages are matched by (iteration, phase); early arrivals are
-//! stashed by the endpoint, so no lock-step synchronisation is needed.
+//! Since the protocol engine refactor this driver contains NO protocol
+//! logic: every node spawns a `protocol::NodeProgram` (the single
+//! implementation of Alg. 1's per-node program — setup exchange, A/B
+//! consensus rounds, gossip stop rule, multik deflation) and pumps it
+//! over its fabric [`Endpoint`] with `protocol::run_node`. Noise,
+//! traffic accounting and tracing live behind the transport boundary.
 //!
-//! Early stop with `tol > 0` is fully decentralized: every round-A
-//! message carries a sliding window of running max-consensus estimates
-//! of the network-wide alpha delta. After `stop_lag = diameter(G)`
-//! exchange rounds the head of the window has been folded across the
-//! whole network, so all nodes see the identical settled value and make
-//! the identical stop decision at the identical iteration — the same
-//! delayed rule the sequential driver applies centrally.
-//!
-//! The run is bit-identical to the sequential reference driver
-//! (`admm::DkpcaSolver`) — asserted by rust/tests/coordinator.rs.
+//! The run is bit-identical to the lockstep reference transport
+//! (`admm::DkpcaSolver` / `multik::MultiKpcaSolver`) — both execute
+//! literally the same node code over the same messages; asserted by
+//! rust/tests/coordinator.rs, multik.rs, and threads.rs.
 
-use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::admm::{AdmmConfig, NodeState};
+use crate::admm::AdmmConfig;
 use crate::backend::ComputeBackend;
 use crate::data::NoiseModel;
 use crate::kernels::Kernel;
 use crate::linalg::Matrix;
+use crate::protocol::{run_node, ChannelSpec, NodeProgram, TraceLog};
 use crate::topology::Graph;
 
-use super::fabric::{build_fabric, data_env, Endpoint};
-use super::message::{Envelope, Payload, Phase};
+use super::fabric::build_fabric;
 
 /// Outcome of a parallel decentralized run.
 pub struct RunReport {
@@ -48,8 +35,10 @@ pub struct RunReport {
     pub iter_secs: f64,
     /// Per-node pure-compute seconds (z-solve + local updates).
     pub node_compute_secs: Vec<f64>,
-    /// Total floats moved across the fabric.
+    /// Total floats moved across the fabric (setup included).
     pub comm_floats_total: u64,
+    /// Floats moved by the one-time setup exchange alone.
+    pub setup_floats_total: u64,
     /// Floats sent per node.
     pub per_node_sent: Vec<u64>,
     /// Iterations actually run — identical at every node (the
@@ -58,57 +47,6 @@ pub struct RunReport {
     /// Whether the run stopped on the `tol` criterion before
     /// `max_iters`.
     pub converged: bool,
-}
-
-/// Per-thread CPU time in seconds (CLOCK_THREAD_CPUTIME_ID): on an
-/// oversubscribed box the wall clock charges descheduled time to
-/// whichever node happened to be preempted, which would make per-node
-/// "compute" grow with J. CPU time is the deployable per-node metric.
-/// Declared directly against the C library so the crate stays
-/// dependency-free (no `libc` crate in the offline vendor set). The
-/// `i64, i64` struct layout matches the 64-bit Linux ABI only, so the
-/// declaration is gated on pointer width — 32-bit targets (c_long
-/// tv_nsec, time64 variants) take the wall-clock fallback instead of
-/// reading a mislaid struct.
-#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
-fn thread_cpu_secs() -> f64 {
-    #[repr(C)]
-    struct Timespec {
-        tv_sec: i64,
-        tv_nsec: i64,
-    }
-    extern "C" {
-        fn clock_gettime(clk_id: i32, tp: *mut Timespec) -> i32;
-    }
-    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
-    let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
-    // SAFETY: ts is a valid out-pointer; the clock id is a Linux
-    // constant; clock_gettime writes ts and returns 0 on success.
-    let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
-    if rc == 0 {
-        ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
-    } else {
-        0.0
-    }
-}
-
-/// Fallback (non-Linux or 32-bit): monotonic wall clock from first
-/// use. Only the differences are consumed, so a shared origin is fine;
-/// the metric degrades to wall time where the thread clock is
-/// unavailable.
-#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
-fn thread_cpu_secs() -> f64 {
-    use std::sync::OnceLock;
-    static START: OnceLock<Instant> = OnceLock::new();
-    START.get_or_init(Instant::now).elapsed().as_secs_f64()
-}
-
-/// Per-edge noise seed — identical to the sequential driver so the two
-/// paths produce bit-identical runs.
-fn edge_seed(noise_seed: u64, from: usize, to: usize, n: usize) -> u64 {
-    noise_seed
-        .wrapping_mul(0x9E3779B97F4A7C15)
-        .wrapping_add((from * n + to) as u64)
 }
 
 /// Outcome of a parallel multi-component (multik) run: one deflated
@@ -126,6 +64,10 @@ pub struct MultiRunReport {
     pub iter_secs: f64,
     pub node_compute_secs: Vec<f64>,
     pub comm_floats_total: u64,
+    /// Floats moved by the one-time setup exchange alone.
+    pub setup_floats_total: u64,
+    /// Floats moved by the deflation exchanges between passes.
+    pub deflate_floats_total: u64,
     pub per_node_sent: Vec<u64>,
 }
 
@@ -146,6 +88,7 @@ pub fn run_decentralized(
         iter_secs: rep.iter_secs,
         node_compute_secs: rep.node_compute_secs,
         comm_floats_total: rep.comm_floats_total,
+        setup_floats_total: rep.setup_floats_total,
         per_node_sent: rep.per_node_sent,
         iterations: rep.per_component_iterations[0],
         converged: rep.converged[0],
@@ -166,31 +109,52 @@ pub fn run_decentralized_multik(
     n_components: usize,
     backend: Arc<dyn ComputeBackend>,
 ) -> MultiRunReport {
+    run_decentralized_multik_traced(
+        xs, graph, kernel, cfg, noise, noise_seed, n_components, backend, None,
+    )
+}
+
+/// [`run_decentralized_multik`] with an optional wire-trace recorder —
+/// the hook behind the golden message-trace tests
+/// (rust/tests/protocol_trace.rs).
+#[allow(clippy::too_many_arguments)]
+pub fn run_decentralized_multik_traced(
+    xs: &[Matrix],
+    graph: &Graph,
+    kernel: &Kernel,
+    cfg: &AdmmConfig,
+    noise: NoiseModel,
+    noise_seed: u64,
+    n_components: usize,
+    backend: Arc<dyn ComputeBackend>,
+    trace: Option<Arc<TraceLog>>,
+) -> MultiRunReport {
     assert_eq!(xs.len(), graph.len());
     assert!(graph.is_connected(), "Assumption 1: connected network");
+    assert!(graph.min_degree_one(), "Alg. 1 needs |Omega_j| >= 1");
     assert!(n_components >= 1, "need at least one component");
     let j = xs.len();
     // How many exchange rounds max-consensus needs to cover the network
     // — the lag of the decentralized stop rule (shared with the
-    // sequential driver so both stop at the same iteration).
+    // lockstep transport so both stop at the same iteration).
     let stop_lag = graph.diameter().max(1);
-    let (endpoints, stats) = build_fabric(graph);
+    let channel = ChannelSpec { noise, noise_seed, n_nodes: j };
+    let (endpoints, stats) = build_fabric(graph, channel, trace);
     let wall = Instant::now();
 
     let mut handles = Vec::with_capacity(j);
     for (id, endpoint) in endpoints.into_iter().enumerate() {
-        let x_own = xs[id].clone();
-        let nbrs = graph.neighbors(id).to_vec();
-        let kernel = *kernel;
-        let cfg = cfg.clone();
+        let program = NodeProgram::new(
+            id,
+            xs[id].clone(),
+            graph.neighbors(id).to_vec(),
+            *kernel,
+            cfg.clone(),
+            stop_lag,
+            n_components,
+        );
         let backend = backend.clone();
-        let n_nodes = j;
-        handles.push(std::thread::spawn(move || {
-            node_main(
-                id, endpoint, x_own, nbrs, kernel, cfg, noise, noise_seed, n_nodes, stop_lag,
-                n_components, backend,
-            )
-        }));
+        handles.push(std::thread::spawn(move || run_node(program, endpoint, backend.as_ref())));
     }
 
     let mut alphas: Vec<Matrix> = vec![Matrix::zeros(0, 0); j];
@@ -231,236 +195,8 @@ pub fn run_decentralized_multik(
         iter_secs,
         node_compute_secs,
         comm_floats_total: stats.total(),
+        setup_floats_total: stats.setup_total(),
+        deflate_floats_total: stats.phase_total(crate::protocol::Phase::Deflate),
         per_node_sent,
-    }
-}
-
-struct NodeOutput {
-    id: usize,
-    /// One converged alpha per component pass.
-    alpha_cols: Vec<Vec<f64>>,
-    compute_secs: f64,
-    iter_secs: f64,
-    iterations: Vec<usize>,
-    converged: Vec<bool>,
-}
-
-#[allow(clippy::too_many_arguments)]
-fn node_main(
-    id: usize,
-    mut endpoint: Endpoint,
-    x_own: Matrix,
-    nbrs: Vec<usize>,
-    kernel: Kernel,
-    cfg: AdmmConfig,
-    noise: NoiseModel,
-    noise_seed: u64,
-    n_nodes: usize,
-    stop_lag: usize,
-    n_components: usize,
-    backend: Arc<dyn ComputeBackend>,
-) -> NodeOutput {
-    // ---- Setup: exchange the setup payload over noisy channels — raw
-    // data (Alg. 1 as printed) or shared-seed RFF features (paper §7:
-    // raw samples never leave the node, N*D floats per edge). ----
-    match cfg.setup.shared_map(&kernel, x_own.cols()) {
-        None => {
-            for &to in &nbrs {
-                let copy = noise.apply(&x_own, edge_seed(noise_seed, id, to, n_nodes));
-                endpoint.send(to, data_env(id, copy));
-            }
-        }
-        Some(map) => {
-            let z_own = map.features(&x_own);
-            for &to in &nbrs {
-                let copy = noise.apply(&z_own, edge_seed(noise_seed, id, to, n_nodes));
-                endpoint.send(
-                    to,
-                    Envelope {
-                        from: id,
-                        iter: 0,
-                        phase: Phase::Setup,
-                        payload: Payload::Features(copy),
-                    },
-                );
-            }
-        }
-    }
-    let data_msgs = endpoint.collect(0, Phase::Setup, nbrs.len());
-    // Reorder received setup payloads into `nbrs` order.
-    let received: Vec<Matrix> = nbrs
-        .iter()
-        .map(|&from| {
-            data_msgs
-                .iter()
-                .find(|e| e.from == from)
-                .map(|e| match &e.payload {
-                    Payload::Data(m) | Payload::Features(m) => m.clone(),
-                    _ => unreachable!("setup phase carries data"),
-                })
-                .expect("missing setup data")
-        })
-        .collect();
-
-    let mut compute = 0.0f64;
-    let t0 = thread_cpu_secs();
-    let mut node =
-        NodeState::new(id, &x_own, nbrs.clone(), &received, &kernel, &cfg, backend.as_ref());
-    compute += thread_cpu_secs() - t0;
-
-    // ---- ADMM iterations: one deflated pass per component. ----
-    let iter_clock = Instant::now();
-    let mut alpha_cols = Vec::with_capacity(n_components);
-    let mut iterations = Vec::with_capacity(n_components);
-    let mut converged = Vec::with_capacity(n_components);
-    for comp in 0..n_components {
-        // Round A/B envelopes of pass `comp` use iteration numbers in a
-        // disjoint band so they can never match another pass's collect.
-        let base = comp * (cfg.max_iters + 1);
-        let mut pass_iterations = 0;
-        let mut pass_converged = false;
-        // Convergence gossip (tol > 0): sliding window of running
-        // max-consensus estimates of the network-wide alpha delta, one
-        // entry per iteration s in [t - stop_lag, t - 1]. By round A of
-        // iteration t the head entry has been folded through `stop_lag
-        // >= diameter` exchange rounds, so it IS the settled
-        // network-wide max of iteration t - stop_lag — every node
-        // computes the identical value and the identical stop decision,
-        // with no global barrier. The window restarts with each pass.
-        let mut gossip: VecDeque<f64> = VecDeque::new();
-        for t in 0..cfg.max_iters {
-            let rho2 = cfg.rho2_at(t);
-
-            // Round A out, piggybacking the gossip window.
-            let window: Vec<f64> = gossip.iter().copied().collect();
-            for &to in &nbrs {
-                let msg = node.round_a_message(to);
-                endpoint.send(
-                    to,
-                    Envelope {
-                        from: id,
-                        iter: base + t,
-                        phase: Phase::RoundA,
-                        payload: Payload::A(msg, window.clone()),
-                    },
-                );
-            }
-            // Round A in; fold neighbor windows into ours (positionally
-            // — all nodes' windows cover the same iteration range).
-            let a_msgs = endpoint.collect(base + t, Phase::RoundA, nbrs.len());
-            let mut inbox: Vec<(usize, crate::admm::RoundA)> =
-                Vec::with_capacity(a_msgs.len());
-            for e in a_msgs {
-                match e.payload {
-                    Payload::A(a, w) => {
-                        debug_assert_eq!(w.len(), gossip.len());
-                        for (mine, theirs) in gossip.iter_mut().zip(&w) {
-                            if *theirs > *mine {
-                                *mine = *theirs;
-                            }
-                        }
-                        inbox.push((e.from, a));
-                    }
-                    _ => unreachable!(),
-                }
-            }
-            // Decentralized stopping rule: stop after this iteration
-            // once the settled network-wide max of iteration t -
-            // stop_lag is below tol (the sequential driver applies the
-            // same delayed rule, so both stop at the same iteration).
-            let stop_after_this_iter = cfg.tol > 0.0
-                && t >= stop_lag
-                && gossip.front().copied().unwrap_or(f64::INFINITY) < cfg.tol;
-
-            // z-solve for the own z; scatter segments.
-            let tz = thread_cpu_secs();
-            let segments = node.z_solve(&inbox, rho2, backend.as_ref());
-            compute += thread_cpu_secs() - tz;
-            for (to, seg) in segments {
-                if to == id {
-                    node.receive_z(id, &seg);
-                } else {
-                    endpoint.send(
-                        to,
-                        Envelope {
-                            from: id,
-                            iter: base + t,
-                            phase: Phase::RoundB,
-                            payload: Payload::B(seg),
-                        },
-                    );
-                }
-            }
-            // Round B in: projections of neighbors' z onto our data.
-            let b_msgs = endpoint.collect(base + t, Phase::RoundB, nbrs.len());
-            for e in b_msgs {
-                match e.payload {
-                    Payload::B(seg) => node.receive_z(e.from, &seg),
-                    _ => unreachable!(),
-                }
-            }
-
-            // Local updates.
-            let tu = thread_cpu_secs();
-            node.local_update(rho2, backend.as_ref());
-            compute += thread_cpu_secs() - tu;
-            // Maintain the gossip window: drop the decided head, seed
-            // the running max for this iteration with the own delta.
-            if cfg.tol > 0.0 {
-                if gossip.len() == stop_lag {
-                    gossip.pop_front();
-                }
-                gossip.push_back(node.alpha_delta());
-            }
-            pass_iterations = t + 1;
-            if stop_after_this_iter {
-                pass_converged = true;
-                break;
-            }
-        }
-        // Bank the converged component in original dual coordinates
-        // (same local Gram-Schmidt the sequential driver applies).
-        node.bank_component();
-        alpha_cols.push(node.components[comp].clone());
-        iterations.push(pass_iterations);
-        converged.push(pass_converged);
-
-        if comp + 1 < n_components {
-            // Deflation exchange: ship the converged alpha to every
-            // neighbor (N floats per directed edge), collect theirs,
-            // and deflate all Gram copies with the identical duals —
-            // the same data the sequential driver hands each node, so
-            // the next pass stays bit-identical.
-            for &to in &nbrs {
-                endpoint.send(
-                    to,
-                    Envelope {
-                        from: id,
-                        iter: comp,
-                        phase: Phase::Deflate,
-                        payload: Payload::Converged(node.alpha.clone()),
-                    },
-                );
-            }
-            let msgs = endpoint.collect(comp, Phase::Deflate, nbrs.len());
-            let received: Vec<(usize, Vec<f64>)> = msgs
-                .into_iter()
-                .map(|e| match e.payload {
-                    Payload::Converged(a) => (e.from, a),
-                    _ => unreachable!("deflate phase carries converged alphas"),
-                })
-                .collect();
-            let td = thread_cpu_secs();
-            node.deflate_and_reseed(&received, comp + 1);
-            compute += thread_cpu_secs() - td;
-        }
-    }
-    NodeOutput {
-        id,
-        alpha_cols,
-        compute_secs: compute,
-        iter_secs: iter_clock.elapsed().as_secs_f64(),
-        iterations,
-        converged,
     }
 }

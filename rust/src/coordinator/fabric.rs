@@ -1,53 +1,31 @@
-//! Message fabric: one mpsc link per directed edge with byte/float
-//! accounting — the in-process stand-in for the paper's MPI network
-//! (DESIGN.md §Substitutions).
+//! Message fabric: one mpsc link per directed edge — the in-process
+//! stand-in for the paper's MPI network (DESIGN.md §Substitutions).
+//! The channel model (per-edge noise), §4.2 accounting and optional
+//! trace recording all run inside [`Endpoint::send`], so this fabric
+//! and the lockstep exchange report through one code path
+//! (`protocol::transport`).
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
+use crate::protocol::transport::transmit_env;
+use crate::protocol::{ChannelSpec, Envelope, Phase, TraceLog, TrafficStats, Transport};
 use crate::topology::Graph;
 
-use super::message::{Envelope, Payload, Phase};
-
-/// Per-directed-edge traffic counters (floats transmitted).
-pub struct TrafficStats {
-    /// Indexed by `from * n + to`.
-    counters: Vec<AtomicU64>,
-    n: usize,
-}
-
-impl TrafficStats {
-    fn new(n: usize) -> TrafficStats {
-        TrafficStats { counters: (0..n * n).map(|_| AtomicU64::new(0)).collect(), n }
-    }
-
-    pub fn record(&self, from: usize, to: usize, floats: u64) {
-        self.counters[from * self.n + to].fetch_add(floats, Ordering::Relaxed);
-    }
-
-    pub fn edge(&self, from: usize, to: usize) -> u64 {
-        self.counters[from * self.n + to].load(Ordering::Relaxed)
-    }
-
-    pub fn total(&self) -> u64 {
-        self.counters.iter().map(|c| c.load(Ordering::Relaxed)).sum()
-    }
-
-    /// Floats sent by one node across all its links.
-    pub fn sent_by(&self, node: usize) -> u64 {
-        (0..self.n).map(|to| self.edge(node, to)).sum()
-    }
-}
-
 /// One node's endpoint: senders to each neighbor plus its own receiver.
+/// Implements [`Transport`], so `protocol::run_node` pumps a
+/// [`crate::protocol::NodeProgram`] over it directly.
 pub struct Endpoint {
     pub id: usize,
     rx: Receiver<Envelope>,
     tx: HashMap<usize, Sender<Envelope>>,
     stats: Arc<TrafficStats>,
-    /// Out-of-order stash (messages for future phases/iterations).
+    channel: ChannelSpec,
+    trace: Option<Arc<TraceLog>>,
+    /// Envelopes already pulled off the wire by `park`.
+    ready: VecDeque<Envelope>,
+    /// Out-of-order stash used by [`Endpoint::collect`] only.
     stash: Vec<Envelope>,
 }
 
@@ -55,7 +33,7 @@ impl Endpoint {
     /// Send an envelope to a neighbor (panics on unknown link —
     /// the topology defines who may talk to whom).
     pub fn send(&self, to: usize, env: Envelope) {
-        self.stats.record(self.id, to, env.floats());
+        let env = transmit_env(&self.channel, &self.stats, self.trace.as_deref(), self.id, to, env);
         self.tx
             .get(&to)
             .unwrap_or_else(|| panic!("node {} has no link to {to}", self.id))
@@ -64,8 +42,13 @@ impl Endpoint {
     }
 
     /// Receive exactly `count` messages of the given (iter, phase),
-    /// stashing anything that arrives early.
+    /// stashing anything that arrives early. (The protocol engine does
+    /// its own matching; this remains for direct fabric users/tests.)
     pub fn collect(&mut self, iter: usize, phase: Phase, count: usize) -> Vec<Envelope> {
+        // Fold anything `park` already pulled off the wire into the
+        // stash so mixing the Transport pump with collect() can never
+        // lose messages.
+        self.stash.extend(self.ready.drain(..));
         let mut got = Vec::with_capacity(count);
         // Drain matching messages from the stash first.
         let mut rest = Vec::new();
@@ -89,8 +72,36 @@ impl Endpoint {
     }
 }
 
-/// Build endpoints for every node of the graph.
-pub fn build_fabric(graph: &Graph) -> (Vec<Endpoint>, Arc<TrafficStats>) {
+impl Transport for Endpoint {
+    fn send(&mut self, to: usize, env: Envelope) {
+        Endpoint::send(self, to, env);
+    }
+
+    fn try_recv(&mut self) -> Option<Envelope> {
+        if let Some(env) = self.ready.pop_front() {
+            return Some(env);
+        }
+        self.rx.try_recv().ok()
+    }
+
+    fn park(&mut self) -> bool {
+        match self.rx.recv() {
+            Ok(env) => {
+                self.ready.push_back(env);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+}
+
+/// Build endpoints for every node of the graph over one shared channel
+/// model (and optional trace recorder).
+pub fn build_fabric(
+    graph: &Graph,
+    channel: ChannelSpec,
+    trace: Option<Arc<TraceLog>>,
+) -> (Vec<Endpoint>, Arc<TrafficStats>) {
     let n = graph.len();
     let stats = Arc::new(TrafficStats::new(n));
     let mut senders: Vec<Sender<Envelope>> = Vec::with_capacity(n);
@@ -112,6 +123,9 @@ pub fn build_fabric(graph: &Graph) -> (Vec<Endpoint>, Arc<TrafficStats>) {
                 rx: receivers[id].take().unwrap(),
                 tx,
                 stats: stats.clone(),
+                channel,
+                trace: trace.clone(),
+                ready: VecDeque::new(),
                 stash: Vec::new(),
             }
         })
@@ -119,15 +133,11 @@ pub fn build_fabric(graph: &Graph) -> (Vec<Endpoint>, Arc<TrafficStats>) {
     (endpoints, stats)
 }
 
-/// Convenience constructors for envelopes.
-pub fn data_env(from: usize, m: crate::linalg::Matrix) -> Envelope {
-    Envelope { from, iter: 0, phase: Phase::Setup, payload: Payload::Data(m) }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::admm::{RoundA, RoundB};
+    use crate::protocol::Payload;
 
     fn round_a(from: usize, iter: usize, len: usize) -> Envelope {
         Envelope {
@@ -138,10 +148,14 @@ mod tests {
         }
     }
 
+    fn lossless_fabric(g: &Graph) -> (Vec<Endpoint>, Arc<TrafficStats>) {
+        build_fabric(g, ChannelSpec::lossless(g.len()), None)
+    }
+
     #[test]
     fn point_to_point_delivery() {
         let g = Graph::ring(3, 1);
-        let (mut eps, stats) = build_fabric(&g);
+        let (mut eps, stats) = lossless_fabric(&g);
         let e2 = eps.remove(2);
         let mut e1 = eps.remove(1);
         let e0 = eps.remove(0);
@@ -157,7 +171,7 @@ mod tests {
     #[test]
     fn out_of_order_messages_stashed() {
         let g = Graph::from_edges(2, &[(0, 1)]);
-        let (mut eps, _) = build_fabric(&g);
+        let (mut eps, _) = lossless_fabric(&g);
         let mut e1 = eps.remove(1);
         let e0 = eps.remove(0);
         // Send iter-1 round A before iter-0 round B.
@@ -182,17 +196,50 @@ mod tests {
     #[should_panic(expected = "no link")]
     fn non_edge_send_rejected() {
         let g = Graph::ring(4, 1); // 0-2 are not neighbors
-        let (eps, _) = build_fabric(&g);
+        let (eps, _) = lossless_fabric(&g);
         eps[0].send(2, round_a(0, 0, 1));
     }
 
     #[test]
     fn per_node_sent_accounting() {
         let g = Graph::complete(3);
-        let (eps, stats) = build_fabric(&g);
+        let (eps, stats) = lossless_fabric(&g);
         eps[0].send(1, round_a(0, 0, 5));
         eps[0].send(2, round_a(0, 0, 5));
         assert_eq!(stats.sent_by(0), 20);
         assert_eq!(stats.sent_by(1), 0);
+    }
+
+    #[test]
+    fn collect_sees_envelopes_pulled_by_park() {
+        // Mixing the Transport pump with collect() must never lose
+        // messages: park() pulls into the ready queue, collect() folds
+        // it back in.
+        let g = Graph::from_edges(2, &[(0, 1)]);
+        let (mut eps, _) = lossless_fabric(&g);
+        let mut e1 = eps.remove(1);
+        let e0 = eps.remove(0);
+        e0.send(1, round_a(0, 0, 2));
+        assert!(e1.park(), "envelope arrives");
+        let got = e1.collect(0, Phase::RoundA, 1);
+        assert_eq!(got.len(), 1, "parked envelope visible to collect");
+    }
+
+    #[test]
+    fn transport_try_recv_and_park_deliver_in_order() {
+        let g = Graph::from_edges(2, &[(0, 1)]);
+        let (mut eps, _) = lossless_fabric(&g);
+        let mut e1 = eps.remove(1);
+        let e0 = eps.remove(0);
+        assert!(e1.try_recv().is_none());
+        e0.send(1, round_a(0, 0, 2));
+        e0.send(1, round_a(0, 1, 2));
+        assert!(e1.park(), "park returns once traffic arrives");
+        let first = e1.try_recv().expect("parked envelope delivered");
+        assert_eq!(first.iter, 0);
+        let second = e1.try_recv().expect("second envelope via try_recv");
+        assert_eq!(second.iter, 1);
+        drop(e0);
+        assert!(!e1.park(), "park reports a closed fabric");
     }
 }

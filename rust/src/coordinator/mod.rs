@@ -1,13 +1,19 @@
-//! S7 — the decentralized runtime: node actors on OS threads, a typed
-//! point-to-point message fabric with traffic accounting and channel
-//! noise, and the run driver. This is the "truly parallel architecture"
-//! of the paper's §6 (MPI cluster -> in-process actor network, DESIGN.md
-//! §Substitutions).
+//! S7 — the decentralized runtime: node actors on OS threads over a
+//! typed point-to-point message fabric, pumping the shared protocol
+//! engine (`crate::protocol`). This is the "truly parallel
+//! architecture" of the paper's §6 (MPI cluster -> in-process actor
+//! network, DESIGN.md §Substitutions). All protocol logic — rounds,
+//! the gossip stop rule, deflation — lives in `protocol::NodeProgram`;
+//! this module only owns the fabric and the thread/join driver.
 
 pub mod driver;
 pub mod fabric;
-pub mod message;
 
-pub use driver::{run_decentralized, run_decentralized_multik, MultiRunReport, RunReport};
-pub use fabric::{build_fabric, TrafficStats};
-pub use message::{Envelope, Payload, Phase};
+pub use driver::{
+    run_decentralized, run_decentralized_multik, run_decentralized_multik_traced,
+    MultiRunReport, RunReport,
+};
+pub use fabric::{build_fabric, Endpoint};
+// Message types and accounting moved into the protocol engine;
+// re-exported here for existing importers.
+pub use crate::protocol::{Envelope, Payload, Phase, TrafficStats};

@@ -93,15 +93,12 @@ pub fn rho_sweep(rhos: &[f64], iters: usize, backend: &dyn ComputeBackend, seed:
         };
         let mut solver = DkpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, seed);
         let bound = solver
-            .nodes
+            .nodes()
             .iter()
             .map(|n| n.assumption2_bound())
             .fold(0.0, f64::max);
         let mut vals = Vec::new();
-        for t in 0..iters {
-            solver.step(t, backend);
-            vals.push(lagrangian(&solver.nodes, rho));
-        }
+        solver.run_with(backend, |_t, nodes| vals.push(lagrangian(nodes, rho)));
         let total_drop = vals[0] - vals[vals.len() - 1];
         let max_late_increase = vals
             .windows(2)

@@ -5,9 +5,10 @@
 
 use std::sync::Arc;
 
+use crate::admm::SetupExchange;
 use crate::backend::ComputeBackend;
 use crate::config::{DataSpec, ExperimentConfig, TopoSpec};
-use crate::coordinator::run_decentralized;
+use crate::coordinator::{run_decentralized, run_decentralized_multik};
 use crate::data::NoiseModel;
 use crate::metrics::Table;
 
@@ -85,10 +86,139 @@ pub fn table(rows: &[CommRow]) -> Table {
     t
 }
 
+/// One row of the machine-readable comm-cost trajectory
+/// (`BENCH_comm.json`): measured floats per directed edge, split into
+/// the one-time setup exchange, the per-iteration §4.2 protocol, and
+/// the multik deflation transitions — across N, RawData vs
+/// RffFeatures, and k.
+pub struct CommTrajEntry {
+    pub setup: &'static str,
+    pub k: usize,
+    pub nodes: usize,
+    pub samples_per_node: usize,
+    /// Total iterations across all passes.
+    pub iters: usize,
+    pub setup_floats_per_edge: f64,
+    pub iter_floats_per_edge_per_iter: f64,
+    pub deflate_floats_per_edge: f64,
+}
+
+/// Measure the trajectory on a ring (|Omega| = 2) through the threaded
+/// driver — every number comes off the fabric's per-phase counters,
+/// not a formula.
+pub fn trajectory(
+    nodes: usize,
+    sample_counts: &[usize],
+    iters: usize,
+    ks: &[usize],
+    rff_dim: usize,
+    backend: Arc<dyn ComputeBackend>,
+    seed: u64,
+) -> Vec<CommTrajEntry> {
+    let mut out = Vec::new();
+    let modes: [(&'static str, SetupExchange); 2] = [
+        ("raw", SetupExchange::RawData),
+        ("rff", SetupExchange::RffFeatures { dim: rff_dim, seed: seed ^ 0x52FF }),
+    ];
+    for (label, setup) in modes {
+        for &k in ks {
+            for &n in sample_counts {
+                let cfg = ExperimentConfig {
+                    nodes,
+                    samples_per_node: n,
+                    data: DataSpec::Blobs { dim: 5, skew: 0.0, gamma: 0.1 },
+                    topo: TopoSpec::Ring { k: 1 },
+                    seed,
+                    ..Default::default()
+                };
+                let env = build_env(&cfg);
+                let mut admm = paper_admm(seed, iters);
+                admm.setup = setup;
+                let rep = run_decentralized_multik(
+                    &env.xs,
+                    &env.graph,
+                    &env.kernel,
+                    &admm,
+                    NoiseModel::None,
+                    seed,
+                    k,
+                    backend.clone(),
+                );
+                let edges = (2 * nodes) as f64;
+                let total_iters: usize = rep.per_component_iterations.iter().sum();
+                let iter_floats = rep.comm_floats_total
+                    - rep.setup_floats_total
+                    - rep.deflate_floats_total;
+                out.push(CommTrajEntry {
+                    setup: label,
+                    k,
+                    nodes,
+                    samples_per_node: n,
+                    iters: total_iters,
+                    setup_floats_per_edge: rep.setup_floats_total as f64 / edges,
+                    iter_floats_per_edge_per_iter: iter_floats as f64
+                        / edges
+                        / (total_iters.max(1)) as f64,
+                    deflate_floats_per_edge: rep.deflate_floats_total as f64 / edges,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Render the trajectory as the `BENCH_comm.json` payload (same
+/// hand-rolled shape as `BENCH_gemm.json`; no serde in the offline
+/// vendor set).
+pub fn trajectory_json(entries: &[CommTrajEntry]) -> String {
+    let rows: Vec<String> = entries
+        .iter()
+        .map(|e| {
+            format!(
+                "{{\"setup\": \"{}\", \"k\": {}, \"nodes\": {}, \"n\": {}, \
+                 \"iters\": {}, \"setup_floats_per_edge\": {:.1}, \
+                 \"iter_floats_per_edge_per_iter\": {:.1}, \
+                 \"deflate_floats_per_edge\": {:.1}}}",
+                e.setup,
+                e.k,
+                e.nodes,
+                e.samples_per_node,
+                e.iters,
+                e.setup_floats_per_edge,
+                e.iter_floats_per_edge_per_iter,
+                e.deflate_floats_per_edge,
+            )
+        })
+        .collect();
+    format!("{{\"bench\": \"comm_cost\", \"results\": [{}]}}\n", rows.join(", "))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::backend::NativeBackend;
+
+    #[test]
+    fn trajectory_matches_closed_forms() {
+        // Ring |Omega| = 2, M = 5 raw / D = 16 rff: per directed edge
+        // the setup moves N*M (raw) or N*D (rff) floats, each iteration
+        // 3N, each deflation transition N — measured, not derived.
+        let rows = trajectory(6, &[8], 2, &[1, 3], 16, Arc::new(NativeBackend), 5);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert_eq!(r.iters, 2 * r.k, "tol=0 runs max_iters per pass");
+            assert_eq!(r.iter_floats_per_edge_per_iter, (3 * r.samples_per_node) as f64);
+            let width = if r.setup == "raw" { 5 } else { 16 };
+            assert_eq!(r.setup_floats_per_edge, (r.samples_per_node * width) as f64);
+            assert_eq!(
+                r.deflate_floats_per_edge,
+                (r.samples_per_node * (r.k - 1)) as f64
+            );
+        }
+        let json = trajectory_json(&rows);
+        assert!(json.starts_with("{\"bench\": \"comm_cost\""));
+        assert_eq!(json.matches("\"setup\":").count(), 4, "one setup key per row");
+    }
 
     #[test]
     fn measured_matches_closed_form_exactly() {

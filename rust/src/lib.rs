@@ -27,6 +27,7 @@ pub mod coordinator;
 pub mod metrics;
 pub mod model;
 pub mod multik;
+pub mod protocol;
 pub mod runtime;
 pub mod serve;
 pub mod topology;

@@ -46,6 +46,12 @@ pub enum ModelError {
     RffNeedsRbf,
     /// RFF feature count must be at least 1.
     BadRffDim(usize),
+    /// The collapsed feature-trained path serves linear-over-`z`
+    /// models only (what `SetupExchange::RffFeatures` training exports).
+    FeatureModelRequired,
+    /// The supplied training map's feature width does not match the
+    /// model's feature-space support.
+    RffDimMismatch { map: usize, support: usize },
 }
 
 impl std::fmt::Display for ModelError {
@@ -60,6 +66,12 @@ impl std::fmt::Display for ModelError {
             ModelError::UnsupportedKernel => write!(f, "kernel has no serialized form"),
             ModelError::RffNeedsRbf => write!(f, "RFF fast path requires an RBF kernel"),
             ModelError::BadRffDim(d) => write!(f, "RFF feature count {d} must be >= 1"),
+            ModelError::FeatureModelRequired => {
+                write!(f, "collapsed feature path requires a linear-over-z model")
+            }
+            ModelError::RffDimMismatch { map, support } => {
+                write!(f, "training map dim {map} vs feature-space support width {support}")
+            }
         }
     }
 }

@@ -188,6 +188,29 @@ impl DkpcaModel {
         Ok(RffProjector::build(&self.nodes[node], gamma, dim, seed))
     }
 
+    /// Build the collapsed projector for one node of a
+    /// *feature-space-trained* model (linear kernel over `z(x)`, the
+    /// export of `SetupExchange::RffFeatures` training), keyed on the
+    /// training map: serving then featurizes raw batches through `map`
+    /// and runs one `O(m D k)` GEMM — no support rows shipped, the
+    /// same serving property `ProjectionPath::Rff` gives RBF models.
+    /// `map` must be the training map (same dim/seed/gamma); its
+    /// feature width is validated against the stored support.
+    pub fn feature_projector(
+        &self,
+        node: usize,
+        map: crate::kernels::RffMap,
+    ) -> Result<RffProjector, ModelError> {
+        if self.kernel != Kernel::Linear {
+            return Err(ModelError::FeatureModelRequired);
+        }
+        let support = self.nodes[node].support.cols();
+        if map.dim() != support {
+            return Err(ModelError::RffDimMismatch { map: map.dim(), support });
+        }
+        Ok(RffProjector::build_feature_trained(&self.nodes[node], map))
+    }
+
     /// Serialize to the versioned binary artifact (see [`artifact`]).
     pub fn to_bytes(&self) -> Result<Vec<u8>, ModelError> {
         artifact::encode(self)
@@ -291,6 +314,30 @@ mod tests {
             &[vec![1.0; 6]],
         );
         assert!(matches!(degenerate.rff_projector(0, 64, 1), Err(ModelError::RffNeedsRbf)));
+    }
+
+    #[test]
+    fn feature_projector_validates_kernel_and_map() {
+        use crate::kernels::RffMap;
+        let gamma = 0.3;
+        let map = RffMap::sample(3, 16, gamma, 5);
+        let x = data(8, 3, 9);
+        let z = map.features(&x);
+        let linear = DkpcaModel::from_parts(&Kernel::Linear, &[z], &[vec![0.5; 8]]);
+        assert!(linear.feature_projector(0, RffMap::sample(3, 16, gamma, 5)).is_ok());
+        assert!(matches!(
+            linear.feature_projector(0, RffMap::sample(3, 8, gamma, 5)),
+            Err(ModelError::RffDimMismatch { map: 8, support: 16 })
+        ));
+        let rbf = DkpcaModel::from_parts(
+            &Kernel::Rbf { gamma },
+            &[data(8, 3, 10)],
+            &[vec![0.5; 8]],
+        );
+        assert!(matches!(
+            rbf.feature_projector(0, RffMap::sample(3, 16, gamma, 5)),
+            Err(ModelError::FeatureModelRequired)
+        ));
     }
 
     #[test]

@@ -56,13 +56,85 @@ pub fn project_exact(kernel: &Kernel, comp: &NodeComponent, batch: &Matrix) -> M
     par_matmul(&rc, &comp.coeffs)
 }
 
-/// Precomputed RFF fast-path state for one component (RBF only).
+/// Row-normalise a feature matrix: `ẑ_i = z_i / ||z_i||` — the
+/// feature-side expression of `gram()`'s cosine normalisation for
+/// non-unit-diagonal kernels (the linear kernel feature-space training
+/// runs on).
+fn normalize_rows(z: &Matrix) -> Matrix {
+    let mut out = z.clone();
+    for i in 0..out.rows() {
+        let row = out.row_mut(i);
+        let norm = row.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-150);
+        for v in row.iter_mut() {
+            *v /= norm;
+        }
+    }
+    out
+}
+
+/// Collapse support features + dual coefficients into the projection
+/// matrix `u = Z^T A - zbar (1^T A)` (D x k) and the offsets
+/// `c0 = A^T mu - g A^T 1` (k) — shared by the sampled-RFF builder and
+/// the feature-trained builder.
+fn collapse(z: &Matrix, comp: &NodeComponent) -> (Matrix, Vec<f64>) {
+    let n = z.rows();
+    let k = comp.coeffs.cols();
+    // w = Z^T A (D x k).
+    let w = par_matmul(&z.transpose(), &comp.coeffs);
+    // zbar: column means of Z (D).
+    let mut zbar = vec![0.0; z.cols()];
+    for i in 0..n {
+        for (d, &v) in z.row(i).iter().enumerate() {
+            zbar[d] += v;
+        }
+    }
+    for v in zbar.iter_mut() {
+        *v /= n as f64;
+    }
+    // Column sums of the coefficients (k).
+    let mut a_sum = vec![0.0; k];
+    for i in 0..comp.coeffs.rows() {
+        for (c, &v) in comp.coeffs.row(i).iter().enumerate() {
+            a_sum[c] += v;
+        }
+    }
+    // u = w - zbar a_sum^T; c0 = A^T mu - g A^T 1.
+    let mut u = w;
+    for d in 0..u.rows() {
+        let zd = zbar[d];
+        for (c, v) in u.row_mut(d).iter_mut().enumerate() {
+            *v -= zd * a_sum[c];
+        }
+    }
+    let c0: Vec<f64> = (0..k)
+        .map(|c| {
+            let mu_dot: f64 = comp
+                .col_means
+                .iter()
+                .zip(comp.coeffs.col(c))
+                .map(|(m, a)| m * a)
+                .sum();
+            mu_dot - comp.grand_mean * a_sum[c]
+        })
+        .collect();
+    (u, c0)
+}
+
+/// Precomputed collapsed fast-path state for one component: the
+/// Monte-Carlo RFF approximation of an RBF model
+/// ([`RffProjector::build`]), or the *exact* collapsed path of a
+/// feature-space-trained linear-over-`z` model
+/// ([`RffProjector::build_feature_trained`]).
 pub struct RffProjector {
     map: RffMap,
     /// Collapsed projection matrix (D x k).
     u: Matrix,
     /// Per-component constant offsets (k).
     c0: Vec<f64>,
+    /// Row-normalise features before the GEMM (feature-trained models:
+    /// the linear kernel is cosine-normalised by `gram()`, so training
+    /// saw `ẑ = z / ||z||`).
+    normalize: bool,
 }
 
 impl RffProjector {
@@ -72,47 +144,33 @@ impl RffProjector {
     pub fn build(comp: &NodeComponent, gamma: f64, dim: usize, seed: u64) -> RffProjector {
         let map = RffMap::sample(comp.support.cols(), dim, gamma, seed);
         let z = map.features(&comp.support); // n x D
-        let n = z.rows();
-        let k = comp.coeffs.cols();
-        // w = Z^T A (D x k).
-        let w = par_matmul(&z.transpose(), &comp.coeffs);
-        // zbar: column means of Z (D).
-        let mut zbar = vec![0.0; z.cols()];
-        for i in 0..n {
-            for (d, &v) in z.row(i).iter().enumerate() {
-                zbar[d] += v;
-            }
-        }
-        for v in zbar.iter_mut() {
-            *v /= n as f64;
-        }
-        // Column sums of the coefficients (k).
-        let mut a_sum = vec![0.0; k];
-        for i in 0..comp.coeffs.rows() {
-            for (c, &v) in comp.coeffs.row(i).iter().enumerate() {
-                a_sum[c] += v;
-            }
-        }
-        // u = w - zbar a_sum^T; c0 = A^T mu - g A^T 1.
-        let mut u = w;
-        for d in 0..u.rows() {
-            let zd = zbar[d];
-            for (c, v) in u.row_mut(d).iter_mut().enumerate() {
-                *v -= zd * a_sum[c];
-            }
-        }
-        let c0: Vec<f64> = (0..k)
-            .map(|c| {
-                let mu_dot: f64 = comp
-                    .col_means
-                    .iter()
-                    .zip(comp.coeffs.col(c))
-                    .map(|(m, a)| m * a)
-                    .sum();
-                mu_dot - comp.grand_mean * a_sum[c]
-            })
-            .collect();
-        RffProjector { map, u, c0 }
+        let (u, c0) = collapse(&z, comp);
+        RffProjector { map, u, c0, normalize: false }
+    }
+
+    /// Collapse a *feature-space-trained* component against its
+    /// training map: the support already IS `z(X_j)` (n x D, linear
+    /// kernel), so no resampling happens — the collapse runs on the
+    /// cosine-normalised support rows and serving featurizes raw
+    /// batches through the same `map` the training setup exchange used.
+    /// Unlike the Monte-Carlo RBF path this is algebraically exact
+    /// (identical to `project_exact` on the featurized batch, to
+    /// rounding), and the served cost is `O(m D (M + k))` — no support
+    /// rows needed after the build, matching `ProjectionPath::Rff`'s
+    /// "no support shipping" property for RFF-trained artifacts.
+    ///
+    /// `map.dim()` must equal the support's feature width (the model
+    /// layer validates and returns a typed error; this low-level
+    /// builder asserts).
+    pub fn build_feature_trained(comp: &NodeComponent, map: RffMap) -> RffProjector {
+        assert_eq!(
+            map.dim(),
+            comp.support.cols(),
+            "training map dim must match the feature-space support width"
+        );
+        let zhat = normalize_rows(&comp.support);
+        let (u, c0) = collapse(&zhat, comp);
+        RffProjector { map, u, c0, normalize: true }
     }
 
     /// Number of random features D.
@@ -125,9 +183,14 @@ impl RffProjector {
         self.u.cols()
     }
 
-    /// Approximate projection of `batch` (m x M) -> (m x k).
+    /// Projection of `batch` (m x M) -> (m x k): approximate on the
+    /// sampled-RFF path, exact (to rounding) on the feature-trained
+    /// path.
     pub fn project(&self, batch: &Matrix) -> Matrix {
-        let z = self.map.features(batch); // m x D
+        let mut z = self.map.features(batch); // m x D
+        if self.normalize {
+            z = normalize_rows(&z);
+        }
         let mut y = par_matmul(&z, &self.u);
         for i in 0..y.rows() {
             for (c, v) in y.row_mut(i).iter_mut().enumerate() {
@@ -243,6 +306,45 @@ mod tests {
         let y = p.project(&data(5, 3, 9));
         assert_eq!(y.rows(), 5);
         assert_eq!(y.cols(), 2);
+    }
+
+    #[test]
+    fn feature_trained_projector_matches_exact_linear_path() {
+        // A feature-space-trained component (support = z(X), linear
+        // kernel) served through the collapsed projector on the RAW
+        // batch must reproduce project_exact on the featurized batch —
+        // exactly, not at Monte-Carlo accuracy: the collapse is pure
+        // algebra here.
+        let gamma = 0.4;
+        let map = RffMap::sample(5, 64, gamma, 3);
+        let x = data(20, 5, 1);
+        let z = map.features(&x);
+        let mut rng = Rng::new(101);
+        let coeffs = Matrix::from_fn(20, 2, |_, _| rng.gauss());
+        let comp = NodeComponent::from_training(0, &z, coeffs, &Kernel::Linear);
+        let batch = data(9, 5, 2);
+        let exact = project_exact(&Kernel::Linear, &comp, &map.features(&batch));
+        let p = RffProjector::build_feature_trained(&comp, map);
+        assert_eq!(p.dim(), 64);
+        assert_eq!(p.n_components(), 2);
+        let got = p.project(&batch);
+        for (a, b) in got.as_slice().iter().zip(exact.as_slice()) {
+            assert!((a - b).abs() < 1e-9, "collapsed {a} vs exact {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "training map dim")]
+    fn feature_trained_projector_rejects_wrong_map_dim() {
+        let gamma = 0.4;
+        let map = RffMap::sample(5, 64, gamma, 3);
+        let x = data(10, 5, 4);
+        let z = map.features(&x);
+        let mut rng = Rng::new(102);
+        let coeffs = Matrix::from_fn(10, 1, |_, _| rng.gauss());
+        let comp = NodeComponent::from_training(0, &z, coeffs, &Kernel::Linear);
+        let wrong = RffMap::sample(5, 32, gamma, 3);
+        let _ = RffProjector::build_feature_trained(&comp, wrong);
     }
 
     #[test]

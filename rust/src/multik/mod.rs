@@ -11,19 +11,23 @@
 //! matrix that exports through the existing model artifact, serve
 //! engine, and RFF projector unchanged.
 //!
-//! [`MultiKpcaSolver`] wraps the sequential [`DkpcaSolver`];
-//! `coordinator::run_decentralized_multik` runs the same node code on
-//! real parallel actors with a deflation exchange round (one
-//! `Payload::Converged` per directed edge) between passes. The two
-//! drivers stay bit-identical per component, exactly like the
-//! single-component path — asserted by rust/tests/multik.rs.
+//! Since the protocol engine refactor, the whole pass/deflate/bank
+//! protocol lives in `protocol::NodeProgram`; [`MultiKpcaSolver`] is
+//! the lockstep facade (one `NodeProgram` per node pumped on one
+//! thread) and `coordinator::run_decentralized_multik` pumps the SAME
+//! programs on real parallel actors over the channel fabric. The two
+//! drivers stay bit-identical per component by construction — asserted
+//! by rust/tests/multik.rs.
 
-use crate::admm::{DkpcaSolver, SetupExchange};
+use std::sync::Arc;
+
+use crate::admm::{AdmmConfig, NodeState, SetupExchange};
 use crate::backend::ComputeBackend;
 use crate::data::NoiseModel;
 use crate::kernels::{Kernel, RffMap};
 use crate::linalg::Matrix;
 use crate::model::DkpcaModel;
+use crate::protocol::{LockstepNet, TraceLog};
 use crate::topology::Graph;
 
 /// Outcome of a k-component DKPCA run.
@@ -46,10 +50,10 @@ pub struct MultiKpcaResult {
     pub setup_floats: u64,
 }
 
-/// Sequential driver for top-k extraction: K deflated single-component
-/// passes over one shared network state.
+/// Sequential driver for top-k extraction: the k-pass lockstep facade
+/// of the protocol engine.
 pub struct MultiKpcaSolver {
-    pub inner: DkpcaSolver,
+    net: LockstepNet,
     pub k: usize,
     /// Deflation mutates the Grams irreversibly, so a solver supports
     /// exactly one [`MultiKpcaSolver::run`].
@@ -57,12 +61,12 @@ pub struct MultiKpcaSolver {
 }
 
 impl MultiKpcaSolver {
-    /// Build the network exactly as [`DkpcaSolver::new`] does.
+    /// Build the network exactly as [`crate::admm::DkpcaSolver::new`] does.
     pub fn new(
         xs: &[Matrix],
         graph: &Graph,
         kernel: &Kernel,
-        cfg: &crate::admm::AdmmConfig,
+        cfg: &AdmmConfig,
         noise: NoiseModel,
         noise_seed: u64,
         k: usize,
@@ -77,67 +81,64 @@ impl MultiKpcaSolver {
         xs: &[Matrix],
         graph: &Graph,
         kernel: &Kernel,
-        cfg: &crate::admm::AdmmConfig,
+        cfg: &AdmmConfig,
         noise: NoiseModel,
         noise_seed: u64,
         k: usize,
         backend: &dyn ComputeBackend,
     ) -> MultiKpcaSolver {
-        assert!(k >= 1, "need at least one component");
-        let inner =
-            DkpcaSolver::new_with_backend(xs, graph, kernel, cfg, noise, noise_seed, backend);
-        MultiKpcaSolver { inner, k, ran: false }
+        Self::new_traced(xs, graph, kernel, cfg, noise, noise_seed, k, backend, None)
     }
 
-    /// Run all K passes: solve, bank the converged component, exchange
-    /// converged alphas (N floats per directed edge), deflate, re-seed,
-    /// repeat. Single-use: deflation rewrites the Gram state, so a
-    /// second call would extract components of the already-deflated
-    /// operator while looking like a fresh run — build a new solver
-    /// instead (panics on reuse).
+    /// Build with an optional wire-trace recorder (the golden
+    /// message-trace tests hook; see rust/tests/protocol_trace.rs).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_traced(
+        xs: &[Matrix],
+        graph: &Graph,
+        kernel: &Kernel,
+        cfg: &AdmmConfig,
+        noise: NoiseModel,
+        noise_seed: u64,
+        k: usize,
+        backend: &dyn ComputeBackend,
+        trace: Option<Arc<TraceLog>>,
+    ) -> MultiKpcaSolver {
+        assert!(k >= 1, "need at least one component");
+        let net = LockstepNet::new(xs, graph, kernel, cfg, noise, noise_seed, k, backend, trace);
+        MultiKpcaSolver { net, k, ran: false }
+    }
+
+    /// Every node's state, in node order.
+    pub fn nodes(&self) -> Vec<&NodeState> {
+        self.net.nodes()
+    }
+
+    /// Run all K passes (solve, bank the converged component, exchange
+    /// converged alphas — N floats per directed edge — deflate,
+    /// re-seed, repeat; all inside the protocol engine). Single-use:
+    /// deflation rewrites the Gram state, so a second call would
+    /// extract components of the already-deflated operator while
+    /// looking like a fresh run — build a new solver instead (panics on
+    /// reuse).
     pub fn run(&mut self, backend: &dyn ComputeBackend) -> MultiKpcaResult {
         assert!(!self.ran, "MultiKpcaSolver::run is single-use: deflation consumed the Grams");
         self.ran = true;
-        let mut per_component_iterations = Vec::with_capacity(self.k);
-        let mut converged = Vec::with_capacity(self.k);
-        for c in 0..self.k {
-            let res = self.inner.run(backend);
-            per_component_iterations.push(res.iterations);
-            converged.push(res.converged);
-            for node in self.inner.nodes.iter_mut() {
-                node.bank_component();
-            }
-            if c + 1 < self.k {
-                // Deflation exchange: every node ships its converged
-                // alpha (N floats) to each neighbor, then all deflate.
-                let all: Vec<Vec<f64>> =
-                    self.inner.nodes.iter().map(|n| n.alpha.clone()).collect();
-                for node in self.inner.nodes.iter_mut() {
-                    self.inner.comm_floats +=
-                        (node.neighbors.len() * node.n) as u64;
-                    let received: Vec<(usize, Vec<f64>)> = node
-                        .neighbors
-                        .iter()
-                        .map(|&l| (l, all[l].clone()))
-                        .collect();
-                    node.deflate_and_reseed(&received, c + 1);
-                }
-            }
-        }
+        self.net.run(backend, |_, _| {});
         MultiKpcaResult {
             alphas: self.alpha_matrices(),
-            per_component_iterations,
-            converged,
-            comm_floats: self.inner.comm_floats,
-            setup_floats: self.inner.setup_floats,
+            per_component_iterations: self.net.per_component_iterations(),
+            converged: self.net.converged_flags(),
+            comm_floats: self.net.comm_floats(),
+            setup_floats: self.net.setup_floats(),
         }
     }
 
     /// The banked per-node coefficient matrices (`N_j x
     /// n_components_done`, original dual coordinates).
     fn alpha_matrices(&self) -> Vec<Matrix> {
-        self.inner
-            .nodes
+        self.net
+            .nodes()
             .iter()
             .map(|node| {
                 let k = node.components.len();
@@ -147,22 +148,20 @@ impl MultiKpcaSolver {
     }
 
     /// Freeze the run into a servable k-column [`DkpcaModel`]: same
-    /// support-set contract as [`DkpcaSolver::to_model`] (raw data, or
-    /// `z(X_j)` with a linear kernel in feature-space mode), with the
-    /// accumulated component columns as dual coefficients. Call after
-    /// [`MultiKpcaSolver::run`].
+    /// support-set contract as [`crate::admm::DkpcaSolver::to_model`]
+    /// (raw data, or `z(X_j)` with a linear kernel in feature-space
+    /// mode), with the accumulated component columns as dual
+    /// coefficients. Call after [`MultiKpcaSolver::run`].
     pub fn to_model(&self) -> DkpcaModel {
         let coeffs = self.alpha_matrices();
-        match self.inner.cfg.setup {
+        let nodes = self.net.nodes();
+        match self.net.config().setup {
             SetupExchange::RawData => {
-                let xs: Vec<Matrix> =
-                    self.inner.nodes.iter().map(|n| n.x.clone()).collect();
-                DkpcaModel::from_coeff_parts(&self.inner.kernel, &xs, &coeffs)
+                let xs: Vec<Matrix> = nodes.iter().map(|n| n.x.clone()).collect();
+                DkpcaModel::from_coeff_parts(self.net.kernel(), &xs, &coeffs)
             }
             SetupExchange::RffFeatures { .. } => {
-                let zs: Vec<Matrix> = self
-                    .inner
-                    .nodes
+                let zs: Vec<Matrix> = nodes
                     .iter()
                     .map(|n| n.zx.clone().expect("feature mode stores zx"))
                     .collect();
@@ -172,16 +171,16 @@ impl MultiKpcaSolver {
     }
 
     /// The shared feature map in `SetupExchange::RffFeatures` mode (see
-    /// [`DkpcaSolver::rff_map`]).
+    /// [`crate::admm::DkpcaSolver::rff_map`]).
     pub fn rff_map(&self) -> Option<RffMap> {
-        self.inner.rff_map()
+        self.net.rff_map()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::admm::AdmmConfig;
+    use crate::admm::DkpcaSolver;
     use crate::backend::NativeBackend;
     use crate::central::{central_kpca, mean_subspace_affinity};
     use crate::data::synth::{blob_centers, sample_blobs, BlobSpec};
@@ -225,7 +224,7 @@ mod tests {
         let cfg = AdmmConfig { max_iters: 40, ..Default::default() };
         let mut solver = MultiKpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0, 3);
         let res = solver.run(&NativeBackend);
-        for (node, coeffs) in solver.inner.nodes.iter().zip(&res.alphas) {
+        for (node, coeffs) in solver.nodes().iter().zip(&res.alphas) {
             let kc = crate::kernels::center_gram(&crate::kernels::gram_sym(&K, &node.x));
             for c in 0..3 {
                 let kac = crate::linalg::ops::matvec(&kc, &coeffs.col(c));

@@ -1,0 +1,266 @@
+//! The lockstep in-memory transport: all node programs pumped on one
+//! thread in deterministic rounds — the reference execution path that
+//! `admm::DkpcaSolver` and `multik::MultiKpcaSolver` are thin facades
+//! over.
+//!
+//! Each sweep pumps every program in node order against its
+//! [`LockstepEndpoint`], then routes everything sent this round into
+//! the receivers' inboxes. All programs follow the same phase schedule
+//! (same graph, same config, same deterministic stop rule), so after
+//! every sweep the whole network sits at the same protocol point —
+//! which is what lets [`LockstepNet::run`] fire a per-iteration
+//! observer with every node's post-update state, like the old
+//! sequential driver's `step` loop did.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::admm::{AdmmConfig, NodeState};
+use crate::backend::ComputeBackend;
+use crate::data::NoiseModel;
+use crate::kernels::Kernel;
+use crate::linalg::Matrix;
+use crate::topology::Graph;
+
+use super::message::Envelope;
+use super::program::NodeProgram;
+use super::transport::{pump_step, transmit_env, ChannelSpec, TraceLog, TrafficStats, Transport};
+
+/// One node's view of the lockstep exchange: an inbox filled by the
+/// routing pass and an outbox drained by it.
+pub struct LockstepEndpoint {
+    id: usize,
+    channel: ChannelSpec,
+    stats: Arc<TrafficStats>,
+    trace: Option<Arc<TraceLog>>,
+    inbox: VecDeque<Envelope>,
+    outbox: Vec<(usize, Envelope)>,
+}
+
+impl Transport for LockstepEndpoint {
+    fn send(&mut self, to: usize, env: Envelope) {
+        let env = transmit_env(&self.channel, &self.stats, self.trace.as_deref(), self.id, to, env);
+        self.outbox.push((to, env));
+    }
+
+    fn try_recv(&mut self) -> Option<Envelope> {
+        self.inbox.pop_front()
+    }
+
+    fn park(&mut self) -> bool {
+        // Single-threaded: nothing can arrive until the exchange
+        // routes the next sweep.
+        false
+    }
+}
+
+/// The whole network on one thread: programs + endpoints + accounting.
+pub struct LockstepNet {
+    programs: Vec<NodeProgram>,
+    endpoints: Vec<LockstepEndpoint>,
+    stats: Arc<TrafficStats>,
+    stop_lag: usize,
+}
+
+impl LockstepNet {
+    /// Build the network and pump the setup exchange to completion, so
+    /// node states are inspectable immediately (as the old sequential
+    /// drivers allowed).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        xs: &[Matrix],
+        graph: &Graph,
+        kernel: &Kernel,
+        cfg: &AdmmConfig,
+        noise: NoiseModel,
+        noise_seed: u64,
+        n_components: usize,
+        backend: &dyn ComputeBackend,
+        trace: Option<Arc<TraceLog>>,
+    ) -> LockstepNet {
+        assert_eq!(xs.len(), graph.len(), "one dataset per node");
+        assert!(graph.is_connected(), "Assumption 1: connected network");
+        assert!(graph.min_degree_one(), "Alg. 1 needs |Omega_j| >= 1");
+        assert!(n_components >= 1, "need at least one component");
+        let n = xs.len();
+        let stop_lag = graph.diameter().max(1);
+        let stats = Arc::new(TrafficStats::new(n));
+        let channel = ChannelSpec { noise, noise_seed, n_nodes: n };
+        let programs: Vec<NodeProgram> = (0..n)
+            .map(|id| {
+                NodeProgram::new(
+                    id,
+                    xs[id].clone(),
+                    graph.neighbors(id).to_vec(),
+                    *kernel,
+                    cfg.clone(),
+                    stop_lag,
+                    n_components,
+                )
+            })
+            .collect();
+        let endpoints: Vec<LockstepEndpoint> = (0..n)
+            .map(|id| LockstepEndpoint {
+                id,
+                channel,
+                stats: stats.clone(),
+                trace: trace.clone(),
+                inbox: VecDeque::new(),
+                outbox: Vec::new(),
+            })
+            .collect();
+        let mut net = LockstepNet { programs, endpoints, stats, stop_lag };
+        // Pump until every node has built its state from the setup
+        // exchange (with max_iters == 0 this may cascade further —
+        // harmless; run() completes whatever remains).
+        while !net.programs.iter().all(|p| p.node_ready()) {
+            let routed = net.sweep(backend);
+            assert!(
+                routed > 0 || net.programs.iter().all(|p| p.node_ready()),
+                "lockstep setup exchange stalled"
+            );
+        }
+        net
+    }
+
+    /// One lockstep round: pump every program in node order, then
+    /// route everything sent this round. Returns envelopes routed.
+    fn sweep(&mut self, backend: &dyn ComputeBackend) -> usize {
+        for (program, endpoint) in self.programs.iter_mut().zip(&mut self.endpoints) {
+            pump_step(program, endpoint, backend);
+        }
+        let mut in_flight: Vec<(usize, Envelope)> = Vec::new();
+        for endpoint in &mut self.endpoints {
+            in_flight.append(&mut endpoint.outbox);
+        }
+        let routed = in_flight.len();
+        for (to, env) in in_flight {
+            self.endpoints[to].inbox.push_back(env);
+        }
+        routed
+    }
+
+    /// Pump every pass to completion. `observer` fires after each
+    /// completed protocol iteration (global 0-based index across
+    /// passes) with every node's post-update state — the hook the
+    /// experiment runners use for per-iteration traces.
+    pub fn run(
+        &mut self,
+        backend: &dyn ComputeBackend,
+        mut observer: impl FnMut(usize, &[&NodeState]),
+    ) {
+        let mut seen = self.min_total_iterations();
+        loop {
+            if self.programs.iter().all(|p| p.is_done()) {
+                break;
+            }
+            let routed = self.sweep(backend);
+            let now = self.min_total_iterations();
+            while seen < now {
+                let states: Vec<&NodeState> = self.programs.iter().map(|p| p.node()).collect();
+                observer(seen, &states);
+                seen += 1;
+            }
+            assert!(
+                routed > 0 || self.programs.iter().all(|p| p.is_done()),
+                "lockstep protocol stalled mid-run"
+            );
+        }
+    }
+
+    fn min_total_iterations(&self) -> usize {
+        self.programs.iter().map(|p| p.total_iterations()).min().unwrap_or(0)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.programs.iter().all(|p| p.is_done())
+    }
+
+    pub fn len(&self) -> usize {
+        self.programs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.programs.is_empty()
+    }
+
+    /// The decentralized stop rule's lag (graph diameter).
+    pub fn stop_lag(&self) -> usize {
+        self.stop_lag
+    }
+
+    /// Raw input dimension M of the node data (what
+    /// `SetupExchange::shared_map` needs — the facades' one shared
+    /// source for deriving the training feature map).
+    pub fn input_dim(&self) -> usize {
+        self.nodes().first().map_or(0, |n| n.x.cols())
+    }
+
+    /// The ADMM configuration the programs run (identical at every
+    /// node by construction).
+    pub fn config(&self) -> &AdmmConfig {
+        self.programs[0].config()
+    }
+
+    /// The kernel the Grams were assembled with.
+    pub fn kernel(&self) -> &Kernel {
+        self.programs[0].kernel()
+    }
+
+    /// The shared feature map the programs' setup mode prescribes
+    /// (`None` under `SetupExchange::RawData`). The ONE derivation
+    /// both solver facades expose as `rff_map`.
+    pub fn rff_map(&self) -> Option<crate::kernels::RffMap> {
+        self.config().setup.shared_map(self.kernel(), self.input_dim())
+    }
+
+    pub fn node(&self, j: usize) -> &NodeState {
+        self.programs[j].node()
+    }
+
+    /// Every node's state, in node order.
+    pub fn nodes(&self) -> Vec<&NodeState> {
+        self.programs.iter().map(|p| p.node()).collect()
+    }
+
+    /// Iterations each component pass ran — identical at every node
+    /// (the stop rule is deterministic; asserted here exactly like the
+    /// threaded driver's join loop).
+    pub fn per_component_iterations(&self) -> Vec<usize> {
+        let first = self.programs[0].iterations().to_vec();
+        for p in &self.programs {
+            assert_eq!(
+                p.iterations(),
+                first.as_slice(),
+                "nodes disagree on the stop iterations"
+            );
+        }
+        first
+    }
+
+    /// Whether each pass stopped on the `tol` criterion (asserted
+    /// identical across nodes).
+    pub fn converged_flags(&self) -> Vec<bool> {
+        let first = self.programs[0].converged_flags().to_vec();
+        for p in &self.programs {
+            assert_eq!(p.converged_flags(), first.as_slice(), "nodes disagree on convergence");
+        }
+        first
+    }
+
+    /// Floats moved by the iteration protocol (§4.2 accounting plus
+    /// multik deflation exchanges; excludes the one-time setup).
+    pub fn comm_floats(&self) -> u64 {
+        self.stats.iter_total()
+    }
+
+    /// Floats moved by the one-time setup exchange.
+    pub fn setup_floats(&self) -> u64 {
+        self.stats.setup_total()
+    }
+
+    /// The raw per-edge counters.
+    pub fn stats(&self) -> &TrafficStats {
+        &self.stats
+    }
+}

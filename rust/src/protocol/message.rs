@@ -1,4 +1,6 @@
-//! Typed message fabric payloads exchanged between node actors.
+//! Typed protocol messages exchanged between node programs (moved here
+//! from `coordinator::message` when the protocol engine became its own
+//! subsystem — the coordinator re-exports these for compatibility).
 
 use crate::admm::{RoundA, RoundB};
 use crate::linalg::Matrix;

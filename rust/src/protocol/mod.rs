@@ -1,0 +1,40 @@
+//! S14 — the protocol engine: ONE transport-agnostic implementation of
+//! the paper's per-node program.
+//!
+//! The repo used to implement Alg. 1 twice — sequentially in
+//! `admm::DkpcaSolver` + `multik::MultiKpcaSolver` and thread-per-node
+//! in `coordinator::node_main` — and every protocol feature (RFF
+//! setup, the gossip stop rule, multik deflation) had to be written
+//! twice and held bit-identical by tests. This subsystem collapses
+//! both onto:
+//!
+//! * [`NodeProgram`] (`program`) — the per-node state machine (Setup →
+//!   RoundA → RoundB → stop-check, per-pass bank/deflate), a pure
+//!   `deliver`/`poll` step function over [`Envelope`]s. It owns the
+//!   diameter-lagged decentralized stop rule and the deflation
+//!   protocol; there is no other copy of either.
+//! * [`Transport`] (`transport`) — one node's view of the network,
+//!   with the channel model ([`ChannelSpec`] noise injection), §4.2
+//!   float accounting ([`TrafficStats`]) and optional golden-trace
+//!   recording ([`TraceLog`]) behind the send path, plus the shared
+//!   pump (`pump_step` / `run_node`).
+//! * [`LockstepNet`] (`lockstep`) — the single-threaded in-memory
+//!   exchange the sequential facades pump; `coordinator::fabric`
+//!   provides the thread-per-node channel implementation.
+//!
+//! Both drivers therefore run literally the same node code over the
+//! same messages — bit-identity between them is by construction, and
+//! every future protocol variant (communication-censored rounds,
+//! DeEPCA-style updates, block multik) is a one-place change here.
+
+pub mod lockstep;
+pub mod message;
+pub mod program;
+pub mod transport;
+
+pub use lockstep::{LockstepEndpoint, LockstepNet};
+pub use message::{Envelope, Payload, Phase};
+pub use program::{NodeOutput, NodeProgram, Outbound};
+pub use transport::{
+    pump_step, run_node, ChannelSpec, TraceEvent, TraceLog, TrafficStats, Transport,
+};

@@ -1,0 +1,493 @@
+//! The per-node protocol state machine — the ONE implementation of the
+//! paper's Alg. 1 node program (plus the multik extension), shared by
+//! every driver.
+//!
+//! Phases:
+//!
+//! ```text
+//! Setup -> [ RoundA -> RoundB -> stop-check ]* -> bank -+-> Deflate -> next pass
+//!                                                       +-> Done (last pass)
+//! ```
+//!
+//! The program is a pure message-driven step function: [`NodeProgram::
+//! deliver`] stashes incoming [`Envelope`]s, [`NodeProgram::poll`]
+//! advances as far as the stash allows and emits outbound envelopes.
+//! It owns the diameter-lagged decentralized stop rule (the gossip
+//! window piggybacked on round-A messages) and the per-pass deflation/
+//! banking protocol. Transports own everything in flight (noise,
+//! accounting, tracing) — see `protocol::transport`.
+//!
+//! Because each node's arithmetic is a deterministic function of its
+//! own state and the received messages, any two transports that
+//! deliver the same messages produce bit-identical runs; the lockstep
+//! exchange and the threaded fabric are asserted identical by
+//! rust/tests/coordinator.rs, multik.rs, and threads.rs.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::admm::{AdmmConfig, NodeState, RoundA};
+use crate::backend::ComputeBackend;
+use crate::kernels::Kernel;
+use crate::linalg::Matrix;
+use crate::util::time::thread_cpu_secs;
+
+use super::message::{Envelope, Payload, Phase};
+
+/// An envelope addressed to a neighbor, produced by [`NodeProgram::poll`].
+pub type Outbound = (usize, Envelope);
+
+/// What the program is currently waiting for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Step {
+    /// Nothing emitted yet: the next poll sends the setup payloads.
+    Start,
+    /// Awaiting the neighbors' setup payloads.
+    Setup,
+    /// Round A sent for the current iteration; awaiting neighbors'.
+    RoundA,
+    /// Round B segments scattered; awaiting the neighbors' z-hosts'.
+    RoundB,
+    /// Converged alpha shipped; awaiting the neighbors' for deflation.
+    Deflate,
+    Done,
+}
+
+/// Final outputs of a completed program (what the threaded driver's
+/// join loop consumes).
+pub struct NodeOutput {
+    pub id: usize,
+    /// One converged alpha column per component pass (banked, original
+    /// dual coordinates).
+    pub alpha_cols: Vec<Vec<f64>>,
+    /// Iterations each pass ran.
+    pub iterations: Vec<usize>,
+    /// Whether each pass stopped on the `tol` criterion.
+    pub converged: Vec<bool>,
+    /// Pure-compute seconds (NodeState construction, z-solve, local
+    /// updates, deflation) on the thread clock.
+    pub compute_secs: f64,
+    /// Wall seconds of the iteration protocol (setup excluded).
+    pub iter_secs: f64,
+}
+
+/// One node of Alg. 1 as a transport-agnostic state machine.
+pub struct NodeProgram {
+    id: usize,
+    /// The node's own data, held only until setup: `NodeState` keeps
+    /// its own copy, so this is `take`n when the state is built rather
+    /// than doubling per-node data memory for the whole run.
+    x_own: Option<Matrix>,
+    nbrs: Vec<usize>,
+    kernel: Kernel,
+    cfg: AdmmConfig,
+    /// Iterations the decentralized stopping rule lags behind the
+    /// local signal: the graph diameter, i.e. how long max-consensus
+    /// piggybacked on round-A messages needs to cover the network.
+    stop_lag: usize,
+    n_components: usize,
+    step: Step,
+    /// Out-of-order stash: everything received and not yet consumed.
+    inbox: Vec<Envelope>,
+    /// The node state, built once the setup exchange completes.
+    node: Option<NodeState>,
+    /// Convergence gossip (tol > 0): sliding window of running
+    /// max-consensus estimates of the network-wide alpha delta, one
+    /// entry per iteration s in [t - stop_lag, t - 1]. By round A of
+    /// iteration t the head entry has been folded through `stop_lag >=
+    /// diameter` exchange rounds, so it IS the settled network-wide
+    /// max of iteration t - stop_lag — every node computes the
+    /// identical value and the identical stop decision, with no global
+    /// barrier. The window restarts with each pass.
+    gossip: VecDeque<f64>,
+    /// Current component pass.
+    comp: usize,
+    /// Completed iterations within the current pass.
+    t: usize,
+    /// Completed iterations across all passes (lockstep observers).
+    total_iters: usize,
+    /// Stop decision taken at round A, applied after the updates.
+    pending_stop: bool,
+    pass_converged: bool,
+    // Outputs.
+    alpha_cols: Vec<Vec<f64>>,
+    iterations: Vec<usize>,
+    converged: Vec<bool>,
+    compute_secs: f64,
+    iter_clock: Option<Instant>,
+    iter_secs: f64,
+}
+
+impl NodeProgram {
+    /// Build the program for node `id` over its own data. Nothing runs
+    /// until the first [`NodeProgram::poll`].
+    pub fn new(
+        id: usize,
+        x_own: Matrix,
+        neighbors: Vec<usize>,
+        kernel: Kernel,
+        cfg: AdmmConfig,
+        stop_lag: usize,
+        n_components: usize,
+    ) -> NodeProgram {
+        assert!(!neighbors.is_empty(), "Alg. 1 needs |Omega_j| >= 1");
+        assert!(n_components >= 1, "need at least one component");
+        NodeProgram {
+            id,
+            x_own: Some(x_own),
+            nbrs: neighbors,
+            kernel,
+            cfg,
+            stop_lag: stop_lag.max(1),
+            n_components,
+            step: Step::Start,
+            inbox: Vec::new(),
+            node: None,
+            gossip: VecDeque::new(),
+            comp: 0,
+            t: 0,
+            total_iters: 0,
+            pending_stop: false,
+            pass_converged: false,
+            alpha_cols: Vec::new(),
+            iterations: Vec::new(),
+            converged: Vec::new(),
+            compute_secs: 0.0,
+            iter_clock: None,
+            iter_secs: 0.0,
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// The ADMM configuration this program runs.
+    pub fn config(&self) -> &AdmmConfig {
+        &self.cfg
+    }
+
+    /// The kernel the Grams are assembled with.
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.step == Step::Done
+    }
+
+    /// Whether the setup exchange has completed and node state exists.
+    pub fn node_ready(&self) -> bool {
+        self.node.is_some()
+    }
+
+    /// The node's solver state (panics before the setup exchange
+    /// completes — the lockstep facades pump setup at construction).
+    pub fn node(&self) -> &NodeState {
+        self.node.as_ref().expect("setup exchange not complete")
+    }
+
+    /// Completed iterations across all passes.
+    pub fn total_iterations(&self) -> usize {
+        self.total_iters
+    }
+
+    /// Iterations each finished pass ran.
+    pub fn iterations(&self) -> &[usize] {
+        &self.iterations
+    }
+
+    /// Per-pass `tol`-stop verdicts so far.
+    pub fn converged_flags(&self) -> &[bool] {
+        &self.converged
+    }
+
+    pub fn compute_secs(&self) -> f64 {
+        self.compute_secs
+    }
+
+    /// Stash an incoming envelope (consumed by the next `poll`).
+    pub fn deliver(&mut self, env: Envelope) {
+        self.inbox.push(env);
+    }
+
+    /// Round A/B envelopes of pass `comp` use iteration numbers in a
+    /// disjoint band so they can never match another pass's phase.
+    fn base(&self) -> usize {
+        self.comp * (self.cfg.max_iters + 1)
+    }
+
+    fn ready(&self, iter: usize, phase: Phase) -> bool {
+        self.inbox.iter().filter(|e| e.iter == iter && e.phase == phase).count()
+            >= self.nbrs.len()
+    }
+
+    fn take(&mut self, iter: usize, phase: Phase) -> Vec<Envelope> {
+        let mut got = Vec::with_capacity(self.nbrs.len());
+        let mut rest = Vec::new();
+        for e in self.inbox.drain(..) {
+            if e.iter == iter && e.phase == phase {
+                got.push(e);
+            } else {
+                rest.push(e);
+            }
+        }
+        self.inbox = rest;
+        got
+    }
+
+    /// Advance as far as the inbox allows, pushing outbound envelopes.
+    pub fn poll(&mut self, backend: &dyn ComputeBackend, out: &mut Vec<Outbound>) {
+        loop {
+            match self.step {
+                Step::Start => {
+                    // Setup exchange: raw data (Alg. 1 as printed) or
+                    // shared-seed RFF features (§7: raw samples never
+                    // leave the node). Payloads leave clean — the
+                    // transport applies the per-edge channel noise.
+                    let x_own = self.x_own.as_ref().expect("data present before setup");
+                    match self.cfg.setup.shared_map(&self.kernel, x_own.cols()) {
+                        None => {
+                            for &to in &self.nbrs {
+                                out.push((
+                                    to,
+                                    Envelope {
+                                        from: self.id,
+                                        iter: 0,
+                                        phase: Phase::Setup,
+                                        payload: Payload::Data(x_own.clone()),
+                                    },
+                                ));
+                            }
+                        }
+                        Some(map) => {
+                            let z = map.features(x_own);
+                            for &to in &self.nbrs {
+                                out.push((
+                                    to,
+                                    Envelope {
+                                        from: self.id,
+                                        iter: 0,
+                                        phase: Phase::Setup,
+                                        payload: Payload::Features(z.clone()),
+                                    },
+                                ));
+                            }
+                        }
+                    }
+                    self.step = Step::Setup;
+                }
+                Step::Setup => {
+                    if !self.ready(0, Phase::Setup) {
+                        return;
+                    }
+                    let msgs = self.take(0, Phase::Setup);
+                    // Reorder received setup payloads into `nbrs` order.
+                    let received: Vec<Matrix> = self
+                        .nbrs
+                        .iter()
+                        .map(|&from| {
+                            msgs.iter()
+                                .find(|e| e.from == from)
+                                .map(|e| match &e.payload {
+                                    Payload::Data(m) | Payload::Features(m) => m.clone(),
+                                    _ => unreachable!("setup phase carries data"),
+                                })
+                                .expect("missing setup payload")
+                        })
+                        .collect();
+                    // NodeState clones what it keeps; drop the
+                    // program's copy once the state owns its data.
+                    let x_own = self.x_own.take().expect("data present before setup");
+                    let t0 = thread_cpu_secs();
+                    self.node = Some(NodeState::new(
+                        self.id,
+                        &x_own,
+                        self.nbrs.clone(),
+                        &received,
+                        &self.kernel,
+                        &self.cfg,
+                        backend,
+                    ));
+                    self.compute_secs += thread_cpu_secs() - t0;
+                    self.iter_clock = Some(Instant::now());
+                    self.begin_iteration(out);
+                }
+                Step::RoundA => {
+                    let tag = self.base() + self.t;
+                    if !self.ready(tag, Phase::RoundA) {
+                        return;
+                    }
+                    let msgs = self.take(tag, Phase::RoundA);
+                    // Fold neighbor windows into ours (positionally —
+                    // all nodes' windows cover the same iterations).
+                    let mut inbox_a: Vec<(usize, RoundA)> = Vec::with_capacity(msgs.len());
+                    for e in msgs {
+                        match e.payload {
+                            Payload::A(a, w) => {
+                                debug_assert_eq!(w.len(), self.gossip.len());
+                                for (mine, theirs) in self.gossip.iter_mut().zip(&w) {
+                                    if *theirs > *mine {
+                                        *mine = *theirs;
+                                    }
+                                }
+                                inbox_a.push((e.from, a));
+                            }
+                            _ => unreachable!("round-A phase carries Payload::A"),
+                        }
+                    }
+                    // Decentralized stopping rule: stop after this
+                    // iteration once the settled network-wide max of
+                    // iteration t - stop_lag is below tol.
+                    self.pending_stop = self.cfg.tol > 0.0
+                        && self.t >= self.stop_lag
+                        && self.gossip.front().copied().unwrap_or(f64::INFINITY) < self.cfg.tol;
+                    let rho2 = self.cfg.rho2_at(self.t);
+                    let node = self.node.as_mut().expect("setup done before round A");
+                    let tz = thread_cpu_secs();
+                    let segments = node.z_solve(&inbox_a, rho2, backend);
+                    self.compute_secs += thread_cpu_secs() - tz;
+                    for (to, seg) in segments {
+                        if to == self.id {
+                            node.receive_z(self.id, &seg);
+                        } else {
+                            out.push((
+                                to,
+                                Envelope {
+                                    from: self.id,
+                                    iter: tag,
+                                    phase: Phase::RoundB,
+                                    payload: Payload::B(seg),
+                                },
+                            ));
+                        }
+                    }
+                    self.step = Step::RoundB;
+                }
+                Step::RoundB => {
+                    let tag = self.base() + self.t;
+                    if !self.ready(tag, Phase::RoundB) {
+                        return;
+                    }
+                    let msgs = self.take(tag, Phase::RoundB);
+                    let rho2 = self.cfg.rho2_at(self.t);
+                    let node = self.node.as_mut().expect("setup done before round B");
+                    for e in msgs {
+                        match e.payload {
+                            Payload::B(seg) => node.receive_z(e.from, &seg),
+                            _ => unreachable!("round-B phase carries Payload::B"),
+                        }
+                    }
+                    let tu = thread_cpu_secs();
+                    node.local_update(rho2, backend);
+                    self.compute_secs += thread_cpu_secs() - tu;
+                    // Maintain the gossip window: drop the decided
+                    // head, seed this iteration with the own delta.
+                    if self.cfg.tol > 0.0 {
+                        if self.gossip.len() == self.stop_lag {
+                            self.gossip.pop_front();
+                        }
+                        self.gossip.push_back(node.alpha_delta());
+                    }
+                    self.t += 1;
+                    self.total_iters += 1;
+                    if self.pending_stop {
+                        self.pass_converged = true;
+                        self.finish_pass(out);
+                    } else {
+                        self.begin_iteration(out);
+                    }
+                }
+                Step::Deflate => {
+                    if !self.ready(self.comp, Phase::Deflate) {
+                        return;
+                    }
+                    let msgs = self.take(self.comp, Phase::Deflate);
+                    let received: Vec<(usize, Vec<f64>)> = msgs
+                        .into_iter()
+                        .map(|e| match e.payload {
+                            Payload::Converged(a) => (e.from, a),
+                            _ => unreachable!("deflate phase carries converged alphas"),
+                        })
+                        .collect();
+                    let node = self.node.as_mut().expect("setup done before deflation");
+                    let td = thread_cpu_secs();
+                    node.deflate_and_reseed(&received, self.comp + 1);
+                    self.compute_secs += thread_cpu_secs() - td;
+                    self.comp += 1;
+                    self.t = 0;
+                    self.gossip.clear();
+                    self.pass_converged = false;
+                    self.begin_iteration(out);
+                }
+                Step::Done => return,
+            }
+        }
+    }
+
+    /// Send round A of iteration `t` (or finish the pass at the
+    /// iteration cap).
+    fn begin_iteration(&mut self, out: &mut Vec<Outbound>) {
+        if self.t >= self.cfg.max_iters {
+            self.finish_pass(out);
+            return;
+        }
+        let window: Vec<f64> = self.gossip.iter().copied().collect();
+        let tag = self.base() + self.t;
+        let node = self.node.as_ref().expect("setup done before iterating");
+        for &to in &self.nbrs {
+            let msg = node.round_a_message(to);
+            out.push((
+                to,
+                Envelope {
+                    from: self.id,
+                    iter: tag,
+                    phase: Phase::RoundA,
+                    payload: Payload::A(msg, window.clone()),
+                },
+            ));
+        }
+        self.pending_stop = false;
+        self.step = Step::RoundA;
+    }
+
+    /// Bank the converged component; ship the deflation exchange or
+    /// finish the program after the last pass.
+    fn finish_pass(&mut self, out: &mut Vec<Outbound>) {
+        let node = self.node.as_mut().expect("setup done before banking");
+        node.bank_component();
+        self.alpha_cols.push(node.components[self.comp].clone());
+        self.iterations.push(self.t);
+        self.converged.push(self.pass_converged);
+        if self.comp + 1 < self.n_components {
+            for &to in &self.nbrs {
+                out.push((
+                    to,
+                    Envelope {
+                        from: self.id,
+                        iter: self.comp,
+                        phase: Phase::Deflate,
+                        payload: Payload::Converged(node.alpha.clone()),
+                    },
+                ));
+            }
+            self.step = Step::Deflate;
+        } else {
+            self.iter_secs = self.iter_clock.map_or(0.0, |c| c.elapsed().as_secs_f64());
+            self.step = Step::Done;
+        }
+    }
+
+    /// Consume a finished program into its outputs.
+    pub fn into_output(self) -> NodeOutput {
+        assert!(self.is_done(), "node {} program not finished", self.id);
+        NodeOutput {
+            id: self.id,
+            alpha_cols: self.alpha_cols,
+            iterations: self.iterations,
+            converged: self.converged,
+            compute_secs: self.compute_secs,
+            iter_secs: self.iter_secs,
+        }
+    }
+}

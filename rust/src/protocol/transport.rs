@@ -1,0 +1,392 @@
+//! The transport boundary of the protocol engine.
+//!
+//! Everything that happens to an envelope *in flight* lives here, so
+//! both drivers report through one code path:
+//!
+//! * [`ChannelSpec`] — the per-directed-edge channel model: setup
+//!   payloads pass through the [`NoiseModel`] seeded per edge exactly
+//!   as both drivers always did; iteration messages are noise-free.
+//! * [`TrafficStats`] — §4.2 float accounting per directed edge, with
+//!   a per-phase split so drivers can separate one-time setup cost
+//!   (and multik deflation exchanges) from iteration traffic.
+//! * [`TraceLog`] — optional per-send event recorder behind the golden
+//!   message-trace tests.
+//! * [`Transport`] — one node's view of the network. Two
+//!   implementations: the lockstep in-memory exchange
+//!   (`protocol::lockstep`, single-threaded, drives the sequential
+//!   facades) and the blocking channel fabric (`coordinator::fabric`,
+//!   one OS thread per node).
+//! * [`pump_step`] / [`run_node`] — the one pump loop that moves a
+//!   [`NodeProgram`] over any transport.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::backend::ComputeBackend;
+use crate::data::NoiseModel;
+
+use super::message::{Envelope, Payload, Phase};
+use super::program::{NodeOutput, NodeProgram};
+
+/// The per-directed-edge channel model shared by every transport:
+/// which noise applies to setup payloads and how edge seeds derive, so
+/// the lockstep and threaded runs noise identical payloads identically.
+#[derive(Clone, Copy, Debug)]
+pub struct ChannelSpec {
+    pub noise: NoiseModel,
+    pub noise_seed: u64,
+    pub n_nodes: usize,
+}
+
+impl ChannelSpec {
+    /// A lossless channel (tests, baselines).
+    pub fn lossless(n_nodes: usize) -> ChannelSpec {
+        ChannelSpec { noise: NoiseModel::None, noise_seed: 0, n_nodes }
+    }
+
+    /// Edge `(from -> to)` channel seed — one independent noisy copy
+    /// per directed edge, as over a physical channel. Identical in both
+    /// transports so the two drivers stay bit-identical.
+    pub fn edge_seed(&self, from: usize, to: usize) -> u64 {
+        self.noise_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((from * self.n_nodes + to) as u64)
+    }
+
+    /// Apply the channel to an envelope in flight: setup payloads (raw
+    /// data or RFF features) pass through the per-edge noise model;
+    /// iteration messages are noise-free (paper §3.1 noises the data
+    /// exchange only).
+    pub fn transmit(&self, from: usize, to: usize, env: Envelope) -> Envelope {
+        // Lossless channels pass the payload through untouched —
+        // NoiseModel::apply would clone a full setup matrix per edge
+        // for nothing.
+        if matches!(self.noise, NoiseModel::None) {
+            return env;
+        }
+        let Envelope { from: sender, iter, phase, payload } = env;
+        let payload = match payload {
+            Payload::Data(m) => {
+                Payload::Data(self.noise.apply(&m, self.edge_seed(from, to)))
+            }
+            Payload::Features(m) => {
+                Payload::Features(self.noise.apply(&m, self.edge_seed(from, to)))
+            }
+            other => other,
+        };
+        Envelope { from: sender, iter, phase, payload }
+    }
+}
+
+fn phase_idx(p: Phase) -> usize {
+    match p {
+        Phase::Setup => 0,
+        Phase::RoundA => 1,
+        Phase::RoundB => 2,
+        Phase::Deflate => 3,
+    }
+}
+
+/// Per-directed-edge traffic counters (floats transmitted), plus a
+/// per-phase split of the totals.
+pub struct TrafficStats {
+    /// Indexed by `from * n + to`.
+    counters: Vec<AtomicU64>,
+    /// Totals per protocol phase (Setup/RoundA/RoundB/Deflate).
+    phases: [AtomicU64; 4],
+    n: usize,
+}
+
+impl TrafficStats {
+    pub fn new(n: usize) -> TrafficStats {
+        TrafficStats {
+            counters: (0..n * n).map(|_| AtomicU64::new(0)).collect(),
+            phases: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            n,
+        }
+    }
+
+    /// Record one transmitted envelope on its directed edge.
+    pub fn record_env(&self, from: usize, to: usize, env: &Envelope) {
+        let floats = env.floats();
+        self.counters[from * self.n + to].fetch_add(floats, Ordering::Relaxed);
+        self.phases[phase_idx(env.phase)].fetch_add(floats, Ordering::Relaxed);
+    }
+
+    pub fn edge(&self, from: usize, to: usize) -> u64 {
+        self.counters[from * self.n + to].load(Ordering::Relaxed)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counters.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Floats sent by one node across all its links.
+    pub fn sent_by(&self, node: usize) -> u64 {
+        (0..self.n).map(|to| self.edge(node, to)).sum()
+    }
+
+    /// Floats moved in one protocol phase, network-wide.
+    pub fn phase_total(&self, phase: Phase) -> u64 {
+        self.phases[phase_idx(phase)].load(Ordering::Relaxed)
+    }
+
+    /// One-time setup-exchange floats (`N*M` per directed edge raw,
+    /// `N*D` under the RFF feature exchange).
+    pub fn setup_total(&self) -> u64 {
+        self.phase_total(Phase::Setup)
+    }
+
+    /// Everything except the one-time setup (the §4.2 iteration
+    /// protocol plus multik deflation exchanges).
+    pub fn iter_total(&self) -> u64 {
+        self.total() - self.setup_total()
+    }
+}
+
+/// One transmitted envelope as the golden-trace tests see it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub from: usize,
+    pub to: usize,
+    pub iter: usize,
+    pub phase: Phase,
+    pub floats: u64,
+}
+
+/// Optional per-send recorder. Cross-edge interleaving differs between
+/// transports (threads race), but the send sequence *per directed
+/// edge* originates from one sender thread and is fully deterministic
+/// — [`TraceLog::render_per_edge`] is that canonical view, identical
+/// across transports and checked against a golden trace in
+/// `rust/tests/protocol_trace.rs`.
+#[derive(Default)]
+pub struct TraceLog {
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl TraceLog {
+    pub fn record(&self, ev: TraceEvent) {
+        self.events
+            .lock()
+            .unwrap_or_else(|poison| poison.into_inner())
+            .push(ev);
+    }
+
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events
+            .lock()
+            .unwrap_or_else(|poison| poison.into_inner())
+            .clone()
+    }
+
+    /// Canonical rendering: edges in `(from, to)` order, per-edge send
+    /// order preserved, one `from->to iter=.. phase=.. floats=..` line
+    /// per transmitted envelope.
+    pub fn render_per_edge(&self) -> String {
+        let mut edges: BTreeMap<(usize, usize), Vec<TraceEvent>> = BTreeMap::new();
+        for ev in self.events() {
+            edges.entry((ev.from, ev.to)).or_default().push(ev);
+        }
+        let mut out = String::new();
+        for ((from, to), events) in edges {
+            for ev in events {
+                out.push_str(&format!(
+                    "{from}->{to} iter={} phase={:?} floats={}\n",
+                    ev.iter, ev.phase, ev.floats
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Shared send-side bookkeeping: account, trace, then run the channel
+/// model. Every transport's `send` goes through here — comm accounting
+/// and noise injection live behind the transport boundary, never in
+/// driver code.
+pub(crate) fn transmit_env(
+    channel: &ChannelSpec,
+    stats: &TrafficStats,
+    trace: Option<&TraceLog>,
+    from: usize,
+    to: usize,
+    env: Envelope,
+) -> Envelope {
+    stats.record_env(from, to, &env);
+    if let Some(log) = trace {
+        log.record(TraceEvent { from, to, iter: env.iter, phase: env.phase, floats: env.floats() });
+    }
+    channel.transmit(from, to, env)
+}
+
+/// One node's view of the network fabric.
+pub trait Transport {
+    /// Transmit `env` to neighbor `to` through the channel model
+    /// (accounting + noise + optional tracing happen inside — the
+    /// node program never sees them).
+    fn send(&mut self, to: usize, env: Envelope);
+
+    /// Next already-delivered envelope, if any.
+    fn try_recv(&mut self) -> Option<Envelope>;
+
+    /// Wait for more traffic. `true` when a new envelope arrived;
+    /// `false` when none can (lockstep: control must return to the
+    /// exchange; fabric: every sender hung up).
+    fn park(&mut self) -> bool;
+}
+
+/// Drain deliverable traffic into the program, advance it as far as
+/// its inbox allows, transmit whatever it emitted. The one pump body
+/// both transports share.
+pub fn pump_step(
+    program: &mut NodeProgram,
+    transport: &mut dyn Transport,
+    backend: &dyn ComputeBackend,
+) {
+    while let Some(env) = transport.try_recv() {
+        program.deliver(env);
+    }
+    let mut out = Vec::new();
+    program.poll(backend, &mut out);
+    for (to, env) in out {
+        transport.send(to, env);
+    }
+}
+
+/// Blocking pump loop for thread-per-node transports: what
+/// `coordinator::node_main` reduced to.
+pub fn run_node(
+    mut program: NodeProgram,
+    mut transport: impl Transport,
+    backend: &dyn ComputeBackend,
+) -> NodeOutput {
+    loop {
+        pump_step(&mut program, &mut transport, backend);
+        if program.is_done() {
+            return program.into_output();
+        }
+        assert!(
+            transport.park(),
+            "transport closed while node {} was mid-protocol",
+            program.id()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::RoundA;
+    use crate::linalg::Matrix;
+
+    fn round_a_env(from: usize, iter: usize, len: usize) -> Envelope {
+        Envelope {
+            from,
+            iter,
+            phase: Phase::RoundA,
+            payload: Payload::A(RoundA { alpha: vec![0.0; len], bcol: vec![0.0; len] }, Vec::new()),
+        }
+    }
+
+    #[test]
+    fn channel_noises_setup_payloads_only() {
+        let chan = ChannelSpec {
+            noise: NoiseModel::Gaussian { sigma: 0.5 },
+            noise_seed: 7,
+            n_nodes: 4,
+        };
+        let m = Matrix::full(3, 2, 1.0);
+        let data = chan.transmit(
+            0,
+            1,
+            Envelope { from: 0, iter: 0, phase: Phase::Setup, payload: Payload::Data(m.clone()) },
+        );
+        match data.payload {
+            Payload::Data(out) => assert_ne!(out.as_slice(), m.as_slice(), "noise applied"),
+            _ => unreachable!(),
+        }
+        let a = chan.transmit(0, 1, round_a_env(0, 2, 3));
+        match a.payload {
+            Payload::A(msg, _) => assert_eq!(msg.alpha, vec![0.0; 3], "iteration messages clean"),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn channel_noise_is_per_edge_deterministic() {
+        let chan = ChannelSpec {
+            noise: NoiseModel::Gaussian { sigma: 0.1 },
+            noise_seed: 3,
+            n_nodes: 5,
+        };
+        let m = Matrix::full(2, 2, 0.5);
+        let env = |dst: usize| {
+            chan.transmit(
+                0,
+                dst,
+                Envelope {
+                    from: 0,
+                    iter: 0,
+                    phase: Phase::Setup,
+                    payload: Payload::Data(m.clone()),
+                },
+            )
+        };
+        let (a, b, c) = (env(1), env(1), env(2));
+        let get = |e: &Envelope| match &e.payload {
+            Payload::Data(m) => m.as_slice().to_vec(),
+            _ => unreachable!(),
+        };
+        assert_eq!(get(&a), get(&b), "same edge, same noise");
+        assert_ne!(get(&a), get(&c), "different edge, different noise");
+    }
+
+    #[test]
+    fn stats_split_phases() {
+        let stats = TrafficStats::new(3);
+        stats.record_env(
+            0,
+            1,
+            &Envelope {
+                from: 0,
+                iter: 0,
+                phase: Phase::Setup,
+                payload: Payload::Data(Matrix::zeros(2, 5)),
+            },
+        );
+        stats.record_env(0, 1, &round_a_env(0, 0, 4));
+        stats.record_env(
+            1,
+            0,
+            &Envelope {
+                from: 1,
+                iter: 0,
+                phase: Phase::Deflate,
+                payload: Payload::Converged(vec![0.0; 4]),
+            },
+        );
+        assert_eq!(stats.total(), 10 + 8 + 4);
+        assert_eq!(stats.setup_total(), 10);
+        assert_eq!(stats.phase_total(Phase::RoundA), 8);
+        assert_eq!(stats.phase_total(Phase::Deflate), 4);
+        assert_eq!(stats.iter_total(), 12);
+        assert_eq!(stats.edge(0, 1), 18);
+        assert_eq!(stats.sent_by(1), 4);
+    }
+
+    #[test]
+    fn trace_renders_per_edge_in_send_order() {
+        let log = TraceLog::default();
+        log.record(TraceEvent { from: 1, to: 0, iter: 0, phase: Phase::Setup, floats: 6 });
+        log.record(TraceEvent { from: 0, to: 1, iter: 0, phase: Phase::Setup, floats: 6 });
+        log.record(TraceEvent { from: 0, to: 1, iter: 0, phase: Phase::RoundA, floats: 8 });
+        assert_eq!(
+            log.render_per_edge(),
+            "0->1 iter=0 phase=Setup floats=6\n\
+             0->1 iter=0 phase=RoundA floats=8\n\
+             1->0 iter=0 phase=Setup floats=6\n"
+        );
+    }
+}

@@ -20,13 +20,28 @@ use crate::linalg::Matrix;
 use crate::model::{DkpcaModel, RffProjector};
 
 /// Which execution path serves a request.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ProjectionPath {
     /// Exact cross-Gram + out-of-sample centering + GEMM.
     Exact,
     /// Random-Fourier-feature approximation with `dim` features sampled
     /// deterministically from `seed` (RBF kernels only).
     Rff { dim: usize, seed: u64 },
+    /// Collapsed fast path for *feature-space-trained* models (linear
+    /// over `z`, the export of `SetupExchange::RffFeatures` training):
+    /// the engine featurizes the RAW batch through the training map —
+    /// resampled deterministically from `gamma`/`seed` at the model's
+    /// feature width and the batch's input dim — and serves one
+    /// `O(m D k)` GEMM per batch, algebraically exact and independent
+    /// of the support size. Caller contract: `gamma`/`seed` must be
+    /// the training values (kernel bandwidth +
+    /// `SetupExchange::RffFeatures` seed) and the batch must have the
+    /// training RAW input width — the linear artifact records none of
+    /// the three, so the engine cannot type-check them and a mismatch
+    /// serves finite-but-meaningless projections (freezing the map key
+    /// in the artifact is a ROADMAP follow-up). The projector is
+    /// cached like the RBF path's.
+    TrainedRff { gamma: f64, seed: u64 },
 }
 
 /// One unit of serving work: project `batch` through node `node`.
@@ -67,6 +82,10 @@ pub enum ServeError {
     RffNeedsRbf,
     /// RFF dim outside `1..=MAX_RFF_DIM`.
     BadRffDim { dim: usize },
+    /// TrainedRff path requested for a model that is not linear-over-z.
+    FeatureModelRequired,
+    /// TrainedRff path needs a strictly positive training bandwidth.
+    BadRffGamma,
     /// The engine shut down before replying.
     Canceled,
 }
@@ -83,6 +102,12 @@ impl std::fmt::Display for ServeError {
             ServeError::RffNeedsRbf => write!(f, "RFF path requires an RBF kernel"),
             ServeError::BadRffDim { dim } => {
                 write!(f, "rff dim {dim} outside 1..={MAX_RFF_DIM}")
+            }
+            ServeError::FeatureModelRequired => {
+                write!(f, "TrainedRff path requires a feature-space (linear-over-z) model")
+            }
+            ServeError::BadRffGamma => {
+                write!(f, "TrainedRff path needs a strictly positive training gamma")
             }
             ServeError::Canceled => write!(f, "engine shut down before the reply"),
         }
@@ -115,12 +140,14 @@ struct Job {
     reply: Sender<Result<Projection, ServeError>>,
 }
 
-type RffKey = (usize, usize, u64);
+/// Cache key: (node, feature dim D, seed, gamma bits, input dim M).
+/// Gamma/input-dim are fixed per node on the RBF path but caller-
+/// supplied on the TrainedRff path, so they key the cache too.
+type RffKey = (usize, usize, u64, u64, usize);
 
-/// Bounded FIFO cache of collapsed RFF projectors, keyed by
-/// (node, dim, seed). Built once on first use; subsequent requests at
-/// the same key are pure GEMM. At capacity the *oldest inserted* entry
-/// is evicted.
+/// Bounded FIFO cache of collapsed RFF projectors. Built once on first
+/// use; subsequent requests at the same key are pure GEMM. At capacity
+/// the *oldest inserted* entry is evicted.
 #[derive(Default)]
 struct RffCache {
     map: BTreeMap<RffKey, Arc<RffProjector>>,
@@ -296,7 +323,11 @@ fn worker_main(shared: Arc<Shared>, rx: Arc<Mutex<Receiver<Job>>>) {
                 c.points.fetch_add(req.batch.rows() as u64, Ordering::Relaxed);
                 match req.path {
                     ProjectionPath::Exact => c.exact_requests.fetch_add(1, Ordering::Relaxed),
-                    ProjectionPath::Rff { .. } => c.rff_requests.fetch_add(1, Ordering::Relaxed),
+                    // Both collapsed-projector paths count as RFF
+                    // traffic (same serving economics).
+                    ProjectionPath::Rff { .. } | ProjectionPath::TrainedRff { .. } => {
+                        c.rff_requests.fetch_add(1, Ordering::Relaxed)
+                    }
                 };
             }
             Err(_) => {
@@ -313,9 +344,14 @@ fn serve_one(shared: &Shared, req: &ProjectionRequest) -> Result<Projection, Ser
     if req.node >= model.n_nodes() {
         return Err(ServeError::UnknownNode { node: req.node, n_nodes: model.n_nodes() });
     }
-    let want = model.nodes[req.node].support.cols();
-    if req.batch.cols() != want {
-        return Err(ServeError::DimMismatch { got: req.batch.cols(), want });
+    // Exact and sampled-RFF batches live in the support's input space;
+    // TrainedRff batches are RAW points the engine featurizes itself,
+    // so their width is the training map's input dim instead.
+    if !matches!(req.path, ProjectionPath::TrainedRff { .. }) {
+        let want = model.nodes[req.node].support.cols();
+        if req.batch.cols() != want {
+            return Err(ServeError::DimMismatch { got: req.batch.cols(), want });
+        }
     }
     let clock = Instant::now();
     let outputs = match req.path {
@@ -323,13 +359,41 @@ fn serve_one(shared: &Shared, req: &ProjectionRequest) -> Result<Projection, Ser
         ProjectionPath::Rff { dim, seed } => {
             // Bochner sampling needs a strictly positive bandwidth, so a
             // degenerate gamma has no RFF representation either.
-            if !matches!(model.kernel, Kernel::Rbf { gamma } if gamma > 0.0) {
-                return Err(ServeError::RffNeedsRbf);
-            }
+            let gamma = match model.kernel {
+                Kernel::Rbf { gamma } if gamma > 0.0 => gamma,
+                _ => return Err(ServeError::RffNeedsRbf),
+            };
             if dim == 0 || dim > MAX_RFF_DIM {
                 return Err(ServeError::BadRffDim { dim });
             }
-            let projector = cached_projector(shared, req.node, dim, seed);
+            let in_dim = model.nodes[req.node].support.cols();
+            let key = (req.node, dim, seed, gamma.to_bits(), in_dim);
+            let projector = cached_projector(shared, key, |m| {
+                m.rff_projector(req.node, dim, seed)
+                    .expect("kernel and dim validated by the caller")
+            });
+            projector.project(&req.batch)
+        }
+        ProjectionPath::TrainedRff { gamma, seed } => {
+            if model.kernel != Kernel::Linear {
+                return Err(ServeError::FeatureModelRequired);
+            }
+            if gamma.is_nan() || gamma <= 0.0 {
+                return Err(ServeError::BadRffGamma);
+            }
+            // The training map's feature width is frozen in the
+            // support; its input dim is the raw batch's width.
+            let dim = model.nodes[req.node].support.cols();
+            if dim == 0 || dim > MAX_RFF_DIM {
+                return Err(ServeError::BadRffDim { dim });
+            }
+            let in_dim = req.batch.cols();
+            let key = (req.node, dim, seed, gamma.to_bits(), in_dim);
+            let projector = cached_projector(shared, key, |m| {
+                let map = crate::kernels::RffMap::sample(in_dim, dim, gamma, seed);
+                m.feature_projector(req.node, map)
+                    .expect("kernel and map dim validated by the caller")
+            });
             projector.project(&req.batch)
         }
     };
@@ -341,7 +405,9 @@ fn serve_one(shared: &Shared, req: &ProjectionRequest) -> Result<Projection, Ser
     })
 }
 
-/// Fetch or build the collapsed projector for (node, dim, seed).
+/// Fetch or build the collapsed projector for a cache key (sampled-RFF
+/// and feature-trained paths share the cache; the key carries every
+/// build input).
 ///
 /// The O(n D M) build runs *outside* the cache lock so a first request
 /// at a new key cannot stall cache hits for other keys; two workers
@@ -351,11 +417,9 @@ fn serve_one(shared: &Shared, req: &ProjectionRequest) -> Result<Projection, Ser
 /// plain data, so a worker that panicked mid-insert leaves it valid.
 fn cached_projector(
     shared: &Shared,
-    node: usize,
-    dim: usize,
-    seed: u64,
+    key: RffKey,
+    build: impl FnOnce(&DkpcaModel) -> RffProjector,
 ) -> Arc<RffProjector> {
-    let key = (node, dim, seed);
     if let Some(p) = shared
         .rff_cache
         .lock()
@@ -365,12 +429,7 @@ fn cached_projector(
     {
         return p.clone();
     }
-    let built = Arc::new(
-        shared
-            .model
-            .rff_projector(node, dim, seed)
-            .expect("kernel and dim validated by the caller"),
-    );
+    let built = Arc::new(build(&shared.model));
     let mut cache = shared
         .rff_cache
         .lock()
@@ -544,6 +603,81 @@ mod tests {
             })
             .unwrap_err();
         assert_eq!(err, ServeError::RffNeedsRbf);
+    }
+
+    #[test]
+    fn trained_rff_path_matches_exact_on_featurized_batch() {
+        // A feature-space-trained model (linear over z, as RFF-mode
+        // training exports) served on the RAW batch through TrainedRff
+        // must agree with the exact path on the caller-featurized batch
+        // — exactly (no Monte-Carlo term), and without the caller ever
+        // touching the map or the support.
+        use crate::kernels::RffMap;
+        let gamma = 0.3;
+        let (dim, seed) = (128usize, 7u64);
+        let map = RffMap::sample(4, dim, gamma, seed);
+        let mut rng = Rng::new(1);
+        let xs: Vec<Matrix> = (0..2).map(|i| data(12, 4, 30 + i)).collect();
+        let zs: Vec<Matrix> = xs.iter().map(|x| map.features(x)).collect();
+        let alphas: Vec<Vec<f64>> = (0..2).map(|_| rng.gauss_vec(12)).collect();
+        let model = DkpcaModel::from_parts(&Kernel::Linear, &zs, &alphas);
+        let engine = ProjectionEngine::new(model, 2);
+        let batch = data(6, 4, 99);
+        for node in 0..2 {
+            let collapsed = engine
+                .project(ProjectionRequest {
+                    node,
+                    batch: batch.clone(),
+                    path: ProjectionPath::TrainedRff { gamma, seed },
+                })
+                .unwrap();
+            let exact = engine
+                .project(ProjectionRequest {
+                    node,
+                    batch: map.features(&batch),
+                    path: ProjectionPath::Exact,
+                })
+                .unwrap();
+            for (a, b) in collapsed.outputs.as_slice().iter().zip(exact.outputs.as_slice()) {
+                assert!((a - b).abs() < 1e-9, "node {node}: collapsed {a} vs exact {b}");
+            }
+            // Second request hits the cache and must agree bit-exactly.
+            let again = engine
+                .project(ProjectionRequest {
+                    node,
+                    batch: batch.clone(),
+                    path: ProjectionPath::TrainedRff { gamma, seed },
+                })
+                .unwrap();
+            assert_eq!(again.outputs, collapsed.outputs);
+        }
+        assert_eq!(engine.stats().rff_requests, 4, "TrainedRff counts as RFF traffic");
+    }
+
+    #[test]
+    fn trained_rff_validates_model_and_gamma() {
+        // On an RBF model the path is meaningless (supports are raw).
+        let engine = ProjectionEngine::new(toy_model(), 1);
+        let err = engine
+            .project(ProjectionRequest {
+                node: 0,
+                batch: data(2, 4, 1),
+                path: ProjectionPath::TrainedRff { gamma: 0.3, seed: 1 },
+            })
+            .unwrap_err();
+        assert_eq!(err, ServeError::FeatureModelRequired);
+        // On a linear model a degenerate gamma has no Bochner map.
+        let linear =
+            DkpcaModel::from_parts(&Kernel::Linear, &[data(8, 16, 2)], &[vec![0.5; 8]]);
+        let engine = ProjectionEngine::new(linear, 1);
+        let err = engine
+            .project(ProjectionRequest {
+                node: 0,
+                batch: data(2, 4, 3),
+                path: ProjectionPath::TrainedRff { gamma: 0.0, seed: 1 },
+            })
+            .unwrap_err();
+        assert_eq!(err, ServeError::BadRffGamma);
     }
 
     #[test]

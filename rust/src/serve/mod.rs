@@ -11,10 +11,16 @@
 //!   `kernels::gram`, out-of-sample center, GEMM into the dual
 //!   coefficients. O(m n M) per batch; exact to f64 rounding.
 //! * [`ProjectionPath::Rff`] — the collapsed random-Fourier-feature
-//!   projector (`model::RffProjector`, cached per (node, dim, seed)):
+//!   projector (`model::RffProjector`, cached per build key):
 //!   O(m D M), independent of the support size, at Monte-Carlo
 //!   accuracy ~ 1/sqrt(D). The throughput winner once n >> D — see
 //!   `benches/serve_throughput.rs`.
+//! * [`ProjectionPath::TrainedRff`] — the same collapsed economics for
+//!   *feature-space-trained* models (linear over `z(x)`, the export of
+//!   `SetupExchange::RffFeatures` training): the engine featurizes raw
+//!   batches through the training map (keyed by the training
+//!   gamma/seed) and serves O(m D k) per batch, algebraically exact —
+//!   no support rows shipped and no client-side featurization.
 //!
 //! The engine is the single-process skeleton of the ROADMAP's
 //! "serve projections to millions of users" north star: stateless

@@ -1,3 +1,5 @@
-//! Shared utilities (JSON parsing for configs and the artifact manifest).
+//! Shared utilities (JSON parsing for configs and the artifact
+//! manifest; time sources for the per-node compute metric).
 
 pub mod json;
+pub mod time;

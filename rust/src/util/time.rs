@@ -1,0 +1,85 @@
+//! Time sources shared across the crate.
+//!
+//! [`thread_cpu_secs`] is the per-node compute metric of the protocol
+//! engine and the coordinator reports: on an oversubscribed box the
+//! wall clock charges descheduled time to whichever node happened to
+//! be preempted, which would make per-node "compute" grow with J. CPU
+//! time is the deployable per-node metric.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Per-thread CPU time in seconds (`CLOCK_THREAD_CPUTIME_ID`).
+/// Declared directly against the C library so the crate stays
+/// dependency-free (no `libc` crate in the offline vendor set). The
+/// `i64, i64` struct layout matches the 64-bit Linux ABI only, so the
+/// declaration is gated on pointer width — 32-bit targets (c_long
+/// tv_nsec, time64 variants) take the wall-clock fallback instead of
+/// reading a mislaid struct.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+pub fn thread_cpu_secs() -> f64 {
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+    extern "C" {
+        fn clock_gettime(clk_id: i32, tp: *mut Timespec) -> i32;
+    }
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: ts is a valid out-pointer; the clock id is a Linux
+    // constant; clock_gettime writes ts and returns 0 on success.
+    let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    if rc == 0 {
+        ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+    } else {
+        0.0
+    }
+}
+
+/// Fallback (non-Linux or 32-bit): the metric degrades to wall time
+/// where the thread clock is unavailable.
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+pub fn thread_cpu_secs() -> f64 {
+    wall_clock_secs()
+}
+
+/// Monotonic wall clock from first use. Only differences are consumed
+/// by callers, so a shared origin is fine. Compiled on every platform
+/// (it is the `thread_cpu_secs` fallback off 64-bit Linux) and kept
+/// `pub` so the fallback path stays testable everywhere.
+pub fn wall_clock_secs() -> f64 {
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_cpu_secs_is_finite_and_monotone() {
+        let a = thread_cpu_secs();
+        // Burn a little CPU so the thread clock visibly advances.
+        let mut acc = 0.0f64;
+        for i in 0..200_000 {
+            acc += (i as f64).sqrt();
+        }
+        std::hint::black_box(acc);
+        let b = thread_cpu_secs();
+        assert!(a.is_finite() && b.is_finite());
+        assert!(b >= a, "thread clock went backwards: {a} -> {b}");
+    }
+
+    #[test]
+    fn wall_clock_fallback_is_monotone() {
+        // The non-Linux fallback must compile and return monotone
+        // values on every platform.
+        let a = wall_clock_secs();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = wall_clock_secs();
+        assert!(a.is_finite() && b.is_finite());
+        assert!(b > a, "wall fallback not monotone: {a} -> {b}");
+    }
+}

@@ -192,6 +192,9 @@ fn parallel_engine_load_is_consistent() {
                     .project(&batches[i]);
                 assert_eq!(got.outputs, want, "request {i}");
             }
+            ProjectionPath::TrainedRff { .. } => {
+                unreachable!("this sweep submits Exact/Rff requests only")
+            }
         }
     }
     let stats = engine.stats();

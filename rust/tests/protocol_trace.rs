@@ -1,0 +1,154 @@
+//! Golden message-trace: one fixed small config through BOTH
+//! transports, asserting the full per-edge (iter, phase, floats)
+//! sequence against a checked-in trace. A protocol regression (extra
+//! round, wrong tag, changed payload size, lost deflation exchange)
+//! fails here with a line diff instead of only an opaque bit-identity
+//! mismatch downstream.
+//!
+//! Config: 3 nodes on ring(3,1) (the triangle — 6 directed edges),
+//! N = 4 samples of M = 2 features, k = 2 components, max_iters = 2,
+//! tol = 0. Per directed edge the protocol must move exactly:
+//!   setup            N*M = 8 floats              (iter 0, Setup)
+//!   pass 0, t=0..1   2N = 8 (A) + N = 4 (B)      (iter 0/1)
+//!   deflation        N = 4                        (iter 0, Deflate)
+//!   pass 1, t=0..1   8 (A) + 4 (B)               (iter 3/4 — pass-1
+//!                                                 band = max_iters+1)
+//! Gossip floats are zero because tol = 0.
+
+use std::sync::Arc;
+
+use dkpca::admm::AdmmConfig;
+use dkpca::backend::NativeBackend;
+use dkpca::coordinator::run_decentralized_multik_traced;
+use dkpca::data::{NoiseModel, Rng};
+use dkpca::kernels::Kernel;
+use dkpca::linalg::Matrix;
+use dkpca::multik::MultiKpcaSolver;
+use dkpca::protocol::TraceLog;
+use dkpca::topology::Graph;
+
+const KERNEL: Kernel = Kernel::Rbf { gamma: 0.5 };
+
+fn fixed_xs() -> Vec<Matrix> {
+    let mut rng = Rng::new(42);
+    (0..3).map(|_| Matrix::from_fn(4, 2, |_, _| rng.gauss())).collect()
+}
+
+fn cfg() -> AdmmConfig {
+    AdmmConfig { max_iters: 2, ..Default::default() }
+}
+
+/// The checked-in golden trace: every directed edge carries the same
+/// 10-envelope program, rendered in (from, to) edge order with per-edge
+/// send order preserved. Update ONLY for intentional protocol changes.
+fn expected_trace() -> String {
+    let edges = [(0, 1), (0, 2), (1, 0), (1, 2), (2, 0), (2, 1)];
+    let per_edge = [
+        "iter=0 phase=Setup floats=8",
+        "iter=0 phase=RoundA floats=8",
+        "iter=0 phase=RoundB floats=4",
+        "iter=1 phase=RoundA floats=8",
+        "iter=1 phase=RoundB floats=4",
+        "iter=0 phase=Deflate floats=4",
+        "iter=3 phase=RoundA floats=8",
+        "iter=3 phase=RoundB floats=4",
+        "iter=4 phase=RoundA floats=8",
+        "iter=4 phase=RoundB floats=4",
+    ];
+    let mut out = String::new();
+    for (from, to) in edges {
+        for line in per_edge {
+            out.push_str(&format!("{from}->{to} {line}\n"));
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_trace_identical_on_both_transports() {
+    let xs = fixed_xs();
+    let graph = Graph::ring(3, 1);
+
+    // Lockstep transport (the sequential facade).
+    let lock_trace = Arc::new(TraceLog::default());
+    let mut seq = MultiKpcaSolver::new_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &cfg(),
+        NoiseModel::None,
+        0,
+        2,
+        &NativeBackend,
+        Some(lock_trace.clone()),
+    );
+    let _ = seq.run(&NativeBackend);
+
+    // Channel-fabric transport (one OS thread per node).
+    let thread_trace = Arc::new(TraceLog::default());
+    let _ = run_decentralized_multik_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &cfg(),
+        NoiseModel::None,
+        0,
+        2,
+        Arc::new(NativeBackend),
+        Some(thread_trace.clone()),
+    );
+
+    let lock = lock_trace.render_per_edge();
+    let thread = thread_trace.render_per_edge();
+    assert_eq!(lock, thread, "transports disagree on the wire sequence");
+    assert_eq!(
+        lock,
+        expected_trace(),
+        "protocol wire trace changed — if intentional, update expected_trace()"
+    );
+}
+
+#[test]
+fn gossip_floats_appear_in_the_trace_when_tol_is_set() {
+    // With tol > 0 the round-A payload grows by the gossip window:
+    // min(t, stop_lag) floats at iteration t (diameter 1 on the
+    // triangle). The window floats must show up identically on both
+    // transports.
+    let xs = fixed_xs();
+    let graph = Graph::ring(3, 1);
+    let tol_cfg = AdmmConfig { max_iters: 3, tol: 1e-30, ..Default::default() };
+
+    let lock_trace = Arc::new(TraceLog::default());
+    let mut seq = MultiKpcaSolver::new_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &tol_cfg,
+        NoiseModel::None,
+        0,
+        1,
+        &NativeBackend,
+        Some(lock_trace.clone()),
+    );
+    let _ = seq.run(&NativeBackend);
+
+    let thread_trace = Arc::new(TraceLog::default());
+    let _ = run_decentralized_multik_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &tol_cfg,
+        NoiseModel::None,
+        0,
+        1,
+        Arc::new(NativeBackend),
+        Some(thread_trace.clone()),
+    );
+
+    let lock = lock_trace.render_per_edge();
+    assert_eq!(lock, thread_trace.render_per_edge());
+    // Round A at t=0 carries no window yet; t>=1 carries one entry
+    // (stop_lag = diameter = 1): 2N + 1 = 9 floats.
+    assert!(lock.contains("0->1 iter=0 phase=RoundA floats=8\n"));
+    assert!(lock.contains("0->1 iter=1 phase=RoundA floats=9\n"));
+}
