@@ -14,6 +14,7 @@ use dkpca::kernels::Kernel;
 use dkpca::linalg::Matrix;
 use dkpca::metrics::{Stopwatch, Table};
 use dkpca::model::DkpcaModel;
+use dkpca::obs;
 use dkpca::serve::{ProjectionEngine, ProjectionPath, ProjectionRequest};
 
 fn rand_matrix(r: usize, c: usize, rng: &mut Rng) -> Matrix {
@@ -40,7 +41,96 @@ fn throughput(
     (reps * batch.rows()) as f64 / sw.elapsed_secs()
 }
 
+/// One machine-readable result row of the latency sweep.
+struct LatencyRow {
+    workers: usize,
+    path: &'static str,
+    batch_m: usize,
+    reps: usize,
+    points_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    mean_ms: f64,
+}
+
+/// Latency sweep over the engine's per-path histograms: each
+/// configuration's samples are isolated from the process-global series
+/// with before/after snapshot deltas.
+fn latency_sweep(
+    kernel: &Kernel,
+    feat_dim: usize,
+    rff_dim: usize,
+    rng: &mut Rng,
+) -> Vec<LatencyRow> {
+    let support_n = 1024;
+    let support = rand_matrix(support_n, feat_dim, rng);
+    let alpha = rng.gauss_vec(support_n);
+    let paths: [(&'static str, ProjectionPath); 2] = [
+        ("exact", ProjectionPath::Exact),
+        ("rff", ProjectionPath::Rff { dim: rff_dim, seed: 11 }),
+    ];
+    let mut rows = Vec::new();
+    for &workers in &[1usize, 2, 4] {
+        let model = DkpcaModel::from_parts(kernel, &[support.clone()], &[alpha.clone()]);
+        let engine = ProjectionEngine::new(model, workers);
+        for (name, path) in paths {
+            let hist = match name {
+                "exact" => obs::registry().histogram(obs::names::SERVE_PROJECT_EXACT_SECS),
+                _ => obs::registry().histogram(obs::names::SERVE_PROJECT_RFF_SECS),
+            };
+            for &batch_m in &[64usize, 256, 1024] {
+                let batch = rand_matrix(batch_m, feat_dim, rng);
+                let reps = (10_000 / batch_m).max(3);
+                // Warm (cache fill) outside the measured window.
+                let _ = engine.project(ProjectionRequest { node: 0, batch: batch.clone(), path });
+                let before = hist.snapshot();
+                let sw = Stopwatch::start();
+                for _ in 0..reps {
+                    let out = engine
+                        .project(ProjectionRequest { node: 0, batch: batch.clone(), path })
+                        .expect("projection");
+                    std::hint::black_box(out);
+                }
+                let secs = sw.elapsed_secs();
+                let win = hist.snapshot().delta(&before);
+                assert_eq!(win.count() as usize, reps, "histogram window mismatch");
+                rows.push(LatencyRow {
+                    workers,
+                    path: name,
+                    batch_m,
+                    reps,
+                    points_per_sec: (reps * batch_m) as f64 / secs,
+                    p50_ms: win.percentile_secs(0.50) * 1e3,
+                    p99_ms: win.percentile_secs(0.99) * 1e3,
+                    mean_ms: win.mean_secs() * 1e3,
+                });
+            }
+        }
+    }
+    rows
+}
+
+fn latency_json(support_n: usize, rff_dim: usize, rows: &[LatencyRow]) -> String {
+    let mut out = String::from("{\"bench\":\"serve_throughput\",");
+    out += &format!("\"support_n\":{support_n},\"rff_dim\":{rff_dim},\"results\":[");
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out += &format!(
+            "{{\"workers\":{},\"path\":\"{}\",\"batch_m\":{},\"reps\":{},\
+             \"points_per_sec\":{:.1},\"p50_ms\":{:.4},\"p99_ms\":{:.4},\"mean_ms\":{:.4}}}",
+            r.workers, r.path, r.batch_m, r.reps, r.points_per_sec, r.p50_ms, r.p99_ms, r.mean_ms
+        );
+    }
+    out += "]}\n";
+    out
+}
+
 fn main() {
+    // The latency sweep reads the engine's serve histograms, so metric
+    // recording must be on regardless of the environment.
+    obs::set_enabled(true);
     let gamma = 0.05;
     let kernel = Kernel::Rbf { gamma };
     let feat_dim = 16;
@@ -106,4 +196,29 @@ fn main() {
         ]);
     }
     println!("{pool_table}");
+
+    // Machine-readable latency sweep off the serve histograms: p50/p99
+    // per (workers, path, batch) window, for CI trend lines alongside
+    // BENCH_gemm.json / BENCH_comm.json.
+    let rows = latency_sweep(&kernel, feat_dim, rff_dim, &mut rng);
+    let mut lat_table = Table::new(
+        "serve latency (1024-row support, per-request compute)",
+        &["workers", "path", "batch_m", "pps", "p50_ms", "p99_ms"],
+    );
+    for r in &rows {
+        lat_table.row(&[
+            r.workers.to_string(),
+            r.path.to_string(),
+            r.batch_m.to_string(),
+            format!("{:.0}", r.points_per_sec),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p99_ms),
+        ]);
+    }
+    println!("{lat_table}");
+    let json = latency_json(1024, rff_dim, &rows);
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
 }

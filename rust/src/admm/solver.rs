@@ -177,6 +177,12 @@ impl DkpcaSolver {
     pub fn run(&mut self, backend: &dyn ComputeBackend) -> DkpcaResult {
         self.run_with(backend, |_, _| {})
     }
+
+    /// Per-node telemetry sidecars (phase spans + convergence trace);
+    /// empty traces when telemetry is disabled.
+    pub fn node_traces(&self) -> Vec<crate::obs::NodeTrace> {
+        self.net.node_traces()
+    }
 }
 
 #[cfg(test)]

@@ -47,6 +47,9 @@ pub struct RunReport {
     /// Whether the run stopped on the `tol` criterion before
     /// `max_iters`.
     pub converged: bool,
+    /// Per-node telemetry sidecars (phase spans + convergence trace),
+    /// in node order; empty traces when telemetry is disabled.
+    pub node_traces: Vec<crate::obs::NodeTrace>,
 }
 
 /// Outcome of a parallel multi-component (multik) run: one deflated
@@ -69,6 +72,9 @@ pub struct MultiRunReport {
     /// Floats moved by the deflation exchanges between passes.
     pub deflate_floats_total: u64,
     pub per_node_sent: Vec<u64>,
+    /// Per-node telemetry sidecars (phase spans + convergence trace),
+    /// in node order; empty traces when telemetry is disabled.
+    pub node_traces: Vec<crate::obs::NodeTrace>,
 }
 
 /// Run Alg. 1 on one OS thread per node.
@@ -92,6 +98,7 @@ pub fn run_decentralized(
         per_node_sent: rep.per_node_sent,
         iterations: rep.per_component_iterations[0],
         converged: rep.converged[0],
+        node_traces: rep.node_traces,
     }
 }
 
@@ -162,15 +169,16 @@ pub fn run_decentralized_multik_traced(
     let mut iter_secs = 0.0f64;
     let mut iteration_counts: Vec<Vec<usize>> = vec![Vec::new(); j];
     let mut converged_flags: Vec<Vec<bool>> = vec![Vec::new(); j];
+    let mut node_traces = vec![crate::obs::NodeTrace::default(); j];
     for handle in handles {
         let out = handle.join().expect("node thread panicked");
         let n = out.alpha_cols.first().map_or(0, Vec::len);
-        alphas[out.id] =
-            Matrix::from_fn(n, n_components, |i, c| out.alpha_cols[c][i]);
+        alphas[out.id] = Matrix::from_fn(n, n_components, |i, c| out.alpha_cols[c][i]);
         node_compute_secs[out.id] = out.compute_secs;
         iter_secs = iter_secs.max(out.iter_secs);
         iteration_counts[out.id] = out.iterations;
         converged_flags[out.id] = out.converged;
+        node_traces[out.id] = out.trace;
     }
     // The stop decision of every pass is a deterministic function of
     // network-wide state each node has observed by decision time; any
@@ -198,5 +206,6 @@ pub fn run_decentralized_multik_traced(
         setup_floats_total: stats.setup_total(),
         deflate_floats_total: stats.phase_total(crate::protocol::Phase::Deflate),
         per_node_sent,
+        node_traces,
     }
 }

@@ -5,24 +5,39 @@
 //! GEMM — the same structure as the L1 Pallas kernel, so the
 //! native/PJRT cross-checks in `rust/tests/` compare like against like.
 
+use std::sync::{Arc, OnceLock};
+
 use super::Kernel;
 use crate::linalg::gemm::par_matmul_nt;
 use crate::linalg::{pool, Matrix};
+use crate::obs;
+
+/// Per-call wall-time series for Gram assembly (resolved once).
+fn gram_hist() -> &'static Arc<obs::Histogram> {
+    static HIST: OnceLock<Arc<obs::Histogram>> = OnceLock::new();
+    HIST.get_or_init(|| obs::registry().histogram(obs::names::GRAM_SECS))
+}
 
 /// Gram block `K[i, j] = K(x_i, y_j)` for `x` (n x m), `y` (p x m).
 pub fn gram(kernel: &Kernel, x: &Matrix, y: &Matrix) -> Matrix {
     assert_eq!(x.cols(), y.cols(), "feature dimension mismatch");
-    match *kernel {
+    let clock = obs::maybe_now();
+    let out = match *kernel {
         Kernel::Rbf { gamma } => rbf_gram_fast(x, y, gamma),
         _ => Matrix::from_fn(x.rows(), y.rows(), |i, j| {
             kernel.normalized_eval(x.row(i), y.row(j))
         }),
+    };
+    if let Some(c) = clock {
+        gram_hist().record_secs(c.elapsed().as_secs_f64());
     }
+    out
 }
 
 /// Symmetric Gram `K(x, x)` (exploits symmetry for non-RBF kernels).
 pub fn gram_sym(kernel: &Kernel, x: &Matrix) -> Matrix {
-    match *kernel {
+    let clock = obs::maybe_now();
+    let out = match *kernel {
         Kernel::Rbf { gamma } => {
             let mut k = rbf_gram_fast(x, x, gamma);
             k.symmetrize();
@@ -40,7 +55,11 @@ pub fn gram_sym(kernel: &Kernel, x: &Matrix) -> Matrix {
             }
             k
         }
+    };
+    if let Some(c) = clock {
+        gram_hist().record_secs(c.elapsed().as_secs_f64());
     }
+    out
 }
 
 /// RBF Gram via one GEMM + rank-1 corrections (mirrors the Pallas tile).

@@ -13,9 +13,18 @@
 //! Gram blocks in the DKPCA setup can then be formed as
 //! `Z_a Z_b^T` from transmitted features.
 
+use std::sync::{Arc, OnceLock};
+
 use crate::data::Rng;
 use crate::linalg::gemm::par_matmul_nt;
 use crate::linalg::{pool, Matrix};
+use crate::obs;
+
+/// Per-call wall-time series for RFF featurization (resolved once).
+fn features_hist() -> &'static Arc<obs::Histogram> {
+    static HIST: OnceLock<Arc<obs::Histogram>> = OnceLock::new();
+    HIST.get_or_init(|| obs::registry().histogram(obs::names::RFF_FEATURES_SECS))
+}
 
 /// A sampled random-Fourier feature map approximating an RBF kernel.
 pub struct RffMap {
@@ -53,6 +62,7 @@ impl RffMap {
     /// per-element arithmetic is band-independent).
     pub fn features(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols(), self.w.cols(), "feature dim mismatch");
+        let clock = obs::maybe_now();
         let mut z = par_matmul_nt(x, &self.w); // (n x D): rows x_i . w_d
         if z.rows() == 0 {
             return z;
@@ -68,6 +78,9 @@ impl RffMap {
         };
         let worth_it = z.rows() * d >= pool::PAR_MIN_ELEMS;
         pool::par_row_chunks_if(worth_it, z.as_mut_slice(), d, pool::PAR_BAND_ROWS, &wave);
+        if let Some(c) = clock {
+            features_hist().record_secs(c.elapsed().as_secs_f64());
+        }
         z
     }
 

@@ -27,6 +27,7 @@ pub mod coordinator;
 pub mod metrics;
 pub mod model;
 pub mod multik;
+pub mod obs;
 pub mod protocol;
 pub mod runtime;
 pub mod serve;

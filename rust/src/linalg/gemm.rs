@@ -13,8 +13,19 @@
 //! so the parallel results are bit-identical to the serial kernel for
 //! any thread count. Ops below [`pool::PAR_MIN_FLOPS`] stay serial.
 
+use std::sync::{Arc, OnceLock};
+
 use super::matrix::Matrix;
 use super::pool;
+use crate::obs;
+
+/// Per-call wall-time series for the pool-parallel GEMM entry points
+/// (resolved once; `par_matmul` delegates to `par_matmul_into`, so each
+/// call records exactly one sample).
+fn gemm_hist() -> &'static Arc<obs::Histogram> {
+    static HIST: OnceLock<Arc<obs::Histogram>> = OnceLock::new();
+    HIST.get_or_init(|| obs::registry().histogram(obs::names::GEMM_SECS))
+}
 
 /// Tile edge used by the blocked kernel (elements, not bytes). 64x64
 /// f64 tiles = 32 KiB per operand tile, comfortably inside L1+L2.
@@ -207,12 +218,16 @@ pub fn par_matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
     if n == 0 {
         return;
     }
+    let clock = obs::maybe_now();
     let bt = b.transpose();
     let band = |r0: usize, out_band: &mut [f64]| {
         matmul_rows_packed(a, &bt, out_band, r0, r0 + out_band.len() / n);
     };
     let worth_it = gemm_flops(m, k, n) >= pool::PAR_MIN_FLOPS;
     pool::par_row_chunks_if(worth_it, out.as_mut_slice(), n, pool::PAR_BAND_ROWS, &band);
+    if let Some(c) = clock {
+        gemm_hist().record_secs(c.elapsed().as_secs_f64());
+    }
 }
 
 /// `A @ B^T` through the shared compute pool — the Gram-assembly hot
@@ -225,11 +240,15 @@ pub fn par_matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     if n == 0 {
         return out;
     }
+    let clock = obs::maybe_now();
     let band = |r0: usize, out_band: &mut [f64]| {
         matmul_nt_rows(a, b, out_band, r0, r0 + out_band.len() / n);
     };
     let worth_it = gemm_flops(m, k, n) >= pool::PAR_MIN_FLOPS;
     pool::par_row_chunks_if(worth_it, out.as_mut_slice(), n, pool::PAR_BAND_ROWS, &band);
+    if let Some(c) = clock {
+        gemm_hist().record_secs(c.elapsed().as_secs_f64());
+    }
     out
 }
 

@@ -30,6 +30,36 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+use crate::obs;
+
+/// Telemetry handles for the pool, resolved once from the global
+/// registry (dispatch is a hot path — no name lookups per task).
+struct PoolMetrics {
+    tasks: Arc<obs::Counter>,
+    bands: Arc<obs::Counter>,
+    queue_depth_max: Arc<obs::Gauge>,
+    workers: Arc<obs::Gauge>,
+}
+
+fn pool_metrics() -> &'static PoolMetrics {
+    static METRICS: OnceLock<PoolMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let reg = obs::registry();
+        PoolMetrics {
+            tasks: reg.counter(obs::names::POOL_TASKS),
+            bands: reg.counter(obs::names::POOL_BANDS),
+            queue_depth_max: reg.gauge(obs::names::POOL_QUEUE_DEPTH_MAX),
+            workers: reg.gauge(obs::names::POOL_WORKERS),
+        }
+    })
+}
+
+/// Force the pool's metric keys into the registry so snapshots taken
+/// before any parallel dispatch still carry them (zeroed).
+pub fn register_metrics() {
+    let _ = pool_metrics();
+}
+
 /// Minimum floating-point work before a parallel op leaves the serial
 /// kernel: below this the queue handshake costs more than the op.
 pub const PAR_MIN_FLOPS: f64 = 2.0e6;
@@ -167,6 +197,9 @@ impl ComputePool {
             return;
         }
         self.ensure_workers(threads - 1);
+        let metrics = pool_metrics();
+        metrics.tasks.inc();
+        metrics.bands.add(total as u64);
         let task = Arc::new(Task {
             f: RawFn(f as *const (dyn Fn(usize) + Sync)),
             total,
@@ -180,6 +213,7 @@ impl ComputePool {
         {
             let mut queue = self.inner.queue.lock().unwrap_or_else(|p| p.into_inner());
             queue.push_back(task.clone());
+            metrics.queue_depth_max.set_max(queue.len() as i64);
         }
         self.inner.work_cv.notify_all();
         // The submitter is a full participant: a task can never stall
@@ -213,6 +247,7 @@ impl ComputePool {
                 .expect("spawn compute-pool worker");
             workers.push(handle);
         }
+        pool_metrics().workers.set_max(workers.len() as i64);
     }
 }
 
@@ -280,8 +315,8 @@ fn default_threads() -> usize {
         if let Ok(v) = std::env::var("DKPCA_THREADS") {
             match v.trim().parse::<usize>() {
                 Ok(n) if n >= 1 => return n,
-                _ => eprintln!(
-                    "[dkpca] DKPCA_THREADS='{v}' is not a positive integer; \
+                _ => crate::log_warn!(
+                    "DKPCA_THREADS='{v}' is not a positive integer; \
                      falling back to available_parallelism"
                 ),
             }

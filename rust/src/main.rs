@@ -65,13 +65,20 @@ fn print_usage() {
          \n\
          run flags:    --config <file.json> --nodes <J> --samples <N>\n\
          \u{20}             --iters <T> --parallel --pjrt --seed <S> --threads <T>\n\
+         \u{20}             --telemetry <out.json>\n\
          sweep flags:  --experiment <{SWEEP_EXPERIMENTS}>\n\
          \u{20}             --full --pjrt --seed <S> --threads <T>\n\
          central flags: --nodes <J> --samples <N> --seed <S> --threads <T>\n\
+         info flags:   --config <file.json> --metrics\n\
          \n\
          --threads sizes the shared compute pool (default: DKPCA_THREADS\n\
          env var, else the host parallelism); results are bit-identical\n\
-         at any width."
+         at any width.\n\
+         --telemetry writes a JSON TelemetrySnapshot (per-phase spans,\n\
+         convergence trace, pool/op metrics); telemetry is strictly\n\
+         observational — outputs are bit-identical with it on or off.\n\
+         env: DKPCA_LOG=error|warn|info|debug (library log level),\n\
+         DKPCA_TELEMETRY=on|off (metric recording, default on)."
     );
 }
 
@@ -179,8 +186,17 @@ fn cmd_run(args: &[String]) -> i32 {
         dkpca::linalg::pool::configured_threads()
     );
 
+    let telemetry_path = flag(args, "--telemetry").map(str::to_string);
+    if telemetry_path.is_some() {
+        // The flag is an explicit opt-in: it wins over DKPCA_TELEMETRY
+        // and pre-registers the pool keys so the snapshot carries them
+        // even if no op crossed the parallel threshold.
+        dkpca::obs::set_enabled(true);
+        dkpca::linalg::pool::register_metrics();
+    }
+
     let sw = Stopwatch::start();
-    let (alphas, comm) = if cfg.parallel {
+    let (alphas, comm, mut run_summary, node_traces) = if cfg.parallel {
         let rep = run_decentralized(
             &env.xs,
             &env.graph,
@@ -190,14 +206,40 @@ fn cmd_run(args: &[String]) -> i32 {
             cfg.seed,
             backend.clone(),
         );
-        (rep.alphas, rep.comm_floats_total)
+        let summary = dkpca::obs::RunSummary {
+            wall_secs: 0.0,
+            iterations: vec![rep.iterations],
+            converged: vec![rep.converged],
+            comm_floats: rep.comm_floats_total as usize,
+            setup_floats: rep.setup_floats_total as usize,
+        };
+        (rep.alphas, rep.comm_floats_total, summary, rep.node_traces)
     } else {
         let mut solver =
             DkpcaSolver::new(&env.xs, &env.graph, &env.kernel, &cfg.admm, cfg.noise, cfg.seed);
         let res = solver.run(backend.as_ref());
-        (res.alphas, res.comm_floats)
+        let summary = dkpca::obs::RunSummary {
+            wall_secs: 0.0,
+            iterations: vec![res.iterations],
+            converged: vec![res.converged],
+            comm_floats: res.comm_floats as usize,
+            setup_floats: res.setup_floats as usize,
+        };
+        let traces = solver.node_traces();
+        (res.alphas, res.comm_floats, summary, traces)
     };
     let dkpca_secs = sw.elapsed_secs();
+    if let Some(path) = &telemetry_path {
+        run_summary.wall_secs = dkpca_secs;
+        let snap = dkpca::obs::TelemetrySnapshot { run: Some(run_summary), nodes: node_traces };
+        match snap.write_json(path) {
+            Ok(()) => eprintln!("[dkpca] telemetry snapshot written to {path}"),
+            Err(e) => {
+                eprintln!("[dkpca] could not write telemetry snapshot {path}: {e}");
+                return 1;
+            }
+        }
+    }
 
     let sw = Stopwatch::start();
     let central = central_kpca_power(&env.xs, &env.kernel, 500);
@@ -306,6 +348,9 @@ fn cmd_sweep(args: &[String]) -> i32 {
             return 2;
         }
     }
+    // One-line timing digest on stderr: the CSV/Table on stdout stays
+    // byte-identical for downstream parsers.
+    eprintln!("[dkpca] {}", dkpca::obs::summary_line());
     0
 }
 
@@ -391,6 +436,10 @@ fn cmd_info(args: &[String]) -> i32 {
     match dkpca::runtime::Registry::load(&dir) {
         Ok(r) => println!("artifacts: {} entries (feat_dim {})", r.len(), r.feat_dim),
         Err(_) => println!("artifacts: not built (run `make artifacts`)"),
+    }
+    if has(args, "--metrics") {
+        dkpca::linalg::pool::register_metrics();
+        print!("{}", dkpca::obs::registry().render_text());
     }
     0
 }

@@ -16,7 +16,12 @@ pub struct Stats {
 
 impl Stats {
     pub fn from(values: &[f64]) -> Stats {
-        assert!(!values.is_empty(), "stats of empty sample");
+        // An empty sample is a zeroed Stats, not a panic — callers
+        // (experiment tables, the CLI summary) may legitimately see
+        // zero rows (same contract as `mean_similarity`).
+        if values.is_empty() {
+            return Stats { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+        }
         let n = values.len();
         let mean = values.iter().sum::<f64>() / n as f64;
         let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
@@ -139,9 +144,11 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn stats_empty_panics() {
-        let _ = Stats::from(&[]);
+    fn stats_empty_is_zeroed() {
+        let s = Stats::from(&[]);
+        assert_eq!(s, Stats { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 });
+        // Displayable without NaN/inf artifacts.
+        assert!(s.to_string().contains("n=0"));
     }
 
     #[test]

@@ -175,6 +175,12 @@ impl MultiKpcaSolver {
     pub fn rff_map(&self) -> Option<RffMap> {
         self.net.rff_map()
     }
+
+    /// Per-node telemetry sidecars (phase spans + convergence trace);
+    /// empty traces when telemetry is disabled.
+    pub fn node_traces(&self) -> Vec<crate::obs::NodeTrace> {
+        self.net.node_traces()
+    }
 }
 
 #[cfg(test)]

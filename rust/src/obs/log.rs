@@ -1,0 +1,150 @@
+//! Leveled stderr logger for library code (`DKPCA_LOG=error|warn|info|
+//! debug`, default `warn`). Library modules log through the
+//! `log_warn!`-family macros instead of printing directly — the CI grep
+//! gate keeps every textual print site out of `rust/src/` except
+//! `main.rs` (CLI output is the product there) and this file (the one
+//! real sink).
+//!
+//! The level check is a single relaxed atomic load, so a disabled
+//! `log_debug!` in a hot loop costs nothing measurable and, crucially,
+//! never formats its arguments.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered so `level <= current` means "emit".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Current max level; `u8::MAX` = not yet resolved from the
+/// environment.
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn resolve() -> u8 {
+    let lvl = match std::env::var("DKPCA_LOG").ok().as_deref() {
+        Some("error") => Level::Error,
+        Some("warn") | Some("warning") => Level::Warn,
+        Some("info") => Level::Info,
+        Some("debug") | Some("trace") => Level::Debug,
+        // Unset or unrecognized: warnings still reach the user.
+        _ => Level::Warn,
+    };
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+    lvl as u8
+}
+
+/// Override the level programmatically (wins over `DKPCA_LOG`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Would a message at `level` be emitted right now?
+pub fn enabled(level: Level) -> bool {
+    let mut cur = LEVEL.load(Ordering::Relaxed);
+    if cur == u8::MAX {
+        cur = resolve();
+    }
+    (level as u8) <= cur
+}
+
+/// The single print site. Callers go through the macros, which check
+/// [`enabled`] first so arguments are only formatted when emitting.
+pub fn write(level: Level, args: fmt::Arguments<'_>) {
+    eprintln!("[dkpca][{}] {args}", level.label());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::write($crate::obs::log::Level::Error, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::write($crate::obs::log::Level::Warn, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::write($crate::obs::log::Level::Info, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::write($crate::obs::log::Level::Debug, format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// Both tests mutate the process-global level; serialize them so the
+    /// parallel test harness cannot interleave their settings.
+    fn level_guard() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn level_gating_is_ordered() {
+        let _g = level_guard();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Warn);
+    }
+
+    #[test]
+    fn macros_expand_and_gate() {
+        let _g = level_guard();
+        set_level(Level::Warn);
+        // A gated-off call must not format its arguments.
+        struct PanicsOnDisplay;
+        impl std::fmt::Display for PanicsOnDisplay {
+            fn fmt(&self, _: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                panic!("formatted a suppressed log message");
+            }
+        }
+        crate::log_debug!("never emitted: {}", PanicsOnDisplay);
+        crate::log_warn!("telemetry logger self-test (expected in test output)");
+    }
+}

@@ -1,0 +1,240 @@
+//! S15 · Observability: the cross-cutting telemetry layer.
+//!
+//! Three strictly observational instruments, all dependency-free:
+//!
+//! - [`registry`]: process-wide counters/gauges/latency histograms
+//!   ([`Counter`], [`Gauge`], [`Histogram`]) that pool, kernels, GEMM,
+//!   and the serve engine record into;
+//! - [`span`]: per-node phase spans (compute vs. park) and the
+//!   per-iteration convergence trace, owned by `NodeProgram` and
+//!   surfaced on `RunReport`/`MultiRunReport`;
+//! - [`log`]: the leveled stderr logger behind the `log_*!` macros
+//!   (`DKPCA_LOG`).
+//!
+//! Everything funnels into one [`TelemetrySnapshot`] written as JSON by
+//! `dkpca run --telemetry out.json` or rendered by `dkpca info
+//! --metrics`.
+//!
+//! The contract the bit-identity test enforces: telemetry never
+//! branches the computation. Recording reads clocks and bumps atomics;
+//! no protocol message, float, or iteration count depends on whether
+//! [`enabled`] returns true. The global switch is `DKPCA_TELEMETRY`
+//! (default on; `0`/`off`/`false` disables), overridable in-process via
+//! [`set_enabled`] — when off, every record call is a relaxed load and
+//! a branch.
+
+pub mod log;
+pub mod registry;
+pub mod span;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+pub use registry::{registry, Counter, Gauge, Histogram, HistogramSnapshot, Registry};
+pub use span::{IterTrace, NodeTrace, PhaseSpan, PHASE_NAMES};
+
+use crate::util::json::Json;
+
+/// 0 = unresolved, 1 = disabled, 2 = enabled.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+fn resolve() -> bool {
+    let on = !matches!(
+        std::env::var("DKPCA_TELEMETRY").ok().as_deref(),
+        Some("0") | Some("off") | Some("false")
+    );
+    STATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+    on
+}
+
+/// Is telemetry recording on? First call resolves `DKPCA_TELEMETRY`
+/// (default on); afterwards a single relaxed load.
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        0 => resolve(),
+        s => s == 2,
+    }
+}
+
+/// Force telemetry on/off for this process (wins over the env var).
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// `Some(Instant::now())` when telemetry is on — the idiom for optional
+/// wall timing around a compute section:
+/// `let clock = obs::maybe_now(); ...; if let Some(c) = clock { hist.record_secs(c.elapsed().as_secs_f64()); }`
+pub fn maybe_now() -> Option<Instant> {
+    if enabled() { Some(Instant::now()) } else { None }
+}
+
+/// Canonical metric names, so recording sites and snapshot readers
+/// agree on spelling.
+pub mod names {
+    /// `parallel_for` dispatches that actually fanned out to workers.
+    pub const POOL_TASKS: &str = "pool.tasks";
+    /// Row-band work items pushed across all dispatches.
+    pub const POOL_BANDS: &str = "pool.bands";
+    /// High-water mark of the shared band queue at enqueue time.
+    pub const POOL_QUEUE_DEPTH_MAX: &str = "pool.queue_depth_max";
+    /// High-water mark of spawned pool workers.
+    pub const POOL_WORKERS: &str = "pool.workers";
+    /// Wall time per parallel GEMM call (`par_matmul_into` /
+    /// `par_matmul_nt`).
+    pub const GEMM_SECS: &str = "linalg.gemm_secs";
+    /// Wall time per Gram-matrix build (`gram` / `gram_sym`).
+    pub const GRAM_SECS: &str = "kernels.gram_secs";
+    /// Wall time per RFF featurization (`RffMap::features`).
+    pub const RFF_FEATURES_SECS: &str = "kernels.rff_features_secs";
+    /// Serve: submit-to-dequeue queue wait.
+    pub const SERVE_QUEUE_SECS: &str = "serve.queue_secs";
+    /// Serve: projection compute per path.
+    pub const SERVE_PROJECT_EXACT_SECS: &str = "serve.project_secs.exact";
+    pub const SERVE_PROJECT_RFF_SECS: &str = "serve.project_secs.rff";
+    pub const SERVE_PROJECT_TRAINED_RFF_SECS: &str = "serve.project_secs.trained_rff";
+}
+
+/// Run-level facts the driver already knows (and the registry does
+/// not): end-to-end wall time, per-pass iteration counts, traffic.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunSummary {
+    pub wall_secs: f64,
+    /// Iterations per component pass.
+    pub iterations: Vec<usize>,
+    /// Stop-rule convergence flag per component pass.
+    pub converged: Vec<bool>,
+    pub comm_floats: usize,
+    pub setup_floats: usize,
+}
+
+impl RunSummary {
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        o.insert(
+            "iterations".into(),
+            Json::Arr(self.iterations.iter().map(|&i| Json::Num(i as f64)).collect()),
+        );
+        o.insert(
+            "converged".into(),
+            Json::Arr(self.converged.iter().map(|&c| Json::Bool(c)).collect()),
+        );
+        o.insert("comm_floats".into(), Json::Num(self.comm_floats as f64));
+        o.insert("setup_floats".into(), Json::Num(self.setup_floats as f64));
+        Json::Obj(o)
+    }
+}
+
+/// The one export format: run summary + per-node traces + the global
+/// registry, serialized with the crate's own JSON writer.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetrySnapshot {
+    pub run: Option<RunSummary>,
+    pub nodes: Vec<NodeTrace>,
+}
+
+impl TelemetrySnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("version".into(), Json::Num(1.0));
+        root.insert(
+            "run".into(),
+            match &self.run {
+                Some(r) => r.to_json(),
+                None => Json::Null,
+            },
+        );
+        root.insert("nodes".into(), Json::Arr(self.nodes.iter().map(|n| n.to_json()).collect()));
+        root.insert("metrics".into(), registry().to_json());
+        Json::Obj(root)
+    }
+
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let mut body = self.to_json().to_string();
+        body.push('\n');
+        std::fs::write(path, body)
+    }
+
+    /// Human-oriented rendering (per-node phase table + registry).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        if let Some(run) = &self.run {
+            out.push_str(&format!(
+                "run: wall={:.3}s iterations={:?} converged={:?} comm_floats={} setup_floats={}\n",
+                run.wall_secs, run.iterations, run.converged, run.comm_floats, run.setup_floats
+            ));
+        }
+        for (id, node) in self.nodes.iter().enumerate() {
+            out.push_str(&format!("node {id}:"));
+            for (i, name) in PHASE_NAMES.iter().enumerate() {
+                let p = &node.phases[i];
+                if p.count == 0 && p.park_count == 0 {
+                    continue;
+                }
+                out.push_str(&format!(
+                    " {name}[n={} wall={:.4}s cpu={:.4}s park={:.4}s]",
+                    p.count, p.compute_wall_secs, p.compute_cpu_secs, p.park_secs
+                ));
+            }
+            out.push_str(&format!(" trace_rows={}\n", node.iters.len()));
+        }
+        out.push_str(&registry().render_text());
+        out
+    }
+}
+
+/// One-line timing/traffic digest of the global registry — what `dkpca
+/// sweep` prints to stderr after each experiment without touching the
+/// CSV/Table on stdout.
+pub fn summary_line() -> String {
+    let reg = registry();
+    let tasks = reg.counter(names::POOL_TASKS).get();
+    let gemm = reg.histogram(names::GEMM_SECS).snapshot();
+    let gram = reg.histogram(names::GRAM_SECS).snapshot();
+    format!(
+        "telemetry: pool_tasks={} gemm[n={} p50={:.3}ms] gram[n={} p50={:.3}ms]",
+        tasks,
+        gemm.count(),
+        gemm.percentile_secs(0.5) * 1e3,
+        gram.count(),
+        gram.percentile_secs(0.5) * 1e3,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_json_shape() {
+        let snap = TelemetrySnapshot {
+            run: Some(RunSummary {
+                wall_secs: 1.5,
+                iterations: vec![10, 8],
+                converged: vec![true, false],
+                comm_floats: 1200,
+                setup_floats: 240,
+            }),
+            nodes: vec![NodeTrace::default()],
+        };
+        let json = snap.to_json().to_string();
+        assert!(json.contains("\"version\":1"));
+        assert!(json.contains("\"iterations\":[10,8]"));
+        assert!(json.contains("\"converged\":[true,false]"));
+        assert!(json.contains("\"nodes\":[{"));
+        assert!(json.contains("\"metrics\":{"));
+        // The writer output must parse back with the crate's own
+        // parser.
+        let parsed = Json::parse(&json).expect("snapshot JSON must round-trip");
+        assert!(parsed.get("run").is_some());
+    }
+
+    #[test]
+    fn summary_line_mentions_pool_and_ops() {
+        let line = summary_line();
+        assert!(line.starts_with("telemetry:"));
+        assert!(line.contains("pool_tasks="));
+        assert!(line.contains("gemm[n="));
+    }
+}

@@ -1,0 +1,480 @@
+//! The process-wide metrics registry: counters, gauges, and
+//! fixed-bucket latency histograms, all plain atomics so hot paths pay
+//! one relaxed load (the enabled gate) plus a handful of relaxed RMWs
+//! per record — and nothing at all when telemetry is disabled.
+//!
+//! Instruments are owned by the registry (`Arc`-shared, keyed by name,
+//! created on first use) so any subsystem can record into the same
+//! series without plumbing handles through constructors. Hot sites
+//! cache their `Arc` in a `OnceLock` so the name lookup happens once.
+//!
+//! Histograms use log-spaced buckets covering 100 ns to ~160 s, each
+//! bucket tracking a count AND a value sum. Percentiles return the
+//! *mean of the bucket holding the rank*, so whenever a quantile's
+//! bucket holds samples of a single value the reported percentile is
+//! exact — which is what the unit tests pin down and what makes p50/p99
+//! trustworthy for the serve-latency bench (each configuration's
+//! samples cluster inside a bucket or two).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::enabled;
+use crate::util::json::Json;
+
+/// Monotone event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time level (queue depths, worker counts). `set_max` keeps a
+/// high-water mark without a read-modify-write race.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+
+    pub fn set(&self, v: i64) {
+        if enabled() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn add(&self, d: i64) {
+        if enabled() {
+            self.0.fetch_add(d, Ordering::Relaxed);
+        }
+    }
+
+    pub fn set_max(&self, v: i64) {
+        if enabled() {
+            self.0.fetch_max(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of histogram buckets. Bucket `i` spans
+/// `(edge(i-1), edge(i)]` nanoseconds with `edge(i) = 100 * 1.25^i`;
+/// the last bucket absorbs everything beyond ~160 s.
+pub const HIST_BUCKETS: usize = 96;
+
+/// First bucket upper edge in nanoseconds.
+const HIST_BASE_NANOS: f64 = 100.0;
+
+/// Geometric bucket growth factor.
+const HIST_GROWTH: f64 = 1.25;
+
+fn bucket_index(nanos: u64) -> usize {
+    if nanos as f64 <= HIST_BASE_NANOS {
+        return 0;
+    }
+    let r = (nanos as f64 / HIST_BASE_NANOS).ln() / HIST_GROWTH.ln();
+    (r.ceil() as usize).min(HIST_BUCKETS - 1)
+}
+
+fn secs_to_nanos(secs: f64) -> u64 {
+    if !secs.is_finite() || secs <= 0.0 {
+        return 0;
+    }
+    // `as` saturates on overflow, so absurd durations land in the
+    // overflow bucket instead of wrapping.
+    (secs * 1e9).round() as u64
+}
+
+/// Fixed-bucket latency histogram (duration samples in nanoseconds).
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    sums: Vec<AtomicU64>,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sums: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_secs(&self, secs: f64) {
+        if !enabled() {
+            return;
+        }
+        self.record_nanos(secs_to_nanos(secs));
+    }
+
+    pub fn record_nanos(&self, nanos: u64) {
+        if !enabled() {
+            return;
+        }
+        let b = bucket_index(nanos);
+        self.counts[b].fetch_add(1, Ordering::Relaxed);
+        self.sums[b].fetch_add(nanos, Ordering::Relaxed);
+        self.min.fetch_min(nanos, Ordering::Relaxed);
+        self.max.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// A consistent-enough copy of the live buckets (individual loads
+    /// are relaxed; callers snapshot between, not during, the work they
+    /// measure).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            sum_nanos: self.sums.iter().map(|s| s.load(Ordering::Relaxed)).collect(),
+            min_nanos: self.min.load(Ordering::Relaxed),
+            max_nanos: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data histogram state: supports percentiles and window deltas
+/// (what the serve-throughput bench uses to isolate one configuration's
+/// samples out of the process-global series).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    pub counts: Vec<u64>,
+    pub sum_nanos: Vec<u64>,
+    /// `u64::MAX` when empty.
+    pub min_nanos: u64,
+    pub max_nanos: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_nanos.iter().sum::<u64>() as f64 / n as f64 / 1e9
+    }
+
+    pub fn min_secs(&self) -> f64 {
+        if self.count() == 0 {
+            return 0.0;
+        }
+        self.min_nanos as f64 / 1e9
+    }
+
+    pub fn max_secs(&self) -> f64 {
+        self.max_nanos as f64 / 1e9
+    }
+
+    /// The q-quantile (q in [0, 1]): the mean of the bucket containing
+    /// rank `ceil(q * n)`. Exact whenever that bucket's samples share a
+    /// value; otherwise within one bucket's span (25% of the value).
+    pub fn percentile_secs(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank && c > 0 {
+                return self.sum_nanos[i] as f64 / c as f64 / 1e9;
+            }
+        }
+        self.max_secs()
+    }
+
+    /// Per-bucket difference `self - earlier` — the samples recorded
+    /// between two snapshots of the same histogram. Window min/max are
+    /// approximated from the delta's occupied buckets (the true
+    /// extremes are not recoverable from cumulative state).
+    pub fn delta(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .zip(&earlier.counts)
+            .map(|(a, b)| a.saturating_sub(*b))
+            .collect();
+        let sum_nanos: Vec<u64> = self
+            .sum_nanos
+            .iter()
+            .zip(&earlier.sum_nanos)
+            .map(|(a, b)| a.saturating_sub(*b))
+            .collect();
+        let mut min_nanos = u64::MAX;
+        let mut max_nanos = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c > 0 {
+                let mean = sum_nanos[i] / c;
+                min_nanos = min_nanos.min(mean);
+                max_nanos = max_nanos.max(mean);
+            }
+        }
+        HistogramSnapshot { counts, sum_nanos, min_nanos, max_nanos }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("count".into(), Json::Num(self.count() as f64));
+        o.insert("mean_secs".into(), Json::Num(self.mean_secs()));
+        o.insert("p50_secs".into(), Json::Num(self.percentile_secs(0.50)));
+        o.insert("p99_secs".into(), Json::Num(self.percentile_secs(0.99)));
+        o.insert("min_secs".into(), Json::Num(self.min_secs()));
+        o.insert("max_secs".into(), Json::Num(self.max_secs()));
+        Json::Obj(o)
+    }
+}
+
+/// Name-keyed instrument store. One process-global instance behind
+/// [`registry`]; standalone instances are for tests.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create by name. Registration is NOT gated on the enabled
+    /// flag (so snapshot keys exist either way); recording is.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap_or_else(|p| p.into_inner());
+        map.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::new())).clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().unwrap_or_else(|p| p.into_inner());
+        map.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::new())).clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap_or_else(|p| p.into_inner());
+        map.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())).clone()
+    }
+
+    /// Everything currently registered, as one JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, c) in self.counters.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+            counters.insert(name.clone(), Json::Num(c.get() as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, g) in self.gauges.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+            gauges.insert(name.clone(), Json::Num(g.get() as f64));
+        }
+        let mut hists = BTreeMap::new();
+        for (name, h) in self.histograms.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+            hists.insert(name.clone(), h.snapshot().to_json());
+        }
+        let mut root = BTreeMap::new();
+        root.insert("counters".into(), Json::Obj(counters));
+        root.insert("gauges".into(), Json::Obj(gauges));
+        root.insert("histograms".into(), Json::Obj(hists));
+        Json::Obj(root)
+    }
+
+    /// Aligned text rendering (`dkpca info --metrics`).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+            out.push_str(&format!("counter    {name} = {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+            out.push_str(&format!("gauge      {name} = {}\n", g.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+            let s = h.snapshot();
+            out.push_str(&format!(
+                "histogram  {name}: n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms max={:.3}ms\n",
+                s.count(),
+                s.mean_secs() * 1e3,
+                s.percentile_secs(0.50) * 1e3,
+                s.percentile_secs(0.99) * 1e3,
+                s.max_secs() * 1e3,
+            ));
+        }
+        if out.is_empty() {
+            out.push_str("(no metrics recorded)\n");
+        }
+        out
+    }
+}
+
+/// The process-global registry every instrumented subsystem records
+/// into.
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::set_enabled;
+    use std::sync::MutexGuard;
+
+    /// Tests that read or toggle the global enabled flag serialize on
+    /// this lock so the unit-test harness's thread pool cannot
+    /// interleave a disabled window into another test's recording.
+    fn enabled_guard() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let _g = enabled_guard();
+        set_enabled(true);
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(3);
+        g.add(-1);
+        assert_eq!(g.get(), 2);
+        g.set_max(7);
+        g.set_max(5);
+        assert_eq!(g.get(), 7, "set_max keeps the high-water mark");
+    }
+
+    #[test]
+    fn disabled_telemetry_records_nothing() {
+        let _g = enabled_guard();
+        set_enabled(false);
+        let c = Counter::new();
+        c.inc();
+        let h = Histogram::new();
+        h.record_secs(0.5);
+        set_enabled(true);
+        assert_eq!(c.get(), 0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn histogram_percentiles_exact_on_known_samples() {
+        let _g = enabled_guard();
+        set_enabled(true);
+        let h = Histogram::new();
+        // Four samples, decades apart — each lands in its own bucket,
+        // so every quantile is the exact sample value.
+        for secs in [1e-6, 1e-4, 1e-2, 1.0] {
+            h.record_secs(secs);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 4);
+        // rank(0.5 * 4) = 2 -> second-smallest sample.
+        assert!((s.percentile_secs(0.50) - 1e-4).abs() < 1e-12);
+        assert!((s.percentile_secs(0.99) - 1.0).abs() < 1e-12);
+        assert!((s.percentile_secs(0.25) - 1e-6).abs() < 1e-12);
+        assert!((s.min_secs() - 1e-6).abs() < 1e-12);
+        assert!((s.max_secs() - 1.0).abs() < 1e-12);
+        // A repeated value dominates its bucket: p99 is exact.
+        let h = Histogram::new();
+        for _ in 0..200 {
+            h.record_secs(2e-3);
+        }
+        let s = h.snapshot();
+        assert!((s.percentile_secs(0.99) - 2e-3).abs() < 1e-12);
+        assert!((s.mean_secs() - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_is_nan_safe() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.percentile_secs(0.5), 0.0);
+        assert_eq!(s.mean_secs(), 0.0);
+        assert_eq!(s.min_secs(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_delta_isolates_a_window() {
+        let _g = enabled_guard();
+        set_enabled(true);
+        let h = Histogram::new();
+        for _ in 0..10 {
+            h.record_secs(1e-5);
+        }
+        let before = h.snapshot();
+        for _ in 0..30 {
+            h.record_secs(1e-2);
+        }
+        let win = h.snapshot().delta(&before);
+        assert_eq!(win.count(), 30);
+        assert!((win.percentile_secs(0.5) - 1e-2).abs() < 1e-12);
+        assert!((win.mean_secs() - 1e-2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounded() {
+        let mut prev = 0usize;
+        for nanos in [0u64, 1, 100, 101, 1_000, 1_000_000, 10_u64.pow(12), u64::MAX] {
+            let b = bucket_index(nanos);
+            assert!(b >= prev, "bucket index must be monotone in the value");
+            assert!(b < HIST_BUCKETS);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn registry_get_or_create_shares_instances() {
+        let _g = enabled_guard();
+        set_enabled(true);
+        let r = Registry::new();
+        r.counter("x").add(2);
+        r.counter("x").add(3);
+        assert_eq!(r.counter("x").get(), 5);
+        r.histogram("h").record_secs(1e-3);
+        assert_eq!(r.histogram("h").count(), 1);
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"x\":5"));
+        assert!(json.contains("\"histograms\""));
+        let text = r.render_text();
+        assert!(text.contains("counter    x = 5"));
+    }
+}

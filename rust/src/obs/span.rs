@@ -1,0 +1,178 @@
+//! Span-timing types for the protocol engine: per-node phase
+//! accumulators (compute wall/CPU vs. park/wait) and the per-iteration
+//! convergence trace. These are plain owned data — `NodeProgram` fills
+//! one `NodeTrace` as it steps, and it rides out on `NodeOutput` into
+//! `RunReport`/`MultiRunReport` with no shared state and no effect on
+//! the protocol's message sequence.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Phase indices into [`NodeTrace::phases`].
+pub const PHASE_SETUP: usize = 0;
+pub const PHASE_ROUND_A: usize = 1;
+pub const PHASE_ROUND_B: usize = 2;
+pub const PHASE_DEFLATE: usize = 3;
+
+pub const PHASE_NAMES: [&str; 4] = ["setup", "round_a", "round_b", "deflate"];
+
+/// Accumulated timing for one protocol phase on one node: how many
+/// times it ran, how long its compute sections took (wall and
+/// thread-CPU), and how long the node sat parked waiting for the
+/// messages that gate it.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseSpan {
+    pub count: u64,
+    pub compute_wall_secs: f64,
+    pub compute_cpu_secs: f64,
+    pub park_secs: f64,
+    pub park_count: u64,
+}
+
+impl PhaseSpan {
+    pub fn add_compute(&mut self, wall: f64, cpu: f64) {
+        self.count += 1;
+        self.compute_wall_secs += wall;
+        self.compute_cpu_secs += cpu;
+    }
+
+    pub fn add_park(&mut self, secs: f64) {
+        self.park_count += 1;
+        self.park_secs += secs;
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("count".into(), Json::Num(self.count as f64));
+        o.insert("compute_wall_secs".into(), Json::Num(self.compute_wall_secs));
+        o.insert("compute_cpu_secs".into(), Json::Num(self.compute_cpu_secs));
+        o.insert("park_secs".into(), Json::Num(self.park_secs));
+        o.insert("park_count".into(), Json::Num(self.park_count as f64));
+        Json::Obj(o)
+    }
+}
+
+/// One row of the convergence trace: the node's view of pass `pass` at
+/// local iteration `iter` when round B completed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IterTrace {
+    /// Deflation pass (component index) this iteration belongs to.
+    pub pass: usize,
+    /// Iteration within the pass (the protocol's `t` at round B).
+    pub iter: usize,
+    /// `alpha_delta()` after the update — the stop-rule residual. NaN
+    /// when the run has `tol == 0` and no residual is computed.
+    pub residual: f64,
+    /// Oldest gossip-window entry (what the stop rule tests against
+    /// tol); `f64::INFINITY` while the window is still filling or when
+    /// gossip is off.
+    pub gossip_head: f64,
+    /// Whether this iteration tripped the decentralized stop rule.
+    pub stop: bool,
+}
+
+/// Iteration cap on the stored trace — 100k rows ≈ 4 MB per node, far
+/// above any experiment in the repo; past it we count drops instead of
+/// growing without bound.
+pub const TRACE_MAX_ITERS: usize = 100_000;
+
+/// Everything one node observed about its own run: per-phase spans and
+/// the per-iteration convergence trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeTrace {
+    pub phases: [PhaseSpan; 4],
+    pub iters: Vec<IterTrace>,
+    /// Rows not stored because the trace hit [`TRACE_MAX_ITERS`].
+    pub dropped_iters: u64,
+}
+
+impl NodeTrace {
+    pub fn push_iter(&mut self, row: IterTrace) {
+        if self.iters.len() >= TRACE_MAX_ITERS {
+            self.dropped_iters += 1;
+        } else {
+            self.iters.push(row);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        // JSON has no Infinity/NaN literal; non-finite residual and
+        // gossip values render as null.
+        fn num_or_null(v: f64) -> Json {
+            if v.is_finite() { Json::Num(v) } else { Json::Null }
+        }
+        let mut phases = BTreeMap::new();
+        for (i, name) in PHASE_NAMES.iter().enumerate() {
+            phases.insert((*name).to_string(), self.phases[i].to_json());
+        }
+        let iters: Vec<Json> = self
+            .iters
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("pass".into(), Json::Num(r.pass as f64));
+                o.insert("iter".into(), Json::Num(r.iter as f64));
+                o.insert("residual".into(), num_or_null(r.residual));
+                o.insert("gossip_head".into(), num_or_null(r.gossip_head));
+                o.insert("stop".into(), Json::Bool(r.stop));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("phases".into(), Json::Obj(phases));
+        root.insert("iters".into(), Json::Arr(iters));
+        root.insert("dropped_iters".into(), Json::Num(self.dropped_iters as f64));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_span_accumulates() {
+        let mut s = PhaseSpan::default();
+        s.add_compute(0.5, 0.4);
+        s.add_compute(0.25, 0.2);
+        s.add_park(0.1);
+        assert_eq!(s.count, 2);
+        assert!((s.compute_wall_secs - 0.75).abs() < 1e-12);
+        assert!((s.compute_cpu_secs - 0.6).abs() < 1e-12);
+        assert_eq!(s.park_count, 1);
+    }
+
+    #[test]
+    fn trace_caps_and_counts_drops() {
+        let mut t = NodeTrace::default();
+        let row = IterTrace {
+            pass: 0,
+            iter: 0,
+            residual: 0.1,
+            gossip_head: f64::INFINITY,
+            stop: false,
+        };
+        for _ in 0..TRACE_MAX_ITERS + 5 {
+            t.push_iter(row);
+        }
+        assert_eq!(t.iters.len(), TRACE_MAX_ITERS);
+        assert_eq!(t.dropped_iters, 5);
+    }
+
+    #[test]
+    fn non_finite_values_render_as_null() {
+        let mut t = NodeTrace::default();
+        t.push_iter(IterTrace {
+            pass: 0,
+            iter: 0,
+            residual: f64::NAN,
+            gossip_head: f64::INFINITY,
+            stop: false,
+        });
+        let json = t.to_json().to_string();
+        assert!(json.contains("\"residual\":null"));
+        assert!(json.contains("\"gossip_head\":null"));
+        assert!(!json.contains("NaN") && !json.contains("inf"));
+    }
+}

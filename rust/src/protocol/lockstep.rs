@@ -263,4 +263,10 @@ impl LockstepNet {
     pub fn stats(&self) -> &TrafficStats {
         &self.stats
     }
+
+    /// Telemetry sidecars of all programs, in node order (empty traces
+    /// when telemetry is disabled).
+    pub fn node_traces(&self) -> Vec<crate::obs::NodeTrace> {
+        self.programs.iter().map(|p| p.trace().clone()).collect()
+    }
 }

@@ -30,6 +30,9 @@ use crate::admm::{AdmmConfig, NodeState, RoundA};
 use crate::backend::ComputeBackend;
 use crate::kernels::Kernel;
 use crate::linalg::Matrix;
+use crate::obs;
+use crate::obs::span::{PHASE_DEFLATE, PHASE_ROUND_A, PHASE_ROUND_B, PHASE_SETUP};
+use crate::obs::{IterTrace, NodeTrace};
 use crate::util::time::thread_cpu_secs;
 
 use super::message::{Envelope, Payload, Phase};
@@ -69,6 +72,9 @@ pub struct NodeOutput {
     pub compute_secs: f64,
     /// Wall seconds of the iteration protocol (setup excluded).
     pub iter_secs: f64,
+    /// Telemetry: per-phase spans and the convergence trace (empty
+    /// when telemetry is disabled).
+    pub trace: NodeTrace,
 }
 
 /// One node of Alg. 1 as a transport-agnostic state machine.
@@ -116,6 +122,12 @@ pub struct NodeProgram {
     compute_secs: f64,
     iter_clock: Option<Instant>,
     iter_secs: f64,
+    /// Telemetry sidecar — written only when `obs::enabled()`, never
+    /// read by the protocol itself.
+    trace: NodeTrace,
+    /// The gossip head the last round-A stop check tested (INFINITY
+    /// while the window is filling or when gossip is off).
+    last_gossip_head: f64,
 }
 
 impl NodeProgram {
@@ -155,6 +167,8 @@ impl NodeProgram {
             compute_secs: 0.0,
             iter_clock: None,
             iter_secs: 0.0,
+            trace: NodeTrace::default(),
+            last_gossip_head: f64::INFINITY,
         }
     }
 
@@ -204,6 +218,26 @@ impl NodeProgram {
 
     pub fn compute_secs(&self) -> f64 {
         self.compute_secs
+    }
+
+    /// The telemetry sidecar accumulated so far (empty when telemetry
+    /// is disabled).
+    pub fn trace(&self) -> &NodeTrace {
+        &self.trace
+    }
+
+    /// Attribute a transport park (blocking message wait) to the phase
+    /// the program is currently gated on. Called by drivers around
+    /// `Transport::park`; pure telemetry.
+    pub fn note_park(&mut self, secs: f64) {
+        let idx = match self.step {
+            Step::Start | Step::Setup => PHASE_SETUP,
+            Step::RoundA => PHASE_ROUND_A,
+            Step::RoundB => PHASE_ROUND_B,
+            Step::Deflate => PHASE_DEFLATE,
+            Step::Done => return,
+        };
+        self.trace.phases[idx].add_park(secs);
     }
 
     /// Stash an incoming envelope (consumed by the next `poll`).
@@ -261,7 +295,16 @@ impl NodeProgram {
                             }
                         }
                         Some(map) => {
+                            let clock = obs::maybe_now();
+                            let fz = thread_cpu_secs();
                             let z = map.features(x_own);
+                            if let Some(c) = clock {
+                                // Featurization belongs to the setup
+                                // span but stays out of `compute_secs`
+                                // (whose definition predates this).
+                                self.trace.phases[PHASE_SETUP]
+                                    .add_compute(c.elapsed().as_secs_f64(), thread_cpu_secs() - fz);
+                            }
                             for &to in &self.nbrs {
                                 out.push((
                                     to,
@@ -299,6 +342,7 @@ impl NodeProgram {
                     // NodeState clones what it keeps; drop the
                     // program's copy once the state owns its data.
                     let x_own = self.x_own.take().expect("data present before setup");
+                    let clock = obs::maybe_now();
                     let t0 = thread_cpu_secs();
                     self.node = Some(NodeState::new(
                         self.id,
@@ -309,7 +353,11 @@ impl NodeProgram {
                         &self.cfg,
                         backend,
                     ));
-                    self.compute_secs += thread_cpu_secs() - t0;
+                    let cpu = thread_cpu_secs() - t0;
+                    self.compute_secs += cpu;
+                    if let Some(c) = clock {
+                        self.trace.phases[PHASE_SETUP].add_compute(c.elapsed().as_secs_f64(), cpu);
+                    }
                     self.iter_clock = Some(Instant::now());
                     self.begin_iteration(out);
                 }
@@ -338,15 +386,27 @@ impl NodeProgram {
                     }
                     // Decentralized stopping rule: stop after this
                     // iteration once the settled network-wide max of
-                    // iteration t - stop_lag is below tol.
-                    self.pending_stop = self.cfg.tol > 0.0
-                        && self.t >= self.stop_lag
-                        && self.gossip.front().copied().unwrap_or(f64::INFINITY) < self.cfg.tol;
+                    // iteration t - stop_lag is below tol. The head is
+                    // kept on the side for the convergence trace;
+                    // `INFINITY < tol` is false, so the decision is the
+                    // same expression as before.
+                    self.last_gossip_head = if self.cfg.tol > 0.0 && self.t >= self.stop_lag {
+                        self.gossip.front().copied().unwrap_or(f64::INFINITY)
+                    } else {
+                        f64::INFINITY
+                    };
+                    self.pending_stop = self.last_gossip_head < self.cfg.tol;
                     let rho2 = self.cfg.rho2_at(self.t);
                     let node = self.node.as_mut().expect("setup done before round A");
+                    let clock = obs::maybe_now();
                     let tz = thread_cpu_secs();
                     let segments = node.z_solve(&inbox_a, rho2, backend);
-                    self.compute_secs += thread_cpu_secs() - tz;
+                    let cpu = thread_cpu_secs() - tz;
+                    self.compute_secs += cpu;
+                    if let Some(c) = clock {
+                        self.trace.phases[PHASE_ROUND_A]
+                            .add_compute(c.elapsed().as_secs_f64(), cpu);
+                    }
                     for (to, seg) in segments {
                         if to == self.id {
                             node.receive_z(self.id, &seg);
@@ -378,16 +438,39 @@ impl NodeProgram {
                             _ => unreachable!("round-B phase carries Payload::B"),
                         }
                     }
+                    let clock = obs::maybe_now();
                     let tu = thread_cpu_secs();
                     node.local_update(rho2, backend);
-                    self.compute_secs += thread_cpu_secs() - tu;
+                    let cpu = thread_cpu_secs() - tu;
+                    self.compute_secs += cpu;
+                    if let Some(c) = clock {
+                        self.trace.phases[PHASE_ROUND_B]
+                            .add_compute(c.elapsed().as_secs_f64(), cpu);
+                    }
                     // Maintain the gossip window: drop the decided
                     // head, seed this iteration with the own delta.
+                    // The delta doubles as the trace residual
+                    // (`alpha_delta` is a pure read, so the extra call
+                    // on the tol == 0 path cannot perturb the run).
+                    let mut residual = f64::NAN;
                     if self.cfg.tol > 0.0 {
                         if self.gossip.len() == self.stop_lag {
                             self.gossip.pop_front();
                         }
-                        self.gossip.push_back(node.alpha_delta());
+                        let delta = node.alpha_delta();
+                        residual = delta;
+                        self.gossip.push_back(delta);
+                    } else if obs::enabled() {
+                        residual = node.alpha_delta();
+                    }
+                    if obs::enabled() {
+                        self.trace.push_iter(IterTrace {
+                            pass: self.comp,
+                            iter: self.t,
+                            residual,
+                            gossip_head: self.last_gossip_head,
+                            stop: self.pending_stop,
+                        });
                     }
                     self.t += 1;
                     self.total_iters += 1;
@@ -411,9 +494,15 @@ impl NodeProgram {
                         })
                         .collect();
                     let node = self.node.as_mut().expect("setup done before deflation");
+                    let clock = obs::maybe_now();
                     let td = thread_cpu_secs();
                     node.deflate_and_reseed(&received, self.comp + 1);
-                    self.compute_secs += thread_cpu_secs() - td;
+                    let cpu = thread_cpu_secs() - td;
+                    self.compute_secs += cpu;
+                    if let Some(c) = clock {
+                        self.trace.phases[PHASE_DEFLATE]
+                            .add_compute(c.elapsed().as_secs_f64(), cpu);
+                    }
                     self.comp += 1;
                     self.t = 0;
                     self.gossip.clear();
@@ -488,6 +577,7 @@ impl NodeProgram {
             converged: self.converged,
             compute_secs: self.compute_secs,
             iter_secs: self.iter_secs,
+            trace: self.trace,
         }
     }
 }

@@ -267,11 +267,12 @@ pub fn run_node(
         if program.is_done() {
             return program.into_output();
         }
-        assert!(
-            transport.park(),
-            "transport closed while node {} was mid-protocol",
-            program.id()
-        );
+        let park_clock = crate::obs::maybe_now();
+        let arrived = transport.park();
+        if let Some(c) = park_clock {
+            program.note_park(c.elapsed().as_secs_f64());
+        }
+        assert!(arrived, "transport closed while node {} was mid-protocol", program.id());
     }
 }
 

@@ -138,6 +138,41 @@ struct Counters {
 struct Job {
     req: ProjectionRequest,
     reply: Sender<Result<Projection, ServeError>>,
+    /// Enqueue time — the queue-wait histogram measures submit to
+    /// dequeue. Always stamped (an `Instant` read is nanoseconds); the
+    /// record itself is telemetry-gated.
+    submitted: Instant,
+}
+
+/// Serve-path latency series, resolved once per engine from the global
+/// registry (engines share the series — the snapshot describes the
+/// process, and the bench isolates windows via `HistogramSnapshot::
+/// delta`).
+struct ServeLatency {
+    queue: Arc<crate::obs::Histogram>,
+    exact: Arc<crate::obs::Histogram>,
+    rff: Arc<crate::obs::Histogram>,
+    trained_rff: Arc<crate::obs::Histogram>,
+}
+
+impl ServeLatency {
+    fn new() -> ServeLatency {
+        let reg = crate::obs::registry();
+        ServeLatency {
+            queue: reg.histogram(crate::obs::names::SERVE_QUEUE_SECS),
+            exact: reg.histogram(crate::obs::names::SERVE_PROJECT_EXACT_SECS),
+            rff: reg.histogram(crate::obs::names::SERVE_PROJECT_RFF_SECS),
+            trained_rff: reg.histogram(crate::obs::names::SERVE_PROJECT_TRAINED_RFF_SECS),
+        }
+    }
+
+    fn path_hist(&self, path: ProjectionPath) -> &crate::obs::Histogram {
+        match path {
+            ProjectionPath::Exact => &self.exact,
+            ProjectionPath::Rff { .. } => &self.rff,
+            ProjectionPath::TrainedRff { .. } => &self.trained_rff,
+        }
+    }
 }
 
 /// Cache key: (node, feature dim D, seed, gamma bits, input dim M).
@@ -176,6 +211,7 @@ struct Shared {
     model: Arc<DkpcaModel>,
     rff_cache: Mutex<RffCache>,
     counters: Counters,
+    lat: ServeLatency,
 }
 
 /// A ticket for an in-flight request.
@@ -205,6 +241,7 @@ impl ProjectionEngine {
             model: Arc::new(model),
             rff_cache: Mutex::new(RffCache::default()),
             counters: Counters::default(),
+            lat: ServeLatency::new(),
         });
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -241,7 +278,7 @@ impl ProjectionEngine {
         let tx = self.tx.as_ref().expect("engine already shut down");
         // Send cannot fail while `tx` is alive; a closed queue surfaces
         // as `Canceled` at wait() time anyway.
-        let _ = tx.send(Job { req, reply });
+        let _ = tx.send(Job { req, reply, submitted: Instant::now() });
         PendingProjection { rx }
     }
 
@@ -314,13 +351,17 @@ fn worker_main(shared: Arc<Shared>, rx: Arc<Mutex<Receiver<Job>>>) {
             Ok(guard) => guard.recv(),
             Err(_) => return,
         };
-        let Ok(Job { req, reply }) = job else { return };
+        let Ok(Job { req, reply, submitted }) = job else { return };
+        shared.lat.queue.record_secs(submitted.elapsed().as_secs_f64());
         let result = serve_one(&shared, &req);
         let c = &shared.counters;
         c.requests.fetch_add(1, Ordering::Relaxed);
         match &result {
-            Ok(_) => {
+            Ok(p) => {
                 c.points.fetch_add(req.batch.rows() as u64, Ordering::Relaxed);
+                // Recorded before the reply so a caller that waits and
+                // then snapshots sees its own sample included.
+                shared.lat.path_hist(req.path).record_secs(p.compute_secs);
                 match req.path {
                     ProjectionPath::Exact => c.exact_requests.fetch_add(1, Ordering::Relaxed),
                     // Both collapsed-projector paths count as RFF

@@ -1,0 +1,225 @@
+//! Telemetry layer integration: the convergence trace agrees exactly
+//! with the run report on both transports, telemetry on/off leaves
+//! training output bit-identical (model artifact bytes AND the golden
+//! wire trace, on both LockstepNet and the mpsc fabric), and the global
+//! registry survives concurrent recording under the worker pool.
+//!
+//! Tests here toggle the process-global telemetry switch, and the test
+//! harness runs tests on parallel threads — every test that reads or
+//! writes the switch serializes on `obs_lock()`.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use dkpca::admm::AdmmConfig;
+use dkpca::backend::NativeBackend;
+use dkpca::coordinator::{run_decentralized_multik, run_decentralized_multik_traced};
+use dkpca::data::synth::{blob_centers, sample_blobs, BlobSpec};
+use dkpca::data::{NoiseModel, Rng};
+use dkpca::kernels::Kernel;
+use dkpca::linalg::{pool, Matrix};
+use dkpca::multik::MultiKpcaSolver;
+use dkpca::obs;
+use dkpca::protocol::TraceLog;
+use dkpca::topology::Graph;
+
+const KERNEL: Kernel = Kernel::Rbf { gamma: 0.5 };
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn fixed_xs() -> Vec<Matrix> {
+    let mut rng = Rng::new(42);
+    (0..3).map(|_| Matrix::from_fn(8, 2, |_, _| rng.gauss())).collect()
+}
+
+/// The tol-convergent fixture of rust/tests/multik.rs (4-class blobs,
+/// ring(5,1), tol 1e-5): every pass is known to stop on the gossip rule
+/// well inside max_iters, on both drivers.
+fn blob_network(j: usize, n: usize, seed: u64) -> Vec<Matrix> {
+    let spec = BlobSpec { n_classes: 4, ..Default::default() };
+    let centers = blob_centers(&spec, seed);
+    let mut rng = Rng::new(seed + 1);
+    (0..j).map(|_| sample_blobs(&spec, &centers, n, None, &mut rng).0).collect()
+}
+
+#[test]
+fn convergence_trace_matches_report_on_both_transports() {
+    let _g = obs_lock();
+    obs::set_enabled(true);
+    let kernel = Kernel::Rbf { gamma: 0.1 };
+    let xs = blob_network(5, 12, 3);
+    let graph = Graph::ring(5, 1);
+    let cfg = AdmmConfig { max_iters: 400, tol: 1e-5, seed: 1, ..Default::default() };
+    let k = 3;
+
+    let mut seq = MultiKpcaSolver::new(&xs, &graph, &kernel, &cfg, NoiseModel::None, 0, k);
+    let seq_res = seq.run(&NativeBackend);
+    let seq_traces = seq.node_traces();
+    assert_eq!(seq_traces.len(), 5);
+
+    let par = run_decentralized_multik(
+        &xs,
+        &graph,
+        &kernel,
+        &cfg,
+        NoiseModel::None,
+        0,
+        k,
+        Arc::new(NativeBackend),
+    );
+    assert_eq!(par.node_traces.len(), 5);
+
+    for (node, trace) in seq_traces.iter().enumerate() {
+        assert_eq!(trace.dropped_iters, 0);
+        for (pass, &iters) in seq_res.per_component_iterations.iter().enumerate() {
+            let rows: Vec<_> = trace.iters.iter().filter(|r| r.pass == pass).collect();
+            assert_eq!(
+                rows.len(),
+                iters,
+                "node {node} pass {pass}: trace rows must equal report iterations"
+            );
+            // Rows are in iteration order, 0..iters.
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(row.iter, i);
+            }
+            // The stop flag fires exactly on the last iteration of a
+            // tol-converged pass, and never on a max_iters-capped one.
+            let stop_iters: Vec<usize> = rows.iter().filter(|r| r.stop).map(|r| r.iter).collect();
+            if seq_res.converged[pass] {
+                assert_eq!(
+                    stop_iters,
+                    vec![iters - 1],
+                    "node {node} pass {pass}: stop must fire on the final iteration"
+                );
+            } else {
+                assert!(stop_iters.is_empty());
+            }
+            // tol > 0: every residual is a finite alpha_delta.
+            assert!(rows.iter().all(|r| r.residual.is_finite()));
+        }
+        // Phase spans saw every iteration (round A/B once per iter,
+        // setup once).
+        let total_iters: usize = seq_res.per_component_iterations.iter().sum();
+        assert_eq!(trace.phases[1].count as usize, total_iters, "round_a span count");
+        assert_eq!(trace.phases[2].count as usize, total_iters, "round_b span count");
+        assert!(trace.phases[0].count >= 1, "setup span recorded");
+
+        // The trace is a deterministic observation of a bit-identical
+        // run: both transports must record the exact same
+        // (pass, iter, residual, gossip_head, stop) sequence.
+        let fab = &par.node_traces[node];
+        assert_eq!(fab.iters.len(), trace.iters.len());
+        for (a, b) in fab.iters.iter().zip(&trace.iters) {
+            assert_eq!(a.pass, b.pass);
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.residual.to_bits(), b.residual.to_bits(), "node {node}");
+            assert_eq!(a.gossip_head.to_bits(), b.gossip_head.to_bits());
+            assert_eq!(a.stop, b.stop);
+        }
+    }
+    assert!(seq_res.converged.iter().all(|&c| c), "fixture should tol-converge");
+}
+
+/// One full training run on both transports at a given telemetry
+/// setting: (lockstep model bytes, fabric alphas, lockstep wire trace,
+/// fabric wire trace).
+fn run_both(enabled: bool) -> (Vec<u8>, Vec<Matrix>, String, String) {
+    obs::set_enabled(enabled);
+    let xs = fixed_xs();
+    let graph = Graph::ring(3, 1);
+    let cfg = AdmmConfig { max_iters: 6, tol: 1e-6, seed: 3, ..Default::default() };
+    let k = 2;
+
+    let lock_trace = Arc::new(TraceLog::default());
+    let mut seq = MultiKpcaSolver::new_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &cfg,
+        NoiseModel::None,
+        0,
+        k,
+        &NativeBackend,
+        Some(lock_trace.clone()),
+    );
+    let _ = seq.run(&NativeBackend);
+    let model_bytes = seq.to_model().to_bytes().expect("model encodes");
+
+    let fab_trace = Arc::new(TraceLog::default());
+    let par = run_decentralized_multik_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &cfg,
+        NoiseModel::None,
+        0,
+        k,
+        Arc::new(NativeBackend),
+        Some(fab_trace.clone()),
+    );
+    (model_bytes, par.alphas, lock_trace.render_per_edge(), fab_trace.render_per_edge())
+}
+
+#[test]
+fn telemetry_on_off_is_bit_identical_on_both_transports() {
+    let _g = obs_lock();
+    let (model_on, alphas_on, lock_wire_on, fab_wire_on) = run_both(true);
+    let (model_off, alphas_off, lock_wire_off, fab_wire_off) = run_both(false);
+    obs::set_enabled(true);
+
+    // The model artifact — every byte of it — must not depend on the
+    // telemetry switch.
+    assert_eq!(model_on, model_off, "telemetry changed the trained model artifact");
+    // Nor the fabric's trained coefficients...
+    assert_eq!(alphas_on, alphas_off, "telemetry changed the fabric alphas");
+    // ...nor a single envelope on the wire, on either transport.
+    assert_eq!(lock_wire_on, lock_wire_off, "telemetry changed the lockstep wire trace");
+    assert_eq!(fab_wire_on, fab_wire_off, "telemetry changed the fabric wire trace");
+    assert_eq!(lock_wire_on, fab_wire_on, "transports disagree on the wire sequence");
+}
+
+#[test]
+fn registry_survives_concurrent_recording_under_the_pool() {
+    let _g = obs_lock();
+    obs::set_enabled(true);
+    let reg = obs::registry();
+    let c = reg.counter("test.smoke_counter");
+    let h = reg.histogram("test.smoke_hist");
+    let gauge = reg.gauge("test.smoke_gauge");
+    let start_count = c.get();
+    let start_hist = h.snapshot();
+    let total = 512usize;
+    let body = |i: usize| {
+        // Cached handle and fresh name lookup must hit the same
+        // instruments from any worker thread.
+        c.inc();
+        reg.counter("test.smoke_counter").inc();
+        h.record_nanos((i as u64 + 1) * 1_000);
+        gauge.set_max(i as i64);
+    };
+    pool::global().parallel_for_threads(4, total, &body);
+    assert_eq!(c.get() - start_count, 2 * total as u64);
+    let win = h.snapshot().delta(&start_hist);
+    assert_eq!(win.count(), total as u64);
+    assert_eq!(gauge.get(), total as i64 - 1);
+    assert!(win.percentile_secs(0.99) > 0.0);
+}
+
+#[test]
+fn disabled_run_leaves_traces_empty() {
+    let _g = obs_lock();
+    obs::set_enabled(false);
+    let xs = fixed_xs();
+    let graph = Graph::ring(3, 1);
+    let cfg = AdmmConfig { max_iters: 4, seed: 1, ..Default::default() };
+    let mut seq = MultiKpcaSolver::new(&xs, &graph, &KERNEL, &cfg, NoiseModel::None, 0, 1);
+    let _ = seq.run(&NativeBackend);
+    let traces = seq.node_traces();
+    obs::set_enabled(true);
+    assert!(traces.iter().all(|t| t.iters.is_empty()), "disabled telemetry stored rows");
+    assert!(traces.iter().all(|t| t.phases.iter().all(|p| p.count == 0)));
+}
