@@ -47,13 +47,16 @@ use super::config::{AdmmConfig, ZNorm};
 /// the sender's current alpha plus the B column for constraint `to`.
 #[derive(Clone, Debug)]
 pub struct RoundA {
+    /// Sender's current dual vector alpha_from.
     pub alpha: Vec<f64>,
+    /// Sender's B column for constraint `to`.
     pub bcol: Vec<f64>,
 }
 
 /// Round-B payload: the segment `phi(X_to)^T z_from`.
 #[derive(Clone, Debug)]
 pub struct RoundB {
+    /// The segment `phi(X_to)^T z_from` in the receiver's coordinates.
     pub segment: Vec<f64>,
 }
 
@@ -182,7 +185,9 @@ fn rank_one_deflate(m: &mut Matrix, u: &[f64], inv: f64) {
 
 /// Full per-node state.
 pub struct NodeState {
+    /// Node id j.
     pub id: usize,
+    /// Local sample count N_j.
     pub n: usize,
     /// The node's own (exact) training data — retained so a finished
     /// run can be frozen into a `model::DkpcaModel` support set. This
@@ -217,10 +222,13 @@ pub struct NodeState {
     /// Truncated pinv of each contributor's centered Gram, computed
     /// from the (noisy) data this node received (cset order).
     pub contrib_kinv: Vec<Matrix>,
-    /// ADMM variables.
+    /// ADMM dual vector alpha_j (the optimization variable).
     pub alpha: Vec<f64>,
+    /// Previous-iterate alpha_j (drives the local stop signal).
     pub alpha_prev: Vec<f64>,
+    /// Consensus variables B_j, one column per constraint in C_j.
     pub b: Matrix,
+    /// Scaled multipliers P_j, matching `b` column-for-column.
     pub p: Matrix,
     /// Spectral bundle for rebuilding the alpha-update inverse.
     spectral: SpectralGram,

@@ -22,7 +22,9 @@ use super::node::NodeState;
 pub struct DkpcaResult {
     /// Final per-node dual coefficients alpha_j.
     pub alphas: Vec<Vec<f64>>,
+    /// Iterations the run took (identical at every node).
     pub iterations: usize,
+    /// Whether the run stopped on the `tol` criterion (vs `max_iters`).
     pub converged: bool,
     /// Floats transmitted over the (simulated) network by the iteration
     /// protocol (§4.2 accounting; excludes the one-time setup).
@@ -37,6 +39,7 @@ pub struct DkpcaResult {
 /// engine.
 pub struct DkpcaSolver {
     net: LockstepNet,
+    /// The ADMM configuration the run executes.
     pub cfg: AdmmConfig,
     /// The kernel the Grams were assembled with (kept for model export).
     pub kernel: Kernel,

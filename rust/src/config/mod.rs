@@ -23,8 +23,11 @@ pub enum DataSpec {
 pub enum TopoSpec {
     /// Ring with `k` neighbors per side (paper: k = 2 -> |Omega| = 4).
     Ring { k: usize },
+    /// Fully connected graph.
     Complete,
+    /// Hub-and-spoke: node 0 neighbors everyone.
     Star,
+    /// Seeded Erdos-Renyi-style graph targeting `avg_degree`.
     Random { avg_degree: f64 },
     /// Explicit undirected edge list — the only family that can
     /// describe an arbitrary (possibly invalid) deployment graph, so it
@@ -103,9 +106,13 @@ pub struct ExperimentConfig {
     pub nodes: usize,
     /// Samples per node N_j.
     pub samples_per_node: usize,
+    /// Synthetic data family and its parameters.
     pub data: DataSpec,
+    /// Network topology family.
     pub topo: TopoSpec,
+    /// ADMM solver parameters (rho, tolerance, iterations, ...).
     pub admm: AdmmConfig,
+    /// Channel noise applied to setup payloads.
     pub noise: NoiseModel,
     /// Worker-pool sizing for the parallel compute substrate.
     pub compute: ComputeSpec,

@@ -28,6 +28,7 @@ use super::fabric::build_fabric;
 
 /// Outcome of a parallel decentralized run.
 pub struct RunReport {
+    /// Final per-node dual coefficients alpha_j.
     pub alphas: Vec<Vec<f64>>,
     /// End-to-end wall-clock including setup.
     pub wall_secs: f64,
@@ -63,14 +64,19 @@ pub struct MultiRunReport {
     pub per_component_iterations: Vec<usize>,
     /// Whether each pass stopped on the `tol` criterion.
     pub converged: Vec<bool>,
+    /// End-to-end wall-clock including setup.
     pub wall_secs: f64,
+    /// Wall-clock of the iteration loops only.
     pub iter_secs: f64,
+    /// Per-node thread-CPU compute seconds, in node order.
     pub node_compute_secs: Vec<f64>,
+    /// Iteration-protocol floats sent across all edges (§4.2).
     pub comm_floats_total: u64,
     /// Floats moved by the one-time setup exchange alone.
     pub setup_floats_total: u64,
     /// Floats moved by the deflation exchanges between passes.
     pub deflate_floats_total: u64,
+    /// Iteration-protocol floats each node sent, in node order.
     pub per_node_sent: Vec<u64>,
     /// Per-node telemetry sidecars (phase spans + convergence trace),
     /// in node order; empty traces when telemetry is disabled.

@@ -17,6 +17,7 @@ use crate::topology::Graph;
 /// Implements [`Transport`], so `protocol::run_node` pumps a
 /// [`crate::protocol::NodeProgram`] over it directly.
 pub struct Endpoint {
+    /// The node this endpoint belongs to.
     pub id: usize,
     rx: Receiver<Envelope>,
     tx: HashMap<usize, Sender<Envelope>>,

@@ -11,7 +11,9 @@
 use super::rng::Rng;
 use crate::linalg::Matrix;
 
+/// Canvas side length in pixels (MNIST geometry).
 pub const SIDE: usize = 28;
+/// Flattened sample dimension (`SIDE * SIDE` = 784).
 pub const DIM: usize = SIDE * SIDE;
 
 /// Stroke-segment templates per digit class (coarse 7-segment-like

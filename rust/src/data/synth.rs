@@ -9,9 +9,13 @@ use crate::linalg::Matrix;
 /// labels). Class centers ~ N(0, center_scale^2 I), samples add
 /// N(0, spread^2 I).
 pub struct BlobSpec {
+    /// Ambient dimension M.
     pub dim: usize,
+    /// Number of Gaussian blobs.
     pub n_classes: usize,
+    /// Std-dev of the class-center distribution.
     pub center_scale: f64,
+    /// Within-class sample std-dev.
     pub spread: f64,
 }
 

@@ -29,11 +29,15 @@ fn blob_network(j: usize, n: usize, seed: u64) -> Vec<Matrix> {
 
 /// FIG1C: healthy-node similarity with one rank-1 node, ball vs sphere.
 pub struct DegenerateRow {
+    /// z-normalization mode label ("ball" / "sphere").
     pub z_norm: &'static str,
+    /// Mean similarity over the healthy nodes.
     pub healthy_mean: f64,
+    /// Similarity at the rank-deficient node.
     pub degenerate: f64,
 }
 
+/// Run the degenerate-node ablation across both z-norm modes.
 pub fn degenerate(j: usize, n: usize, iters: usize, backend: &dyn ComputeBackend, seed: u64) -> Vec<DegenerateRow> {
     let mut xs = blob_network(j, n, seed);
     let mut rng = Rng::new(seed ^ 0xD15EA5E);
@@ -60,6 +64,7 @@ pub fn degenerate(j: usize, n: usize, iters: usize, backend: &dyn ComputeBackend
     rows
 }
 
+/// Render [`degenerate`] rows for display/CSV.
 pub fn degenerate_table(rows: &[DegenerateRow]) -> Table {
     let mut t = Table::new(
         "Fig. 1(c) ablation — rank-1 node, ball vs sphere z-normalisation",
@@ -73,12 +78,17 @@ pub fn degenerate_table(rows: &[DegenerateRow]) -> Table {
 
 /// RHO: Lagrangian trajectory summary for a set of uniform penalties.
 pub struct RhoRow {
+    /// Uniform penalty parameter used for every constraint.
     pub rho: f64,
+    /// The paper's Assumption-2 lower bound on rho for this instance.
     pub assumption2_bound: f64,
+    /// Lagrangian decrease from first to last iteration.
     pub total_drop: f64,
+    /// Largest single-step Lagrangian increase in the tail half.
     pub max_late_increase: f64,
 }
 
+/// Sweep the penalty parameter and summarize each trajectory.
 pub fn rho_sweep(rhos: &[f64], iters: usize, backend: &dyn ComputeBackend, seed: u64) -> Vec<RhoRow> {
     let xs = blob_network(5, 12, seed);
     let graph = Graph::ring(5, 1);
@@ -110,6 +120,7 @@ pub fn rho_sweep(rhos: &[f64], iters: usize, backend: &dyn ComputeBackend, seed:
     rows
 }
 
+/// Render [`rho_sweep`] rows for display/CSV.
 pub fn rho_table(rows: &[RhoRow]) -> Table {
     let mut t = Table::new(
         "Theorem 2 ablation — Lagrangian behaviour vs rho",
@@ -128,10 +139,13 @@ pub fn rho_table(rows: &[RhoRow]) -> Table {
 
 /// SELF: the §6.1 self-constraint column on/off.
 pub struct SelfRow {
+    /// Whether C_j contains j itself.
     pub include_self: bool,
+    /// Mean similarity to the central solution.
     pub sim_mean: f64,
 }
 
+/// Toggle the self-constraint column and measure solution quality.
 pub fn self_constraint(iters: usize, backend: &dyn ComputeBackend, seed: u64) -> Vec<SelfRow> {
     let xs = blob_network(8, 20, seed);
     let graph = Graph::ring(8, 1);
@@ -153,6 +167,7 @@ pub fn self_constraint(iters: usize, backend: &dyn ComputeBackend, seed: u64) ->
     rows
 }
 
+/// Render [`self_constraint`] rows for display/CSV.
 pub fn self_table(rows: &[SelfRow]) -> Table {
     let mut t = Table::new(
         "Self-constraint ablation (rho^(1) column of §6.1)",
@@ -166,11 +181,15 @@ pub fn self_table(rows: &[SelfRow]) -> Table {
 
 /// INIT: random vs warm-started alpha at a given scale, across seeds.
 pub struct InitRow {
+    /// Initialization label ("random" / "warm").
     pub init: &'static str,
+    /// RNG seed for the run.
     pub seed: u64,
+    /// Mean similarity to the central solution.
     pub sim_mean: f64,
 }
 
+/// Compare alpha initializations across seeds.
 pub fn init_sweep(
     nodes: usize,
     samples: usize,
@@ -208,6 +227,7 @@ pub fn init_sweep(
     rows
 }
 
+/// Render [`init_sweep`] rows for display/CSV.
 pub fn init_table(rows: &[InitRow]) -> Table {
     let mut t = Table::new(
         "Init ablation — random (Alg. 1 as printed) vs local-kPCA warm start",

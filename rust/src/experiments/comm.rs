@@ -14,8 +14,11 @@ use crate::metrics::Table;
 
 use super::{build_env, paper_admm};
 
+/// One measurement of §4.2 per-iteration traffic vs its closed form.
 pub struct CommRow {
+    /// Neighbor count |Omega| (ring half-width times two).
     pub omega: usize,
+    /// Samples per node N_j.
     pub samples_per_node: usize,
     /// Measured floats per node per iteration (excluding setup).
     pub measured_per_node_iter: f64,
@@ -24,6 +27,7 @@ pub struct CommRow {
     pub predicted: f64,
 }
 
+/// Measure per-node per-iteration traffic across |Omega| and N grids.
 pub fn run(
     nodes: usize,
     omegas: &[usize],
@@ -69,6 +73,7 @@ pub fn run(
     rows
 }
 
+/// Render [`run`] rows for display/CSV.
 pub fn table(rows: &[CommRow]) -> Table {
     let mut t = Table::new(
         "Communication cost per node per iteration (§4.2: O(|Omega| N))",
@@ -92,14 +97,21 @@ pub fn table(rows: &[CommRow]) -> Table {
 /// the multik deflation transitions — across N, RawData vs
 /// RffFeatures, and k.
 pub struct CommTrajEntry {
+    /// Setup-exchange mode label ("raw" / "rff").
     pub setup: &'static str,
+    /// Components extracted.
     pub k: usize,
+    /// Network size J.
     pub nodes: usize,
+    /// Samples per node N_j.
     pub samples_per_node: usize,
     /// Total iterations across all passes.
     pub iters: usize,
+    /// One-time setup floats per directed edge.
     pub setup_floats_per_edge: f64,
+    /// Iteration-protocol floats per directed edge per iteration.
     pub iter_floats_per_edge_per_iter: f64,
+    /// Deflation-exchange floats per directed edge (multik only).
     pub deflate_floats_per_edge: f64,
 }
 

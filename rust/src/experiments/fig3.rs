@@ -16,9 +16,13 @@ use super::{build_env, central_kpca_power, paper_admm};
 
 /// One row of Fig. 3.
 pub struct Fig3Row {
+    /// Network size J.
     pub nodes: usize,
+    /// Per-node similarity to the central solution.
     pub sim: Stats,
+    /// DKPCA wall time for this row.
     pub dkpca_secs: f64,
+    /// Central-kPCA wall time for this row.
     pub central_secs: f64,
 }
 

@@ -15,8 +15,11 @@ use super::{build_env, central_kpca_power, paper_admm};
 
 /// One row of Fig. 4.
 pub struct Fig4Row {
+    /// Samples per node N_j.
     pub samples_per_node: usize,
+    /// DKPCA similarity to the central solution.
     pub dkpca: Stats,
+    /// Isolated-local-kPCA baseline similarity.
     pub local: Stats,
 }
 

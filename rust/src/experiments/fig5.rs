@@ -14,6 +14,7 @@ use crate::admm::DkpcaSolver;
 
 /// Result for one neighbor count.
 pub struct Fig5Row {
+    /// Neighbor count |Omega|.
     pub omega: usize,
     /// Mean similarity after each ADMM iteration (the histogram bars).
     pub per_iter: Vec<f64>,

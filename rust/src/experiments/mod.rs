@@ -25,8 +25,11 @@ use crate::topology::Graph;
 
 /// A fully-materialised experiment instance.
 pub struct Env {
+    /// Per-node data blocks X_j.
     pub xs: Vec<Matrix>,
+    /// The network topology.
     pub graph: Graph,
+    /// The kernel every Gram is built with.
     pub kernel: Kernel,
 }
 

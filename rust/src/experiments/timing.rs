@@ -13,10 +13,15 @@ use crate::metrics::{ms, Stopwatch, Table};
 
 use super::{build_env, central_kpca_power, paper_admm};
 
+/// One row of the running-time comparison.
 pub struct TimingRow {
+    /// Network size J.
     pub nodes: usize,
+    /// DKPCA end-to-end wall seconds.
     pub dkpca_wall: f64,
+    /// Mean per-node compute seconds (the deployable metric).
     pub dkpca_node_mean: f64,
+    /// Central-kPCA wall seconds on the pooled data.
     pub central_wall: f64,
 }
 
@@ -64,6 +69,7 @@ pub fn run(
     rows
 }
 
+/// Render [`run`] rows for display/CSV.
 pub fn table(rows: &[TimingRow]) -> Table {
     let mut t = Table::new(
         "Running time — DKPCA vs central kPCA (N_j fixed)",

@@ -17,6 +17,7 @@ use crate::topology::Graph;
 
 /// One row of the sweep.
 pub struct TopkRow {
+    /// Components extracted.
     pub k: usize,
     /// Mean per-node affinity of the decentralized top-k subspace to
     /// the central one (mean principal-angle cosine, 1.0 = identical).

@@ -32,6 +32,7 @@ pub struct RffMap {
     w: Matrix,
     /// Phases (D).
     b: Vec<f64>,
+    /// The RBF bandwidth the map approximates.
     pub gamma: f64,
 }
 

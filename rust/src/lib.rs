@@ -14,6 +14,13 @@
 // allowed crate-wide rather than per-module. Every other clippy lint
 // still gates CI (`cargo clippy -- -D warnings`).
 #![allow(clippy::needless_range_loop)]
+// Safety posture (enforced together with `dkpca-lint`, see DESIGN.md
+// §Static analysis & safety contracts): every unsafe operation inside
+// an unsafe fn still needs its own block + SAFETY comment, and the
+// whole public surface is documented (rustdoc runs with -D warnings in
+// CI, so broken intra-doc links fail too).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(missing_docs)]
 
 pub mod admm;
 pub mod backend;

@@ -9,7 +9,9 @@ use super::matrix::Matrix;
 
 /// Eigenvalues (ascending) and matching eigenvectors (columns of `vectors`).
 pub struct EigenSym {
+    /// Eigenvalues, ascending.
     pub values: Vec<f64>,
+    /// Matching eigenvectors as columns, same order as `values`.
     pub vectors: Matrix,
 }
 

@@ -74,14 +74,17 @@ impl Matrix {
         m
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Is this matrix square?
     pub fn is_square(&self) -> bool {
         self.rows == self.cols
     }

@@ -80,6 +80,10 @@ pub const PAR_BAND_ROWS: usize = 64;
 /// behind the pointer is alive for every dereference.
 struct RawFn(*const (dyn Fn(usize) + Sync));
 
+// SAFETY: the pointee is `Sync` (bound in the type) and outlives every
+// dereference — workers only touch it via a claimed index, which keeps
+// the submitting `parallel_for` blocked (see the doc comment above) —
+// so sharing or moving the pointer across worker threads is sound.
 unsafe impl Send for RawFn {}
 unsafe impl Sync for RawFn {}
 
@@ -369,6 +373,10 @@ pub fn global() -> &'static ComputePool {
 /// region).
 struct SendPtr(*mut f64);
 
+// SAFETY: the pointer is only ever offset into per-band disjoint row
+// ranges (see `par_row_chunks`), so no two threads form overlapping
+// `&mut` slices from it, and the exclusive borrow it was created from
+// outlives the `parallel_for` that fans it out.
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 

@@ -7,9 +7,13 @@ use super::ops::{dot, normalize, par_matvec_into};
 
 /// Result of a power-iteration run.
 pub struct PowerResult {
+    /// The dominant eigenvalue estimate.
     pub value: f64,
+    /// The matching unit eigenvector.
     pub vector: Vec<f64>,
+    /// Iterations the run took.
     pub iterations: usize,
+    /// Whether the tolerance was met before the iteration cap.
     pub converged: bool,
 }
 

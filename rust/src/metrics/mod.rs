@@ -7,14 +7,20 @@ use std::time::Instant;
 /// Summary statistics of a sample.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Stats {
+    /// Sample size.
     pub n: usize,
+    /// Sample mean (0 when empty).
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
 impl Stats {
+    /// Summary statistics of `values` (all-zero when empty).
     pub fn from(values: &[f64]) -> Stats {
         // An empty sample is a zeroed Stats, not a panic — callers
         // (experiment tables, the CLI summary) may legitimately see
@@ -47,14 +53,17 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Stopwatch {
         Stopwatch { start: Instant::now() }
     }
 
+    /// Seconds since `start`.
     pub fn elapsed_secs(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Milliseconds since `start`.
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed_secs() * 1e3
     }
@@ -63,12 +72,16 @@ impl Stopwatch {
 /// Column-oriented experiment table that renders aligned text and CSV —
 /// every bench target reports through this so paper rows are uniform.
 pub struct Table {
+    /// Heading printed above the aligned rendering.
     pub title: String,
+    /// Column headers (fixes the row arity).
     pub columns: Vec<String>,
+    /// Row cells, one `Vec` per row.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given title and column headers.
     pub fn new(title: &str, columns: &[&str]) -> Table {
         Table {
             title: title.into(),
@@ -77,11 +90,13 @@ impl Table {
         }
     }
 
+    /// Append one row (panics on arity mismatch).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Comma-joined CSV with a header line.
     pub fn to_csv(&self) -> String {
         let mut out = self.columns.join(",") + "\n";
         for row in &self.rows {

@@ -32,6 +32,7 @@ const MAGIC: &[u8; 4] = b"DKPM";
 /// Everything that can go wrong saving/loading/serving a model.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ModelError {
+    /// Filesystem failure while reading or writing the artifact.
     Io(String),
     /// Malformed artifact bytes (bad magic, truncated, length mismatch).
     Format(String),

@@ -103,7 +103,9 @@ impl NodeComponent {
 /// A trained DKPCA model: kernel spec + one frozen component per node.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DkpcaModel {
+    /// Kernel specification shared by every component.
     pub kernel: Kernel,
+    /// One frozen component per training node.
     pub nodes: Vec<NodeComponent>,
 }
 
@@ -139,6 +141,7 @@ impl DkpcaModel {
         DkpcaModel { kernel: *kernel, nodes }
     }
 
+    /// Number of per-node components in the model.
     pub fn n_nodes(&self) -> usize {
         self.nodes.len()
     }

@@ -54,6 +54,7 @@ pub struct MultiKpcaResult {
 /// of the protocol engine.
 pub struct MultiKpcaSolver {
     net: LockstepNet,
+    /// Number of components to extract.
     pub k: usize,
     /// Deflation mutates the Grams irreversibly, so a solver supports
     /// exactly one [`MultiKpcaSolver::run`].

@@ -16,9 +16,13 @@ use std::sync::atomic::{AtomicU8, Ordering};
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable or data-losing conditions; always emitted.
     Error = 0,
+    /// Degraded-but-continuing conditions (the default level).
     Warn = 1,
+    /// High-level lifecycle events.
     Info = 2,
+    /// Per-iteration diagnostics; off unless explicitly requested.
     Debug = 3,
 }
 
@@ -46,17 +50,22 @@ fn resolve() -> u8 {
         // Unset or unrecognized: warnings still reach the user.
         _ => Level::Warn,
     };
+    // ORDERING: relaxed — the level is an isolated cell; a racing
+    // reader seeing the old level for one message is harmless.
     LEVEL.store(lvl as u8, Ordering::Relaxed);
     lvl as u8
 }
 
 /// Override the level programmatically (wins over `DKPCA_LOG`).
 pub fn set_level(level: Level) {
+    // ORDERING: relaxed — same isolated-cell argument as `resolve`.
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
 /// Would a message at `level` be emitted right now?
 pub fn enabled(level: Level) -> bool {
+    // ORDERING: relaxed — hot-path gate read of the isolated level
+    // cell; no other memory is published through it.
     let mut cur = LEVEL.load(Ordering::Relaxed);
     if cur == u8::MAX {
         cur = resolve();
@@ -70,6 +79,8 @@ pub fn write(level: Level, args: fmt::Arguments<'_>) {
     eprintln!("[dkpca][{}] {args}", level.label());
 }
 
+/// Log at [`Level::Error`] — `format!` syntax; arguments are
+/// formatted only when the level is enabled.
 #[macro_export]
 macro_rules! log_error {
     ($($arg:tt)*) => {
@@ -79,6 +90,8 @@ macro_rules! log_error {
     };
 }
 
+/// Log at [`Level::Warn`] — `format!` syntax; arguments are
+/// formatted only when the level is enabled.
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)*) => {
@@ -88,6 +101,8 @@ macro_rules! log_warn {
     };
 }
 
+/// Log at [`Level::Info`] — `format!` syntax; arguments are
+/// formatted only when the level is enabled.
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
@@ -97,6 +112,8 @@ macro_rules! log_info {
     };
 }
 
+/// Log at [`Level::Debug`] — `format!` syntax; arguments are
+/// formatted only when the level is enabled.
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)*) => {

@@ -44,6 +44,9 @@ fn resolve() -> bool {
         std::env::var("DKPCA_TELEMETRY").ok().as_deref(),
         Some("0") | Some("off") | Some("false")
     );
+    // ORDERING: relaxed — the switch is an isolated cell; recording
+    // sites that race the first resolve just take the resolve path
+    // themselves and agree on the env-derived value.
     STATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
     on
 }
@@ -51,6 +54,8 @@ fn resolve() -> bool {
 /// Is telemetry recording on? First call resolves `DKPCA_TELEMETRY`
 /// (default on); afterwards a single relaxed load.
 pub fn enabled() -> bool {
+    // ORDERING: relaxed — hot-path gate read of the isolated switch;
+    // telemetry on/off never orders other memory.
     match STATE.load(Ordering::Relaxed) {
         0 => resolve(),
         s => s == 2,
@@ -59,6 +64,7 @@ pub fn enabled() -> bool {
 
 /// Force telemetry on/off for this process (wins over the env var).
 pub fn set_enabled(on: bool) {
+    // ORDERING: relaxed — isolated switch cell (see `resolve`).
     STATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
 }
 
@@ -89,9 +95,11 @@ pub mod names {
     pub const RFF_FEATURES_SECS: &str = "kernels.rff_features_secs";
     /// Serve: submit-to-dequeue queue wait.
     pub const SERVE_QUEUE_SECS: &str = "serve.queue_secs";
-    /// Serve: projection compute per path.
+    /// Serve: projection compute, exact (train-set Gram) path.
     pub const SERVE_PROJECT_EXACT_SECS: &str = "serve.project_secs.exact";
+    /// Serve: projection compute, collapsed-RFF path.
     pub const SERVE_PROJECT_RFF_SECS: &str = "serve.project_secs.rff";
+    /// Serve: projection compute, feature-trained (RFF-native) path.
     pub const SERVE_PROJECT_TRAINED_RFF_SECS: &str = "serve.project_secs.trained_rff";
 }
 
@@ -99,12 +107,15 @@ pub mod names {
 /// not): end-to-end wall time, per-pass iteration counts, traffic.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct RunSummary {
+    /// End-to-end training wall time.
     pub wall_secs: f64,
     /// Iterations per component pass.
     pub iterations: Vec<usize>,
     /// Stop-rule convergence flag per component pass.
     pub converged: Vec<bool>,
+    /// Iteration-phase floats sent across edges (§4.2 accounting).
     pub comm_floats: usize,
+    /// Setup-phase floats sent across edges.
     pub setup_floats: usize,
 }
 
@@ -130,11 +141,14 @@ impl RunSummary {
 /// registry, serialized with the crate's own JSON writer.
 #[derive(Clone, Debug, Default)]
 pub struct TelemetrySnapshot {
+    /// Run-level facts; `None` when no training run happened.
     pub run: Option<RunSummary>,
+    /// Per-node phase spans and convergence traces.
     pub nodes: Vec<NodeTrace>,
 }
 
 impl TelemetrySnapshot {
+    /// The versioned export object (run + nodes + global registry).
     pub fn to_json(&self) -> Json {
         let mut root = BTreeMap::new();
         root.insert("version".into(), Json::Num(1.0));
@@ -150,6 +164,7 @@ impl TelemetrySnapshot {
         Json::Obj(root)
     }
 
+    /// Serialize [`Self::to_json`] to `path` with a trailing newline.
     pub fn write_json(&self, path: &str) -> std::io::Result<()> {
         let mut body = self.to_json().to_string();
         body.push('\n');

@@ -28,21 +28,29 @@ use crate::util::json::Json;
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// A fresh zeroed counter (registry-internal; tests construct
+    /// standalone ones).
     pub fn new() -> Counter {
         Counter(AtomicU64::new(0))
     }
 
+    /// Add one event.
     pub fn inc(&self) {
         self.add(1);
     }
 
+    /// Add `n` events (no-op while telemetry is disabled).
     pub fn add(&self, n: u64) {
         if enabled() {
+            // ORDERING: relaxed — isolated monotone counter; readers
+            // only aggregate for reporting, nothing synchronizes on it.
             self.0.fetch_add(n, Ordering::Relaxed);
         }
     }
 
+    /// Current count.
     pub fn get(&self) -> u64 {
+        // ORDERING: relaxed — reporting read (see `add`).
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -53,29 +61,39 @@ impl Counter {
 pub struct Gauge(AtomicI64);
 
 impl Gauge {
+    /// A fresh zeroed gauge.
     pub fn new() -> Gauge {
         Gauge(AtomicI64::new(0))
     }
 
+    /// Set the level (no-op while telemetry is disabled).
     pub fn set(&self, v: i64) {
         if enabled() {
+            // ORDERING: relaxed — isolated level cell; a reader seeing
+            // a slightly stale level is exactly what a gauge promises.
             self.0.store(v, Ordering::Relaxed);
         }
     }
 
+    /// Adjust the level by `d`.
     pub fn add(&self, d: i64) {
         if enabled() {
+            // ORDERING: relaxed — isolated level cell (see `set`).
             self.0.fetch_add(d, Ordering::Relaxed);
         }
     }
 
+    /// Raise the level to `v` if higher (lock-free high-water mark).
     pub fn set_max(&self, v: i64) {
         if enabled() {
+            // ORDERING: relaxed — isolated level cell (see `set`).
             self.0.fetch_max(v, Ordering::Relaxed);
         }
     }
 
+    /// Current level.
     pub fn get(&self) -> i64 {
+        // ORDERING: relaxed — reporting read (see `set`).
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -123,6 +141,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// A fresh empty histogram over the fixed log-spaced buckets.
     pub fn new() -> Histogram {
         Histogram {
             counts: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
@@ -132,6 +151,7 @@ impl Histogram {
         }
     }
 
+    /// Record one duration sample in seconds (no-op when disabled).
     pub fn record_secs(&self, secs: f64) {
         if !enabled() {
             return;
@@ -139,18 +159,24 @@ impl Histogram {
         self.record_nanos(secs_to_nanos(secs));
     }
 
+    /// Record one duration sample in nanoseconds (no-op when disabled).
     pub fn record_nanos(&self, nanos: u64) {
         if !enabled() {
             return;
         }
         let b = bucket_index(nanos);
+        // ORDERING: relaxed — each cell is an independent statistic;
+        // snapshots tolerate torn cross-cell reads by contract (see
+        // `snapshot`), so no release/acquire pairing buys anything.
         self.counts[b].fetch_add(1, Ordering::Relaxed);
         self.sums[b].fetch_add(nanos, Ordering::Relaxed);
         self.min.fetch_min(nanos, Ordering::Relaxed);
         self.max.fetch_max(nanos, Ordering::Relaxed);
     }
 
+    /// Total samples recorded so far.
     pub fn count(&self) -> u64 {
+        // ORDERING: relaxed — reporting sum over independent cells.
         self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
@@ -159,6 +185,9 @@ impl Histogram {
     /// measure).
     pub fn snapshot(&self) -> HistogramSnapshot {
         HistogramSnapshot {
+            // ORDERING: relaxed — the whole snapshot is only
+            // consistent-enough by contract (doc above); per-cell
+            // ordering cannot make the multi-cell copy atomic anyway.
             counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
             sum_nanos: self.sums.iter().map(|s| s.load(Ordering::Relaxed)).collect(),
             min_nanos: self.min.load(Ordering::Relaxed),
@@ -172,18 +201,23 @@ impl Histogram {
 /// samples out of the process-global series).
 #[derive(Clone, Debug, PartialEq)]
 pub struct HistogramSnapshot {
+    /// Sample count per bucket.
     pub counts: Vec<u64>,
+    /// Sample value sum per bucket, in nanoseconds.
     pub sum_nanos: Vec<u64>,
     /// `u64::MAX` when empty.
     pub min_nanos: u64,
+    /// Largest sample in nanoseconds (0 when empty).
     pub max_nanos: u64,
 }
 
 impl HistogramSnapshot {
+    /// Total samples across all buckets.
     pub fn count(&self) -> u64 {
         self.counts.iter().sum()
     }
 
+    /// Mean sample value in seconds (0 when empty).
     pub fn mean_secs(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -192,6 +226,7 @@ impl HistogramSnapshot {
         self.sum_nanos.iter().sum::<u64>() as f64 / n as f64 / 1e9
     }
 
+    /// Smallest sample in seconds (0 when empty).
     pub fn min_secs(&self) -> f64 {
         if self.count() == 0 {
             return 0.0;
@@ -199,6 +234,7 @@ impl HistogramSnapshot {
         self.min_nanos as f64 / 1e9
     }
 
+    /// Largest sample in seconds (0 when empty).
     pub fn max_secs(&self) -> f64 {
         self.max_nanos as f64 / 1e9
     }
@@ -251,6 +287,7 @@ impl HistogramSnapshot {
         HistogramSnapshot { counts, sum_nanos, min_nanos, max_nanos }
     }
 
+    /// Digest object: count, mean, p50/p99, min/max (all in seconds).
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("count".into(), Json::Num(self.count() as f64));
@@ -273,6 +310,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// A fresh empty registry (tests; production uses [`registry`]).
     pub fn new() -> Registry {
         Registry::default()
     }
@@ -284,11 +322,13 @@ impl Registry {
         map.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::new())).clone()
     }
 
+    /// Get-or-create the gauge called `name` (see [`Self::counter`]).
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
         let mut map = self.gauges.lock().unwrap_or_else(|p| p.into_inner());
         map.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::new())).clone()
     }
 
+    /// Get-or-create the histogram called `name` (see [`Self::counter`]).
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         let mut map = self.histograms.lock().unwrap_or_else(|p| p.into_inner());
         map.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())).clone()

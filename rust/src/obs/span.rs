@@ -9,12 +9,16 @@ use std::collections::BTreeMap;
 
 use crate::util::json::Json;
 
-/// Phase indices into [`NodeTrace::phases`].
+/// Phase index into [`NodeTrace::phases`]: the setup exchange.
 pub const PHASE_SETUP: usize = 0;
+/// Phase index: round A (alpha broadcast).
 pub const PHASE_ROUND_A: usize = 1;
+/// Phase index: round B (consensus update).
 pub const PHASE_ROUND_B: usize = 2;
+/// Phase index: Hotelling deflation between component passes.
 pub const PHASE_DEFLATE: usize = 3;
 
+/// Phase names in index order (JSON keys and report labels).
 pub const PHASE_NAMES: [&str; 4] = ["setup", "round_a", "round_b", "deflate"];
 
 /// Accumulated timing for one protocol phase on one node: how many
@@ -23,25 +27,33 @@ pub const PHASE_NAMES: [&str; 4] = ["setup", "round_a", "round_b", "deflate"];
 /// messages that gate it.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PhaseSpan {
+    /// Compute sections accumulated.
     pub count: u64,
+    /// Wall time across the compute sections.
     pub compute_wall_secs: f64,
+    /// Thread-CPU time across the compute sections.
     pub compute_cpu_secs: f64,
+    /// Wall time spent parked waiting for gating messages.
     pub park_secs: f64,
+    /// Park intervals accumulated.
     pub park_count: u64,
 }
 
 impl PhaseSpan {
+    /// Fold in one compute section (wall and thread-CPU seconds).
     pub fn add_compute(&mut self, wall: f64, cpu: f64) {
         self.count += 1;
         self.compute_wall_secs += wall;
         self.compute_cpu_secs += cpu;
     }
 
+    /// Fold in one park interval.
     pub fn add_park(&mut self, secs: f64) {
         self.park_count += 1;
         self.park_secs += secs;
     }
 
+    /// The span as a flat JSON object.
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("count".into(), Json::Num(self.count as f64));
@@ -81,13 +93,16 @@ pub const TRACE_MAX_ITERS: usize = 100_000;
 /// the per-iteration convergence trace.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct NodeTrace {
+    /// Per-phase spans, indexed by the `PHASE_*` constants.
     pub phases: [PhaseSpan; 4],
+    /// Convergence trace rows in iteration order.
     pub iters: Vec<IterTrace>,
     /// Rows not stored because the trace hit [`TRACE_MAX_ITERS`].
     pub dropped_iters: u64,
 }
 
 impl NodeTrace {
+    /// Append a trace row, counting drops past [`TRACE_MAX_ITERS`].
     pub fn push_iter(&mut self, row: IterTrace) {
         if self.iters.len() >= TRACE_MAX_ITERS {
             self.dropped_iters += 1;
@@ -96,6 +111,7 @@ impl NodeTrace {
         }
     }
 
+    /// Phases + trace as one JSON object.
     pub fn to_json(&self) -> Json {
         // JSON has no Infinity/NaN literal; non-finite residual and
         // gossip values render as null.

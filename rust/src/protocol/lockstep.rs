@@ -172,14 +172,17 @@ impl LockstepNet {
         self.programs.iter().map(|p| p.total_iterations()).min().unwrap_or(0)
     }
 
+    /// Have all programs reached `Done`?
     pub fn is_done(&self) -> bool {
         self.programs.iter().all(|p| p.is_done())
     }
 
+    /// Number of node programs in the mesh.
     pub fn len(&self) -> usize {
         self.programs.len()
     }
 
+    /// Is the mesh empty?
     pub fn is_empty(&self) -> bool {
         self.programs.is_empty()
     }
@@ -214,6 +217,7 @@ impl LockstepNet {
         self.config().setup.shared_map(self.kernel(), self.input_dim())
     }
 
+    /// Node `j`'s solver state (panics before setup completes).
     pub fn node(&self, j: usize) -> &NodeState {
         self.programs[j].node()
     }

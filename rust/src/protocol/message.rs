@@ -22,9 +22,13 @@ pub enum Phase {
 /// One envelope on a directed link.
 #[derive(Debug)]
 pub struct Envelope {
+    /// Sending node id.
     pub from: usize,
+    /// Sender's local iteration when the envelope was produced.
     pub iter: usize,
+    /// Protocol phase the payload belongs to.
     pub phase: Phase,
+    /// The message body.
     pub payload: Payload,
 }
 
@@ -42,6 +46,7 @@ pub enum Payload {
     /// running max-consensus estimates of the network-wide alpha delta
     /// for the last `stop_lag` iterations (empty when `tol == 0`).
     A(RoundA, Vec<f64>),
+    /// Round-B protocol message (consensus update inputs).
     B(RoundB),
     /// The sender's converged alpha for the component that just
     /// finished — the multik deflation exchange (`N` floats per

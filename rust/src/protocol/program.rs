@@ -59,6 +59,7 @@ enum Step {
 /// Final outputs of a completed program (what the threaded driver's
 /// join loop consumes).
 pub struct NodeOutput {
+    /// Node id the outputs belong to.
     pub id: usize,
     /// One converged alpha column per component pass (banked, original
     /// dual coordinates).
@@ -172,6 +173,7 @@ impl NodeProgram {
         }
     }
 
+    /// This program's node id.
     pub fn id(&self) -> usize {
         self.id
     }
@@ -186,6 +188,7 @@ impl NodeProgram {
         &self.kernel
     }
 
+    /// Has the program reached its terminal step?
     pub fn is_done(&self) -> bool {
         self.step == Step::Done
     }
@@ -216,6 +219,7 @@ impl NodeProgram {
         &self.converged
     }
 
+    /// Pure-compute seconds accumulated so far.
     pub fn compute_secs(&self) -> f64 {
         self.compute_secs
     }

@@ -34,8 +34,11 @@ use super::program::{NodeOutput, NodeProgram};
 /// the lockstep and threaded runs noise identical payloads identically.
 #[derive(Clone, Copy, Debug)]
 pub struct ChannelSpec {
+    /// Channel noise applied to setup payloads.
     pub noise: NoiseModel,
+    /// Base seed the per-edge noise streams derive from.
     pub noise_seed: u64,
+    /// Network size (fixes the edge-seed derivation).
     pub n_nodes: usize,
 }
 
@@ -99,6 +102,7 @@ pub struct TrafficStats {
 }
 
 impl TrafficStats {
+    /// Zeroed stats for an n-node network.
     pub fn new(n: usize) -> TrafficStats {
         TrafficStats {
             counters: (0..n * n).map(|_| AtomicU64::new(0)).collect(),
@@ -110,15 +114,22 @@ impl TrafficStats {
     /// Record one transmitted envelope on its directed edge.
     pub fn record_env(&self, from: usize, to: usize, env: &Envelope) {
         let floats = env.floats();
+        // ORDERING: relaxed — per-edge/per-phase float totals are
+        // isolated monotone counters; delivery ordering is the fabric's
+        // job, the stats never gate protocol progress.
         self.counters[from * self.n + to].fetch_add(floats, Ordering::Relaxed);
         self.phases[phase_idx(env.phase)].fetch_add(floats, Ordering::Relaxed);
     }
 
+    /// Floats sent on the directed edge `from -> to`.
     pub fn edge(&self, from: usize, to: usize) -> u64 {
+        // ORDERING: relaxed — reporting read (see `record_env`).
         self.counters[from * self.n + to].load(Ordering::Relaxed)
     }
 
+    /// Floats sent across all directed edges.
     pub fn total(&self) -> u64 {
+        // ORDERING: relaxed — reporting sum (see `record_env`).
         self.counters.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
@@ -129,6 +140,7 @@ impl TrafficStats {
 
     /// Floats moved in one protocol phase, network-wide.
     pub fn phase_total(&self, phase: Phase) -> u64 {
+        // ORDERING: relaxed — reporting read (see `record_env`).
         self.phases[phase_idx(phase)].load(Ordering::Relaxed)
     }
 
@@ -148,10 +160,15 @@ impl TrafficStats {
 /// One transmitted envelope as the golden-trace tests see it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TraceEvent {
+    /// Sending node.
     pub from: usize,
+    /// Receiving node.
     pub to: usize,
+    /// Sender's local iteration at send time.
     pub iter: usize,
+    /// Protocol phase of the payload.
     pub phase: Phase,
+    /// Payload size in floats (§4.2 accounting).
     pub floats: u64,
 }
 
@@ -167,6 +184,7 @@ pub struct TraceLog {
 }
 
 impl TraceLog {
+    /// Append one send event.
     pub fn record(&self, ev: TraceEvent) {
         self.events
             .lock()
@@ -174,6 +192,7 @@ impl TraceLog {
             .push(ev);
     }
 
+    /// A copy of every event recorded so far, in recording order.
     pub fn events(&self) -> Vec<TraceEvent> {
         self.events
             .lock()

@@ -40,11 +40,16 @@ pub struct PjrtBackend {
     min_flops: f64,
 }
 
-// SAFETY: all xla raw-pointer state is owned by `inner` and only touched
-// while holding the mutex; the PJRT CPU client itself is thread-safe for
-// serialized access.
-unsafe impl Send for PjrtBackend {}
-unsafe impl Sync for PjrtBackend {}
+// SAFETY: narrowed from a former blanket impl on `PjrtBackend` — this
+// is the whole contract now. The xla wrapper types hold raw pointers
+// with no thread affinity: the PJRT CPU client is thread-safe for
+// serialized access, and every touch of `client`/`cache` goes through
+// `Mutex<PjrtInner>`, which needs `PjrtInner: Send` to be `Sync`.
+// Moving the client/executables between threads (what `Send` asserts)
+// is sound because nothing in them is tied to the creating thread; the
+// mutex supplies the exclusion. `PjrtBackend` itself derives Send+Sync
+// structurally from this impl — no blanket assertion needed.
+unsafe impl Send for PjrtInner {}
 
 impl PjrtBackend {
     /// Load the registry and create the PJRT CPU client. Every covered
@@ -75,11 +80,27 @@ impl PjrtBackend {
 
     /// (artifact hits, native fallbacks) served so far.
     pub fn stats(&self) -> (u64, u64) {
+        // ORDERING: relaxed — reporting reads of two independent
+        // monotonic counters; no cross-thread ordering is implied.
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
+    /// The loaded artifact registry (shape coverage introspection).
     pub fn registry(&self) -> &Registry {
         &self.registry
+    }
+
+    /// Count an op served from a compiled artifact.
+    fn hit(&self) {
+        // ORDERING: relaxed — isolated monotonic counter read only by
+        // `stats` for reporting; nothing sequences against it.
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count an op that fell back to the native substrate.
+    fn miss(&self) {
+        // ORDERING: relaxed — same isolated-counter argument as `hit`.
+        self.misses.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Execute the artifact for `key` on the given input literals,
@@ -146,7 +167,7 @@ impl ComputeBackend for PjrtBackend {
     fn gram_rbf_centered(&self, x: &Matrix, y: &Matrix, gamma: f64) -> Matrix {
         let flops = 2.0 * (x.rows() * y.rows() * x.cols()) as f64;
         if flops < self.min_flops {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.miss();
             return self.native.gram_rbf_centered(x, y, gamma);
         }
         let key = ArtifactKey::gram(x.rows(), y.rows(), x.cols());
@@ -156,19 +177,19 @@ impl ComputeBackend for PjrtBackend {
         if let Ok(inputs) = args() {
             if let Some(Ok(out)) = self.run(&key, &inputs) {
                 if let Ok(m) = literal_mat(&out[0], x.rows(), y.rows()) {
-                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    self.hit();
                     return m;
                 }
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.miss();
         self.native.gram_rbf_centered(x, y, gamma)
     }
 
     fn z_step(&self, g: &Matrix, c: &[f64]) -> (Vec<f64>, f64) {
         let flops = 2.0 * (c.len() * c.len()) as f64;
         if flops < self.min_flops {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.miss();
             return self.native.z_step(g, c);
         }
         let key = ArtifactKey::z_step(c.len());
@@ -181,13 +202,13 @@ impl ComputeBackend for PjrtBackend {
                     if let (Ok(s), Ok(norm2)) =
                         (literal_vec(&out[0]), literal_scalar(&out[1]))
                     {
-                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        self.hit();
                         return (s, norm2);
                     }
                 }
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.miss();
         self.native.z_step(g, c)
     }
 
@@ -202,7 +223,7 @@ impl ComputeBackend for PjrtBackend {
         let (n, d) = (p.rows(), p.cols());
         let flops = 2.0 * (2 * n * n + 2 * n * d) as f64;
         if flops < self.min_flops {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.miss();
             return self.native.admm_step(kc, ainv, p, b, rho);
         }
         let key = ArtifactKey::admm_step(n, d);
@@ -218,19 +239,19 @@ impl ComputeBackend for PjrtBackend {
         if let Ok(inputs) = args() {
             if let Some(Ok(out)) = self.run(&key, &inputs) {
                 if let (Ok(alpha), Ok(bn)) = (literal_vec(&out[0]), literal_mat(&out[1], n, d)) {
-                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    self.hit();
                     return (alpha, bn);
                 }
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.miss();
         self.native.admm_step(kc, ainv, p, b, rho)
     }
 
     fn power_iter_step(&self, k: &Matrix, v: &[f64]) -> (Vec<f64>, f64) {
         let flops = 2.0 * (v.len() * v.len()) as f64;
         if flops < self.min_flops {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.miss();
             return self.native.power_iter_step(k, v);
         }
         let key = ArtifactKey::power_iter(v.len());
@@ -240,16 +261,25 @@ impl ComputeBackend for PjrtBackend {
         if let Ok(inputs) = args() {
             if let Some(Ok(out)) = self.run(&key, &inputs) {
                 if let (Ok(v2), Ok(r)) = (literal_vec(&out[0]), literal_scalar(&out[1])) {
-                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    self.hit();
                     return (v2, r);
                 }
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.miss();
         self.native.power_iter_step(k, v)
     }
 
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn pjrt_backend_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<super::PjrtBackend>();
     }
 }

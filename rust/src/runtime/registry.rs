@@ -9,23 +9,29 @@ use crate::util::json::Json;
 /// Lookup key: op name + the shape dims that parameterise it.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct ArtifactKey {
+    /// Lowered op name (matches the aot.py emitter).
     pub op: String,
+    /// Shape dims in the op's canonical order.
     pub dims: Vec<usize>,
 }
 
 impl ArtifactKey {
+    /// Key for the centered RBF Gram op on an n×m / p×m pair.
     pub fn gram(n: usize, p: usize, m: usize) -> ArtifactKey {
         ArtifactKey { op: "gram_rbf_centered".into(), dims: vec![n, p, m] }
     }
 
+    /// Key for the fused ADMM step on an n-sample, d-neighbor node.
     pub fn admm_step(n: usize, d: usize) -> ArtifactKey {
         ArtifactKey { op: "admm_step".into(), dims: vec![n, d] }
     }
 
+    /// Key for the z-consensus step on a length-dn stacked vector.
     pub fn z_step(dn: usize) -> ArtifactKey {
         ArtifactKey { op: "z_step".into(), dims: vec![dn] }
     }
 
+    /// Key for one power-iteration step on an n×n matrix.
     pub fn power_iter(n: usize) -> ArtifactKey {
         ArtifactKey { op: "power_iter".into(), dims: vec![n] }
     }
@@ -34,13 +40,16 @@ impl ArtifactKey {
 /// One manifest entry.
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
+    /// Human-readable artifact name from the manifest.
     pub name: String,
+    /// Absolute path of the HLO-text file.
     pub path: PathBuf,
 }
 
 /// Parsed manifest: key -> artifact file.
 #[derive(Debug)]
 pub struct Registry {
+    /// Feature dimension the artifact set was lowered for.
     pub feat_dim: usize,
     entries: BTreeMap<ArtifactKey, ArtifactEntry>,
 }
@@ -83,18 +92,22 @@ impl Registry {
         Ok(Registry { feat_dim, entries })
     }
 
+    /// The artifact covering `key`, if the set includes the shape.
     pub fn lookup(&self, key: &ArtifactKey) -> Option<&ArtifactEntry> {
         self.entries.get(key)
     }
 
+    /// Number of artifacts in the manifest.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Is the artifact set empty?
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// All registered keys, in sorted order.
     pub fn keys(&self) -> impl Iterator<Item = &ArtifactKey> {
         self.entries.keys()
     }

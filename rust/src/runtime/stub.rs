@@ -17,6 +17,13 @@ use crate::linalg::Matrix;
 use super::registry::Registry;
 
 /// Unavailable PJRT backend (crate built without the `pjrt` feature).
+///
+/// Thread-safety parity with the real backend: the stub is `Send +
+/// Sync` automatically (its only field is [`std::convert::Infallible`]),
+/// matching the real `exec::PjrtBackend`, which derives both from the
+/// audited `unsafe impl Send for PjrtInner` behind its mutex — so
+/// swapping the feature flag never changes what callers may do across
+/// threads. Both variants assert this with a compile-time test.
 pub struct PjrtBackend {
     _unconstructable: std::convert::Infallible,
 }
@@ -34,10 +41,12 @@ impl PjrtBackend {
         Self::new(artifacts_dir)
     }
 
+    /// Mirror of the real backend's (hits, misses); always zero.
     pub fn stats(&self) -> (u64, u64) {
         (0, 0)
     }
 
+    /// Mirror of the real backend's registry accessor; unreachable.
     pub fn registry(&self) -> &Registry {
         // `new` never succeeds, so no instance can exist.
         match self._unconstructable {}
@@ -81,5 +90,11 @@ mod tests {
     fn construction_reports_missing_feature() {
         let err = PjrtBackend::new(Path::new("/nonexistent")).err().unwrap();
         assert!(err.contains("pjrt"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn stub_backend_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<PjrtBackend>();
     }
 }

@@ -47,8 +47,11 @@ pub enum ProjectionPath {
 /// One unit of serving work: project `batch` through node `node`.
 #[derive(Clone, Debug)]
 pub struct ProjectionRequest {
+    /// The node whose components project the batch.
     pub node: usize,
+    /// Input points, one per row.
     pub batch: Matrix,
+    /// Exact vs RFF projection path.
     pub path: ProjectionPath,
 }
 
@@ -57,7 +60,9 @@ pub struct ProjectionRequest {
 pub struct Projection {
     /// (batch rows x k) projection values.
     pub outputs: Matrix,
+    /// The node that served the request.
     pub node: usize,
+    /// The path that actually served it.
     pub path: ProjectionPath,
     /// Worker-side compute time for this request.
     pub compute_secs: f64,
@@ -76,7 +81,9 @@ const MAX_CACHED_PROJECTORS: usize = 64;
 /// Serving failures (bad requests; the engine itself never dies).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServeError {
+    /// Request named a node id outside the model.
     UnknownNode { node: usize, n_nodes: usize },
+    /// Batch column count does not match the model's input dim.
     DimMismatch { got: usize, want: usize },
     /// RFF path requested for a non-RBF kernel.
     RffNeedsRbf,
@@ -119,10 +126,15 @@ impl std::error::Error for ServeError {}
 /// Snapshot of the engine's served-traffic counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ServeStats {
+    /// Requests accepted (including ones that later errored).
     pub requests: u64,
+    /// Total input points across all requests.
     pub points: u64,
+    /// Requests served on the exact (train-set Gram) path.
     pub exact_requests: u64,
+    /// Requests served on an RFF path.
     pub rff_requests: u64,
+    /// Requests that returned a [`ServeError`].
     pub errors: u64,
 }
 
@@ -324,6 +336,9 @@ impl ProjectionEngine {
     pub fn stats(&self) -> ServeStats {
         let c = &self.shared.counters;
         ServeStats {
+            // ORDERING: relaxed — reporting reads of independent
+            // counters; a stats() racing live traffic is approximate
+            // by nature.
             requests: c.requests.load(Ordering::Relaxed),
             points: c.points.load(Ordering::Relaxed),
             exact_requests: c.exact_requests.load(Ordering::Relaxed),
@@ -355,23 +370,31 @@ fn worker_main(shared: Arc<Shared>, rx: Arc<Mutex<Receiver<Job>>>) {
         shared.lat.queue.record_secs(submitted.elapsed().as_secs_f64());
         let result = serve_one(&shared, &req);
         let c = &shared.counters;
+        // ORDERING: relaxed (all counter bumps below) — isolated
+        // monotone traffic counters read only by `stats`; the reply
+        // channel, not the counters, publishes the result.
         c.requests.fetch_add(1, Ordering::Relaxed);
         match &result {
             Ok(p) => {
+                // ORDERING: relaxed — isolated traffic counter.
                 c.points.fetch_add(req.batch.rows() as u64, Ordering::Relaxed);
                 // Recorded before the reply so a caller that waits and
                 // then snapshots sees its own sample included.
                 shared.lat.path_hist(req.path).record_secs(p.compute_secs);
                 match req.path {
+                    // ORDERING: relaxed — isolated traffic counters
+                    // (both arms).
                     ProjectionPath::Exact => c.exact_requests.fetch_add(1, Ordering::Relaxed),
                     // Both collapsed-projector paths count as RFF
                     // traffic (same serving economics).
                     ProjectionPath::Rff { .. } | ProjectionPath::TrainedRff { .. } => {
+                        // ORDERING: relaxed — isolated traffic counter.
                         c.rff_requests.fetch_add(1, Ordering::Relaxed)
                     }
                 };
             }
             Err(_) => {
+                // ORDERING: relaxed — isolated traffic counter.
                 c.errors.fetch_add(1, Ordering::Relaxed);
             }
         }

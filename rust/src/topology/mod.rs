@@ -166,10 +166,12 @@ impl Graph {
         Graph::from_edges(n, &edges)
     }
 
+    /// Number of nodes J.
     pub fn len(&self) -> usize {
         self.adj.len()
     }
 
+    /// Is the graph empty?
     pub fn is_empty(&self) -> bool {
         self.adj.is_empty()
     }
@@ -184,6 +186,7 @@ impl Graph {
         self.adj[j].len()
     }
 
+    /// `max_j |Omega_j|`.
     pub fn max_degree(&self) -> usize {
         self.adj.iter().map(|a| a.len()).max().unwrap_or(0)
     }

@@ -5,19 +5,53 @@
 //! wall clock charges descheduled time to whichever node happened to
 //! be preempted, which would make per-node "compute" grow with J. CPU
 //! time is the deployable per-node metric.
+//!
+//! Error handling is typed, not silent: a failed or implausible
+//! `clock_gettime` read degrades to the wall clock and says so in the
+//! returned [`ClockReading::source`] (plus a warn-once log line),
+//! instead of reporting a garbage or zero CPU time that would skew the
+//! phase spans.
 
 use std::sync::OnceLock;
 use std::time::Instant;
 
-/// Per-thread CPU time in seconds (`CLOCK_THREAD_CPUTIME_ID`).
-/// Declared directly against the C library so the crate stays
-/// dependency-free (no `libc` crate in the offline vendor set). The
-/// `i64, i64` struct layout matches the 64-bit Linux ABI only, so the
-/// declaration is gated on pointer width — 32-bit targets (c_long
+/// Which clock actually produced a [`ClockReading`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClockSource {
+    /// `CLOCK_THREAD_CPUTIME_ID` read succeeded and validated.
+    ThreadCpu,
+    /// The thread clock is unavailable (non-Linux / 32-bit target) or
+    /// a read failed validation; seconds come from [`wall_clock_secs`].
+    WallFallback,
+}
+
+/// One clock read: the seconds value plus where it came from, so
+/// callers that care (tests, diagnostics) can tell a degraded metric
+/// from a real one without the hot path paying for a `Result`.
+#[derive(Clone, Copy, Debug)]
+pub struct ClockReading {
+    /// Seconds on the selected clock (always finite and non-negative).
+    pub secs: f64,
+    /// The clock that produced `secs`.
+    pub source: ClockSource,
+}
+
+/// Per-thread CPU seconds; the plain-`f64` view of
+/// [`thread_cpu_reading`] that the span/report hot paths consume.
+pub fn thread_cpu_secs() -> f64 {
+    thread_cpu_reading().secs
+}
+
+/// Per-thread CPU time (`CLOCK_THREAD_CPUTIME_ID`), with a typed
+/// wall-clock fallback when the read fails or returns an implausible
+/// timespec. Declared directly against the C library so the crate
+/// stays dependency-free (no `libc` crate in the offline vendor set).
+/// The `i64, i64` struct layout matches the 64-bit Linux ABI only, so
+/// the declaration is gated on pointer width — 32-bit targets (c_long
 /// tv_nsec, time64 variants) take the wall-clock fallback instead of
 /// reading a mislaid struct.
 #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
-pub fn thread_cpu_secs() -> f64 {
+pub fn thread_cpu_reading() -> ClockReading {
     #[repr(C)]
     struct Timespec {
         tv_sec: i64,
@@ -31,23 +65,49 @@ pub fn thread_cpu_secs() -> f64 {
     // SAFETY: ts is a valid out-pointer; the clock id is a Linux
     // constant; clock_gettime writes ts and returns 0 on success.
     let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
-    if rc == 0 {
-        ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+    // Validate before trusting: rc != 0 means the read failed (EINVAL
+    // on kernels without the clock); a negative tv_sec or an
+    // out-of-range tv_nsec means the struct layout did not match and
+    // the value is garbage. Either way, fall back in the open.
+    if rc == 0 && ts.tv_sec >= 0 && (0..1_000_000_000).contains(&ts.tv_nsec) {
+        ClockReading {
+            secs: ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9,
+            source: ClockSource::ThreadCpu,
+        }
     } else {
-        0.0
+        warn_fallback_once(rc);
+        wall_fallback_reading()
     }
 }
 
 /// Fallback (non-Linux or 32-bit): the metric degrades to wall time
-/// where the thread clock is unavailable.
+/// where the thread clock is unavailable, and the reading says so.
 #[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
-pub fn thread_cpu_secs() -> f64 {
-    wall_clock_secs()
+pub fn thread_cpu_reading() -> ClockReading {
+    wall_fallback_reading()
+}
+
+/// The typed wall-clock fallback every degraded path funnels through.
+fn wall_fallback_reading() -> ClockReading {
+    ClockReading { secs: wall_clock_secs(), source: ClockSource::WallFallback }
+}
+
+/// Log the degradation once per process, not once per span tick.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+fn warn_fallback_once(rc: i32) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if !WARNED.swap(true, Ordering::SeqCst) {
+        crate::log_warn!(
+            "clock_gettime(CLOCK_THREAD_CPUTIME_ID) failed or returned an invalid \
+             timespec (rc={rc}); per-thread CPU metrics degrade to wall time"
+        );
+    }
 }
 
 /// Monotonic wall clock from first use. Only differences are consumed
 /// by callers, so a shared origin is fine. Compiled on every platform
-/// (it is the `thread_cpu_secs` fallback off 64-bit Linux) and kept
+/// (it is the `thread_cpu_reading` fallback off 64-bit Linux) and kept
 /// `pub` so the fallback path stays testable everywhere.
 pub fn wall_clock_secs() -> f64 {
     static START: OnceLock<Instant> = OnceLock::new();
@@ -59,6 +119,7 @@ mod tests {
     use super::*;
 
     #[test]
+    #[cfg_attr(miri, ignore = "busy-loop clock advance is too slow under the interpreter")]
     fn thread_cpu_secs_is_finite_and_monotone() {
         let a = thread_cpu_secs();
         // Burn a little CPU so the thread clock visibly advances.
@@ -70,6 +131,31 @@ mod tests {
         let b = thread_cpu_secs();
         assert!(a.is_finite() && b.is_finite());
         assert!(b >= a, "thread clock went backwards: {a} -> {b}");
+    }
+
+    #[test]
+    fn thread_cpu_reading_reports_a_source_and_sane_value() {
+        let r = thread_cpu_reading();
+        assert!(r.secs.is_finite() && r.secs >= 0.0, "bad reading: {:?}", r);
+        // Whichever clock served it, repeated reads never go backwards
+        // when the source is stable (both clocks are monotone).
+        let r2 = thread_cpu_reading();
+        if r.source == r2.source {
+            assert!(r2.secs >= r.secs, "clock went backwards: {:?} -> {:?}", r, r2);
+        }
+    }
+
+    #[test]
+    fn wall_fallback_is_monotone_and_non_negative() {
+        // The typed fallback must behave on every platform: finite,
+        // non-negative, labeled, and monotone across a real sleep.
+        let a = wall_fallback_reading();
+        assert_eq!(a.source, ClockSource::WallFallback);
+        assert!(a.secs.is_finite() && a.secs >= 0.0, "bad fallback: {:?}", a);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = wall_fallback_reading();
+        assert!(b.secs > a.secs, "wall fallback not monotone: {:?} -> {:?}", a, b);
+        assert_eq!(b.source, ClockSource::WallFallback);
     }
 
     #[test]

@@ -181,6 +181,7 @@ fn run_all_scenarios() -> Vec<Vec<u8>> {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full pipeline sweep is far too slow under the interpreter")]
 fn everything_is_bit_identical_across_pool_widths() {
     let widths = [1usize, 2, 8];
 
@@ -221,4 +222,116 @@ fn everything_is_bit_identical_across_pool_widths() {
             );
         }
     }
+}
+
+// -- Pool edge cases (`pool_` prefix: the TSan CI job runs exactly
+// these, so every test below must be meaningful under
+// `-Zsanitizer=thread`). All of them use standalone `ComputePool`
+// instances and the explicit-width entry point, so they neither read
+// nor disturb the process-global width the big sweep above owns. --
+
+/// Several threads submitting to one pool at once: every submission
+/// must run each of its indices exactly once, with no cross-talk
+/// between the interleaved tasks in the shared queue.
+#[test]
+fn pool_concurrent_submitters_each_run_every_index_once() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    const SUBMITTERS: usize = 4;
+    const TOTAL: usize = 96;
+    let pool = pool::ComputePool::new();
+    let barrier = Barrier::new(SUBMITTERS);
+    let counts: Vec<Vec<AtomicUsize>> = (0..SUBMITTERS)
+        .map(|_| (0..TOTAL).map(|_| AtomicUsize::new(0)).collect())
+        .collect();
+
+    std::thread::scope(|s| {
+        for sub in 0..SUBMITTERS {
+            let (pool, barrier, counts) = (&pool, &barrier, &counts);
+            s.spawn(move || {
+                barrier.wait();
+                pool.parallel_for_threads(3, TOTAL, &|i| {
+                    counts[sub][i].fetch_add(1, Ordering::SeqCst);
+                });
+            });
+        }
+    });
+
+    for (sub, row) in counts.iter().enumerate() {
+        for (i, c) in row.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "submitter {sub}, index {i}");
+        }
+    }
+}
+
+/// A band panic must re-raise on its own submitting thread with the
+/// original payload, while a different task queued on the same pool
+/// completes untouched.
+#[test]
+fn pool_panic_reaches_its_submitter_and_spares_the_queued_task() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    let pool = pool::ComputePool::new();
+    let barrier = Barrier::new(2);
+    let ok_runs = AtomicUsize::new(0);
+
+    std::thread::scope(|s| {
+        let panicker = s.spawn(|| {
+            barrier.wait();
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.parallel_for_threads(2, 8, &|i| {
+                    if i == 3 {
+                        panic!("band 3 exploded");
+                    }
+                });
+            }))
+        });
+        let survivor = s.spawn(|| {
+            barrier.wait();
+            pool.parallel_for_threads(2, 16, &|_| {
+                ok_runs.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+
+        let outcome = panicker.join().expect("submitting thread itself must survive");
+        let payload = outcome.expect_err("the band panic must propagate to its submitter");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("<non-str payload>");
+        assert!(msg.contains("band 3 exploded"), "wrong panic payload: {msg}");
+        survivor.join().expect("the queued task's submitter must not see the panic");
+    });
+
+    assert_eq!(ok_runs.load(Ordering::SeqCst), 16, "queued task lost bands");
+}
+
+/// `worker_budget` exhaustion: a width-2 task on a pool with many idle
+/// workers admits at most one helper (budget = threads - 1), so
+/// observed concurrency never exceeds the requested width even though
+/// seven spare workers are parked and hungry.
+#[test]
+fn pool_worker_budget_caps_concurrency_despite_idle_workers() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let pool = pool::ComputePool::new();
+    // Warm-up at width 8 so the pool has 7 parked workers on top of
+    // whatever thread submits next.
+    pool.parallel_for_threads(8, 64, &|_| {});
+
+    let current = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    let runs = AtomicUsize::new(0);
+    pool.parallel_for_threads(2, 32, &|_| {
+        let c = current.fetch_add(1, Ordering::SeqCst) + 1;
+        peak.fetch_max(c, Ordering::SeqCst);
+        // Hold the band open long enough for over-admission to show up
+        // as overlap rather than luck of scheduling.
+        std::thread::sleep(std::time::Duration::from_micros(200));
+        current.fetch_sub(1, Ordering::SeqCst);
+        runs.fetch_add(1, Ordering::SeqCst);
+    });
+
+    assert_eq!(runs.load(Ordering::SeqCst), 32, "band lost or double-run");
+    let peak = peak.load(Ordering::SeqCst);
+    assert!(peak <= 2, "width-2 task observed {peak} concurrent bands");
 }

@@ -1,0 +1,19 @@
+//! Clean fixture: satisfies every lint rule; must produce zero
+//! diagnostics.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+struct Shared(*mut u8);
+
+// SAFETY: Shared is only handed to scoped worker threads while the
+// owning scope blocks, so the raw pointer never outlives its target.
+unsafe impl Send for Shared {}
+
+fn publish(flag: &AtomicBool) {
+    // ORDERING: relaxed — standalone flag, no dependent reads to order.
+    flag.store(true, Ordering::Relaxed);
+}
+
+fn record(r: &Registry) {
+    r.counter(names::GOOD).inc();
+}

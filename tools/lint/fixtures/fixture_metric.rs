@@ -1,0 +1,8 @@
+//! Seeded violations: an inline metric-name literal and a
+//! `names::` constant that the schema does not declare.
+
+fn record(r: &Registry) {
+    r.counter("inline.name").inc(); //~ERROR metric-name
+    r.histogram(names::NOT_DECLARED).record_secs(0.5); //~ERROR metric-name
+    r.gauge(names::GOOD).set(1);
+}

@@ -1,0 +1,13 @@
+//! Seeded violation: a non-SeqCst atomic ordering with no
+//! `// ORDERING:` justification.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn bump(c: &AtomicUsize) {
+    c.fetch_add(1, Ordering::Relaxed); //~ERROR ordering-justify
+}
+
+fn bump_loudly(c: &AtomicUsize) {
+    // SeqCst is the default policy and needs no comment.
+    c.fetch_add(1, Ordering::SeqCst);
+}

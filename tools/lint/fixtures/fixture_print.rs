@@ -1,0 +1,11 @@
+//! Seeded violation: a print macro outside the allow-listed sink
+//! files.
+
+fn shout(x: usize) {
+    println!("x = {x}"); //~ERROR print-site
+}
+
+fn quiet() {
+    // println! in a comment is fine, as is "eprintln!" in a string.
+    let _s = "eprintln!";
+}

@@ -1,0 +1,6 @@
+//! Seeded violations: an unsafe site with no `// SAFETY:` comment and
+//! no inventory entry must trip both unsafe rules.
+
+struct Raw(*const u8);
+
+unsafe impl Send for Raw {} //~ERROR unsafe-comment unsafe-inventory

@@ -1,0 +1,7 @@
+//! Fixture schema: the stand-in for `obs::names` that the metric-name
+//! rule resolves fixture constants against.
+
+pub mod names {
+    /// The one declared fixture metric name.
+    pub const GOOD: &str = "fixture.good";
+}

@@ -1,0 +1,108 @@
+//! The checked-in unsafe inventory: `tools/lint/unsafe_inventory.txt`.
+//!
+//! Format, one entry per line:
+//!
+//! ```text
+//! # comment
+//! rust/src/linalg/pool.rs<TAB>unsafe impl Send for RawFn {}
+//! ```
+//!
+//! The second field is the *fingerprint* of the unsafe site's source
+//! line: whitespace-collapsed, comment-stripped code text (see
+//! [`crate::lexer::fingerprint`]). Fingerprints, not line numbers, so
+//! unrelated edits above an unsafe site don't invalidate the
+//! inventory — but any edit to the unsafe line itself forces a fresh
+//! human review.
+
+use std::collections::BTreeSet;
+
+/// One registered unsafe site.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    /// Repo-relative path (forward slashes).
+    pub path: String,
+    /// Whitespace-collapsed code text of the unsafe line.
+    pub fingerprint: String,
+    /// 1-based line in the inventory file (for stale diagnostics).
+    pub line: usize,
+}
+
+/// Parsed inventory: ordered entries + a lookup set.
+#[derive(Clone, Debug, Default)]
+pub struct Inventory {
+    entries: Vec<Entry>,
+    index: BTreeSet<(String, String)>,
+}
+
+impl Inventory {
+    /// An inventory with no entries (fixtures, unit tests).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Parse the inventory text. Errors (with a 1-based line number)
+    /// on any non-blank, non-comment line without a tab separator.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut inv = Self::default();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = idx + 1;
+            let trimmed = raw.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            let Some((path, fp)) = raw.split_once('\t') else {
+                return Err(format!(
+                    "inventory line {line}: expected `path<TAB>fingerprint`, got `{raw}`"
+                ));
+            };
+            let path = path.trim().to_string();
+            let fp = fp.trim().to_string();
+            if path.is_empty() || fp.is_empty() {
+                return Err(format!("inventory line {line}: empty path or fingerprint"));
+            }
+            inv.index.insert((path.clone(), fp.clone()));
+            inv.entries.push(Entry { path, fingerprint: fp, line });
+        }
+        Ok(inv)
+    }
+
+    /// Is this (file, fingerprint) pair registered?
+    pub fn contains(&self, path: &str, fp: &str) -> bool {
+        self.index.contains(&(path.to_string(), fp.to_string()))
+    }
+
+    /// Entries whose site was not seen in the scan — candidates for
+    /// removal (the code they vouched for is gone or was edited).
+    pub fn stale(&self, seen: &[(String, String)]) -> Vec<&Entry> {
+        let seen: BTreeSet<(&str, &str)> =
+            seen.iter().map(|(p, f)| (p.as_str(), f.as_str())).collect();
+        self.entries
+            .iter()
+            .filter(|e| !seen.contains(&(e.path.as_str(), e.fingerprint.as_str())))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_contains_and_stale_round_trip() {
+        let text = "# header\n\na.rs\tunsafe impl Send for X {}\nb.rs\tlet y = unsafe {\n";
+        let inv = Inventory::parse(text).expect("well-formed");
+        assert!(inv.contains("a.rs", "unsafe impl Send for X {}"));
+        assert!(!inv.contains("a.rs", "something else"));
+        let seen = vec![("a.rs".to_string(), "unsafe impl Send for X {}".to_string())];
+        let stale = inv.stale(&seen);
+        assert_eq!(stale.len(), 1);
+        assert_eq!(stale[0].path, "b.rs");
+        assert_eq!(stale[0].line, 4);
+    }
+
+    #[test]
+    fn missing_tab_is_a_parse_error() {
+        let err = Inventory::parse("a.rs no tab here\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+    }
+}

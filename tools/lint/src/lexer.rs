@@ -1,0 +1,401 @@
+//! Minimal hand-rolled Rust lexer — just enough structure for the
+//! rule engine.
+//!
+//! Produces a token stream (identifiers, punctuation, string / char /
+//! numeric literals) tagged with 1-based line numbers, plus two
+//! per-line views the comment-proximity rules need: the code-only text
+//! of each line (comments stripped) and the concatenated comment text
+//! of each line. Handles line comments, nested block comments, cooked
+//! and raw and byte strings, and char literals vs. lifetimes. It does
+//! NOT build an AST: every repo invariant the linter enforces is
+//! expressible over tokens plus line structure, which is what keeps
+//! the tool dependency-free.
+
+/// One lexical token.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Single punctuation character.
+    Punct(char),
+    /// String literal (cooked, raw, or byte), with its body. String
+    /// bodies never become `Ident`/`Punct` tokens, so text inside a
+    /// string can never trip a token-based rule.
+    Str(String),
+    /// Character or byte-character literal.
+    Char,
+    /// Numeric literal.
+    Num,
+}
+
+/// A token plus the 1-based line it starts on.
+#[derive(Clone, Debug)]
+pub struct Token {
+    /// The token itself.
+    pub tok: Tok,
+    /// 1-based source line the token starts on.
+    pub line: usize,
+}
+
+/// Lexed view of one source file. Line vectors are indexed by the
+/// 1-based line number (index 0 is unused padding).
+pub struct FileScan {
+    /// Token stream in source order.
+    pub tokens: Vec<Token>,
+    /// Per line: comment text on that line (`//…` and `/*…*/` pieces
+    /// concatenated), empty when the line has no comment.
+    pub comments: Vec<String>,
+    /// Per line: code text with comments stripped (string literals are
+    /// kept verbatim so fingerprints stay readable).
+    pub code: Vec<String>,
+}
+
+impl FileScan {
+    /// Number of source lines (largest valid line index).
+    pub fn n_lines(&self) -> usize {
+        self.code.len().saturating_sub(1)
+    }
+}
+
+/// Collapse whitespace runs to single spaces and trim — the canonical
+/// form used for unsafe-inventory fingerprints.
+pub fn fingerprint(code_line: &str) -> String {
+    let mut out = String::new();
+    let mut pending_space = false;
+    for c in code_line.trim().chars() {
+        if c.is_whitespace() {
+            pending_space = true;
+            continue;
+        }
+        if pending_space && !out.is_empty() {
+            out.push(' ');
+        }
+        pending_space = false;
+        out.push(c);
+    }
+    out
+}
+
+/// Lex `src` into a [`FileScan`]. The lexer never fails: unterminated
+/// constructs simply run to end-of-file, which is fine for a linter
+/// whose input is code the real compiler also accepts.
+pub fn lex(src: &str) -> FileScan {
+    let chars: Vec<char> = src.chars().collect();
+    let n_lines = src.split('\n').count();
+    let mut scan = FileScan {
+        tokens: Vec::new(),
+        comments: vec![String::new(); n_lines + 2],
+        code: vec![String::new(); n_lines + 2],
+    };
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let n = chars.len();
+    while i < n {
+        let c = chars[i];
+        let c1 = peek(&chars, i + 1);
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers /// and //! doc comments).
+        if c == '/' && c1 == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            scan.comments[line].push_str(&text);
+            continue;
+        }
+        // Block comment, possibly nested, possibly multi-line.
+        if c == '/' && c1 == '*' {
+            let mut depth = 1usize;
+            scan.comments[line].push_str("/*");
+            i += 2;
+            while i < n && depth > 0 {
+                let d = chars[i];
+                let d1 = peek(&chars, i + 1);
+                if d == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if d == '/' && d1 == '*' {
+                    depth += 1;
+                    scan.comments[line].push_str("/*");
+                    i += 2;
+                } else if d == '*' && d1 == '/' {
+                    depth -= 1;
+                    scan.comments[line].push_str("*/");
+                    i += 2;
+                } else {
+                    scan.comments[line].push(d);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw strings r"…" / r#"…"#, and byte variants b"…" / br"…".
+        if let Some((body, consumed, lines_crossed)) = try_raw_or_byte_string(&chars, i) {
+            let text: String = chars[i..i + consumed].iter().collect();
+            scan.code[line].push_str(&text);
+            scan.tokens.push(Token { tok: Tok::Str(body), line });
+            i += consumed;
+            line += lines_crossed;
+            continue;
+        }
+        // Cooked string literal.
+        if c == '"' {
+            let (body, consumed, lines_crossed) = cooked_string(&chars, i);
+            let text: String = chars[i..i + consumed].iter().collect();
+            scan.code[line].push_str(&text);
+            scan.tokens.push(Token { tok: Tok::Str(body), line });
+            i += consumed;
+            line += lines_crossed;
+            continue;
+        }
+        // Char literal vs. lifetime.
+        if c == '\'' {
+            if let Some(consumed) = try_char_literal(&chars, i) {
+                let text: String = chars[i..i + consumed].iter().collect();
+                scan.code[line].push_str(&text);
+                scan.tokens.push(Token { tok: Tok::Char, line });
+                i += consumed;
+                continue;
+            }
+            // A lifetime: record the quote as code and let the name
+            // lex as an ordinary identifier.
+            scan.code[line].push('\'');
+            i += 1;
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            let word: String = chars[start..i].iter().collect();
+            scan.code[line].push_str(&word);
+            scan.tokens.push(Token { tok: Tok::Ident(word), line });
+            continue;
+        }
+        // Numeric literal (digits, suffixes, and `3.5`-style dots; a
+        // `..` range after a number is left as punctuation).
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n {
+                let d = chars[i];
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                } else if d == '.' && peek(&chars, i + 1).is_ascii_digit() {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            let text: String = chars[start..i].iter().collect();
+            scan.code[line].push_str(&text);
+            scan.tokens.push(Token { tok: Tok::Num, line });
+            continue;
+        }
+        // Everything else is single-character punctuation.
+        scan.code[line].push(c);
+        if !c.is_whitespace() {
+            scan.tokens.push(Token { tok: Tok::Punct(c), line });
+        }
+        i += 1;
+    }
+    scan
+}
+
+fn peek(chars: &[char], i: usize) -> char {
+    chars.get(i).copied().unwrap_or('\0')
+}
+
+/// Recognize `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, `b'…'` starting at
+/// `i`. Returns `(body, chars consumed, newlines crossed)`.
+fn try_raw_or_byte_string(chars: &[char], i: usize) -> Option<(String, usize, usize)> {
+    let c = peek(chars, i);
+    if c == 'b' && peek(chars, i + 1) == '\'' {
+        // Byte char literal b'x' — reuse the char-literal scanner.
+        let consumed = try_char_literal(chars, i + 1)?;
+        let body: String = chars[i + 1..i + 1 + consumed].iter().collect();
+        return Some((body, consumed + 1, 0));
+    }
+    let (prefix_len, rest) = match c {
+        'r' => (1, i + 1),
+        'b' if peek(chars, i + 1) == 'r' => (2, i + 2),
+        'b' if peek(chars, i + 1) == '"' => (1, i + 1),
+        _ => return None,
+    };
+    if c == 'b' && prefix_len == 1 {
+        // b"…" is a cooked byte string.
+        let (body, consumed, lines) = cooked_string(chars, rest);
+        return Some((body, consumed + 1, lines));
+    }
+    // r / br: count hashes, then require an opening quote (otherwise
+    // this is a raw identifier like r#type — not a string).
+    let mut j = rest;
+    let mut hashes = 0usize;
+    while peek(chars, j) == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if peek(chars, j) != '"' {
+        return None;
+    }
+    j += 1;
+    let body_start = j;
+    let mut lines = 0usize;
+    loop {
+        let d = peek(chars, j);
+        if d == '\0' && j >= chars.len() {
+            break; // unterminated: run to EOF
+        }
+        if d == '\n' {
+            lines += 1;
+        }
+        if d == '"' {
+            let mut k = 0usize;
+            while k < hashes && peek(chars, j + 1 + k) == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                let body: String = chars[body_start..j].iter().collect();
+                let consumed = (j + 1 + hashes) - i;
+                return Some((body, consumed, lines));
+            }
+        }
+        j += 1;
+    }
+    let body: String = chars[body_start..chars.len()].iter().collect();
+    Some((body, chars.len() - i, lines))
+}
+
+/// Scan a cooked string starting at the opening quote `i`. Returns
+/// `(body, chars consumed, newlines crossed)`.
+fn cooked_string(chars: &[char], i: usize) -> (String, usize, usize) {
+    let mut j = i + 1;
+    let mut lines = 0usize;
+    let mut body = String::new();
+    while j < chars.len() {
+        let d = chars[j];
+        if d == '\\' {
+            if let Some(&e) = chars.get(j + 1) {
+                body.push(e);
+            }
+            j += 2;
+            continue;
+        }
+        if d == '"' {
+            return (body, j + 1 - i, lines);
+        }
+        if d == '\n' {
+            lines += 1;
+        }
+        body.push(d);
+        j += 1;
+    }
+    (body, chars.len() - i, lines)
+}
+
+/// Is the `'` at `i` a char literal (vs. a lifetime)? Returns chars
+/// consumed when it is.
+fn try_char_literal(chars: &[char], i: usize) -> Option<usize> {
+    let c1 = peek(chars, i + 1);
+    if c1 == '\\' {
+        // Escaped char: scan to the closing quote.
+        let mut j = i + 2;
+        while j < chars.len() {
+            if chars[j] == '\\' {
+                j += 2;
+                continue;
+            }
+            if chars[j] == '\'' {
+                return Some(j + 1 - i);
+            }
+            j += 1;
+        }
+        return Some(chars.len() - i);
+    }
+    if c1 != '\0' && c1 != '\'' && peek(chars, i + 2) == '\'' {
+        return Some(3);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(scan: &FileScan) -> Vec<String> {
+        scan.tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_produce_idents() {
+        let src = "// println! in a comment\nlet s = \"println!\"; /* eprintln! */\n";
+        let scan = lex(src);
+        let ids = idents(&scan);
+        assert_eq!(ids, vec!["let", "s"]);
+        assert!(scan.comments[1].contains("println!"));
+        assert!(scan.comments[2].contains("eprintln!"));
+        assert!(scan.code[2].contains("\"println!\""));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let scan = lex("fn f<'a>(x: &'a str) -> char { 'x' }\n");
+        let ids = idents(&scan);
+        assert!(ids.contains(&"a".to_string()));
+        let chars = scan.tokens.iter().filter(|t| t.tok == Tok::Char).count();
+        assert_eq!(chars, 1, "only 'x' is a char literal");
+    }
+
+    #[test]
+    fn raw_strings_swallow_their_body() {
+        let scan = lex("let r = r#\"unsafe { Ordering::Relaxed }\"#;\n");
+        let ids = idents(&scan);
+        assert_eq!(ids, vec!["let", "r"]);
+    }
+
+    #[test]
+    fn nested_block_comments_terminate() {
+        let scan = lex("/* outer /* inner */ still comment */ fn f() {}\n");
+        assert_eq!(idents(&scan), vec!["fn", "f"]);
+    }
+
+    #[test]
+    fn number_ranges_do_not_eat_identifiers() {
+        let scan = lex("for i in 0..total {}\n");
+        assert!(idents(&scan).contains(&"total".to_string()));
+    }
+
+    #[test]
+    fn fingerprint_collapses_whitespace() {
+        assert_eq!(
+            fingerprint("    let f =   unsafe { &*self.f.0 };"),
+            "let f = unsafe { &*self.f.0 };"
+        );
+    }
+
+    #[test]
+    fn multiline_strings_track_lines() {
+        let src = "let s = \"a\nb\";\nlet t = 1;\n";
+        let scan = lex(src);
+        // `let t` must be reported on line 3.
+        let t_line = scan
+            .tokens
+            .iter()
+            .find(|t| t.tok == Tok::Ident("t".into()))
+            .unwrap()
+            .line;
+        assert_eq!(t_line, 3);
+    }
+}

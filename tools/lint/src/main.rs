@@ -1,0 +1,200 @@
+//! `dkpca-lint` — repo-invariant linter for the dkpca workspace.
+//!
+//! A dependency-free lexer + rule engine that walks `rust/src` and
+//! enforces the safety contracts CI used to spot-check with shell
+//! greps (rule catalog in [`rules`]; workflow in DESIGN.md §Static
+//! analysis & safety contracts):
+//!
+//! ```text
+//! cargo run -p dkpca-lint              # lint the repo (exit 1 on violations)
+//! cargo run -p dkpca-lint -- --self-test   # run the rules over seeded fixtures
+//! cargo run -p dkpca-lint -- --root /path/to/repo
+//! ```
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage or I/O error.
+
+mod inventory;
+mod lexer;
+mod rules;
+mod selftest;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use inventory::Inventory;
+use rules::{check_file, parse_declared_names, Context, Diagnostic, RULE_INVENTORY_STALE};
+
+/// Files allowed to use print macros: the CLI surface owns stdout and
+/// the logger owns stderr; everything else goes through `log_*!`.
+const PRINT_ALLOWED: [&str; 2] = ["rust/src/main.rs", "rust/src/obs/log.rs"];
+
+/// Where the metric-name schema (`pub mod names`) lives.
+const NAMES_SCHEMA: &str = "rust/src/obs/mod.rs";
+
+/// The checked-in unsafe inventory, relative to the repo root.
+const INVENTORY_PATH: &str = "tools/lint/unsafe_inventory.txt";
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut self_test = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--self-test" => self_test = true,
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("dkpca-lint: --root requires a path argument");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                print_help();
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("dkpca-lint: unknown argument `{other}` (see --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if self_test {
+        return match selftest::run() {
+            Ok(n) => {
+                eprintln!("dkpca-lint self-test: OK ({n} seeded diagnostics matched exactly)");
+                ExitCode::SUCCESS
+            }
+            Err(report) => {
+                eprintln!("dkpca-lint self-test FAILED\n{report}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    let root = root.unwrap_or_else(default_root);
+    match lint_repo(&root) {
+        Ok((diags, n_files)) => {
+            for d in &diags {
+                println!("{}", d.render());
+            }
+            if diags.is_empty() {
+                eprintln!("dkpca-lint: clean ({n_files} files scanned)");
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("dkpca-lint: {} violation(s) in {n_files} files scanned", diags.len());
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("dkpca-lint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn print_help() {
+    eprintln!(
+        "dkpca-lint — repo-invariant linter (unsafe inventory, ordering policy,\n\
+         print sites, metric-name schema)\n\n\
+         USAGE: dkpca-lint [--root PATH] [--self-test]\n\n\
+         OPTIONS:\n\
+         \x20 --root PATH   repo root to lint (default: the workspace this binary\n\
+         \x20               was built from)\n\
+         \x20 --self-test   run the rules over the seeded fixture files and verify\n\
+         \x20               the diagnostic set matches the //~ERROR markers exactly\n\
+         \x20 -h, --help    this text\n\n\
+         EXIT: 0 clean · 1 violations · 2 usage/I/O error"
+    );
+}
+
+/// The repo root this binary was built from: two levels above
+/// `tools/lint`.
+fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("tools/lint has a repo root two levels up")
+        .to_path_buf()
+}
+
+/// Lint every `.rs` file under `<root>/rust/src`. Returns the sorted
+/// diagnostics and the number of files scanned.
+fn lint_repo(root: &Path) -> Result<(Vec<Diagnostic>, usize), String> {
+    let src_dir = root.join("rust").join("src");
+    if !src_dir.is_dir() {
+        return Err(format!("{} is not a directory (wrong --root?)", src_dir.display()));
+    }
+
+    let schema_path = root.join(NAMES_SCHEMA);
+    let schema_src = std::fs::read_to_string(&schema_path)
+        .map_err(|e| format!("reading {}: {e}", schema_path.display()))?;
+    let declared_names = parse_declared_names(&lexer::lex(&schema_src));
+    if declared_names.is_empty() {
+        return Err(format!("no metric-name constants found in {NAMES_SCHEMA}"));
+    }
+
+    let inv_path = root.join(INVENTORY_PATH);
+    let inv_text = std::fs::read_to_string(&inv_path)
+        .map_err(|e| format!("reading {}: {e}", inv_path.display()))?;
+    let inventory = Inventory::parse(&inv_text)?;
+
+    let ctx = Context {
+        declared_names: &declared_names,
+        inventory: &inventory,
+        print_allowed: &PRINT_ALLOWED,
+    };
+
+    let mut files = Vec::new();
+    collect_rs_files(&src_dir, &mut files).map_err(|e| format!("walking rust/src: {e}"))?;
+    files.sort();
+
+    let mut diags = Vec::new();
+    let mut seen_unsafe: Vec<(String, String)> = Vec::new();
+    for file in &files {
+        let rel = rel_path(root, file);
+        let src = std::fs::read_to_string(file)
+            .map_err(|e| format!("reading {}: {e}", file.display()))?;
+        let scan = lexer::lex(&src);
+        diags.extend(check_file(&rel, &scan, &ctx, &mut seen_unsafe));
+    }
+    for entry in inventory.stale(&seen_unsafe) {
+        diags.push(Diagnostic {
+            file: INVENTORY_PATH.to_string(),
+            line: entry.line,
+            rule: RULE_INVENTORY_STALE,
+            msg: format!(
+                "stale inventory entry for {} (`{}`): the unsafe site it vouches for \
+                 no longer exists — remove the entry",
+                entry.path, entry.fingerprint
+            ),
+        });
+    }
+    diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok((diags, files.len()))
+}
+
+/// Depth-first, name-sorted walk collecting `.rs` files.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative path with forward slashes (diagnostics and inventory
+/// keys are platform-independent).
+fn rel_path(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}

@@ -1,0 +1,503 @@
+//! The rule engine: repo invariants as typed diagnostics.
+//!
+//! Rules (one stable id each, used by CI output and the self-test
+//! fixtures):
+//!
+//! - `unsafe-comment` — every `unsafe` token must be justified by a
+//!   `// SAFETY:` comment on the same line or in the contiguous
+//!   comment block immediately above it.
+//! - `unsafe-inventory` — every `unsafe` site's (file, fingerprint)
+//!   pair must be registered in `tools/lint/unsafe_inventory.txt`;
+//!   new unsafe fails CI until a human registers it.
+//! - `inventory-stale` — inventory entries whose site no longer
+//!   exists must be removed (reported by the driver, not per-file).
+//! - `ordering-justify` — any atomic `Ordering::` other than `SeqCst`
+//!   (`Relaxed`/`Acquire`/`Release`/`AcqRel`) must carry a
+//!   `// ORDERING:` justification comment. One comment may head a
+//!   contiguous run of non-SeqCst lines. `cmp::Ordering` variants are
+//!   never flagged.
+//! - `print-site` — no `print!`/`println!`/`eprint!`/`eprintln!`/
+//!   `dbg!` outside the allow-listed files (`main.rs` owns CLI stdout,
+//!   `obs/log.rs` is the one stderr sink).
+//! - `metric-name` — string arguments to the obs registry's
+//!   `.counter(` / `.gauge(` / `.histogram(` calls must be constants
+//!   declared in `obs::names`, not inline literals.
+//!
+//! `#[cfg(test)]` regions are exempt from `print-site` and
+//! `metric-name` (tests legitimately print and probe the registry
+//! with throwaway names) but NOT from the unsafe/ordering rules:
+//! test-only unsafe is still unsafe.
+
+use std::collections::BTreeSet;
+
+use crate::inventory::Inventory;
+use crate::lexer::{fingerprint, FileScan, Tok, Token};
+
+/// Rule id: unsafe without an adjacent `// SAFETY:` comment.
+pub const RULE_UNSAFE_COMMENT: &str = "unsafe-comment";
+/// Rule id: unsafe site missing from the checked-in inventory.
+pub const RULE_UNSAFE_INVENTORY: &str = "unsafe-inventory";
+/// Rule id: inventory entry whose unsafe site no longer exists.
+pub const RULE_INVENTORY_STALE: &str = "inventory-stale";
+/// Rule id: non-SeqCst atomic ordering without `// ORDERING:`.
+pub const RULE_ORDERING: &str = "ordering-justify";
+/// Rule id: print macro outside the allow-listed sinks.
+pub const RULE_PRINT: &str = "print-site";
+/// Rule id: metric name not declared in `obs::names`.
+pub const RULE_METRIC: &str = "metric-name";
+
+/// One finding, addressed to a file:line.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Repo-relative path (forward slashes).
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Stable rule id (one of the `RULE_*` constants).
+    pub rule: &'static str,
+    /// Human-oriented explanation, including how to fix.
+    pub msg: String,
+}
+
+impl Diagnostic {
+    /// `file:line: [rule] message` — the one output format.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Shared rule inputs for one run.
+pub struct Context<'a> {
+    /// Constants declared in `obs::names` (the metric-name schema).
+    pub declared_names: &'a BTreeSet<String>,
+    /// Parsed unsafe inventory.
+    pub inventory: &'a Inventory,
+    /// Repo-relative paths allowed to use print macros.
+    pub print_allowed: &'a [&'a str],
+}
+
+/// Atomic orderings that require a justification comment.
+const NON_SEQCST: [&str; 4] = ["Relaxed", "Acquire", "Release", "AcqRel"];
+
+/// Print-family macros gated by `print-site`.
+const PRINT_MACROS: [&str; 5] = ["print", "println", "eprint", "eprintln", "dbg"];
+
+/// Registry record methods whose name argument is schema-checked.
+const METRIC_METHODS: [&str; 3] = ["counter", "gauge", "histogram"];
+
+/// The identifier at token index `i`, if any.
+fn ident_at(toks: &[Token], i: usize) -> Option<&str> {
+    match toks.get(i) {
+        Some(Token { tok: Tok::Ident(s), .. }) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+/// Is the token at index `i` the punctuation char `c`?
+fn punct_at(toks: &[Token], i: usize, c: char) -> bool {
+    matches!(toks.get(i), Some(Token { tok: Tok::Punct(p), .. }) if *p == c)
+}
+
+/// Run every rule over one lexed file. Unsafe sites found (whether or
+/// not they are registered) are appended to `seen_unsafe` so the
+/// driver can detect stale inventory entries afterwards.
+pub fn check_file(
+    rel_path: &str,
+    scan: &FileScan,
+    ctx: &Context<'_>,
+    seen_unsafe: &mut Vec<(String, String)>,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let in_test = test_region_mask(&scan.tokens);
+    check_unsafe(rel_path, scan, ctx, seen_unsafe, &mut diags);
+    check_ordering(rel_path, scan, &mut diags);
+    check_print(rel_path, scan, ctx, &in_test, &mut diags);
+    check_metric(rel_path, scan, ctx, &in_test, &mut diags);
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+/// Mark tokens inside `#[cfg(test)]`-attributed brace blocks.
+fn test_region_mask(tokens: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; tokens.len()];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if !is_cfg_test_attr(tokens, i) {
+            i += 1;
+            continue;
+        }
+        // Find the attributed item's opening brace, then mark through
+        // its matching close.
+        let mut j = i + 7;
+        while j < tokens.len() && !punct_at(tokens, j, '{') {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        while j < tokens.len() {
+            if punct_at(tokens, j, '{') {
+                depth += 1;
+            } else if punct_at(tokens, j, '}') {
+                depth -= 1;
+                if depth == 0 {
+                    mask[j] = true;
+                    j += 1;
+                    break;
+                }
+            }
+            mask[j] = true;
+            j += 1;
+        }
+        i = j;
+    }
+    mask
+}
+
+/// Do the 7 tokens at `i` spell `#[cfg(test)]`?
+fn is_cfg_test_attr(toks: &[Token], i: usize) -> bool {
+    punct_at(toks, i, '#')
+        && punct_at(toks, i + 1, '[')
+        && ident_at(toks, i + 2) == Some("cfg")
+        && punct_at(toks, i + 3, '(')
+        && ident_at(toks, i + 4) == Some("test")
+        && punct_at(toks, i + 5, ')')
+        && punct_at(toks, i + 6, ']')
+}
+
+/// Is `marker` present in a comment on `line`, or in the contiguous
+/// comment block immediately above it? The upward walk skips blank
+/// lines, comment-only lines, attribute-only lines, and lines in
+/// `run_lines` (so one comment can head a contiguous run of flagged
+/// sites), and stops at the first other code line.
+fn justified(scan: &FileScan, line: usize, marker: &str, run_lines: &BTreeSet<usize>) -> bool {
+    if scan.comments[line].contains(marker) {
+        return true;
+    }
+    let mut j = line;
+    while j > 1 {
+        j -= 1;
+        if scan.comments[j].contains(marker) {
+            return true;
+        }
+        let code = scan.code[j].trim();
+        let is_blank_or_comment = code.is_empty();
+        let is_attr = code.starts_with("#[") || code == "#";
+        if is_blank_or_comment || is_attr || run_lines.contains(&j) {
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+fn check_unsafe(
+    rel_path: &str,
+    scan: &FileScan,
+    ctx: &Context<'_>,
+    seen_unsafe: &mut Vec<(String, String)>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let mut site_lines = BTreeSet::new();
+    for t in &scan.tokens {
+        if matches!(&t.tok, Tok::Ident(s) if s == "unsafe") {
+            site_lines.insert(t.line);
+        }
+    }
+    for &line in &site_lines {
+        if !justified(scan, line, "SAFETY:", &site_lines) {
+            diags.push(Diagnostic {
+                file: rel_path.to_string(),
+                line,
+                rule: RULE_UNSAFE_COMMENT,
+                msg: "`unsafe` without an adjacent `// SAFETY:` comment; state the \
+                      invariant that makes this sound"
+                    .to_string(),
+            });
+        }
+        let fp = fingerprint(&scan.code[line]);
+        seen_unsafe.push((rel_path.to_string(), fp.clone()));
+        if !ctx.inventory.contains(rel_path, &fp) {
+            diags.push(Diagnostic {
+                file: rel_path.to_string(),
+                line,
+                rule: RULE_UNSAFE_INVENTORY,
+                msg: format!(
+                    "unregistered unsafe site; a human must review it and add this \
+                     line to tools/lint/unsafe_inventory.txt: `{rel_path}\t{fp}`"
+                ),
+            });
+        }
+    }
+}
+
+fn check_ordering(rel_path: &str, scan: &FileScan, diags: &mut Vec<Diagnostic>) {
+    // Pass 1: find flagged lines so a run can share one justification.
+    let toks = &scan.tokens;
+    let mut flagged: Vec<(usize, String)> = Vec::new();
+    for i in 0..toks.len() {
+        if ident_at(toks, i) != Some("Ordering")
+            || !punct_at(toks, i + 1, ':')
+            || !punct_at(toks, i + 2, ':')
+        {
+            continue;
+        }
+        if let Some(ord) = ident_at(toks, i + 3) {
+            if NON_SEQCST.contains(&ord) {
+                flagged.push((toks[i].line, ord.to_string()));
+            }
+        }
+    }
+    let run_lines: BTreeSet<usize> = flagged.iter().map(|(l, _)| *l).collect();
+    let mut reported = BTreeSet::new();
+    for (line, ord) in flagged {
+        if !reported.insert(line) {
+            continue;
+        }
+        if !justified(scan, line, "ORDERING:", &run_lines) {
+            diags.push(Diagnostic {
+                file: rel_path.to_string(),
+                line,
+                rule: RULE_ORDERING,
+                msg: format!(
+                    "`Ordering::{ord}` without an adjacent `// ORDERING:` justification \
+                     comment (policy: SeqCst unless argued otherwise)"
+                ),
+            });
+        }
+    }
+}
+
+fn check_print(
+    rel_path: &str,
+    scan: &FileScan,
+    ctx: &Context<'_>,
+    in_test: &[bool],
+    diags: &mut Vec<Diagnostic>,
+) {
+    if ctx.print_allowed.contains(&rel_path) {
+        return;
+    }
+    let toks = &scan.tokens;
+    for i in 0..toks.len() {
+        if in_test[i] {
+            continue;
+        }
+        let Some(name) = ident_at(toks, i) else {
+            continue;
+        };
+        if PRINT_MACROS.contains(&name) && punct_at(toks, i + 1, '!') {
+            diags.push(Diagnostic {
+                file: rel_path.to_string(),
+                line: toks[i].line,
+                rule: RULE_PRINT,
+                msg: format!(
+                    "`{name}!` in library code; log through the `log_*!` macros \
+                     (obs::log) instead"
+                ),
+            });
+        }
+    }
+}
+
+fn check_metric(
+    rel_path: &str,
+    scan: &FileScan,
+    ctx: &Context<'_>,
+    in_test: &[bool],
+    diags: &mut Vec<Diagnostic>,
+) {
+    let toks = &scan.tokens;
+    for i in 0..toks.len() {
+        if in_test[i] {
+            continue;
+        }
+        // Shape: `.` counter|gauge|histogram `(` …args… `)`
+        if !punct_at(toks, i, '.') {
+            continue;
+        }
+        let method_ok = matches!(ident_at(toks, i + 1), Some(m) if METRIC_METHODS.contains(&m));
+        if !method_ok || !punct_at(toks, i + 2, '(') {
+            continue;
+        }
+        let line = toks[i + 1].line;
+        // Collect the argument token range (balanced parens).
+        let arg_start = i + 3;
+        let mut depth = 1usize;
+        let mut j = arg_start;
+        while j < toks.len() && depth > 0 {
+            if punct_at(toks, j, '(') {
+                depth += 1;
+            } else if punct_at(toks, j, ')') {
+                depth -= 1;
+            }
+            j += 1;
+        }
+        let arg_end = j.saturating_sub(1).max(arg_start);
+        let args = &toks[arg_start..arg_end];
+        if args.is_empty() {
+            continue; // not a record call (e.g. a getter)
+        }
+        if let Some(Token { tok: Tok::Str(body), .. }) = args.first() {
+            diags.push(Diagnostic {
+                file: rel_path.to_string(),
+                line,
+                rule: RULE_METRIC,
+                msg: format!(
+                    "inline metric name literal \"{body}\"; declare a constant in \
+                     obs::names and pass that instead"
+                ),
+            });
+            continue;
+        }
+        // Otherwise require a `names::CONST` path with CONST declared.
+        let mut found_path = false;
+        for k in 0..args.len() {
+            if ident_at(args, k) != Some("names")
+                || !punct_at(args, k + 1, ':')
+                || !punct_at(args, k + 2, ':')
+            {
+                continue;
+            }
+            if let Some(cname) = ident_at(args, k + 3) {
+                found_path = true;
+                if !ctx.declared_names.contains(cname) {
+                    diags.push(Diagnostic {
+                        file: rel_path.to_string(),
+                        line,
+                        rule: RULE_METRIC,
+                        msg: format!(
+                            "`names::{cname}` is not declared in obs::names; add the \
+                             constant there (the schema) before recording into it"
+                        ),
+                    });
+                }
+            }
+        }
+        if !found_path {
+            diags.push(Diagnostic {
+                file: rel_path.to_string(),
+                line,
+                rule: RULE_METRIC,
+                msg: "metric name argument must be an `obs::names::…` constant \
+                      (stringly-typed or computed names drift from the schema)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Parse the constants declared in a `pub mod names { … }` block:
+/// every `const IDENT` inside the brace block of `mod names`.
+pub fn parse_declared_names(scan: &FileScan) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let toks = &scan.tokens;
+    let mut i = 0usize;
+    while i < toks.len() {
+        if ident_at(toks, i) != Some("mod") || ident_at(toks, i + 1) != Some("names") {
+            i += 1;
+            continue;
+        }
+        // Walk the brace block collecting `const IDENT`.
+        let mut j = i + 2;
+        while j < toks.len() && !punct_at(toks, j, '{') {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        while j < toks.len() {
+            if punct_at(toks, j, '{') {
+                depth += 1;
+            } else if punct_at(toks, j, '}') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if ident_at(toks, j) == Some("const") {
+                if let Some(name) = ident_at(toks, j + 1) {
+                    out.insert(name.to_string());
+                }
+            }
+            j += 1;
+        }
+        i = j.max(i + 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn run(src: &str) -> Vec<Diagnostic> {
+        let names: BTreeSet<String> = ["GOOD".to_string()].into_iter().collect();
+        let inv = Inventory::empty();
+        let scan = lex(src);
+        let ctx = Context { declared_names: &names, inventory: &inv, print_allowed: &[] };
+        let mut seen = Vec::new();
+        check_file("x.rs", &scan, &ctx, &mut seen)
+    }
+
+    #[test]
+    fn unsafe_without_comment_fires_both_unsafe_rules() {
+        let d = run("unsafe impl Send for X {}\n");
+        let rules: Vec<&str> = d.iter().map(|d| d.rule).collect();
+        assert!(rules.contains(&RULE_UNSAFE_COMMENT));
+        assert!(rules.contains(&RULE_UNSAFE_INVENTORY));
+    }
+
+    #[test]
+    fn safety_comment_suppresses_the_comment_rule() {
+        let d = run("// SAFETY: sound by fiat in this test.\nunsafe impl Send for X {}\n");
+        let rules: Vec<&str> = d.iter().map(|d| d.rule).collect();
+        assert!(!rules.contains(&RULE_UNSAFE_COMMENT));
+        assert!(rules.contains(&RULE_UNSAFE_INVENTORY), "still unregistered");
+    }
+
+    #[test]
+    fn ordering_rule_flags_bare_relaxed_only() {
+        let src = "a.store(1, Ordering::SeqCst);\n\
+                   a.store(2, Ordering::Relaxed);\n\
+                   // ORDERING: relaxed — isolated counter.\n\
+                   a.store(3, Ordering::Relaxed);\n\
+                   a.store(4, Ordering::Relaxed);\n";
+        let d = run(src);
+        let lines: Vec<usize> =
+            d.iter().filter(|d| d.rule == RULE_ORDERING).map(|d| d.line).collect();
+        // Line 2 is bare; lines 4 and 5 share the run-heading comment.
+        assert_eq!(lines, vec![2]);
+    }
+
+    #[test]
+    fn cmp_ordering_is_not_flagged() {
+        let d = run("let x = std::cmp::Ordering::Less;\n");
+        assert!(d.iter().all(|d| d.rule != RULE_ORDERING));
+    }
+
+    #[test]
+    fn print_sites_fire_outside_tests_only() {
+        let src = "fn f() { println!(\"x\"); }\n\
+                   #[cfg(test)]\nmod tests { fn g() { println!(\"ok\"); } }\n";
+        let d = run(src);
+        let lines: Vec<usize> =
+            d.iter().filter(|d| d.rule == RULE_PRINT).map(|d| d.line).collect();
+        assert_eq!(lines, vec![1]);
+    }
+
+    #[test]
+    fn metric_literals_and_undeclared_names_fire() {
+        let src = "fn f(r: &R) { r.counter(\"raw\"); r.gauge(names::GOOD); \
+                   r.histogram(names::BAD); }\n";
+        let d = run(src);
+        let metric: Vec<&Diagnostic> = d.iter().filter(|d| d.rule == RULE_METRIC).collect();
+        assert_eq!(metric.len(), 2, "literal + undeclared fire; the declared one passes");
+    }
+
+    #[test]
+    fn declared_names_parse_from_a_names_module() {
+        let scan = lex(
+            "pub mod names {\n    pub const A: &str = \"a\";\n    pub const B: &str = \"b\";\n}\n",
+        );
+        let names = parse_declared_names(&scan);
+        assert!(names.contains("A") && names.contains("B"));
+        assert_eq!(names.len(), 2);
+    }
+}

@@ -1,0 +1,152 @@
+//! `--self-test`: run the rule engine over checked-in fixture files
+//! with seeded violations and require the diagnostic set to match the
+//! `//~ERROR rule-id…` markers exactly (compiletest style). This is
+//! how the linter itself is regression-tested: a rule that goes blind
+//! (or starts over-firing) changes the diagnostic set and fails CI.
+//!
+//! Fixtures live in `tools/lint/fixtures/` and are embedded with
+//! `include_str!` so the self-test works from any working directory:
+//!
+//! - `fixture_clean.rs` — satisfies every rule (registered unsafe with
+//!   SAFETY, justified Relaxed, declared metric name); expects zero
+//!   diagnostics.
+//! - `fixture_unsafe.rs` / `fixture_ordering.rs` / `fixture_print.rs`
+//!   / `fixture_metric.rs` — one seeded violation file per rule.
+//! - `names_decl.rs` — the fake `obs::names` schema the metric rule
+//!   resolves against.
+//! - `unsafe_inventory.txt` — registers the clean fixture's unsafe
+//!   site and seeds one ghost entry that must be reported stale.
+
+use std::collections::BTreeSet;
+
+use crate::inventory::Inventory;
+use crate::lexer::lex;
+use crate::rules::{
+    check_file, parse_declared_names, Context, RULE_INVENTORY_STALE, RULE_METRIC, RULE_ORDERING,
+    RULE_PRINT, RULE_UNSAFE_COMMENT, RULE_UNSAFE_INVENTORY,
+};
+
+/// Fixture inventory path, as it appears in stale diagnostics.
+const FIXTURE_INVENTORY: &str = "fixtures/unsafe_inventory.txt";
+
+/// The fixtures scanned by the rule engine, with their repo-ish paths.
+const FIXTURES: [(&str, &str); 5] = [
+    ("fixtures/fixture_clean.rs", include_str!("../fixtures/fixture_clean.rs")),
+    ("fixtures/fixture_unsafe.rs", include_str!("../fixtures/fixture_unsafe.rs")),
+    ("fixtures/fixture_ordering.rs", include_str!("../fixtures/fixture_ordering.rs")),
+    ("fixtures/fixture_print.rs", include_str!("../fixtures/fixture_print.rs")),
+    ("fixtures/fixture_metric.rs", include_str!("../fixtures/fixture_metric.rs")),
+];
+
+const NAMES_DECL: &str = include_str!("../fixtures/names_decl.rs");
+const INVENTORY_TEXT: &str = include_str!("../fixtures/unsafe_inventory.txt");
+
+/// Every rule id a fixture marker may name.
+const KNOWN_RULES: [&str; 6] = [
+    RULE_UNSAFE_COMMENT,
+    RULE_UNSAFE_INVENTORY,
+    RULE_INVENTORY_STALE,
+    RULE_ORDERING,
+    RULE_PRINT,
+    RULE_METRIC,
+];
+
+/// Resolve a marker rule name back to its `&'static str` constant so
+/// expectation tuples compare against diagnostics directly.
+fn intern_rule(name: &str) -> Option<&'static str> {
+    KNOWN_RULES.iter().copied().find(|r| *r == name)
+}
+
+/// Collect `(file, line, rule)` expectations from `//~ERROR a b` trailing
+/// markers in one fixture source.
+fn expected_markers(path: &str, src: &str, out: &mut BTreeSet<(String, usize, &'static str)>) {
+    let scan = lex(src);
+    for line in 1..=scan.n_lines() {
+        let comment = &scan.comments[line];
+        let Some(pos) = comment.find("~ERROR") else {
+            continue;
+        };
+        for word in comment[pos + "~ERROR".len()..].split_whitespace() {
+            match intern_rule(word) {
+                Some(rule) => {
+                    out.insert((path.to_string(), line, rule));
+                }
+                None => panic_unknown(path, line, word),
+            }
+        }
+    }
+}
+
+fn panic_unknown(path: &str, line: usize, word: &str) -> ! {
+    panic!("{path}:{line}: marker names unknown rule `{word}`");
+}
+
+/// Run the self-test. Returns `Ok(n_expected)` when the diagnostic set
+/// matches the markers exactly, otherwise `Err` with a report of every
+/// missing/unexpected diagnostic.
+pub fn run() -> Result<usize, String> {
+    let declared_names = parse_declared_names(&lex(NAMES_DECL));
+    assert!(
+        declared_names.contains("GOOD"),
+        "names_decl.rs fixture must declare GOOD (schema parsing is broken otherwise)"
+    );
+    let inventory = Inventory::parse(INVENTORY_TEXT)
+        .map_err(|e| format!("fixture inventory failed to parse: {e}"))?;
+    let ctx =
+        Context { declared_names: &declared_names, inventory: &inventory, print_allowed: &[] };
+
+    // Expectations: per-file markers + the seeded ghost inventory entry.
+    let mut expected: BTreeSet<(String, usize, &'static str)> = BTreeSet::new();
+    for (path, src) in FIXTURES {
+        expected_markers(path, src, &mut expected);
+    }
+    let ghost = inventory
+        .stale(&[])
+        .into_iter()
+        .find(|e| e.path.contains("ghost"))
+        .expect("fixture inventory must seed a ghost entry for the stale rule");
+    expected.insert((FIXTURE_INVENTORY.to_string(), ghost.line, RULE_INVENTORY_STALE));
+
+    // Guard the guard: every rule must be exercised by some fixture.
+    for rule in KNOWN_RULES {
+        if !expected.iter().any(|(_, _, r)| *r == rule) {
+            return Err(format!("self-test has no fixture expectation for rule `{rule}`"));
+        }
+    }
+
+    // Run the engine.
+    let mut got: BTreeSet<(String, usize, &'static str)> = BTreeSet::new();
+    let mut seen_unsafe: Vec<(String, String)> = Vec::new();
+    for (path, src) in FIXTURES {
+        let scan = lex(src);
+        for d in check_file(path, &scan, &ctx, &mut seen_unsafe) {
+            got.insert((d.file, d.line, d.rule));
+        }
+    }
+    for entry in inventory.stale(&seen_unsafe) {
+        got.insert((FIXTURE_INVENTORY.to_string(), entry.line, RULE_INVENTORY_STALE));
+    }
+
+    if expected == got {
+        return Ok(expected.len());
+    }
+    let mut report = String::from("self-test diagnostic set mismatch:\n");
+    for (file, line, rule) in expected.difference(&got) {
+        report.push_str(&format!("  missing:    {file}:{line}: [{rule}]\n"));
+    }
+    for (file, line, rule) in got.difference(&expected) {
+        report.push_str(&format!("  unexpected: {file}:{line}: [{rule}]\n"));
+    }
+    Err(report)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn self_test_passes_on_the_checked_in_fixtures() {
+        match super::run() {
+            Ok(n) => assert!(n >= 6, "expected at least one diagnostic per rule, got {n}"),
+            Err(report) => panic!("{report}"),
+        }
+    }
+}
