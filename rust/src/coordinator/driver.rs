@@ -12,6 +12,12 @@
 //! (`admm::DkpcaSolver` / `multik::MultiKpcaSolver`) — both execute
 //! literally the same node code over the same messages; asserted by
 //! rust/tests/coordinator.rs, multik.rs, and threads.rs.
+//!
+//! The same holds for the flight recorder (`obs::timeline`): the
+//! program records sends at emission and receives at consumption, both
+//! inside its own `poll`, so the timeline is a protocol-order artifact
+//! — this driver's thread scheduling cannot leak into it. Asserted by
+//! the golden-timeline test in rust/tests/timeline.rs.
 
 use std::sync::Arc;
 use std::time::Instant;

@@ -204,6 +204,7 @@ impl ComputePool {
         let metrics = pool_metrics();
         metrics.tasks.inc();
         metrics.bands.add(total as u64);
+        let task_clock = crate::obs::maybe_now();
         let task = Arc::new(Task {
             f: RawFn(f as *const (dyn Fn(usize) + Sync)),
             total,
@@ -237,6 +238,10 @@ impl ComputePool {
         let payload = task.panicked.lock().unwrap_or_else(|p| p.into_inner()).take();
         if let Some(payload) = payload {
             std::panic::resume_unwind(payload);
+        }
+        if let Some(c) = task_clock {
+            let dur = c.elapsed().as_nanos() as u64;
+            crate::obs::timeline::recorder().pool_task(total, dur);
         }
     }
 

@@ -7,12 +7,15 @@
 //!   central          central-kPCA baseline only
 //!   artifacts-check  verify the AOT artifact set loads, compiles and
 //!                    agrees with the native backend
+//!   analyze          validate and summarize a flight-recorder timeline
 //!   info             print environment/topology/config information
 //!
 //! Examples:
 //!   dkpca run --nodes 20 --samples 100 --parallel
 //!   dkpca sweep --experiment fig3 --full
 //!   dkpca run --config examples/configs/quickstart.json --pjrt
+//!   dkpca run --parallel --trace-timeline timeline.json
+//!   dkpca analyze timeline.json
 
 use std::sync::Arc;
 
@@ -32,6 +35,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("central") => cmd_central(&args[1..]),
         Some("artifacts-check") => cmd_artifacts_check(),
+        Some("analyze") => cmd_analyze(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
         Some("--help") | Some("-h") | None => {
             print_usage();
@@ -53,22 +57,24 @@ fn print_usage() {
     println!(
         "dkpca — Decentralized Kernel PCA with Projection Consensus Constraints\n\
          \n\
-         USAGE: dkpca <run|sweep|central|artifacts-check|info> [flags]\n\
+         USAGE: dkpca <run|sweep|central|artifacts-check|analyze|info> [flags]\n\
          \n\
          subcommands:\n\
          \u{20} run              one DKPCA run from a JSON config (or flags)\n\
          \u{20} sweep            regenerate a paper figure/table\n\
          \u{20} central          central-kPCA baseline only\n\
          \u{20} artifacts-check  verify the AOT artifact set against the native backend\n\
+         \u{20} analyze          validate and summarize a flight-recorder timeline\n\
          \u{20} info             print environment/topology/config information\n\
          \u{20} --help, -h       this listing\n\
          \n\
          run flags:    --config <file.json> --nodes <J> --samples <N>\n\
          \u{20}             --iters <T> --parallel --pjrt --seed <S> --threads <T>\n\
-         \u{20}             --telemetry <out.json>\n\
+         \u{20}             --telemetry <out.json> --trace-timeline <out.json>\n\
          sweep flags:  --experiment <{SWEEP_EXPERIMENTS}>\n\
          \u{20}             --full --pjrt --seed <S> --threads <T>\n\
          central flags: --nodes <J> --samples <N> --seed <S> --threads <T>\n\
+         analyze flags: <timeline.json> [--check]\n\
          info flags:   --config <file.json> --metrics\n\
          \n\
          --threads sizes the shared compute pool (default: DKPCA_THREADS\n\
@@ -77,6 +83,12 @@ fn print_usage() {
          --telemetry writes a JSON TelemetrySnapshot (per-phase spans,\n\
          convergence trace, pool/op metrics); telemetry is strictly\n\
          observational — outputs are bit-identical with it on or off.\n\
+         --trace-timeline writes the flight recorder's event timeline as\n\
+         Chrome trace-event JSON (load in chrome://tracing or Perfetto,\n\
+         or feed to `dkpca analyze`).\n\
+         `analyze` validates the file (balanced spans, bound flows) and\n\
+         prints per-track breakdowns, the straggler index, the critical\n\
+         path, and convergence stalls; --check validates only.\n\
          env: DKPCA_LOG=error|warn|info|debug (library log level),\n\
          DKPCA_TELEMETRY=on|off (metric recording, default on)."
     );
@@ -187,12 +199,18 @@ fn cmd_run(args: &[String]) -> i32 {
     );
 
     let telemetry_path = flag(args, "--telemetry").map(str::to_string);
-    if telemetry_path.is_some() {
-        // The flag is an explicit opt-in: it wins over DKPCA_TELEMETRY
-        // and pre-registers the pool keys so the snapshot carries them
-        // even if no op crossed the parallel threshold.
+    let timeline_path = flag(args, "--trace-timeline").map(str::to_string);
+    if telemetry_path.is_some() || timeline_path.is_some() {
+        // The flags are an explicit opt-in: they win over
+        // DKPCA_TELEMETRY and pre-register the pool keys so the
+        // snapshot carries them even if no op crossed the parallel
+        // threshold.
         dkpca::obs::set_enabled(true);
         dkpca::linalg::pool::register_metrics();
+    }
+    if timeline_path.is_some() {
+        // Start the exported window at the run, not at process birth.
+        dkpca::obs::timeline::recorder().clear();
     }
 
     let sw = Stopwatch::start();
@@ -212,6 +230,8 @@ fn cmd_run(args: &[String]) -> i32 {
             converged: vec![rep.converged],
             comm_floats: rep.comm_floats_total as usize,
             setup_floats: rep.setup_floats_total as usize,
+            trace_dropped_iters: 0,
+            timeline_dropped_events: 0,
         };
         (rep.alphas, rep.comm_floats_total, summary, rep.node_traces)
     } else {
@@ -224,11 +244,26 @@ fn cmd_run(args: &[String]) -> i32 {
             converged: vec![res.converged],
             comm_floats: res.comm_floats as usize,
             setup_floats: res.setup_floats as usize,
+            trace_dropped_iters: 0,
+            timeline_dropped_events: 0,
         };
         let traces = solver.node_traces();
         (res.alphas, res.comm_floats, summary, traces)
     };
     let dkpca_secs = sw.elapsed_secs();
+    run_summary.trace_dropped_iters = node_traces.iter().map(|t| t.dropped_iters).sum();
+    run_summary.timeline_dropped_events = dkpca::obs::timeline::recorder().dropped();
+    if let Some(path) = &timeline_path {
+        let snap = dkpca::obs::timeline::recorder().snapshot();
+        let doc = dkpca::obs::timeline::chrome_trace(&snap, &node_traces);
+        match dkpca::obs::timeline::write_chrome_trace(path, &doc) {
+            Ok(()) => eprintln!("[dkpca] timeline trace written to {path}"),
+            Err(e) => {
+                eprintln!("[dkpca] could not write timeline trace {path}: {e}");
+                return 1;
+            }
+        }
+    }
     if let Some(path) = &telemetry_path {
         run_summary.wall_secs = dkpca_secs;
         let snap = dkpca::obs::TelemetrySnapshot { run: Some(run_summary), nodes: node_traces };
@@ -414,6 +449,54 @@ fn cmd_artifacts_check() -> i32 {
     } else {
         println!("artifacts MISMATCH");
         1
+    }
+}
+
+fn cmd_analyze(args: &[String]) -> i32 {
+    let path = match args.iter().find(|a| !a.starts_with("--")) {
+        Some(p) => p.clone(),
+        None => {
+            eprintln!("USAGE: dkpca analyze <timeline.json> [--check]");
+            return 2;
+        }
+    };
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            return 2;
+        }
+    };
+    let doc = match dkpca::util::json::Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{path}: invalid JSON: {e}");
+            return 2;
+        }
+    };
+    let report = match dkpca::obs::timeline::check_chrome_trace(&doc) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{path}: invalid timeline: {e}");
+            return 1;
+        }
+    };
+    if has(args, "--check") {
+        println!(
+            "timeline OK: {} events, {} tracks, {} flows",
+            report.events, report.tracks, report.flows
+        );
+        return 0;
+    }
+    match dkpca::obs::timeline::analyze_chrome_trace(&doc) {
+        Ok(a) => {
+            print!("{}", dkpca::obs::timeline::render_analysis(&a));
+            0
+        }
+        Err(e) => {
+            eprintln!("{path}: analysis failed: {e}");
+            1
+        }
     }
 }
 

@@ -1,6 +1,6 @@
 //! S15 · Observability: the cross-cutting telemetry layer.
 //!
-//! Three strictly observational instruments, all dependency-free:
+//! Four strictly observational instruments, all dependency-free:
 //!
 //! - [`registry`]: process-wide counters/gauges/latency histograms
 //!   ([`Counter`], [`Gauge`], [`Histogram`]) that pool, kernels, GEMM,
@@ -9,7 +9,11 @@
 //!   per-iteration convergence trace, owned by `NodeProgram` and
 //!   surfaced on `RunReport`/`MultiRunReport`;
 //! - [`log`]: the leveled stderr logger behind the `log_*!` macros
-//!   (`DKPCA_LOG`).
+//!   (`DKPCA_LOG`);
+//! - [`timeline`]: the flight recorder — per-track bounded event rings
+//!   (phases, message flows, parks, pool tasks, serve lifecycles) with
+//!   Chrome-trace export (`dkpca run --trace-timeline`) and offline
+//!   straggler/critical-path analysis (`dkpca analyze`).
 //!
 //! Everything funnels into one [`TelemetrySnapshot`] written as JSON by
 //! `dkpca run --telemetry out.json` or rendered by `dkpca info
@@ -26,6 +30,7 @@
 pub mod log;
 pub mod registry;
 pub mod span;
+pub mod timeline;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU8, Ordering};
@@ -33,6 +38,7 @@ use std::time::Instant;
 
 pub use registry::{registry, Counter, Gauge, Histogram, HistogramSnapshot, Registry};
 pub use span::{IterTrace, NodeTrace, PhaseSpan, PHASE_NAMES};
+pub use timeline::{recorder, Recorder, TimelineSnapshot};
 
 use crate::util::json::Json;
 
@@ -101,6 +107,34 @@ pub mod names {
     pub const SERVE_PROJECT_RFF_SECS: &str = "serve.project_secs.rff";
     /// Serve: projection compute, feature-trained (RFF-native) path.
     pub const SERVE_PROJECT_TRAINED_RFF_SECS: &str = "serve.project_secs.trained_rff";
+    /// Timeline event: setup-phase duration (`B`/`E`).
+    pub const EV_PHASE_SETUP: &str = "phase.setup";
+    /// Timeline event: round-A duration (`B`/`E`).
+    pub const EV_PHASE_ROUND_A: &str = "phase.round_a";
+    /// Timeline event: round-B duration (`B`/`E`).
+    pub const EV_PHASE_ROUND_B: &str = "phase.round_b";
+    /// Timeline event: deflation duration (`B`/`E`).
+    pub const EV_PHASE_DEFLATE: &str = "phase.deflate";
+    /// Timeline event: transport park interval (`X`).
+    pub const EV_PARK: &str = "park";
+    /// Timeline event: envelope emission instant.
+    pub const EV_MSG_SEND: &str = "msg.send";
+    /// Timeline event: envelope consumption instant.
+    pub const EV_MSG_RECV: &str = "msg.recv";
+    /// Timeline event: send→recv flow pair (`s`/`f`).
+    pub const EV_MSG_FLOW: &str = "msg.flow";
+    /// Timeline event: pool fan-out dispatch (`X`).
+    pub const EV_POOL_TASK: &str = "pool.task";
+    /// Timeline event: serve request entered the queue.
+    pub const EV_SERVE_ENQUEUE: &str = "serve.enqueue";
+    /// Timeline event: serve worker picked the request up.
+    pub const EV_SERVE_DEQUEUE: &str = "serve.dequeue";
+    /// Timeline event: projection compute (`X`).
+    pub const EV_SERVE_PROJECT: &str = "serve.project";
+    /// Timeline event: reply handed back to the caller.
+    pub const EV_SERVE_REPLY: &str = "serve.reply";
+    /// Timeline event: enqueue→dequeue flow pair (`s`/`f`).
+    pub const EV_SERVE_FLOW: &str = "serve.flow";
 }
 
 /// Run-level facts the driver already knows (and the registry does
@@ -117,6 +151,11 @@ pub struct RunSummary {
     pub comm_floats: usize,
     /// Setup-phase floats sent across edges.
     pub setup_floats: usize,
+    /// Convergence-trace rows dropped to the `TRACE_MAX_ITERS` cap,
+    /// summed across nodes (0 = the trace is complete).
+    pub trace_dropped_iters: u64,
+    /// Flight-recorder events dropped to ring wrap-around.
+    pub timeline_dropped_events: u64,
 }
 
 impl RunSummary {
@@ -133,6 +172,14 @@ impl RunSummary {
         );
         o.insert("comm_floats".into(), Json::Num(self.comm_floats as f64));
         o.insert("setup_floats".into(), Json::Num(self.setup_floats as f64));
+        o.insert(
+            "trace_dropped_iters".into(),
+            Json::Num(self.trace_dropped_iters as f64),
+        );
+        o.insert(
+            "timeline_dropped_events".into(),
+            Json::Num(self.timeline_dropped_events as f64),
+        );
         Json::Obj(o)
     }
 }
@@ -179,6 +226,12 @@ impl TelemetrySnapshot {
                 "run: wall={:.3}s iterations={:?} converged={:?} comm_floats={} setup_floats={}\n",
                 run.wall_secs, run.iterations, run.converged, run.comm_floats, run.setup_floats
             ));
+            if run.trace_dropped_iters > 0 || run.timeline_dropped_events > 0 {
+                out.push_str(&format!(
+                    "run: truncated — trace_dropped_iters={} timeline_dropped_events={}\n",
+                    run.trace_dropped_iters, run.timeline_dropped_events
+                ));
+            }
         }
         for (id, node) in self.nodes.iter().enumerate() {
             out.push_str(&format!("node {id}:"));
@@ -207,14 +260,19 @@ pub fn summary_line() -> String {
     let tasks = reg.counter(names::POOL_TASKS).get();
     let gemm = reg.histogram(names::GEMM_SECS).snapshot();
     let gram = reg.histogram(names::GRAM_SECS).snapshot();
-    format!(
+    let mut line = format!(
         "telemetry: pool_tasks={} gemm[n={} p50={:.3}ms] gram[n={} p50={:.3}ms]",
         tasks,
         gemm.count(),
         gemm.percentile_secs(0.5) * 1e3,
         gram.count(),
         gram.percentile_secs(0.5) * 1e3,
-    )
+    );
+    let drops = timeline::recorder().dropped();
+    if drops > 0 {
+        line.push_str(&format!(" timeline_drops={drops}"));
+    }
+    line
 }
 
 #[cfg(test)]
@@ -230,6 +288,8 @@ mod tests {
                 converged: vec![true, false],
                 comm_floats: 1200,
                 setup_floats: 240,
+                trace_dropped_iters: 0,
+                timeline_dropped_events: 0,
             }),
             nodes: vec![NodeTrace::default()],
         };

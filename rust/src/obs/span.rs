@@ -102,9 +102,17 @@ pub struct NodeTrace {
 }
 
 impl NodeTrace {
-    /// Append a trace row, counting drops past [`TRACE_MAX_ITERS`].
+    /// Append a trace row, counting drops past [`TRACE_MAX_ITERS`]
+    /// (and warning once per node when truncation starts — silent
+    /// truncation would make a partial trace look complete).
     pub fn push_iter(&mut self, row: IterTrace) {
         if self.iters.len() >= TRACE_MAX_ITERS {
+            if self.dropped_iters == 0 {
+                crate::log_warn!(
+                    "convergence trace hit TRACE_MAX_ITERS={TRACE_MAX_ITERS}; further rows \
+                     are counted in dropped_iters, not stored"
+                );
+            }
             self.dropped_iters += 1;
         } else {
             self.iters.push(row);

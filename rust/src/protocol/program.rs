@@ -40,6 +40,29 @@ use super::message::{Envelope, Payload, Phase};
 /// An envelope addressed to a neighbor, produced by [`NodeProgram::poll`].
 pub type Outbound = (usize, Envelope);
 
+/// Wire phase → `PHASE_*` index (the same mapping the transport's
+/// traffic stats use); keys the flight recorder's message events.
+fn phase_wire_idx(p: Phase) -> usize {
+    match p {
+        Phase::Setup => PHASE_SETUP,
+        Phase::RoundA => PHASE_ROUND_A,
+        Phase::RoundB => PHASE_ROUND_B,
+        Phase::Deflate => PHASE_DEFLATE,
+    }
+}
+
+/// Push an outbound envelope, recording the emission on the flight
+/// recorder. Emission time (inside `poll`), not transmit time: a
+/// fabric node can consume pre-arrived messages in the same poll that
+/// emits these sends, so only the emission point orders identically on
+/// every transport.
+fn emit(out: &mut Vec<Outbound>, to: usize, env: Envelope) {
+    if obs::enabled() {
+        obs::timeline::recorder().send(env.from, to, env.iter, phase_wire_idx(env.phase));
+    }
+    out.push((to, env));
+}
+
 /// What the program is currently waiting for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Step {
@@ -242,6 +265,7 @@ impl NodeProgram {
             Step::Done => return,
         };
         self.trace.phases[idx].add_park(secs);
+        obs::timeline::recorder().park(self.id, idx, secs);
     }
 
     /// Stash an incoming envelope (consumed by the next `poll`).
@@ -274,6 +298,23 @@ impl NodeProgram {
         got
     }
 
+    /// Record the envelopes one `take` consumed on the flight recorder,
+    /// sorted by source id: fabric arrival order is scheduler-dependent
+    /// but the consumed set is not, so sorting keeps the recorded
+    /// stream identical across transports.
+    fn record_recvs(&self, msgs: &[Envelope]) {
+        if !obs::enabled() || msgs.is_empty() {
+            return;
+        }
+        let rec = obs::timeline::recorder();
+        let mut srcs: Vec<usize> = msgs.iter().map(|e| e.from).collect();
+        srcs.sort_unstable();
+        let (iter, phase) = (msgs[0].iter, phase_wire_idx(msgs[0].phase));
+        for src in srcs {
+            rec.recv(self.id, src, iter, phase);
+        }
+    }
+
     /// Advance as far as the inbox allows, pushing outbound envelopes.
     pub fn poll(&mut self, backend: &dyn ComputeBackend, out: &mut Vec<Outbound>) {
         loop {
@@ -287,19 +328,21 @@ impl NodeProgram {
                     match self.cfg.setup.shared_map(&self.kernel, x_own.cols()) {
                         None => {
                             for &to in &self.nbrs {
-                                out.push((
-                                    to,
-                                    Envelope {
-                                        from: self.id,
-                                        iter: 0,
-                                        phase: Phase::Setup,
-                                        payload: Payload::Data(x_own.clone()),
-                                    },
-                                ));
+                                let env = Envelope {
+                                    from: self.id,
+                                    iter: 0,
+                                    phase: Phase::Setup,
+                                    payload: Payload::Data(x_own.clone()),
+                                };
+                                emit(out, to, env);
                             }
                         }
                         Some(map) => {
                             let clock = obs::maybe_now();
+                            if clock.is_some() {
+                                obs::timeline::recorder()
+                                    .phase_begin(self.id, PHASE_SETUP, self.comp, self.t);
+                            }
                             let fz = thread_cpu_secs();
                             let z = map.features(x_own);
                             if let Some(c) = clock {
@@ -308,17 +351,17 @@ impl NodeProgram {
                                 // (whose definition predates this).
                                 self.trace.phases[PHASE_SETUP]
                                     .add_compute(c.elapsed().as_secs_f64(), thread_cpu_secs() - fz);
+                                obs::timeline::recorder()
+                                    .phase_end(self.id, PHASE_SETUP, self.comp, self.t);
                             }
                             for &to in &self.nbrs {
-                                out.push((
-                                    to,
-                                    Envelope {
-                                        from: self.id,
-                                        iter: 0,
-                                        phase: Phase::Setup,
-                                        payload: Payload::Features(z.clone()),
-                                    },
-                                ));
+                                let env = Envelope {
+                                    from: self.id,
+                                    iter: 0,
+                                    phase: Phase::Setup,
+                                    payload: Payload::Features(z.clone()),
+                                };
+                                emit(out, to, env);
                             }
                         }
                     }
@@ -329,6 +372,7 @@ impl NodeProgram {
                         return;
                     }
                     let msgs = self.take(0, Phase::Setup);
+                    self.record_recvs(&msgs);
                     // Reorder received setup payloads into `nbrs` order.
                     let received: Vec<Matrix> = self
                         .nbrs
@@ -347,6 +391,10 @@ impl NodeProgram {
                     // program's copy once the state owns its data.
                     let x_own = self.x_own.take().expect("data present before setup");
                     let clock = obs::maybe_now();
+                    if clock.is_some() {
+                        obs::timeline::recorder()
+                            .phase_begin(self.id, PHASE_SETUP, self.comp, self.t);
+                    }
                     let t0 = thread_cpu_secs();
                     self.node = Some(NodeState::new(
                         self.id,
@@ -361,6 +409,8 @@ impl NodeProgram {
                     self.compute_secs += cpu;
                     if let Some(c) = clock {
                         self.trace.phases[PHASE_SETUP].add_compute(c.elapsed().as_secs_f64(), cpu);
+                        obs::timeline::recorder()
+                            .phase_end(self.id, PHASE_SETUP, self.comp, self.t);
                     }
                     self.iter_clock = Some(Instant::now());
                     self.begin_iteration(out);
@@ -371,6 +421,7 @@ impl NodeProgram {
                         return;
                     }
                     let msgs = self.take(tag, Phase::RoundA);
+                    self.record_recvs(&msgs);
                     // Fold neighbor windows into ours (positionally —
                     // all nodes' windows cover the same iterations).
                     let mut inbox_a: Vec<(usize, RoundA)> = Vec::with_capacity(msgs.len());
@@ -403,6 +454,10 @@ impl NodeProgram {
                     let rho2 = self.cfg.rho2_at(self.t);
                     let node = self.node.as_mut().expect("setup done before round A");
                     let clock = obs::maybe_now();
+                    if clock.is_some() {
+                        obs::timeline::recorder()
+                            .phase_begin(self.id, PHASE_ROUND_A, self.comp, self.t);
+                    }
                     let tz = thread_cpu_secs();
                     let segments = node.z_solve(&inbox_a, rho2, backend);
                     let cpu = thread_cpu_secs() - tz;
@@ -410,20 +465,20 @@ impl NodeProgram {
                     if let Some(c) = clock {
                         self.trace.phases[PHASE_ROUND_A]
                             .add_compute(c.elapsed().as_secs_f64(), cpu);
+                        obs::timeline::recorder()
+                            .phase_end(self.id, PHASE_ROUND_A, self.comp, self.t);
                     }
                     for (to, seg) in segments {
                         if to == self.id {
                             node.receive_z(self.id, &seg);
                         } else {
-                            out.push((
-                                to,
-                                Envelope {
-                                    from: self.id,
-                                    iter: tag,
-                                    phase: Phase::RoundB,
-                                    payload: Payload::B(seg),
-                                },
-                            ));
+                            let env = Envelope {
+                                from: self.id,
+                                iter: tag,
+                                phase: Phase::RoundB,
+                                payload: Payload::B(seg),
+                            };
+                            emit(out, to, env);
                         }
                     }
                     self.step = Step::RoundB;
@@ -434,6 +489,7 @@ impl NodeProgram {
                         return;
                     }
                     let msgs = self.take(tag, Phase::RoundB);
+                    self.record_recvs(&msgs);
                     let rho2 = self.cfg.rho2_at(self.t);
                     let node = self.node.as_mut().expect("setup done before round B");
                     for e in msgs {
@@ -443,6 +499,10 @@ impl NodeProgram {
                         }
                     }
                     let clock = obs::maybe_now();
+                    if clock.is_some() {
+                        obs::timeline::recorder()
+                            .phase_begin(self.id, PHASE_ROUND_B, self.comp, self.t);
+                    }
                     let tu = thread_cpu_secs();
                     node.local_update(rho2, backend);
                     let cpu = thread_cpu_secs() - tu;
@@ -450,6 +510,8 @@ impl NodeProgram {
                     if let Some(c) = clock {
                         self.trace.phases[PHASE_ROUND_B]
                             .add_compute(c.elapsed().as_secs_f64(), cpu);
+                        obs::timeline::recorder()
+                            .phase_end(self.id, PHASE_ROUND_B, self.comp, self.t);
                     }
                     // Maintain the gossip window: drop the decided
                     // head, seed this iteration with the own delta.
@@ -490,6 +552,7 @@ impl NodeProgram {
                         return;
                     }
                     let msgs = self.take(self.comp, Phase::Deflate);
+                    self.record_recvs(&msgs);
                     let received: Vec<(usize, Vec<f64>)> = msgs
                         .into_iter()
                         .map(|e| match e.payload {
@@ -499,6 +562,10 @@ impl NodeProgram {
                         .collect();
                     let node = self.node.as_mut().expect("setup done before deflation");
                     let clock = obs::maybe_now();
+                    if clock.is_some() {
+                        obs::timeline::recorder()
+                            .phase_begin(self.id, PHASE_DEFLATE, self.comp, self.t);
+                    }
                     let td = thread_cpu_secs();
                     node.deflate_and_reseed(&received, self.comp + 1);
                     let cpu = thread_cpu_secs() - td;
@@ -506,6 +573,8 @@ impl NodeProgram {
                     if let Some(c) = clock {
                         self.trace.phases[PHASE_DEFLATE]
                             .add_compute(c.elapsed().as_secs_f64(), cpu);
+                        obs::timeline::recorder()
+                            .phase_end(self.id, PHASE_DEFLATE, self.comp, self.t);
                     }
                     self.comp += 1;
                     self.t = 0;
@@ -530,15 +599,13 @@ impl NodeProgram {
         let node = self.node.as_ref().expect("setup done before iterating");
         for &to in &self.nbrs {
             let msg = node.round_a_message(to);
-            out.push((
-                to,
-                Envelope {
-                    from: self.id,
-                    iter: tag,
-                    phase: Phase::RoundA,
-                    payload: Payload::A(msg, window.clone()),
-                },
-            ));
+            let env = Envelope {
+                from: self.id,
+                iter: tag,
+                phase: Phase::RoundA,
+                payload: Payload::A(msg, window.clone()),
+            };
+            emit(out, to, env);
         }
         self.pending_stop = false;
         self.step = Step::RoundA;
@@ -554,15 +621,13 @@ impl NodeProgram {
         self.converged.push(self.pass_converged);
         if self.comp + 1 < self.n_components {
             for &to in &self.nbrs {
-                out.push((
-                    to,
-                    Envelope {
-                        from: self.id,
-                        iter: self.comp,
-                        phase: Phase::Deflate,
-                        payload: Payload::Converged(node.alpha.clone()),
-                    },
-                ));
+                let env = Envelope {
+                    from: self.id,
+                    iter: self.comp,
+                    phase: Phase::Deflate,
+                    payload: Payload::Converged(node.alpha.clone()),
+                };
+                emit(out, to, env);
             }
             self.step = Step::Deflate;
         } else {

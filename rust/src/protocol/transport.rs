@@ -18,6 +18,14 @@
 //!   one OS thread per node).
 //! * [`pump_step`] / [`run_node`] — the one pump loop that moves a
 //!   [`NodeProgram`] over any transport.
+//!
+//! The flight recorder (`obs::timeline`) deliberately does NOT hook
+//! the transport: sends are recorded at emission and receives at
+//! consumption, both inside the program's `poll` (park intervals enter
+//! via `note_park` from the pump). In-flight timing differs per
+//! transport by construction, so recording at the protocol boundary is
+//! what keeps the golden timeline (rust/tests/timeline.rs)
+//! byte-identical across lockstep and the thread fabric.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};

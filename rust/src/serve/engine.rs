@@ -154,6 +154,9 @@ struct Job {
     /// dequeue. Always stamped (an `Instant` read is nanoseconds); the
     /// record itself is telemetry-gated.
     submitted: Instant,
+    /// Flight-recorder ticket tying this request's enqueue, dequeue,
+    /// projection, and reply events into one flow.
+    seq: u64,
 }
 
 /// Serve-path latency series, resolved once per engine from the global
@@ -258,10 +261,10 @@ impl ProjectionEngine {
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let handles = (0..workers)
-            .map(|_| {
+            .map(|w| {
                 let shared = shared.clone();
                 let rx = rx.clone();
-                std::thread::spawn(move || worker_main(shared, rx))
+                std::thread::spawn(move || worker_main(shared, rx, w))
             })
             .collect();
         ProjectionEngine { shared, tx: Some(tx), workers: handles }
@@ -288,9 +291,14 @@ impl ProjectionEngine {
     pub fn submit(&self, req: ProjectionRequest) -> PendingProjection {
         let (reply, rx) = channel();
         let tx = self.tx.as_ref().expect("engine already shut down");
+        let rec = crate::obs::timeline::recorder();
+        let seq = rec.next_serve_req();
+        // Enqueue is recorded before the send so the flow's origin
+        // timestamp can never trail the worker's dequeue record.
+        rec.serve_enqueue(seq);
         // Send cannot fail while `tx` is alive; a closed queue surfaces
         // as `Canceled` at wait() time anyway.
-        let _ = tx.send(Job { req, reply, submitted: Instant::now() });
+        let _ = tx.send(Job { req, reply, submitted: Instant::now(), seq });
         PendingProjection { rx }
     }
 
@@ -359,16 +367,22 @@ impl Drop for ProjectionEngine {
     }
 }
 
-fn worker_main(shared: Arc<Shared>, rx: Arc<Mutex<Receiver<Job>>>) {
+fn worker_main(shared: Arc<Shared>, rx: Arc<Mutex<Receiver<Job>>>, worker: usize) {
     loop {
         // Hold the lock only for the pop, never during compute.
         let job = match rx.lock() {
             Ok(guard) => guard.recv(),
             Err(_) => return,
         };
-        let Ok(Job { req, reply, submitted }) = job else { return };
+        let Ok(Job { req, reply, submitted, seq }) = job else { return };
         shared.lat.queue.record_secs(submitted.elapsed().as_secs_f64());
+        let rec = crate::obs::timeline::recorder();
+        rec.serve_dequeue(worker, seq);
+        let project_clock = crate::obs::maybe_now();
         let result = serve_one(&shared, &req);
+        if let Some(c) = project_clock {
+            rec.serve_project(worker, seq, c.elapsed().as_nanos() as u64);
+        }
         let c = &shared.counters;
         // ORDERING: relaxed (all counter bumps below) — isolated
         // monotone traffic counters read only by `stats`; the reply
@@ -400,6 +414,7 @@ fn worker_main(shared: Arc<Shared>, rx: Arc<Mutex<Receiver<Job>>>) {
         }
         // The submitter may have dropped its ticket; that's fine.
         let _ = reply.send(result);
+        rec.serve_reply(worker, seq);
     }
 }
 

@@ -73,6 +73,23 @@ impl Json {
         }
     }
 
+    /// The member map, if this is an `Obj`.
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Build an object from `(key, value)` pairs — the writer-side
+    /// counterpart of [`Json::get`] (duplicate keys: the last wins).
+    pub fn obj<I>(pairs: I) -> Json
+    where
+        I: IntoIterator<Item = (&'static str, Json)>,
+    {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
     /// Object member lookup (`None` off objects or missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
@@ -354,5 +371,19 @@ mod tests {
     fn unicode_passthrough() {
         let j = Json::parse("\"héllo ✓\"").unwrap();
         assert_eq!(j.as_str(), Some("héllo ✓"));
+    }
+
+    #[test]
+    fn obj_builder_and_accessor() {
+        let j = Json::obj([
+            ("b", Json::Num(2.0)),
+            ("a", Json::Str("x".into())),
+            ("a", Json::Null),
+        ]);
+        // Key-sorted serialization; the duplicate key's last value won.
+        assert_eq!(j.to_string(), r#"{"a":null,"b":2}"#);
+        let m = j.as_obj().unwrap();
+        assert_eq!(m.len(), 2);
+        assert!(Json::Num(1.0).as_obj().is_none());
     }
 }

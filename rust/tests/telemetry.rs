@@ -167,10 +167,19 @@ fn run_both(enabled: bool) -> (Vec<u8>, Vec<Matrix>, String, String) {
 #[test]
 fn telemetry_on_off_is_bit_identical_on_both_transports() {
     let _g = obs_lock();
+    let rec = obs::timeline::recorder();
+    rec.clear();
     let (model_on, alphas_on, lock_wire_on, fab_wire_on) = run_both(true);
+    let events_on: usize = rec.snapshot().tracks.iter().map(|(_, e)| e.len()).sum();
+    rec.clear();
     let (model_off, alphas_off, lock_wire_off, fab_wire_off) = run_both(false);
+    let events_off: usize = rec.snapshot().tracks.iter().map(|(_, e)| e.len()).sum();
     obs::set_enabled(true);
 
+    // The flight recorder follows the telemetry switch — busy when on,
+    // silent when off — while everything below stays bit-identical.
+    assert!(events_on > 0, "enabled run recorded no timeline events");
+    assert_eq!(events_off, 0, "disabled run recorded timeline events");
     // The model artifact — every byte of it — must not depend on the
     // telemetry switch.
     assert_eq!(model_on, model_off, "telemetry changed the trained model artifact");
@@ -213,13 +222,17 @@ fn registry_survives_concurrent_recording_under_the_pool() {
 fn disabled_run_leaves_traces_empty() {
     let _g = obs_lock();
     obs::set_enabled(false);
+    let rec = obs::timeline::recorder();
+    rec.clear();
     let xs = fixed_xs();
     let graph = Graph::ring(3, 1);
     let cfg = AdmmConfig { max_iters: 4, seed: 1, ..Default::default() };
     let mut seq = MultiKpcaSolver::new(&xs, &graph, &KERNEL, &cfg, NoiseModel::None, 0, 1);
     let _ = seq.run(&NativeBackend);
     let traces = seq.node_traces();
+    let timeline_events = rec.snapshot().tracks.len();
     obs::set_enabled(true);
     assert!(traces.iter().all(|t| t.iters.is_empty()), "disabled telemetry stored rows");
     assert!(traces.iter().all(|t| t.phases.iter().all(|p| p.count == 0)));
+    assert_eq!(timeline_events, 0, "disabled telemetry recorded timeline tracks");
 }

@@ -1,0 +1,173 @@
+//! Golden flight-recorder timeline: one fixed small config through
+//! BOTH transports, asserting the timestamp-free protocol rendering
+//! against a checked-in expectation. The recorder captures each node's
+//! events from inside its own `poll` (sends at emission, receives at
+//! consumption, sorted by peer), so lockstep and threaded-fabric runs
+//! must produce byte-identical renderings — a transport leaking its
+//! scheduling into the recorded stream fails here with a line diff.
+//!
+//! Config mirrors rust/tests/protocol_trace.rs: 3 nodes on ring(3, 1),
+//! N = 4 samples of M = 2 features, k = 2 components, max_iters = 2,
+//! tol = 0 (gossip off, both passes run exactly 2 iterations).
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use dkpca::admm::AdmmConfig;
+use dkpca::backend::NativeBackend;
+use dkpca::coordinator::run_decentralized_multik_traced;
+use dkpca::data::{NoiseModel, Rng};
+use dkpca::kernels::Kernel;
+use dkpca::linalg::Matrix;
+use dkpca::multik::MultiKpcaSolver;
+use dkpca::obs::timeline::{
+    analyze_chrome_trace, check_chrome_trace, chrome_trace, recorder, render_protocol,
+};
+use dkpca::topology::Graph;
+
+const KERNEL: Kernel = Kernel::Rbf { gamma: 0.5 };
+
+/// The recorder is process-global; serialize the tests that reset it.
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(Mutex::default).lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn fixed_xs() -> Vec<Matrix> {
+    let mut rng = Rng::new(42);
+    (0..3).map(|_| Matrix::from_fn(4, 2, |_, _| rng.gauss())).collect()
+}
+
+fn cfg() -> AdmmConfig {
+    AdmmConfig { max_iters: 2, ..Default::default() }
+}
+
+/// The checked-in golden timeline. Every node runs the same program
+/// against its two peers (sorted): setup exchange, two (A, B)
+/// iterations per pass, one deflation exchange between the passes.
+/// Round tags use the pass band `pass * (max_iters + 1)`; deflation
+/// envelopes are tagged with the pass index. Update ONLY for
+/// intentional protocol or instrumentation changes.
+fn expected_timeline() -> String {
+    let mut out = String::new();
+    for node in 0..3usize {
+        out.push_str(&format!("node {node}\n"));
+        let peers: Vec<usize> = (0..3).filter(|&p| p != node).collect();
+        let send = |out: &mut String, phase: &str, iter: usize| {
+            for &p in &peers {
+                out.push_str(&format!("  send {phase} iter={iter} -> {p}\n"));
+            }
+        };
+        let recv = |out: &mut String, phase: &str, iter: usize| {
+            for &p in &peers {
+                out.push_str(&format!("  recv {phase} iter={iter} <- {p}\n"));
+            }
+        };
+        let span = |out: &mut String, phase: &str, pass: usize, iter: usize| {
+            out.push_str(&format!("  begin {phase} pass={pass} iter={iter}\n"));
+            out.push_str(&format!("  end {phase} pass={pass} iter={iter}\n"));
+        };
+        send(&mut out, "setup", 0);
+        recv(&mut out, "setup", 0);
+        span(&mut out, "setup", 0, 0);
+        for pass in 0..2usize {
+            let band = pass * 3;
+            for t in 0..2usize {
+                let tag = band + t;
+                send(&mut out, "round_a", tag);
+                recv(&mut out, "round_a", tag);
+                span(&mut out, "round_a", pass, t);
+                send(&mut out, "round_b", tag);
+                recv(&mut out, "round_b", tag);
+                span(&mut out, "round_b", pass, t);
+            }
+            if pass == 0 {
+                send(&mut out, "deflate", pass);
+                recv(&mut out, "deflate", pass);
+                span(&mut out, "deflate", pass, 2);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_timeline_identical_on_both_transports() {
+    let _g = obs_lock();
+    dkpca::obs::set_enabled(true);
+    let xs = fixed_xs();
+    let graph = Graph::ring(3, 1);
+    let rec = recorder();
+
+    // Lockstep transport (the sequential facade).
+    rec.clear();
+    let mut seq = MultiKpcaSolver::new_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &cfg(),
+        NoiseModel::None,
+        0,
+        2,
+        &NativeBackend,
+        None,
+    );
+    let _ = seq.run(&NativeBackend);
+    let lock = render_protocol(&rec.snapshot());
+
+    // Channel-fabric transport (one OS thread per node).
+    rec.clear();
+    let _ = run_decentralized_multik_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &cfg(),
+        NoiseModel::None,
+        0,
+        2,
+        Arc::new(NativeBackend),
+        None,
+    );
+    let thread = render_protocol(&rec.snapshot());
+
+    assert_eq!(lock, thread, "transports disagree on the recorded timeline");
+    assert_eq!(
+        lock,
+        expected_timeline(),
+        "recorded timeline changed — if intentional, update expected_timeline()"
+    );
+}
+
+#[test]
+fn chrome_export_of_live_run_validates_and_analyzes() {
+    let _g = obs_lock();
+    dkpca::obs::set_enabled(true);
+    let xs = fixed_xs();
+    let graph = Graph::ring(3, 1);
+    let rec = recorder();
+
+    rec.clear();
+    let rep = run_decentralized_multik_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &cfg(),
+        NoiseModel::None,
+        0,
+        2,
+        Arc::new(NativeBackend),
+        None,
+    );
+    let doc = chrome_trace(&rec.snapshot(), &rep.node_traces);
+    let report = check_chrome_trace(&doc).expect("live chrome trace must validate");
+    assert!(report.events > 0, "export carried no events");
+    assert!(report.tracks >= 3, "expected a track per node");
+    // Every send must stitch to its receive: 6 directed edges x 10
+    // envelopes (setup, 2x(A+B) per pass, deflate) = 60 message flows.
+    assert_eq!(report.flows, 60, "message flow count changed");
+
+    let a = analyze_chrome_trace(&doc).expect("valid trace must analyze");
+    assert!(a.wall_secs >= 0.0);
+    assert!(!a.tracks.is_empty(), "analysis lost the per-track breakdown");
+    assert_eq!(a.stalls.len(), 2, "one convergence series per pass");
+    assert!(a.critical_hops > 0, "critical path crossed no message edge");
+}

@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Compare fresh bench JSON against the checked-in baselines.
+
+The benches (`cargo bench --bench linalg_micro / comm_cost /
+serve_throughput`) overwrite BENCH_gemm.json / BENCH_comm.json /
+BENCH_serve.json in the working tree. This script diffs those fresh
+files against the committed copies (`git show HEAD:<file>`) and prints
+a warning for every tracked metric that regressed past its threshold:
+
+  - gemm:  parallel_gflops below 0.8x baseline
+  - comm:  any floats-per-edge count above 1.2x baseline
+           (comm cost is analytic, so any drift is a protocol change)
+  - serve: p99_ms above 1.2x baseline, or points_per_sec below 0.8x
+
+Timing numbers on shared CI runners are noisy, so this is advisory
+only: warnings go to stdout (and the GitHub ::warning:: annotation
+stream when running under Actions) and the exit code is always 0.
+Stdlib only — no pip installs.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+BENCHES = [
+    ("BENCH_gemm.json", "gemm"),
+    ("BENCH_comm.json", "comm"),
+    ("BENCH_serve.json", "serve"),
+]
+
+# Multiplicative regression thresholds.
+SLOWDOWN = 1.2  # "bigger is worse" metrics may grow to 1.2x baseline
+SPEEDLOSS = 0.8  # "bigger is better" metrics may shrink to 0.8x
+
+
+def baseline_text(path):
+    """The committed copy of `path`, or None if HEAD doesn't have it."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{path}"],
+            capture_output=True,
+            check=True,
+        )
+    except (OSError, subprocess.CalledProcessError):
+        return None
+    return out.stdout.decode("utf-8")
+
+
+def warn(msg):
+    print(f"WARNING: {msg}")
+    if os.environ.get("GITHUB_ACTIONS"):
+        print(f"::warning title=bench regression::{msg}")
+
+
+def index_rows(rows, key_fields):
+    """Map each row's identity tuple to the row; duplicate keys lose."""
+    return {tuple(r.get(f) for f in key_fields): r for r in rows}
+
+
+def compare_metric(label, key, name, base, fresh, bigger_is_better):
+    if not isinstance(base, (int, float)) or not isinstance(fresh, (int, float)):
+        return 0
+    if base <= 0:
+        return 0
+    ratio = fresh / base
+    if bigger_is_better and ratio < SPEEDLOSS:
+        warn(f"{label} {key}: {name} {fresh:g} is {ratio:.2f}x baseline {base:g}")
+        return 1
+    if not bigger_is_better and ratio > SLOWDOWN:
+        warn(f"{label} {key}: {name} {fresh:g} is {ratio:.2f}x baseline {base:g}")
+        return 1
+    return 0
+
+
+def compare_gemm(base, fresh):
+    n = 0
+    pairs = index_rows(base.get("results", []), ("size",))
+    for key, row in index_rows(fresh.get("results", []), ("size",)).items():
+        b = pairs.get(key)
+        if b is None:
+            continue
+        n += compare_metric("gemm", key, "parallel_gflops",
+                            b.get("parallel_gflops"), row.get("parallel_gflops"), True)
+    return n
+
+
+def compare_comm(base, fresh):
+    n = 0
+    ident = ("setup", "k", "nodes", "n")
+    fields = ("setup_floats_per_edge", "iter_floats_per_edge_per_iter",
+              "deflate_floats_per_edge")
+    pairs = index_rows(base.get("results", []), ident)
+    for key, row in index_rows(fresh.get("results", []), ident).items():
+        b = pairs.get(key)
+        if b is None:
+            continue
+        for f in fields:
+            n += compare_metric("comm", key, f, b.get(f), row.get(f), False)
+    return n
+
+
+def compare_serve(base, fresh):
+    n = 0
+    ident = ("workers", "path", "batch_m")
+    pairs = index_rows(base.get("results", []), ident)
+    for key, row in index_rows(fresh.get("results", []), ident).items():
+        b = pairs.get(key)
+        if b is None:
+            continue
+        n += compare_metric("serve", key, "p99_ms", b.get("p99_ms"), row.get("p99_ms"), False)
+        n += compare_metric("serve", key, "points_per_sec",
+                            b.get("points_per_sec"), row.get("points_per_sec"), True)
+    return n
+
+
+COMPARATORS = {"gemm": compare_gemm, "comm": compare_comm, "serve": compare_serve}
+
+
+def main():
+    warned = 0
+    compared = 0
+    for path, kind in BENCHES:
+        if not os.path.exists(path):
+            print(f"skip {path}: no fresh result in the working tree")
+            continue
+        text = baseline_text(path)
+        if text is None:
+            print(f"skip {path}: no baseline committed at HEAD")
+            continue
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                fresh = json.load(f)
+            base = json.loads(text)
+        except (OSError, json.JSONDecodeError) as e:
+            warn(f"{path}: unreadable bench JSON ({e})")
+            warned += 1
+            continue
+        compared += 1
+        warned += COMPARATORS[kind](base, fresh)
+    print(f"bench compare: {compared} file(s) compared, {warned} warning(s)")
+    # Advisory only — never fail the build on shared-runner noise.
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+//! Seeded violations: flight-recorder event names go through the same
+//! `metric-name` schema as registry metrics — an inline literal and an
+//! undeclared `names::` constant must both fire.
+
+fn export(ct: &mut ChromeTrace, tid: u64) {
+    ct.ev_begin("inline.phase", tid, 0.0, Json::Null); //~ERROR metric-name
+    ct.ev_flow_out(names::NOT_DECLARED, tid, 0.0, "id"); //~ERROR metric-name
+    ct.ev_instant(names::GOOD, tid, 0.0, Json::Null);
+}

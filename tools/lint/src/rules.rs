@@ -20,8 +20,10 @@
 //!   `dbg!` outside the allow-listed files (`main.rs` owns CLI stdout,
 //!   `obs/log.rs` is the one stderr sink).
 //! - `metric-name` — string arguments to the obs registry's
-//!   `.counter(` / `.gauge(` / `.histogram(` calls must be constants
-//!   declared in `obs::names`, not inline literals.
+//!   `.counter(` / `.gauge(` / `.histogram(` calls and the timeline
+//!   exporter's `.ev_begin(`/`.ev_end(`/`.ev_instant(`/`.ev_complete(`/
+//!   `.ev_flow_out(`/`.ev_flow_in(` calls must be constants declared
+//!   in `obs::names`, not inline literals.
 //!
 //! `#[cfg(test)]` regions are exempt from `print-site` and
 //! `metric-name` (tests legitimately print and probe the registry
@@ -82,8 +84,19 @@ const NON_SEQCST: [&str; 4] = ["Relaxed", "Acquire", "Release", "AcqRel"];
 /// Print-family macros gated by `print-site`.
 const PRINT_MACROS: [&str; 5] = ["print", "println", "eprint", "eprintln", "dbg"];
 
-/// Registry record methods whose name argument is schema-checked.
-const METRIC_METHODS: [&str; 3] = ["counter", "gauge", "histogram"];
+/// Methods whose name argument is schema-checked: the registry's
+/// instrument getters and the Chrome-trace event builders.
+const METRIC_METHODS: [&str; 9] = [
+    "counter",
+    "gauge",
+    "histogram",
+    "ev_begin",
+    "ev_end",
+    "ev_instant",
+    "ev_complete",
+    "ev_flow_out",
+    "ev_flow_in",
+];
 
 /// The identifier at token index `i`, if any.
 fn ident_at(toks: &[Token], i: usize) -> Option<&str> {
@@ -486,6 +499,16 @@ mod tests {
     fn metric_literals_and_undeclared_names_fire() {
         let src = "fn f(r: &R) { r.counter(\"raw\"); r.gauge(names::GOOD); \
                    r.histogram(names::BAD); }\n";
+        let d = run(src);
+        let metric: Vec<&Diagnostic> = d.iter().filter(|d| d.rule == RULE_METRIC).collect();
+        assert_eq!(metric.len(), 2, "literal + undeclared fire; the declared one passes");
+    }
+
+    #[test]
+    fn timeline_event_methods_are_schema_checked() {
+        let src = "fn f(ct: &mut C) { ct.ev_begin(\"raw.event\", 1, 0.0); \
+                   ct.ev_flow_in(names::GOOD, 1, 0.0, \"id\"); \
+                   ct.ev_complete(names::BAD, 1, 0.0, 0.0); }\n";
         let d = run(src);
         let metric: Vec<&Diagnostic> = d.iter().filter(|d| d.rule == RULE_METRIC).collect();
         assert_eq!(metric.len(), 2, "literal + undeclared fire; the declared one passes");

@@ -12,6 +12,8 @@
 //!   diagnostics.
 //! - `fixture_unsafe.rs` / `fixture_ordering.rs` / `fixture_print.rs`
 //!   / `fixture_metric.rs` — one seeded violation file per rule.
+//! - `fixture_timeline.rs` — seeded `metric-name` violations through
+//!   the Chrome-trace event-builder methods (`ev_begin` and friends).
 //! - `names_decl.rs` — the fake `obs::names` schema the metric rule
 //!   resolves against.
 //! - `unsafe_inventory.txt` — registers the clean fixture's unsafe
@@ -30,12 +32,13 @@ use crate::rules::{
 const FIXTURE_INVENTORY: &str = "fixtures/unsafe_inventory.txt";
 
 /// The fixtures scanned by the rule engine, with their repo-ish paths.
-const FIXTURES: [(&str, &str); 5] = [
+const FIXTURES: [(&str, &str); 6] = [
     ("fixtures/fixture_clean.rs", include_str!("../fixtures/fixture_clean.rs")),
     ("fixtures/fixture_unsafe.rs", include_str!("../fixtures/fixture_unsafe.rs")),
     ("fixtures/fixture_ordering.rs", include_str!("../fixtures/fixture_ordering.rs")),
     ("fixtures/fixture_print.rs", include_str!("../fixtures/fixture_print.rs")),
     ("fixtures/fixture_metric.rs", include_str!("../fixtures/fixture_metric.rs")),
+    ("fixtures/fixture_timeline.rs", include_str!("../fixtures/fixture_timeline.rs")),
 ];
 
 const NAMES_DECL: &str = include_str!("../fixtures/names_decl.rs");
