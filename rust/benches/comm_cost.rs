@@ -1,13 +1,15 @@
 //! Bench: §4.2 communication-cost accounting — measured fabric traffic
 //! vs the closed form O(|Omega_j| N) per node per iteration, plus the
 //! machine-readable per-edge trajectory (floats per edge vs N, RawData
-//! vs RffFeatures, k = 1 vs k = 3) written to `BENCH_comm.json` so CI
-//! tracks the §4.2/§7 communication economics run over run.
+//! vs RffFeatures, k = 1 vs k = 3, deflate vs block multik) written to
+//! `BENCH_comm.json` so CI tracks the §4.2/§7 communication economics
+//! run over run.
 //!
 //!     cargo bench --bench comm_cost
 
 use std::sync::Arc;
 
+use dkpca::admm::MultiKStrategy;
 use dkpca::backend::NativeBackend;
 use dkpca::experiments::comm;
 use dkpca::metrics::Stopwatch;
@@ -18,13 +20,35 @@ fn main() {
     println!("{}", comm::table(&rows));
 
     // Per-edge trajectory: setup vs iteration vs deflation floats,
-    // measured off the fabric's per-phase counters.
-    let entries = comm::trajectory(8, &[25, 50, 100], 3, &[1, 3], 64, Arc::new(NativeBackend), 0);
+    // measured off the fabric's per-phase counters. The deflate sweep
+    // covers k = 1 too (the scalar path); the block sweep only runs
+    // where block mode engages (k >= 2), so no duplicate rows.
+    let mut entries = comm::trajectory(
+        8,
+        &[25, 50, 100],
+        3,
+        &[1, 3],
+        64,
+        MultiKStrategy::Deflate,
+        Arc::new(NativeBackend),
+        0,
+    );
+    entries.extend(comm::trajectory(
+        8,
+        &[25, 50, 100],
+        3,
+        &[3],
+        64,
+        MultiKStrategy::Block,
+        Arc::new(NativeBackend),
+        0,
+    ));
     for e in &entries {
         println!(
-            "comm {}/k={} N={:>3}: setup {:>7.0} f/edge, iter {:>6.0} f/edge/it, \
+            "comm {}/{}/k={} N={:>3}: setup {:>7.0} f/edge, iter {:>6.0} f/edge/it, \
              deflate {:>5.0} f/edge",
             e.setup,
+            e.strategy,
             e.k,
             e.samples_per_node,
             e.setup_floats_per_edge,

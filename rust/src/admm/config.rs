@@ -26,6 +26,22 @@ pub enum Init {
     LocalKpca,
 }
 
+/// How multi-component (k >= 2) training extracts the subspace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MultiKStrategy {
+    /// PR 3 reference: K sequential consensus-ADMM passes with
+    /// Hotelling deflation of every Gram copy between passes. Linear in
+    /// k for wall-clock, iterations, and traffic, and each deflation
+    /// event pays a full spectral rebuild per node.
+    Deflate,
+    /// Simultaneous subspace iteration (DeEPCA-style): one pass carries
+    /// all k directions as an `N x k` dual block, with a per-iteration
+    /// K-metric block orthonormalization on each z-host replacing the
+    /// per-round scalar normalization. No deflation exchanges, no Gram
+    /// rebuilds. Ignored at k = 1, where the scalar path always runs.
+    Block,
+}
+
 /// What the one-time setup exchange transmits to neighbors.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SetupExchange {
@@ -96,6 +112,8 @@ pub struct AdmmConfig {
     pub init: Init,
     /// What the setup exchange transmits (raw data or RFF features).
     pub setup: SetupExchange,
+    /// Multi-component extraction strategy (k >= 2 only).
+    pub multik: MultiKStrategy,
 }
 
 impl Default for AdmmConfig {
@@ -111,6 +129,7 @@ impl Default for AdmmConfig {
             seed: 0,
             init: Init::LocalKpca,
             setup: SetupExchange::RawData,
+            multik: MultiKStrategy::Block,
         }
     }
 }
@@ -240,5 +259,10 @@ mod tests {
     #[test]
     fn default_setup_is_raw_data() {
         assert_eq!(AdmmConfig::default().setup, SetupExchange::RawData);
+    }
+
+    #[test]
+    fn default_multik_strategy_is_block() {
+        assert_eq!(AdmmConfig::default().multik, MultiKStrategy::Block);
     }
 }

@@ -39,7 +39,7 @@ fn gram_centered_via(
 }
 use crate::linalg::eigen::eigen_sym;
 use crate::linalg::ops::{dot, normalize, par_matvec};
-use crate::linalg::{pool, Matrix};
+use crate::linalg::{kmetric_orthonormalize, par_matmul, pool, Matrix};
 
 use super::config::{AdmmConfig, ZNorm};
 
@@ -58,6 +58,39 @@ pub struct RoundA {
 pub struct RoundB {
     /// The segment `phi(X_to)^T z_from` in the receiver's coordinates.
     pub segment: Vec<f64>,
+}
+
+/// Block-mode round-A payload from node `from` toward z-host `to`: the
+/// sender's whole `N x k` dual block plus its B block for constraint
+/// `to` (`2 N k` floats — the block analogue of [`RoundA`]).
+#[derive(Clone, Debug)]
+pub struct RoundABlock {
+    /// Sender's current dual block (`N_from x k`).
+    pub alpha: Matrix,
+    /// Sender's B block for constraint `to` (`N_from x k`).
+    pub bcol: Matrix,
+}
+
+/// Block-mode round-B payload: the segment block `phi(X_to)^T Z_from`
+/// (`N_to x k` floats, one column per subspace direction).
+#[derive(Clone, Debug)]
+pub struct RoundBBlock {
+    /// The segment block in the receiver's coordinates (`N_to x k`).
+    pub segment: Matrix,
+}
+
+/// Block-mode ADMM variables: the `N x k` analogues of the scalar
+/// `alpha`/`alpha_prev`/`b`/`p` fields, one simultaneous subspace
+/// iteration instead of k deflation passes (`MultiKStrategy::Block`).
+struct BlockState {
+    k: usize,
+    /// Dual block (`n x k`), one column per tracked direction.
+    alpha: Matrix,
+    alpha_prev: Matrix,
+    /// Consensus blocks, one `n x k` matrix per constraint (cset order).
+    b: Vec<Matrix>,
+    /// Multiplier blocks, matching `b` entry-for-entry.
+    p: Vec<Matrix>,
 }
 
 /// Eigendecomposition bundle of a centered Gram (shared basis for all
@@ -161,6 +194,50 @@ fn seed_alpha(
     alpha
 }
 
+/// Initial dual block column `c` for block-mode training. `LocalKpca`
+/// is the One-shot-KPCA-style warm start: the c-th local top
+/// eigenvector, sign-fixed so the cubed sum of its local eigenfunction
+/// values `K_j alpha` is non-negative. The cube sum is an odd
+/// functional of the direction, so nodes whose local eigenfunctions
+/// approximate the same global one pick the same orientation — without
+/// the fix the eigh sign ambiguity seeds neighbors in *conflicting*
+/// orientations and the consensus iteration burns its warm-start
+/// advantage re-aligning them (validated in the prototype study;
+/// DESIGN.md §Block multik).
+fn seed_block_column(
+    cfg: &AdmmConfig,
+    id: usize,
+    n: usize,
+    spectral: &SpectralGram,
+    kc: &Matrix,
+    c: usize,
+) -> Vec<f64> {
+    let mut col = match cfg.init {
+        super::config::Init::Random => {
+            let mut rng = Rng::new(
+                cfg.seed
+                    .wrapping_add(id as u64)
+                    .wrapping_mul(0x9E37)
+                    .wrapping_add((c as u64).wrapping_mul(0x9E3779B9)),
+            );
+            rng.gauss_vec(n)
+        }
+        super::config::Init::LocalKpca => {
+            let mut col = spectral.vectors.col(n - 1 - c);
+            let f = par_matvec(kc, &col);
+            let cube: f64 = f.iter().map(|v| v * v * v).sum();
+            if cube < 0.0 {
+                for v in col.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            col
+        }
+    };
+    normalize(&mut col);
+    col
+}
+
 /// Rank-one Hotelling update `M <- M - (u u^T) * inv` (the one
 /// deflation kernel every Gram-block update shares). Row-banded over
 /// the compute pool at large sizes; elementwise, so bit-identical for
@@ -234,6 +311,8 @@ pub struct NodeState {
     spectral: SpectralGram,
     a_inv: Matrix,
     a_inv_rho_sum: f64,
+    /// Block-mode state (`Some` after [`NodeState::init_block`]).
+    block: Option<BlockState>,
     cfg: AdmmConfig,
 }
 
@@ -357,6 +436,7 @@ impl NodeState {
             spectral,
             a_inv: Matrix::zeros(0, 0),
             a_inv_rho_sum: f64::NAN,
+            block: None,
             cfg: cfg.clone(),
         }
     }
@@ -517,8 +597,16 @@ impl NodeState {
     /// Purely local and shared by both drivers, so banked columns stay
     /// bit-identical.
     pub fn bank_component(&mut self) {
+        let col = self.alpha.clone();
+        self.bank_vec(col);
+    }
+
+    /// Gram-Schmidt `col` against the banked columns in the original
+    /// `kc0` metric and append it (shared by the per-pass
+    /// [`NodeState::bank_component`] and the block-mode
+    /// [`NodeState::bank_block`]).
+    fn bank_vec(&mut self, mut col: Vec<f64>) {
         let scale = self.kc0.max_abs().max(1.0);
-        let mut col = self.alpha.clone();
         for prev in &self.components {
             let kprev = par_matvec(&self.kc0, prev);
             let s = dot(prev, &kprev);
@@ -655,6 +743,187 @@ impl NodeState {
         self.a_inv = Matrix::zeros(0, 0);
         self.a_inv_rho_sum = f64::NAN;
     }
+
+    // ----- block multik (MultiKStrategy::Block) -------------------------
+    //
+    // The `N x k` analogues of the scalar round-A/z/round-B updates: one
+    // simultaneous subspace-iteration pass carries all k directions,
+    // with a per-iteration K-metric block orthonormalization on each
+    // z-host replacing the scalar z normalization (`z_norm` is ignored
+    // in block mode). No deflation, no Gram rebuilds.
+
+    /// Allocate and seed the block-mode state for `k` directions
+    /// (deterministic: identical across drivers and pool widths).
+    pub fn init_block(&mut self, k: usize) {
+        assert!(k >= 1, "block mode needs at least one direction");
+        assert!(k <= self.n, "cannot track {k} directions over {} samples", self.n);
+        let cols: Vec<Vec<f64>> = (0..k)
+            .map(|c| seed_block_column(&self.cfg, self.id, self.n, &self.spectral, &self.kc, c))
+            .collect();
+        let alpha = Matrix::from_fn(self.n, k, |i, c| cols[c][i]);
+        let d = self.cset.len();
+        self.block = Some(BlockState {
+            k,
+            alpha_prev: alpha.clone(),
+            alpha,
+            b: (0..d).map(|_| Matrix::zeros(self.n, k)).collect(),
+            p: (0..d).map(|_| Matrix::zeros(self.n, k)).collect(),
+        });
+    }
+
+    fn block_ref(&self) -> &BlockState {
+        self.block.as_ref().expect("init_block not called")
+    }
+
+    /// Block round-A message toward z-host `to` (a neighbor).
+    pub fn round_a_block_message(&self, to: usize) -> RoundABlock {
+        let block = self.block_ref();
+        RoundABlock {
+            alpha: block.alpha.clone(),
+            bcol: block.b[self.col_of(to)].clone(),
+        }
+    }
+
+    /// Block z-update, assembly half: stack the per-contributor blocks
+    /// `C_l = K_l^+ (Bcol_l / S) + (rho_lk / S) A_l` into `C` (DN x k)
+    /// and form the Gram images `T = G C`. Returns both *transposed*
+    /// (`k x DN`, each direction a contiguous row) ready for
+    /// [`kmetric_orthonormalize`]. `T` is computed as `G C` — not
+    /// `C^T G` — because per-block centering leaves `gz` symmetric only
+    /// up to rounding, and the orthonormalization's determinism contract
+    /// needs one canonical evaluation order.
+    pub fn z_assemble_block(
+        &self,
+        msgs: &[(usize, RoundABlock)],
+        rho2: f64,
+    ) -> (Matrix, Matrix) {
+        let block = self.block_ref();
+        let k = block.k;
+        let s_k = self.s_total(rho2);
+        let total: usize = self.contrib_sizes.iter().sum();
+        let offs = self.gz_offsets();
+        let mut c = Matrix::zeros(total, k);
+        for (pos, &l) in self.cset.iter().enumerate() {
+            let (alpha_l, bcol_l, rho_lk): (&Matrix, &Matrix, f64) = if l == self.id {
+                (&block.alpha, &block.b[self.col_of(self.id)], self.cfg.rho1)
+            } else {
+                let (_, msg) = msgs
+                    .iter()
+                    .find(|(from, _)| *from == l)
+                    .unwrap_or_else(|| panic!("missing block round-A message from {l}"));
+                (&msg.alpha, &msg.bcol, rho2)
+            };
+            let n_l = self.contrib_sizes[pos];
+            assert_eq!((alpha_l.rows(), alpha_l.cols()), (n_l, k), "block shape from {l}");
+            assert_eq!((bcol_l.rows(), bcol_l.cols()), (n_l, k), "bcol shape from {l}");
+            let mut scaled = bcol_l.clone();
+            for v in scaled.as_mut_slice() {
+                *v /= s_k;
+            }
+            let mut cl = par_matmul(&self.contrib_kinv[pos], &scaled);
+            let w = rho_lk / s_k;
+            for (ci, &ai) in cl.as_mut_slice().iter_mut().zip(alpha_l.as_slice()) {
+                *ci += w * ai;
+            }
+            c.set_block(offs[pos], 0, &cl);
+        }
+        let t = par_matmul(&self.gz, &c);
+        (c.transpose(), t.transpose())
+    }
+
+    /// Block z-update, scatter half: slice the orthonormalized Gram
+    /// images back into one `N_l x k` segment block per contributor
+    /// (cset order; the self segment is applied by the caller too).
+    pub fn z_scatter_block(&self, tt: &Matrix) -> Vec<(usize, RoundBBlock)> {
+        let k = self.block_ref().k;
+        assert_eq!(tt.rows(), k);
+        let offs = self.gz_offsets();
+        let mut out = Vec::with_capacity(self.cset.len());
+        for (pos, &l) in self.cset.iter().enumerate() {
+            let n_l = self.contrib_sizes[pos];
+            let segment = Matrix::from_fn(n_l, k, |i, col| tt[(col, offs[pos] + i)]);
+            out.push((l, RoundBBlock { segment }));
+        }
+        out
+    }
+
+    /// Deliver a block round-B segment: `phi(X_self)^T Z_from`.
+    pub fn receive_z_block(&mut self, from_z: usize, seg: &RoundBBlock) {
+        let col = self.col_of(from_z);
+        let block = self.block.as_mut().expect("init_block not called");
+        assert_eq!((seg.segment.rows(), seg.segment.cols()), (self.n, block.k));
+        block.p[col] = seg.segment.clone();
+    }
+
+    /// Block alpha-update + B-update: the (12)/(13) updates applied to
+    /// the whole `N x k` block at once through the parallel GEMM tier.
+    pub fn local_update_block(&mut self, rho2: f64) {
+        let rho = self.rho_vec(rho2);
+        let rho_sum: f64 = rho.iter().sum();
+        if self.a_inv.rows() != self.n
+            || (rho_sum - self.a_inv_rho_sum).abs() > 1e-12 * rho_sum.max(1.0)
+        {
+            self.rebuild_a_inv(rho_sum);
+        }
+        let (n, k) = {
+            let b = self.block_ref();
+            (self.n, b.k)
+        };
+        // RHS = sum_d (rho_d P_d - B_d), then ALPHA = A^+ RHS.
+        let mut rhs = Matrix::zeros(n, k);
+        {
+            let block = self.block_ref();
+            for (d, &r) in rho.iter().enumerate() {
+                for ((out, &p), &b) in rhs
+                    .as_mut_slice()
+                    .iter_mut()
+                    .zip(block.p[d].as_slice())
+                    .zip(block.b[d].as_slice())
+                {
+                    *out += r * p - b;
+                }
+            }
+        }
+        let alpha_next = par_matmul(&self.a_inv, &rhs);
+        let kalpha = par_matmul(&self.kc, &alpha_next);
+        let block = self.block.as_mut().expect("init_block not called");
+        for (d, &r) in rho.iter().enumerate() {
+            for ((b, &ka), &p) in block.b[d]
+                .as_mut_slice()
+                .iter_mut()
+                .zip(kalpha.as_slice())
+                .zip(block.p[d].as_slice())
+            {
+                *b += r * (ka - p);
+            }
+        }
+        block.alpha_prev = std::mem::replace(&mut block.alpha, alpha_next);
+    }
+
+    /// Block-wide relative infinity-norm change of the dual block in
+    /// the last update (the block analogue of [`NodeState::alpha_delta`],
+    /// feeding the same gossip stop rule).
+    pub fn block_alpha_delta(&self) -> f64 {
+        let block = self.block_ref();
+        let mut num = 0.0f64;
+        let mut den = 1.0f64;
+        for (a, b) in block.alpha.as_slice().iter().zip(block.alpha_prev.as_slice()) {
+            num = num.max((a - b).abs());
+            den = den.max(a.abs());
+        }
+        num / den
+    }
+
+    /// Bank every block column as a component (original dual
+    /// coordinates, K-metric Gram-Schmidt against the earlier columns —
+    /// in block mode `kc == kc0`, so this only orthogonalizes within
+    /// the block). Call once, after the block pass finishes.
+    pub fn bank_block(&mut self) {
+        let block = self.block.take().expect("init_block not called");
+        for c in 0..block.k {
+            self.bank_vec(block.alpha.col(c));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -782,6 +1051,65 @@ mod tests {
                 assert!((a - b).abs() < 1e-9, "kc {a} vs feature-space {b}");
             }
             assert!(node.alpha.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn block_iteration_orthonormalizes_and_stays_finite() {
+        let mut nodes = toy_nodes();
+        let k = 2;
+        for node in nodes.iter_mut() {
+            node.init_block(k);
+        }
+        let mut inbox: Vec<Vec<(usize, RoundABlock)>> = vec![Vec::new(); 3];
+        for node in &nodes {
+            for &to in &node.neighbors {
+                inbox[to].push((node.id, node.round_a_block_message(to)));
+            }
+        }
+        let mut batches: Vec<(usize, Vec<(usize, RoundBBlock)>)> = Vec::new();
+        for (host, node) in nodes.iter().enumerate() {
+            let (mut ct, mut tt) = node.z_assemble_block(&inbox[host], 10.0);
+            let kept = kmetric_orthonormalize(&mut ct, &mut tt);
+            assert_eq!(kept, k, "fresh seeds span k directions");
+            // <c_a, c_b>_G == delta via the co-updated images.
+            for a in 0..k {
+                for b in 0..k {
+                    let ip = dot(ct.row(a), tt.row(b));
+                    let want = if a == b { 1.0 } else { 0.0 };
+                    assert!((ip - want).abs() < 1e-8, "host {host}: <{a},{b}> = {ip}");
+                }
+            }
+            batches.push((host, node.z_scatter_block(&tt)));
+        }
+        for (host, outs) in batches {
+            for (to, seg) in outs {
+                nodes[to].receive_z_block(host, &seg);
+            }
+        }
+        for node in nodes.iter_mut() {
+            node.local_update_block(10.0);
+            let block = node.block_ref();
+            assert!(block.alpha.is_finite());
+            assert!(node.block_alpha_delta().is_finite());
+        }
+        // Banking exports k K-orthogonal components per node.
+        for node in nodes.iter_mut() {
+            node.bank_block();
+            assert_eq!(node.components.len(), k);
+        }
+    }
+
+    #[test]
+    fn block_warm_start_signs_are_deterministic() {
+        // Two constructions of the same node must seed the identical
+        // block (the sign fix is a pure function of the local Gram).
+        let a = toy_nodes();
+        let b = toy_nodes();
+        for (mut na, mut nb) in a.into_iter().zip(b) {
+            na.init_block(3);
+            nb.init_block(3);
+            assert_eq!(na.block_ref().alpha, nb.block_ref().alpha);
         }
     }
 

@@ -2,7 +2,7 @@
 //! the CLI launcher (`dkpca run --config file.json`). Every field has a
 //! paper-faithful default so `{}` is a valid config.
 
-use crate::admm::{AdmmConfig, Init, SetupExchange, ZNorm};
+use crate::admm::{AdmmConfig, Init, MultiKStrategy, SetupExchange, ZNorm};
 use crate::data::NoiseModel;
 use crate::kernels::Kernel;
 use crate::topology::{Graph, TopologyError};
@@ -172,6 +172,7 @@ impl ExperimentConfig {
             "data",
             "topo",
             "admm",
+            "multik",
             "noise",
             "compute",
             "parallel",
@@ -210,6 +211,13 @@ impl ExperimentConfig {
         }
         if let Some(a) = j.get("admm") {
             cfg.admm = parse_admm(a, cfg.admm.clone())?;
+        }
+        if let Some(m) = j.get("multik") {
+            // Top-level knob (not nested under "admm") because it
+            // selects the whole multik training schedule, not a solver
+            // constant — but it lands on AdmmConfig so the protocol
+            // engine sees one config.
+            cfg.admm.multik = parse_multik(m)?;
         }
         if let Some(c) = j.get("compute") {
             cfg.compute = parse_compute(c)?;
@@ -293,6 +301,14 @@ fn parse_compute(j: &Json) -> Result<ComputeSpec, String> {
         spec.serve_workers = Some(w);
     }
     Ok(spec)
+}
+
+fn parse_multik(j: &Json) -> Result<MultiKStrategy, String> {
+    match j.field("strategy")?.as_str() {
+        Some("block") => Ok(MultiKStrategy::Block),
+        Some("deflate") => Ok(MultiKStrategy::Deflate),
+        other => Err(format!("unknown multik strategy {other:?}")),
+    }
 }
 
 fn parse_noise(j: &Json) -> Result<NoiseModel, String> {
@@ -492,6 +508,18 @@ mod tests {
             let json = format!(r#"{{"admm": {{"setup": {{"kind": "rff", "dim": {bad}}}}}}}"#);
             assert!(ExperimentConfig::from_json(&json).is_err(), "dim {bad} accepted");
         }
+    }
+
+    #[test]
+    fn multik_strategy_parses() {
+        let dflt = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(dflt.admm.multik, MultiKStrategy::Block, "block is the default");
+        let d = ExperimentConfig::from_json(r#"{"multik": {"strategy": "deflate"}}"#).unwrap();
+        assert_eq!(d.admm.multik, MultiKStrategy::Deflate);
+        let b = ExperimentConfig::from_json(r#"{"multik": {"strategy": "block"}}"#).unwrap();
+        assert_eq!(b.admm.multik, MultiKStrategy::Block);
+        assert!(ExperimentConfig::from_json(r#"{"multik": {"strategy": "hotelling"}}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"multik": {}}"#).is_err());
     }
 
     #[test]

@@ -22,7 +22,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::admm::AdmmConfig;
+use crate::admm::{AdmmConfig, MultiKStrategy};
 use crate::backend::ComputeBackend;
 use crate::data::NoiseModel;
 use crate::kernels::Kernel;
@@ -65,8 +65,15 @@ pub struct RunReport {
 pub struct MultiRunReport {
     /// Per-node dual coefficients, one `N_j x k` matrix per node.
     pub alphas: Vec<Matrix>,
+    /// The multik training path that actually ran: `Block` when the
+    /// run trained all components in one simultaneous pass, `Deflate`
+    /// for the sequential reference schedule (always `Deflate` at
+    /// `k == 1`, where the scalar path runs regardless of config).
+    pub strategy: MultiKStrategy,
     /// Iterations each component pass ran — identical at every node
-    /// (asserted at join, exactly like the single-component rule).
+    /// (asserted at join, exactly like the single-component rule). One
+    /// entry per pass: `k` entries under `Deflate`, a single entry for
+    /// the one block pass under `Block`.
     pub per_component_iterations: Vec<usize>,
     /// Whether each pass stopped on the `tol` criterion.
     pub converged: Vec<bool>,
@@ -80,7 +87,9 @@ pub struct MultiRunReport {
     pub comm_floats_total: u64,
     /// Floats moved by the one-time setup exchange alone.
     pub setup_floats_total: u64,
-    /// Floats moved by the deflation exchanges between passes.
+    /// Floats moved by the deflation exchanges between passes. Exactly
+    /// 0 for `Block` runs: the block schedule has one pass and never
+    /// emits a `Payload::Converged` envelope.
     pub deflate_floats_total: u64,
     /// Iteration-protocol floats each node sent, in node order.
     pub per_node_sent: Vec<u64>,
@@ -207,8 +216,14 @@ pub fn run_decentralized_multik_traced(
         "nodes disagree on convergence: {converged_flags:?}"
     );
     let per_node_sent = (0..j).map(|i| stats.sent_by(i)).collect();
+    let strategy = if n_components >= 2 && cfg.multik == MultiKStrategy::Block {
+        MultiKStrategy::Block
+    } else {
+        MultiKStrategy::Deflate
+    };
     MultiRunReport {
         alphas,
+        strategy,
         per_component_iterations,
         converged,
         wall_secs: wall.elapsed().as_secs_f64(),

@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use crate::admm::SetupExchange;
+use crate::admm::{MultiKStrategy, SetupExchange};
 use crate::backend::ComputeBackend;
 use crate::config::{DataSpec, ExperimentConfig, TopoSpec};
 use crate::coordinator::{run_decentralized, run_decentralized_multik};
@@ -99,6 +99,9 @@ pub fn table(rows: &[CommRow]) -> Table {
 pub struct CommTrajEntry {
     /// Setup-exchange mode label ("raw" / "rff").
     pub setup: &'static str,
+    /// Multik training path that actually ran ("block" / "deflate" —
+    /// always "deflate" at k = 1, the scalar path).
+    pub strategy: &'static str,
     /// Components extracted.
     pub k: usize,
     /// Network size J.
@@ -111,19 +114,24 @@ pub struct CommTrajEntry {
     pub setup_floats_per_edge: f64,
     /// Iteration-protocol floats per directed edge per iteration.
     pub iter_floats_per_edge_per_iter: f64,
-    /// Deflation-exchange floats per directed edge (multik only).
+    /// Deflation-exchange floats per directed edge (deflate-strategy
+    /// multik only; exactly 0 for block runs, which never ship a
+    /// `Payload::Converged` envelope).
     pub deflate_floats_per_edge: f64,
 }
 
 /// Measure the trajectory on a ring (|Omega| = 2) through the threaded
 /// driver — every number comes off the fabric's per-phase counters,
-/// not a formula.
+/// not a formula. `strategy` selects the multik schedule; the emitted
+/// rows carry the strategy that actually ran (`Deflate` at k = 1).
+#[allow(clippy::too_many_arguments)]
 pub fn trajectory(
     nodes: usize,
     sample_counts: &[usize],
     iters: usize,
     ks: &[usize],
     rff_dim: usize,
+    strategy: MultiKStrategy,
     backend: Arc<dyn ComputeBackend>,
     seed: u64,
 ) -> Vec<CommTrajEntry> {
@@ -146,6 +154,7 @@ pub fn trajectory(
                 let env = build_env(&cfg);
                 let mut admm = paper_admm(seed, iters);
                 admm.setup = setup;
+                admm.multik = strategy;
                 let rep = run_decentralized_multik(
                     &env.xs,
                     &env.graph,
@@ -163,6 +172,10 @@ pub fn trajectory(
                     - rep.deflate_floats_total;
                 out.push(CommTrajEntry {
                     setup: label,
+                    strategy: match rep.strategy {
+                        MultiKStrategy::Block => "block",
+                        MultiKStrategy::Deflate => "deflate",
+                    },
                     k,
                     nodes,
                     samples_per_node: n,
@@ -187,11 +200,12 @@ pub fn trajectory_json(entries: &[CommTrajEntry]) -> String {
         .iter()
         .map(|e| {
             format!(
-                "{{\"setup\": \"{}\", \"k\": {}, \"nodes\": {}, \"n\": {}, \
-                 \"iters\": {}, \"setup_floats_per_edge\": {:.1}, \
+                "{{\"setup\": \"{}\", \"strategy\": \"{}\", \"k\": {}, \"nodes\": {}, \
+                 \"n\": {}, \"iters\": {}, \"setup_floats_per_edge\": {:.1}, \
                  \"iter_floats_per_edge_per_iter\": {:.1}, \
                  \"deflate_floats_per_edge\": {:.1}}}",
                 e.setup,
+                e.strategy,
                 e.k,
                 e.nodes,
                 e.samples_per_node,
@@ -215,9 +229,19 @@ mod tests {
         // Ring |Omega| = 2, M = 5 raw / D = 16 rff: per directed edge
         // the setup moves N*M (raw) or N*D (rff) floats, each iteration
         // 3N, each deflation transition N — measured, not derived.
-        let rows = trajectory(6, &[8], 2, &[1, 3], 16, Arc::new(NativeBackend), 5);
+        let rows = trajectory(
+            6,
+            &[8],
+            2,
+            &[1, 3],
+            16,
+            MultiKStrategy::Deflate,
+            Arc::new(NativeBackend),
+            5,
+        );
         assert_eq!(rows.len(), 4);
         for r in &rows {
+            assert_eq!(r.strategy, "deflate");
             assert_eq!(r.iters, 2 * r.k, "tol=0 runs max_iters per pass");
             assert_eq!(r.iter_floats_per_edge_per_iter, (3 * r.samples_per_node) as f64);
             let width = if r.setup == "raw" { 5 } else { 16 };
@@ -230,6 +254,36 @@ mod tests {
         let json = trajectory_json(&rows);
         assert!(json.starts_with("{\"bench\": \"comm_cost\""));
         assert_eq!(json.matches("\"setup\":").count(), 4, "one setup key per row");
+        assert_eq!(json.matches("\"strategy\": \"deflate\"").count(), 4);
+    }
+
+    #[test]
+    fn block_trajectory_reports_zero_deflation() {
+        // The satellite-6 closed form: a block run moves 3Nk floats per
+        // directed edge per iteration in ONE pass of max_iters, and its
+        // deflation counter is exactly 0 — not a stale deflation number.
+        let (n, iters, k) = (8usize, 2usize, 3usize);
+        let rows = trajectory(
+            6,
+            &[n],
+            iters,
+            &[k],
+            16,
+            MultiKStrategy::Block,
+            Arc::new(NativeBackend),
+            5,
+        );
+        assert_eq!(rows.len(), 2, "one row per setup mode");
+        for r in &rows {
+            assert_eq!(r.strategy, "block");
+            assert_eq!(r.iters, iters, "one pass covers all k components");
+            assert_eq!(r.iter_floats_per_edge_per_iter, (3 * n * k) as f64);
+            let width = if r.setup == "raw" { 5 } else { 16 };
+            assert_eq!(r.setup_floats_per_edge, (n * width) as f64);
+            assert_eq!(r.deflate_floats_per_edge, 0.0, "block runs never deflate");
+        }
+        let json = trajectory_json(&rows);
+        assert_eq!(json.matches("\"deflate_floats_per_edge\": 0.0").count(), 2);
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! TOPK — multi-component decentralized training: subspace affinity of
-//! the deflation-based top-k extraction vs the exact central top-k,
-//! against the local-kPCA baseline, with the per-component traffic
-//! accounting made explicit (each extra component costs one full ADMM
-//! pass plus one N-float deflation exchange per directed edge).
+//! the top-k extraction (block subspace iteration by default, or the
+//! sequential deflation reference) vs the exact central top-k, against
+//! the local-kPCA baseline, with the traffic accounting made explicit
+//! (deflation: one full ADMM pass per component plus one N-float
+//! exchange per directed edge per pass boundary; block: one pass of
+//! 3Nk-float iterations and no deflation exchanges at all).
 
-use crate::admm::AdmmConfig;
+use crate::admm::{AdmmConfig, MultiKStrategy};
 use crate::backend::ComputeBackend;
 use crate::central::{central_kpca, local_kpca_topk, mean_subspace_affinity};
 use crate::data::synth::{blob_centers, sample_blobs, BlobSpec};
@@ -32,12 +34,14 @@ pub struct TopkRow {
     pub train_secs: f64,
 }
 
-/// Sweep the component count on a shared blob mixture over a ring.
+/// Sweep the component count on a shared blob mixture over a ring,
+/// training with `strategy` (ignored at k = 1 — the scalar path).
 pub fn run(
     nodes: usize,
     samples_per_node: usize,
     ks: &[usize],
     iters: usize,
+    strategy: MultiKStrategy,
     backend: &dyn ComputeBackend,
     seed: u64,
 ) -> Vec<TopkRow> {
@@ -61,6 +65,7 @@ pub fn run(
                 tol: 1e-8,
                 seed,
                 z_norm: crate::admm::ZNorm::Sphere,
+                multik: strategy,
                 ..Default::default()
             };
             let mut solver = MultiKpcaSolver::new_with_backend(
@@ -96,7 +101,7 @@ pub fn run(
 /// Render the sweep as a report table.
 pub fn table(rows: &[TopkRow]) -> Table {
     let mut t = Table::new(
-        "Top-k decentralized components (deflation): subspace affinity vs central top-k",
+        "Top-k decentralized components: subspace affinity vs central top-k",
         &["k", "aff_dkpca", "aff_local", "iters_total", "comm_floats", "train_s"],
     );
     for r in rows {
@@ -119,16 +124,18 @@ mod tests {
 
     #[test]
     fn sweep_reports_finite_affinities_and_monotone_traffic() {
-        let rows = run(5, 10, &[1, 2], 20, &NativeBackend, 7);
-        assert_eq!(rows.len(), 2);
-        for r in &rows {
-            assert!(r.affinity_dkpca.is_finite() && r.affinity_dkpca > 0.0);
-            assert!(r.affinity_local.is_finite() && r.affinity_local > 0.0);
-            assert!(r.affinity_dkpca <= 1.0 + 1e-9);
+        for strategy in [MultiKStrategy::Block, MultiKStrategy::Deflate] {
+            let rows = run(5, 10, &[1, 2], 20, strategy, &NativeBackend, 7);
+            assert_eq!(rows.len(), 2);
+            for r in &rows {
+                assert!(r.affinity_dkpca.is_finite() && r.affinity_dkpca > 0.0);
+                assert!(r.affinity_local.is_finite() && r.affinity_local > 0.0);
+                assert!(r.affinity_dkpca <= 1.0 + 1e-9);
+            }
+            assert!(
+                rows[1].comm_floats > rows[0].comm_floats,
+                "each extra component must cost traffic ({strategy:?})"
+            );
         }
-        assert!(
-            rows[1].comm_floats > rows[0].comm_floats,
-            "each extra component must cost traffic"
-        );
     }
 }

@@ -16,6 +16,7 @@ pub mod eigen;
 pub mod gemm;
 pub mod matrix;
 pub mod ops;
+pub mod ortho;
 pub mod pinv;
 pub mod pool;
 pub mod power;
@@ -24,5 +25,6 @@ pub use cholesky::Cholesky;
 pub use eigen::{eigen_sym, top_eig, EigenSym};
 pub use gemm::{matmul, matmul_into, matmul_nt, par_matmul, par_matmul_into, par_matmul_nt};
 pub use matrix::Matrix;
+pub use ortho::kmetric_orthonormalize;
 pub use pinv::pinv_sym;
 pub use power::{power_iteration, PowerResult};

@@ -1,0 +1,153 @@
+//! K-metric block orthonormalization — the per-iteration conditioning
+//! kernel of the block (simultaneous subspace iteration) multik mode.
+//!
+//! Directions live in dual coordinates: the RKHS inner product of two
+//! dual blocks `c_i`, `c_j` over a Gram `G` is `c_i^T G c_j`. The block
+//! z-step therefore carries each direction `c` together with its image
+//! `t = G c`, so every metric inner product is a plain dot product
+//! `dot(c_i, t_j)` and `G` is never re-multiplied inside the loop.
+//!
+//! The routine is a modified Gram–Schmidt over rows (each direction is
+//! one contiguous row of a `k x m` matrix): strictly sequential scalar
+//! arithmetic with a fixed operation order, so the result is
+//! bit-identical regardless of worker-pool width or transport — the
+//! block protocol's determinism argument leans on this (DESIGN.md
+//! §Block multik).
+
+use super::matrix::Matrix;
+use super::ops::dot;
+
+/// Relative floor below which a direction is declared dependent on the
+/// earlier ones and dropped (its rows zeroed) instead of normalized.
+const DROP_RCOND: f64 = 1e-12;
+
+/// Orthonormalize the `k` row-directions of `ct` in the metric implied
+/// by `tt` (`tt = G * C`, row-for-row), co-updating `tt` so the
+/// invariant `tt == G * ct` survives every elimination and scaling.
+/// Rows whose remaining metric norm falls below `DROP_RCOND` times the
+/// largest initial norm are zeroed deterministically. Returns the
+/// number of directions kept.
+pub fn kmetric_orthonormalize(ct: &mut Matrix, tt: &mut Matrix) -> usize {
+    let (k, m) = (ct.rows(), ct.cols());
+    assert_eq!((tt.rows(), tt.cols()), (k, m), "ct/tt shape mismatch");
+    if k == 0 || m == 0 {
+        return 0;
+    }
+    // Scale reference from the *initial* metric norms: a later column
+    // that MGS shrinks to noise must be judged against where the block
+    // started, not against its own collapsed remainder.
+    let mut scale0 = 1.0f64;
+    for j in 0..k {
+        let n2 = dot(&ct.as_slice()[j * m..(j + 1) * m], &tt.as_slice()[j * m..(j + 1) * m]);
+        scale0 = scale0.max(n2.abs());
+    }
+    let mut kept = vec![false; k];
+    for j in 0..k {
+        for i in 0..j {
+            if !kept[i] {
+                continue;
+            }
+            // w = <c_i, c_j>_K = dot(c_i, t_j); eliminate from both the
+            // direction and its Gram image.
+            let w = dot(
+                &ct.as_slice()[i * m..(i + 1) * m],
+                &tt.as_slice()[j * m..(j + 1) * m],
+            );
+            eliminate_row(ct.as_mut_slice(), m, i, j, w);
+            eliminate_row(tt.as_mut_slice(), m, i, j, w);
+        }
+        let n2 = dot(&ct.as_slice()[j * m..(j + 1) * m], &tt.as_slice()[j * m..(j + 1) * m]);
+        if n2 <= scale0 * DROP_RCOND {
+            ct.as_mut_slice()[j * m..(j + 1) * m].fill(0.0);
+            tt.as_mut_slice()[j * m..(j + 1) * m].fill(0.0);
+        } else {
+            let inv = 1.0 / n2.sqrt();
+            for v in &mut ct.as_mut_slice()[j * m..(j + 1) * m] {
+                *v *= inv;
+            }
+            for v in &mut tt.as_mut_slice()[j * m..(j + 1) * m] {
+                *v *= inv;
+            }
+            kept[j] = true;
+        }
+    }
+    kept.iter().filter(|&&b| b).count()
+}
+
+/// `row[j] -= w * row[i]` on the flat storage of a `_ x m` row-major
+/// matrix (i < j, so the split borrow is always valid).
+fn eliminate_row(data: &mut [f64], m: usize, i: usize, j: usize, w: f64) {
+    let (lo, hi) = data.split_at_mut(j * m);
+    let src = &lo[i * m..(i + 1) * m];
+    let dst = &mut hi[..m];
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d -= w * s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::matvec;
+
+    /// A small SPD metric with non-trivial off-diagonal structure.
+    fn metric(m: usize) -> Matrix {
+        Matrix::from_fn(m, m, |i, j| {
+            let base = if i == j { 2.0 + i as f64 * 0.5 } else { 0.0 };
+            base + 0.3 / (1.0 + (i as f64 - j as f64).abs())
+        })
+    }
+
+    fn images(g: &Matrix, ct: &Matrix) -> Matrix {
+        let (k, m) = (ct.rows(), ct.cols());
+        Matrix::from_fn(k, m, |j, i| {
+            matvec(g, &ct.as_slice()[j * m..(j + 1) * m].to_vec())[i]
+        })
+    }
+
+    #[test]
+    fn rows_become_k_orthonormal_and_images_stay_consistent() {
+        let m = 7;
+        let g = metric(m);
+        let mut ct = Matrix::from_fn(3, m, |j, i| ((j * 13 + i * 7) % 5) as f64 - 2.0 + 0.1 * j as f64);
+        let mut tt = images(&g, &ct);
+        let kept = kmetric_orthonormalize(&mut ct, &mut tt);
+        assert_eq!(kept, 3);
+        // <c_i, c_j>_G == delta_ij, checked against a fresh G*c.
+        let fresh = images(&g, &ct);
+        for a in 0..3 {
+            for b in 0..3 {
+                let ip = dot(&ct.as_slice()[a * m..(a + 1) * m], &fresh.as_slice()[b * m..(b + 1) * m]);
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((ip - want).abs() < 1e-10, "<{a},{b}>_G = {ip}");
+            }
+        }
+        // The co-updated images match a recomputed G*C.
+        for (u, v) in tt.as_slice().iter().zip(fresh.as_slice()) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn dependent_direction_is_dropped_and_zeroed() {
+        let m = 6;
+        let g = metric(m);
+        let mut ct = Matrix::from_fn(3, m, |j, i| match j {
+            0 => (i as f64 + 1.0).sin(),
+            1 => 2.0 * (i as f64 + 1.0).sin(), // multiple of row 0
+            _ => (i as f64).cos(),
+        });
+        let mut tt = images(&g, &ct);
+        let kept = kmetric_orthonormalize(&mut ct, &mut tt);
+        assert_eq!(kept, 2);
+        assert!(ct.as_slice()[m..2 * m].iter().all(|&v| v == 0.0));
+        assert!(tt.as_slice()[m..2 * m].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn empty_block_is_a_no_op() {
+        let mut ct = Matrix::zeros(0, 4);
+        let mut tt = Matrix::zeros(0, 4);
+        assert_eq!(kmetric_orthonormalize(&mut ct, &mut tt), 0);
+    }
+}

@@ -73,6 +73,7 @@ fn print_usage() {
          \u{20}             --telemetry <out.json> --trace-timeline <out.json>\n\
          sweep flags:  --experiment <{SWEEP_EXPERIMENTS}>\n\
          \u{20}             --full --pjrt --seed <S> --threads <T>\n\
+         \u{20}             --multik <block|deflate> (topk training schedule)\n\
          central flags: --nodes <J> --samples <N> --seed <S> --threads <T>\n\
          analyze flags: <timeline.json> [--check]\n\
          info flags:   --config <file.json> --metrics\n\
@@ -348,10 +349,25 @@ fn cmd_sweep(args: &[String]) -> i32 {
             println!("{}", experiments::rff_sweep::table(&rows));
         }
         "topk" => {
+            let strategy = match flag(args, "--multik") {
+                None | Some("block") => dkpca::admm::MultiKStrategy::Block,
+                Some("deflate") => dkpca::admm::MultiKStrategy::Deflate,
+                Some(other) => {
+                    eprintln!("--multik must be block|deflate, got '{other}'");
+                    return 2;
+                }
+            };
             let ks: &[usize] = if full { &[1, 2, 3, 4, 6] } else { &[1, 2, 3] };
             let (nodes, samples, iters) = if full { (10, 40, 200) } else { (6, 16, 80) };
-            let rows =
-                experiments::topk::run(nodes, samples, ks, iters, backend.as_ref(), seed);
+            let rows = experiments::topk::run(
+                nodes,
+                samples,
+                ks,
+                iters,
+                strategy,
+                backend.as_ref(),
+                seed,
+            );
             println!("{}", experiments::topk::table(&rows));
         }
         "ablation" => {

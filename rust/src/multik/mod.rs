@@ -1,15 +1,23 @@
-//! S13 — multi-component decentralized training: top-k subspaces by
-//! Hotelling deflation of the consensus-ADMM pass.
+//! S13 — multi-component decentralized training: top-k subspaces,
+//! either as ONE simultaneous block pass (`MultiKStrategy::Block`, the
+//! default) or by Hotelling deflation of the consensus-ADMM pass
+//! (`MultiKStrategy::Deflate`, the sequential reference).
 //!
-//! Alg. 1 extracts the leading projection direction only. This
-//! subsystem runs K successive passes: after pass `c` converges, every
+//! Alg. 1 extracts the leading projection direction only. The deflate
+//! strategy runs K successive passes: after pass `c` converges, every
 //! node deflates its local and cross Gram blocks with the consensus
 //! projection in dual coordinates (see
 //! [`crate::admm::NodeState::deflate_and_reseed`]), re-seeds, and runs the next
 //! pass on the deflated operator — whose top direction is the next
-//! principal component. Each node accumulates a k-column `alpha`
-//! matrix that exports through the existing model artifact, serve
-//! engine, and RFF projector unchanged.
+//! principal component. The block strategy instead carries the whole
+//! `N x k` dual block through a single pass — subspace iteration with
+//! a per-iteration K-metric orthonormalization on the z-hosts (see
+//! [`crate::linalg::kmetric_orthonormalize`] and DESIGN.md §Block
+//! multik) — eliminating the K sequential passes, the inter-pass
+//! `Payload::Converged` exchanges, and the Gram deflation rebuilds.
+//! Either way each node accumulates a k-column `alpha` matrix that
+//! exports through the existing model artifact, serve engine, and RFF
+//! projector unchanged.
 //!
 //! Since the protocol engine refactor, the whole pass/deflate/bank
 //! protocol lives in `protocol::NodeProgram`; [`MultiKpcaSolver`] is
@@ -21,7 +29,7 @@
 
 use std::sync::Arc;
 
-use crate::admm::{AdmmConfig, NodeState, SetupExchange};
+use crate::admm::{AdmmConfig, MultiKStrategy, NodeState, SetupExchange};
 use crate::backend::ComputeBackend;
 use crate::data::NoiseModel;
 use crate::kernels::{Kernel, RffMap};
@@ -38,13 +46,18 @@ pub struct MultiKpcaResult {
     /// earlier columns — see `NodeState::bank_component`), not the raw
     /// deflated-coordinate alpha.
     pub alphas: Vec<Matrix>,
-    /// Iterations each component pass ran (the decentralized stop rule
-    /// decides per pass).
+    /// The multik training path that actually ran (`Deflate` at
+    /// `k == 1`, where the scalar path runs regardless of config).
+    pub strategy: MultiKStrategy,
+    /// Iterations each pass ran (the decentralized stop rule decides
+    /// per pass): `k` entries under `Deflate`, one entry for the
+    /// single block pass under `Block`.
     pub per_component_iterations: Vec<usize>,
     /// Whether each pass stopped on the `tol` criterion.
     pub converged: Vec<bool>,
     /// Iteration-protocol floats (§4.2) plus the `N` floats per
-    /// directed edge each deflation exchange moves.
+    /// directed edge each deflation exchange moves (block runs have no
+    /// deflation exchanges — the deflation term is exactly 0 there).
     pub comm_floats: u64,
     /// One-time setup-exchange floats (see `DkpcaResult::setup_floats`).
     pub setup_floats: u64,
@@ -115,19 +128,26 @@ impl MultiKpcaSolver {
         self.net.nodes()
     }
 
-    /// Run all K passes (solve, bank the converged component, exchange
-    /// converged alphas — N floats per directed edge — deflate,
-    /// re-seed, repeat; all inside the protocol engine). Single-use:
-    /// deflation rewrites the Gram state, so a second call would
-    /// extract components of the already-deflated operator while
-    /// looking like a fresh run — build a new solver instead (panics on
-    /// reuse).
+    /// Run the training passes — one simultaneous block pass under
+    /// `MultiKStrategy::Block`, or all K deflated passes (solve, bank
+    /// the converged component, exchange converged alphas — N floats
+    /// per directed edge — deflate, re-seed, repeat) under
+    /// `MultiKStrategy::Deflate`; all inside the protocol engine.
+    /// Single-use: deflation rewrites the Gram state and banking
+    /// consumes the block, so a second call would not be a fresh run —
+    /// build a new solver instead (panics on reuse).
     pub fn run(&mut self, backend: &dyn ComputeBackend) -> MultiKpcaResult {
         assert!(!self.ran, "MultiKpcaSolver::run is single-use: deflation consumed the Grams");
         self.ran = true;
         self.net.run(backend, |_, _| {});
+        let strategy = if self.k >= 2 && self.net.config().multik == MultiKStrategy::Block {
+            MultiKStrategy::Block
+        } else {
+            MultiKStrategy::Deflate
+        };
         MultiKpcaResult {
             alphas: self.alpha_matrices(),
+            strategy,
             per_component_iterations: self.net.per_component_iterations(),
             converged: self.net.converged_flags(),
             comm_floats: self.net.comm_floats(),
@@ -271,6 +291,7 @@ mod tests {
             max_iters: 500,
             tol: 1e-6,
             z_norm: crate::admm::ZNorm::Sphere,
+            multik: MultiKStrategy::Deflate,
             ..Default::default()
         };
         let mut solver = MultiKpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0, 2);
@@ -336,9 +357,14 @@ mod tests {
         let (j, n, iters, k) = (5usize, 8usize, 2usize, 3usize);
         let xs = blob_network(j, n, 17);
         let graph = Graph::ring(j, 1);
-        let cfg = AdmmConfig { max_iters: iters, ..Default::default() };
+        let cfg = AdmmConfig {
+            max_iters: iters,
+            multik: MultiKStrategy::Deflate,
+            ..Default::default()
+        };
         let mut solver = MultiKpcaSolver::new(&xs, &graph, &K, &cfg, NoiseModel::None, 0, k);
         let res = solver.run(&NativeBackend);
+        assert_eq!(res.strategy, MultiKStrategy::Deflate);
         let directed = (j * 2) as u64;
         let per_iter = directed * (3 * n) as u64;
         let deflate = directed * n as u64;
@@ -346,5 +372,23 @@ mod tests {
             res.comm_floats,
             per_iter * (iters * k) as u64 + deflate * (k - 1) as u64
         );
+    }
+
+    #[test]
+    fn block_traffic_accounted() {
+        // The block pass moves 3Nk floats per directed edge per
+        // iteration (ABlock 2Nk + BBlock Nk) for ONE pass of `iters`
+        // iterations — and exactly zero deflation floats.
+        let (j, n, iters, k) = (5usize, 8usize, 2usize, 3usize);
+        let xs = blob_network(j, n, 17);
+        let cfg = AdmmConfig { max_iters: iters, ..Default::default() };
+        let mut solver =
+            MultiKpcaSolver::new(&xs, &Graph::ring(j, 1), &K, &cfg, NoiseModel::None, 0, k);
+        let res = solver.run(&NativeBackend);
+        assert_eq!(res.strategy, MultiKStrategy::Block);
+        assert_eq!(res.per_component_iterations, vec![iters], "one pass covers all k");
+        let directed = (j * 2) as u64;
+        let per_iter = directed * (3 * n * k) as u64;
+        assert_eq!(res.comm_floats, per_iter * iters as u64, "no deflation term");
     }
 }

@@ -115,6 +115,9 @@ pub mod names {
     pub const EV_PHASE_ROUND_B: &str = "phase.round_b";
     /// Timeline event: deflation duration (`B`/`E`).
     pub const EV_PHASE_DEFLATE: &str = "phase.deflate";
+    /// Timeline event: K-metric block orthonormalization duration
+    /// (`B`/`E`, block multik only).
+    pub const EV_PHASE_ORTHO: &str = "phase.ortho";
     /// Timeline event: transport park interval (`X`).
     pub const EV_PARK: &str = "park";
     /// Timeline event: envelope emission instant.

@@ -17,9 +17,12 @@ pub const PHASE_ROUND_A: usize = 1;
 pub const PHASE_ROUND_B: usize = 2;
 /// Phase index: Hotelling deflation between component passes.
 pub const PHASE_DEFLATE: usize = 3;
+/// Phase index: per-iteration K-metric block orthonormalization on the
+/// z-host (block multik only; compute-only, no wire phase).
+pub const PHASE_ORTHO: usize = 4;
 
 /// Phase names in index order (JSON keys and report labels).
-pub const PHASE_NAMES: [&str; 4] = ["setup", "round_a", "round_b", "deflate"];
+pub const PHASE_NAMES: [&str; 5] = ["setup", "round_a", "round_b", "deflate", "ortho"];
 
 /// Accumulated timing for one protocol phase on one node: how many
 /// times it ran, how long its compute sections took (wall and
@@ -94,7 +97,7 @@ pub const TRACE_MAX_ITERS: usize = 100_000;
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct NodeTrace {
     /// Per-phase spans, indexed by the `PHASE_*` constants.
-    pub phases: [PhaseSpan; 4],
+    pub phases: [PhaseSpan; 5],
     /// Convergence trace rows in iteration order.
     pub iters: Vec<IterTrace>,
     /// Rows not stored because the trace hit [`TRACE_MAX_ITERS`].

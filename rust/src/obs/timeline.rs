@@ -44,7 +44,9 @@ use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::obs::names;
-use crate::obs::span::{NodeTrace, PHASE_NAMES, PHASE_ROUND_A, PHASE_ROUND_B, PHASE_SETUP};
+use crate::obs::span::{
+    NodeTrace, PHASE_NAMES, PHASE_ORTHO, PHASE_ROUND_A, PHASE_ROUND_B, PHASE_SETUP,
+};
 use crate::util::json::Json;
 
 /// Per-track ring capacity. 65 536 events ≈ 2.5 MB per track at the
@@ -569,6 +571,7 @@ pub fn chrome_trace(snap: &TimelineSnapshot, traces: &[NodeTrace]) -> Json {
                             PHASE_SETUP => names::EV_PHASE_SETUP,
                             PHASE_ROUND_A => names::EV_PHASE_ROUND_A,
                             PHASE_ROUND_B => names::EV_PHASE_ROUND_B,
+                            PHASE_ORTHO => names::EV_PHASE_ORTHO,
                             _ => names::EV_PHASE_DEFLATE,
                         },
                         tid,
@@ -582,6 +585,7 @@ pub fn chrome_trace(snap: &TimelineSnapshot, traces: &[NodeTrace]) -> Json {
                             PHASE_SETUP => names::EV_PHASE_SETUP,
                             PHASE_ROUND_A => names::EV_PHASE_ROUND_A,
                             PHASE_ROUND_B => names::EV_PHASE_ROUND_B,
+                            PHASE_ORTHO => names::EV_PHASE_ORTHO,
                             _ => names::EV_PHASE_DEFLATE,
                         },
                         tid,

@@ -2,7 +2,7 @@
 //! from `coordinator::message` when the protocol engine became its own
 //! subsystem — the coordinator re-exports these for compatibility).
 
-use crate::admm::{RoundA, RoundB};
+use crate::admm::{RoundA, RoundABlock, RoundB, RoundBBlock};
 use crate::linalg::Matrix;
 
 /// Protocol phase tag (messages are matched by (iter, phase)).
@@ -48,6 +48,13 @@ pub enum Payload {
     A(RoundA, Vec<f64>),
     /// Round-B protocol message (consensus update inputs).
     B(RoundB),
+    /// Block-mode round-A message (`MultiKStrategy::Block`): the whole
+    /// `N x k` dual block plus the B block for the target constraint,
+    /// with the same gossip window as [`Payload::A`] — `2 N k` floats
+    /// per directed edge per iteration instead of `2 N` per pass.
+    ABlock(RoundABlock, Vec<f64>),
+    /// Block-mode round-B message: the `N_to x k` segment block.
+    BBlock(RoundBBlock),
     /// The sender's converged alpha for the component that just
     /// finished — the multik deflation exchange (`N` floats per
     /// directed edge per pass transition), so every neighbor deflates
@@ -64,6 +71,12 @@ impl Envelope {
                 (a.alpha.len() + a.bcol.len() + gossip.len()) as u64
             }
             Payload::B(b) => b.segment.len() as u64,
+            Payload::ABlock(a, gossip) => {
+                (a.alpha.rows() * a.alpha.cols()
+                    + a.bcol.rows() * a.bcol.cols()
+                    + gossip.len()) as u64
+            }
+            Payload::BBlock(b) => (b.segment.rows() * b.segment.cols()) as u64,
             Payload::Converged(alpha) => alpha.len() as u64,
         }
     }
@@ -110,6 +123,28 @@ mod tests {
             payload: Payload::Features(Matrix::zeros(4, 8)),
         };
         assert_eq!(z.floats(), 32, "feature payloads count N*D");
+    }
+
+    #[test]
+    fn block_floats_accounted() {
+        // ABlock = 2 N k + gossip window; BBlock = N k.
+        let a = Envelope {
+            from: 0,
+            iter: 2,
+            phase: Phase::RoundA,
+            payload: Payload::ABlock(
+                RoundABlock { alpha: Matrix::zeros(5, 3), bcol: Matrix::zeros(5, 3) },
+                vec![0.0; 2],
+            ),
+        };
+        assert_eq!(a.floats(), 32, "2*5*3 block floats + 2 gossip");
+        let b = Envelope {
+            from: 1,
+            iter: 2,
+            phase: Phase::RoundB,
+            payload: Payload::BBlock(RoundBBlock { segment: Matrix::zeros(4, 3) }),
+        };
+        assert_eq!(b.floats(), 12, "segment block moves N*k floats");
     }
 
     #[test]

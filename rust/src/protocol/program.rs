@@ -2,12 +2,20 @@
 //! paper's Alg. 1 node program (plus the multik extension), shared by
 //! every driver.
 //!
-//! Phases:
+//! Phases (`MultiKStrategy::Deflate`, the PR 3 reference schedule):
 //!
 //! ```text
 //! Setup -> [ RoundA -> RoundB -> stop-check ]* -> bank -+-> Deflate -> next pass
 //!                                                       +-> Done (last pass)
 //! ```
+//!
+//! Under `MultiKStrategy::Block` (the default at `n_components >= 2`)
+//! there is exactly ONE pass: every round-A/round-B exchange carries
+//! the whole `N x k` dual block, the z-hosts K-orthonormalize the
+//! block each iteration (the compute-only `ortho` span between round A
+//! and round B), and the pass banks all `k` components at once — no
+//! `Deflate` wire phase, no Gram rebuilds, no `Payload::Converged`
+//! traffic.
 //!
 //! The program is a pure message-driven step function: [`NodeProgram::
 //! deliver`] stashes incoming [`Envelope`]s, [`NodeProgram::poll`]
@@ -26,12 +34,12 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use crate::admm::{AdmmConfig, NodeState, RoundA};
+use crate::admm::{AdmmConfig, MultiKStrategy, NodeState, RoundA, RoundABlock};
 use crate::backend::ComputeBackend;
 use crate::kernels::Kernel;
-use crate::linalg::Matrix;
+use crate::linalg::{kmetric_orthonormalize, Matrix};
 use crate::obs;
-use crate::obs::span::{PHASE_DEFLATE, PHASE_ROUND_A, PHASE_ROUND_B, PHASE_SETUP};
+use crate::obs::span::{PHASE_DEFLATE, PHASE_ORTHO, PHASE_ROUND_A, PHASE_ROUND_B, PHASE_SETUP};
 use crate::obs::{IterTrace, NodeTrace};
 use crate::util::time::thread_cpu_secs;
 
@@ -273,6 +281,14 @@ impl NodeProgram {
         self.inbox.push(env);
     }
 
+    /// Whether this run trains all components as one simultaneous
+    /// block (single pass, block payloads, per-iteration K-metric
+    /// orthonormalization). `k == 1` always takes the scalar path —
+    /// the block machinery is pure overhead there.
+    fn block_mode(&self) -> bool {
+        self.n_components >= 2 && self.cfg.multik == MultiKStrategy::Block
+    }
+
     /// Round A/B envelopes of pass `comp` use iteration numbers in a
     /// disjoint band so they can never match another pass's phase.
     fn base(&self) -> usize {
@@ -396,7 +412,7 @@ impl NodeProgram {
                             .phase_begin(self.id, PHASE_SETUP, self.comp, self.t);
                     }
                     let t0 = thread_cpu_secs();
-                    self.node = Some(NodeState::new(
+                    let mut state = NodeState::new(
                         self.id,
                         &x_own,
                         self.nbrs.clone(),
@@ -404,7 +420,11 @@ impl NodeProgram {
                         &self.kernel,
                         &self.cfg,
                         backend,
-                    ));
+                    );
+                    if self.block_mode() {
+                        state.init_block(self.n_components);
+                    }
+                    self.node = Some(state);
                     let cpu = thread_cpu_secs() - t0;
                     self.compute_secs += cpu;
                     if let Some(c) = clock {
@@ -422,6 +442,10 @@ impl NodeProgram {
                     }
                     let msgs = self.take(tag, Phase::RoundA);
                     self.record_recvs(&msgs);
+                    if self.block_mode() {
+                        self.round_a_block(msgs, out);
+                        continue;
+                    }
                     // Fold neighbor windows into ours (positionally —
                     // all nodes' windows cover the same iterations).
                     let mut inbox_a: Vec<(usize, RoundA)> = Vec::with_capacity(msgs.len());
@@ -490,6 +514,10 @@ impl NodeProgram {
                     }
                     let msgs = self.take(tag, Phase::RoundB);
                     self.record_recvs(&msgs);
+                    if self.block_mode() {
+                        self.round_b_block(msgs, out);
+                        continue;
+                    }
                     let rho2 = self.cfg.rho2_at(self.t);
                     let node = self.node.as_mut().expect("setup done before round B");
                     for e in msgs {
@@ -596,15 +624,15 @@ impl NodeProgram {
         }
         let window: Vec<f64> = self.gossip.iter().copied().collect();
         let tag = self.base() + self.t;
+        let block = self.block_mode();
         let node = self.node.as_ref().expect("setup done before iterating");
         for &to in &self.nbrs {
-            let msg = node.round_a_message(to);
-            let env = Envelope {
-                from: self.id,
-                iter: tag,
-                phase: Phase::RoundA,
-                payload: Payload::A(msg, window.clone()),
+            let payload = if block {
+                Payload::ABlock(node.round_a_block_message(to), window.clone())
+            } else {
+                Payload::A(node.round_a_message(to), window.clone())
             };
+            let env = Envelope { from: self.id, iter: tag, phase: Phase::RoundA, payload };
             emit(out, to, env);
         }
         self.pending_stop = false;
@@ -612,8 +640,22 @@ impl NodeProgram {
     }
 
     /// Bank the converged component; ship the deflation exchange or
-    /// finish the program after the last pass.
+    /// finish the program after the last pass. Block mode banks the
+    /// whole subspace from its single pass and finishes immediately —
+    /// there is no deflation exchange to ship.
     fn finish_pass(&mut self, out: &mut Vec<Outbound>) {
+        if self.block_mode() {
+            let node = self.node.as_mut().expect("setup done before banking");
+            node.bank_block();
+            for c in 0..self.n_components {
+                self.alpha_cols.push(node.components[c].clone());
+            }
+            self.iterations.push(self.t);
+            self.converged.push(self.pass_converged);
+            self.iter_secs = self.iter_clock.map_or(0.0, |c| c.elapsed().as_secs_f64());
+            self.step = Step::Done;
+            return;
+        }
         let node = self.node.as_mut().expect("setup done before banking");
         node.bank_component();
         self.alpha_cols.push(node.components[self.comp].clone());
@@ -633,6 +675,132 @@ impl NodeProgram {
         } else {
             self.iter_secs = self.iter_clock.map_or(0.0, |c| c.elapsed().as_secs_f64());
             self.step = Step::Done;
+        }
+    }
+
+    /// Block-mode round A: fold the gossip windows, take the stop
+    /// decision, assemble the block z-step (round_a span), then
+    /// K-orthonormalize the block and scatter the segments (the
+    /// compute-only `ortho` span). Mirrors the scalar arm one-for-one
+    /// so both strategies share the stop rule and the span invariants
+    /// (exactly one round_a compute span per iteration).
+    fn round_a_block(&mut self, msgs: Vec<Envelope>, out: &mut Vec<Outbound>) {
+        let mut inbox_a: Vec<(usize, RoundABlock)> = Vec::with_capacity(msgs.len());
+        for e in msgs {
+            match e.payload {
+                Payload::ABlock(a, w) => {
+                    debug_assert_eq!(w.len(), self.gossip.len());
+                    for (mine, theirs) in self.gossip.iter_mut().zip(&w) {
+                        if *theirs > *mine {
+                            *mine = *theirs;
+                        }
+                    }
+                    inbox_a.push((e.from, a));
+                }
+                _ => unreachable!("block round-A phase carries Payload::ABlock"),
+            }
+        }
+        self.last_gossip_head = if self.cfg.tol > 0.0 && self.t >= self.stop_lag {
+            self.gossip.front().copied().unwrap_or(f64::INFINITY)
+        } else {
+            f64::INFINITY
+        };
+        self.pending_stop = self.last_gossip_head < self.cfg.tol;
+        let rho2 = self.cfg.rho2_at(self.t);
+        let tag = self.base() + self.t;
+        let node = self.node.as_mut().expect("setup done before round A");
+        let clock = obs::maybe_now();
+        if clock.is_some() {
+            obs::timeline::recorder().phase_begin(self.id, PHASE_ROUND_A, self.comp, self.t);
+        }
+        let tz = thread_cpu_secs();
+        let (mut ct, mut tt) = node.z_assemble_block(&inbox_a, rho2);
+        let cpu = thread_cpu_secs() - tz;
+        self.compute_secs += cpu;
+        if let Some(c) = clock {
+            self.trace.phases[PHASE_ROUND_A].add_compute(c.elapsed().as_secs_f64(), cpu);
+            obs::timeline::recorder().phase_end(self.id, PHASE_ROUND_A, self.comp, self.t);
+        }
+        let clock = obs::maybe_now();
+        if clock.is_some() {
+            obs::timeline::recorder().phase_begin(self.id, PHASE_ORTHO, self.comp, self.t);
+        }
+        let torth = thread_cpu_secs();
+        kmetric_orthonormalize(&mut ct, &mut tt);
+        let segments = node.z_scatter_block(&tt);
+        let cpu = thread_cpu_secs() - torth;
+        self.compute_secs += cpu;
+        if let Some(c) = clock {
+            self.trace.phases[PHASE_ORTHO].add_compute(c.elapsed().as_secs_f64(), cpu);
+            obs::timeline::recorder().phase_end(self.id, PHASE_ORTHO, self.comp, self.t);
+        }
+        for (to, seg) in segments {
+            if to == self.id {
+                node.receive_z_block(self.id, &seg);
+            } else {
+                let env = Envelope {
+                    from: self.id,
+                    iter: tag,
+                    phase: Phase::RoundB,
+                    payload: Payload::BBlock(seg),
+                };
+                emit(out, to, env);
+            }
+        }
+        self.step = Step::RoundB;
+    }
+
+    /// Block-mode round B: apply the z-host segment blocks, run the
+    /// block local update, and maintain the gossip window off the
+    /// block-wide alpha delta.
+    fn round_b_block(&mut self, msgs: Vec<Envelope>, out: &mut Vec<Outbound>) {
+        let rho2 = self.cfg.rho2_at(self.t);
+        let node = self.node.as_mut().expect("setup done before round B");
+        for e in msgs {
+            match e.payload {
+                Payload::BBlock(seg) => node.receive_z_block(e.from, &seg),
+                _ => unreachable!("block round-B phase carries Payload::BBlock"),
+            }
+        }
+        let clock = obs::maybe_now();
+        if clock.is_some() {
+            obs::timeline::recorder().phase_begin(self.id, PHASE_ROUND_B, self.comp, self.t);
+        }
+        let tu = thread_cpu_secs();
+        node.local_update_block(rho2);
+        let cpu = thread_cpu_secs() - tu;
+        self.compute_secs += cpu;
+        if let Some(c) = clock {
+            self.trace.phases[PHASE_ROUND_B].add_compute(c.elapsed().as_secs_f64(), cpu);
+            obs::timeline::recorder().phase_end(self.id, PHASE_ROUND_B, self.comp, self.t);
+        }
+        let mut residual = f64::NAN;
+        if self.cfg.tol > 0.0 {
+            if self.gossip.len() == self.stop_lag {
+                self.gossip.pop_front();
+            }
+            let delta = node.block_alpha_delta();
+            residual = delta;
+            self.gossip.push_back(delta);
+        } else if obs::enabled() {
+            residual = node.block_alpha_delta();
+        }
+        if obs::enabled() {
+            self.trace.push_iter(IterTrace {
+                pass: self.comp,
+                iter: self.t,
+                residual,
+                gossip_head: self.last_gossip_head,
+                stop: self.pending_stop,
+            });
+        }
+        self.t += 1;
+        self.total_iters += 1;
+        if self.pending_stop {
+            self.pass_converged = true;
+            self.finish_pass(out);
+        } else {
+            self.begin_iteration(out);
         }
     }
 

@@ -7,17 +7,21 @@
 //!
 //! Config: 3 nodes on ring(3,1) (the triangle — 6 directed edges),
 //! N = 4 samples of M = 2 features, k = 2 components, max_iters = 2,
-//! tol = 0. Per directed edge the protocol must move exactly:
+//! tol = 0. Per directed edge the deflation schedule must move exactly:
 //!   setup            N*M = 8 floats              (iter 0, Setup)
 //!   pass 0, t=0..1   2N = 8 (A) + N = 4 (B)      (iter 0/1)
 //!   deflation        N = 4                        (iter 0, Deflate)
 //!   pass 1, t=0..1   8 (A) + 4 (B)               (iter 3/4 — pass-1
 //!                                                 band = max_iters+1)
-//! Gossip floats are zero because tol = 0.
+//! and the block schedule ONE pass of k-wide rounds:
+//!   setup            N*M = 8 floats              (iter 0, Setup)
+//!   t=0..1           2Nk = 16 (ABlock) + Nk = 8 (BBlock)
+//! with no Deflate envelopes at all. Gossip floats are zero because
+//! tol = 0.
 
 use std::sync::Arc;
 
-use dkpca::admm::AdmmConfig;
+use dkpca::admm::{AdmmConfig, MultiKStrategy};
 use dkpca::backend::NativeBackend;
 use dkpca::coordinator::run_decentralized_multik_traced;
 use dkpca::data::{NoiseModel, Rng};
@@ -35,14 +39,17 @@ fn fixed_xs() -> Vec<Matrix> {
 }
 
 fn cfg() -> AdmmConfig {
-    AdmmConfig { max_iters: 2, ..Default::default() }
+    AdmmConfig { max_iters: 2, multik: MultiKStrategy::Deflate, ..Default::default() }
 }
 
-/// The checked-in golden trace: every directed edge carries the same
-/// 10-envelope program, rendered in (from, to) edge order with per-edge
-/// send order preserved. Update ONLY for intentional protocol changes.
+const EDGES: [(usize, usize); 6] = [(0, 1), (0, 2), (1, 0), (1, 2), (2, 0), (2, 1)];
+
+/// The checked-in golden deflation trace: every directed edge carries
+/// the same 10-envelope program, rendered in (from, to) edge order with
+/// per-edge send order preserved. Update ONLY for intentional protocol
+/// changes.
 fn expected_trace() -> String {
-    let edges = [(0, 1), (0, 2), (1, 0), (1, 2), (2, 0), (2, 1)];
+    let edges = EDGES;
     let per_edge = [
         "iter=0 phase=Setup floats=8",
         "iter=0 phase=RoundA floats=8",
@@ -106,6 +113,69 @@ fn golden_trace_identical_on_both_transports() {
         expected_trace(),
         "protocol wire trace changed — if intentional, update expected_trace()"
     );
+}
+
+/// The checked-in golden block trace: ONE pass of k-wide rounds —
+/// 5 envelopes per directed edge, no Deflate phase anywhere.
+fn expected_block_trace() -> String {
+    let per_edge = [
+        "iter=0 phase=Setup floats=8",
+        "iter=0 phase=RoundA floats=16",
+        "iter=0 phase=RoundB floats=8",
+        "iter=1 phase=RoundA floats=16",
+        "iter=1 phase=RoundB floats=8",
+    ];
+    let mut out = String::new();
+    for (from, to) in EDGES {
+        for line in per_edge {
+            out.push_str(&format!("{from}->{to} {line}\n"));
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_block_trace_identical_on_both_transports() {
+    let xs = fixed_xs();
+    let graph = Graph::ring(3, 1);
+    let block_cfg = AdmmConfig { max_iters: 2, multik: MultiKStrategy::Block, ..Default::default() };
+
+    let lock_trace = Arc::new(TraceLog::default());
+    let mut seq = MultiKpcaSolver::new_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &block_cfg,
+        NoiseModel::None,
+        0,
+        2,
+        &NativeBackend,
+        Some(lock_trace.clone()),
+    );
+    let _ = seq.run(&NativeBackend);
+
+    let thread_trace = Arc::new(TraceLog::default());
+    let _ = run_decentralized_multik_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &block_cfg,
+        NoiseModel::None,
+        0,
+        2,
+        Arc::new(NativeBackend),
+        Some(thread_trace.clone()),
+    );
+
+    let lock = lock_trace.render_per_edge();
+    let thread = thread_trace.render_per_edge();
+    assert_eq!(lock, thread, "transports disagree on the block wire sequence");
+    assert_eq!(
+        lock,
+        expected_block_trace(),
+        "block wire trace changed — if intentional, update expected_block_trace()"
+    );
+    assert!(!lock.contains("Deflate"), "block runs must never ship a deflation exchange");
 }
 
 #[test]

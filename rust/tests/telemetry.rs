@@ -10,7 +10,7 @@
 
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
-use dkpca::admm::AdmmConfig;
+use dkpca::admm::{AdmmConfig, MultiKStrategy};
 use dkpca::backend::NativeBackend;
 use dkpca::coordinator::{run_decentralized_multik, run_decentralized_multik_traced};
 use dkpca::data::synth::{blob_centers, sample_blobs, BlobSpec};
@@ -53,7 +53,15 @@ fn convergence_trace_matches_report_on_both_transports() {
     let kernel = Kernel::Rbf { gamma: 0.1 };
     let xs = blob_network(5, 12, 3);
     let graph = Graph::ring(5, 1);
-    let cfg = AdmmConfig { max_iters: 400, tol: 1e-5, seed: 1, ..Default::default() };
+    // Deflation schedule: the trace-vs-report contract is asserted per
+    // pass, and this fixture's every pass tol-converges under deflation.
+    let cfg = AdmmConfig {
+        max_iters: 400,
+        tol: 1e-5,
+        seed: 1,
+        multik: MultiKStrategy::Deflate,
+        ..Default::default()
+    };
     let k = 3;
 
     let mut seq = MultiKpcaSolver::new(&xs, &graph, &kernel, &cfg, NoiseModel::None, 0, k);
@@ -122,6 +130,36 @@ fn convergence_trace_matches_report_on_both_transports() {
         }
     }
     assert!(seq_res.converged.iter().all(|&c| c), "fixture should tol-converge");
+}
+
+#[test]
+fn block_run_records_ortho_phase_spans() {
+    // The block schedule's per-iteration K-metric orthonormalization is
+    // its own compute phase: exactly one ortho span per iteration on
+    // every node (each node z-hosts its own contributor group), and
+    // none at all on the scalar path.
+    let _g = obs_lock();
+    obs::set_enabled(true);
+    let kernel = Kernel::Rbf { gamma: 0.1 };
+    let xs = blob_network(4, 10, 7);
+    let graph = Graph::ring(4, 1);
+    let cfg = AdmmConfig { max_iters: 5, seed: 1, ..Default::default() };
+
+    let mut seq = MultiKpcaSolver::new(&xs, &graph, &kernel, &cfg, NoiseModel::None, 0, 2);
+    let res = seq.run(&NativeBackend);
+    assert_eq!(res.strategy, MultiKStrategy::Block);
+    for trace in seq.node_traces() {
+        assert_eq!(trace.phases[1].count, 5, "one round_a span per iteration");
+        assert_eq!(trace.phases[2].count, 5, "one round_b span per iteration");
+        assert_eq!(trace.phases[4].count, 5, "one ortho span per block iteration");
+        assert!(trace.phases[4].compute_cpu_secs >= 0.0);
+    }
+
+    let mut seq = MultiKpcaSolver::new(&xs, &graph, &kernel, &cfg, NoiseModel::None, 0, 1);
+    let _ = seq.run(&NativeBackend);
+    for trace in seq.node_traces() {
+        assert_eq!(trace.phases[4].count, 0, "scalar path has no ortho phase");
+    }
 }
 
 /// One full training run on both transports at a given telemetry

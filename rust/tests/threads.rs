@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use dkpca::admm::{AdmmConfig, SetupExchange, ZNorm};
+use dkpca::admm::{AdmmConfig, MultiKStrategy, SetupExchange, ZNorm};
 use dkpca::backend::NativeBackend;
 use dkpca::coordinator::run_decentralized_multik;
 use dkpca::data::synth::{blob_centers, sample_blobs, BlobSpec};
@@ -146,8 +146,8 @@ fn run_all_scenarios() -> Vec<Vec<u8>> {
         out.push(pipeline_bytes(&xs, &graph, &kernel, &cfg, 1, &batch));
     }
 
-    // Scenario 2: raw setup, k = 3 (deflation exchange + spectral
-    // rebuilds), small blobs, early stop active.
+    // Scenario 2: raw setup, k = 3 deflation schedule (deflation
+    // exchange + spectral rebuilds), small blobs, early stop active.
     {
         let xs = blob_network(4, 12, 5);
         let graph = Graph::ring(4, 1);
@@ -156,13 +156,16 @@ fn run_all_scenarios() -> Vec<Vec<u8>> {
             max_iters: 60,
             tol: 1e-4,
             z_norm: ZNorm::Sphere,
+            multik: MultiKStrategy::Deflate,
             ..Default::default()
         };
         let batch = rand_matrix(9, xs[0].cols(), 997);
         out.push(pipeline_bytes(&xs, &graph, &kernel, &cfg, 3, &batch));
     }
 
-    // Scenario 3: RFF setup, k = 3.
+    // Scenario 3: RFF setup, k = 3 block schedule (the default): the
+    // block z-step GEMM and K-metric orthonormalization must also be
+    // invariant to the pool width.
     {
         let xs = blob_network(3, 10, 8);
         let graph = Graph::complete(3);

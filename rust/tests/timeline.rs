@@ -12,7 +12,7 @@
 
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
-use dkpca::admm::AdmmConfig;
+use dkpca::admm::{AdmmConfig, MultiKStrategy};
 use dkpca::backend::NativeBackend;
 use dkpca::coordinator::run_decentralized_multik_traced;
 use dkpca::data::{NoiseModel, Rng};
@@ -38,7 +38,11 @@ fn fixed_xs() -> Vec<Matrix> {
 }
 
 fn cfg() -> AdmmConfig {
-    AdmmConfig { max_iters: 2, ..Default::default() }
+    AdmmConfig { max_iters: 2, multik: MultiKStrategy::Deflate, ..Default::default() }
+}
+
+fn block_cfg() -> AdmmConfig {
+    AdmmConfig { max_iters: 2, multik: MultiKStrategy::Block, ..Default::default() }
 }
 
 /// The checked-in golden timeline. Every node runs the same program
@@ -135,6 +139,124 @@ fn golden_timeline_identical_on_both_transports() {
         expected_timeline(),
         "recorded timeline changed — if intentional, update expected_timeline()"
     );
+}
+
+/// The checked-in golden block timeline: ONE pass, and each iteration
+/// interposes the compute-only `ortho` span between the round_a z-step
+/// and the round-B sends. No deflate events anywhere.
+fn expected_block_timeline() -> String {
+    let mut out = String::new();
+    for node in 0..3usize {
+        out.push_str(&format!("node {node}\n"));
+        let peers: Vec<usize> = (0..3).filter(|&p| p != node).collect();
+        let send = |out: &mut String, phase: &str, iter: usize| {
+            for &p in &peers {
+                out.push_str(&format!("  send {phase} iter={iter} -> {p}\n"));
+            }
+        };
+        let recv = |out: &mut String, phase: &str, iter: usize| {
+            for &p in &peers {
+                out.push_str(&format!("  recv {phase} iter={iter} <- {p}\n"));
+            }
+        };
+        let span = |out: &mut String, phase: &str, iter: usize| {
+            out.push_str(&format!("  begin {phase} pass=0 iter={iter}\n"));
+            out.push_str(&format!("  end {phase} pass=0 iter={iter}\n"));
+        };
+        send(&mut out, "setup", 0);
+        recv(&mut out, "setup", 0);
+        span(&mut out, "setup", 0);
+        for t in 0..2usize {
+            send(&mut out, "round_a", t);
+            recv(&mut out, "round_a", t);
+            span(&mut out, "round_a", t);
+            span(&mut out, "ortho", t);
+            send(&mut out, "round_b", t);
+            recv(&mut out, "round_b", t);
+            span(&mut out, "round_b", t);
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_block_timeline_identical_on_both_transports() {
+    let _g = obs_lock();
+    dkpca::obs::set_enabled(true);
+    let xs = fixed_xs();
+    let graph = Graph::ring(3, 1);
+    let rec = recorder();
+
+    rec.clear();
+    let mut seq = MultiKpcaSolver::new_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &block_cfg(),
+        NoiseModel::None,
+        0,
+        2,
+        &NativeBackend,
+        None,
+    );
+    let _ = seq.run(&NativeBackend);
+    let lock = render_protocol(&rec.snapshot());
+
+    rec.clear();
+    let _ = run_decentralized_multik_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &block_cfg(),
+        NoiseModel::None,
+        0,
+        2,
+        Arc::new(NativeBackend),
+        None,
+    );
+    let thread = render_protocol(&rec.snapshot());
+
+    assert_eq!(lock, thread, "transports disagree on the recorded block timeline");
+    assert_eq!(
+        lock,
+        expected_block_timeline(),
+        "block timeline changed — if intentional, update expected_block_timeline()"
+    );
+}
+
+#[test]
+fn chrome_export_of_block_run_validates_and_analyzes() {
+    let _g = obs_lock();
+    dkpca::obs::set_enabled(true);
+    let xs = fixed_xs();
+    let graph = Graph::ring(3, 1);
+    let rec = recorder();
+
+    rec.clear();
+    let rep = run_decentralized_multik_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &block_cfg(),
+        NoiseModel::None,
+        0,
+        2,
+        Arc::new(NativeBackend),
+        None,
+    );
+    let doc = chrome_trace(&rec.snapshot(), &rep.node_traces);
+    let report = check_chrome_trace(&doc).expect("block chrome trace must validate");
+    assert!(report.events > 0);
+    assert!(report.tracks >= 3);
+    // 6 directed edges x 5 envelopes (setup, 2x(ABlock + BBlock)) —
+    // and no deflation flows.
+    assert_eq!(report.flows, 30, "block message flow count changed");
+
+    let a = analyze_chrome_trace(&doc).expect("valid block trace must analyze");
+    assert!(a.wall_secs >= 0.0);
+    assert!(!a.tracks.is_empty());
+    assert_eq!(a.stalls.len(), 1, "one convergence series for the single block pass");
+    assert!(a.critical_hops > 0);
 }
 
 #[test]

@@ -2,15 +2,20 @@
 """Compare fresh bench JSON against the checked-in baselines.
 
 The benches (`cargo bench --bench linalg_micro / comm_cost /
-serve_throughput`) overwrite BENCH_gemm.json / BENCH_comm.json /
-BENCH_serve.json in the working tree. This script diffs those fresh
-files against the committed copies (`git show HEAD:<file>`) and prints
-a warning for every tracked metric that regressed past its threshold:
+serve_throughput / topk_scaling`) overwrite BENCH_gemm.json /
+BENCH_comm.json / BENCH_serve.json / BENCH_topk.json in the working
+tree. This script diffs those fresh files against the committed copies
+(`git show HEAD:<file>`) and prints a warning for every tracked metric
+that regressed past its threshold:
 
   - gemm:  parallel_gflops below 0.8x baseline
   - comm:  any floats-per-edge count above 1.2x baseline
            (comm cost is analytic, so any drift is a protocol change)
   - serve: p99_ms above 1.2x baseline, or points_per_sec below 0.8x
+  - topk:  train_secs above 1.2x baseline, floats_per_edge above 1.2x
+           (analytic), or affinity below 0.8x baseline — per
+           (k, strategy) row, so the block-vs-deflate speedup is
+           tracked run over run
 
 Timing numbers on shared CI runners are noisy, so this is advisory
 only: warnings go to stdout (and the GitHub ::warning:: annotation
@@ -27,6 +32,7 @@ BENCHES = [
     ("BENCH_gemm.json", "gemm"),
     ("BENCH_comm.json", "comm"),
     ("BENCH_serve.json", "serve"),
+    ("BENCH_topk.json", "topk"),
 ]
 
 # Multiplicative regression thresholds.
@@ -87,7 +93,7 @@ def compare_gemm(base, fresh):
 
 def compare_comm(base, fresh):
     n = 0
-    ident = ("setup", "k", "nodes", "n")
+    ident = ("setup", "strategy", "k", "nodes", "n")
     fields = ("setup_floats_per_edge", "iter_floats_per_edge_per_iter",
               "deflate_floats_per_edge")
     pairs = index_rows(base.get("results", []), ident)
@@ -114,7 +120,29 @@ def compare_serve(base, fresh):
     return n
 
 
-COMPARATORS = {"gemm": compare_gemm, "comm": compare_comm, "serve": compare_serve}
+def compare_topk(base, fresh):
+    n = 0
+    ident = ("k", "strategy")
+    pairs = index_rows(base.get("results", []), ident)
+    for key, row in index_rows(fresh.get("results", []), ident).items():
+        b = pairs.get(key)
+        if b is None:
+            continue
+        n += compare_metric("topk", key, "train_secs",
+                            b.get("train_secs"), row.get("train_secs"), False)
+        n += compare_metric("topk", key, "floats_per_edge",
+                            b.get("floats_per_edge"), row.get("floats_per_edge"), False)
+        n += compare_metric("topk", key, "affinity",
+                            b.get("affinity"), row.get("affinity"), True)
+    return n
+
+
+COMPARATORS = {
+    "gemm": compare_gemm,
+    "comm": compare_comm,
+    "serve": compare_serve,
+    "topk": compare_topk,
+}
 
 
 def main():
