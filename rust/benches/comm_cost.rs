@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use dkpca::admm::MultiKStrategy;
+use dkpca::admm::{CensorSpec, MultiKStrategy};
 use dkpca::backend::NativeBackend;
 use dkpca::experiments::comm;
 use dkpca::metrics::Stopwatch;
@@ -43,10 +43,27 @@ fn main() {
         Arc::new(NativeBackend),
         0,
     ));
+    // Censored mode over the same grid: COKE-style send censoring plus
+    // the 8-bit iteration-payload codec — the floats-per-edge cut the
+    // dense rows above are the baseline for.
+    let spec = CensorSpec { tau0: 1e-2, decay: 0.97, keepalive: 8 };
+    entries.extend(comm::trajectory_tuned(
+        8,
+        &[25, 50, 100],
+        3,
+        &[1, 3],
+        64,
+        MultiKStrategy::Deflate,
+        Some(spec),
+        Some(8),
+        Arc::new(NativeBackend),
+        0,
+    ));
     for e in &entries {
         println!(
-            "comm {}/{}/k={} N={:>3}: setup {:>7.0} f/edge, iter {:>6.0} f/edge/it, \
-             deflate {:>5.0} f/edge",
+            "comm {}/{}/{}/k={} N={:>3}: setup {:>7.0} f/edge, iter {:>6.0} f/edge/it, \
+             deflate {:>5.0} f/edge, censored {:>4}, kept {:>4}",
+            e.mode,
             e.setup,
             e.strategy,
             e.k,
@@ -54,9 +71,30 @@ fn main() {
             e.setup_floats_per_edge,
             e.iter_floats_per_edge_per_iter,
             e.deflate_floats_per_edge,
+            e.censored_sends,
+            e.kept_sends,
         );
     }
-    let json = comm::trajectory_json(&entries);
+
+    // Censored-vs-dense on the fig-5 neighbor sweep: floats per edge
+    // AND similarity to central KPCA, both modes — the "5-10x cut at
+    // matched quality" rows of BENCH_comm.json.
+    let savings =
+        comm::censor_savings(20, 100, &[4, 8], 40, spec, Some(8), Arc::new(NativeBackend), 0);
+    for s in &savings {
+        println!(
+            "censor |Omega|={} N={}: {:.0} -> {:.0} f/edge ({:.1}x cut), \
+             sim {:.4} -> {:.4}",
+            s.omega,
+            s.samples_per_node,
+            s.dense_floats_per_edge,
+            s.censored_floats_per_edge,
+            s.cut,
+            s.dense_similarity,
+            s.censored_similarity,
+        );
+    }
+    let json = comm::bench_json(&entries, &savings);
     match std::fs::write("BENCH_comm.json", &json) {
         Ok(()) => println!("wrote BENCH_comm.json"),
         Err(e) => eprintln!("could not write BENCH_comm.json: {e}"),

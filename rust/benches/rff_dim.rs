@@ -1,0 +1,39 @@
+//! Bench: the `setup.rff.dim: "auto"` calibration — Gram-approximation
+//! error vs RFF dimension on the standard blob mixture, plus the fitted
+//! constant of the Monte-Carlo `err ~= c / sqrt(D)` law that
+//! `kernels::dim_for_budget` inverts. Written to `BENCH_rff.json` so CI
+//! tracks the law (and the headroom of the conservative
+//! `RFF_ERR_CONST`) run over run.
+//!
+//!     cargo bench --bench rff_dim
+
+use dkpca::experiments::rff_sweep;
+use dkpca::kernels::{dim_for_budget, RFF_ERR_CONST};
+use dkpca::metrics::Stopwatch;
+
+fn main() {
+    let sw = Stopwatch::start();
+    let dims = [64, 128, 256, 512, 1024, 2048, 4096];
+    let rows = rff_sweep::gram_error_sweep(64, &dims, 0);
+    let c = rff_sweep::fitted_constant(&rows);
+    for r in &rows {
+        println!(
+            "rff D={:>4}: max_abs_err {:.5}, rmse {:.5}, err*sqrt(D) {:.3}",
+            r.dim,
+            r.max_abs_err,
+            r.rmse,
+            r.max_abs_err * (r.dim as f64).sqrt(),
+        );
+    }
+    println!(
+        "fitted c = {c:.4} (conservative RFF_ERR_CONST = {RFF_ERR_CONST}); \
+         budget 0.05 -> dim {}",
+        dim_for_budget(0.05)
+    );
+    let json = rff_sweep::gram_error_json(&rows, c);
+    match std::fs::write("BENCH_rff.json", &json) {
+        Ok(()) => println!("wrote BENCH_rff.json"),
+        Err(e) => eprintln!("could not write BENCH_rff.json: {e}"),
+    }
+    println!("bench wall time: {:.1}s", sw.elapsed_secs());
+}

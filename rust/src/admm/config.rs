@@ -58,6 +58,64 @@ pub enum SetupExchange {
     RffFeatures { dim: usize, seed: u64 },
 }
 
+/// COKE-style communication censoring of the iteration rounds
+/// (PAPERS.md): a node skips the full round-A/round-B payload toward a
+/// neighbor when the payload has moved less than `tau0 * decay^t` in
+/// the sup norm since the last full transmission to that neighbor, and
+/// ships a tiny censor marker instead (the neighbor reuses the last
+/// received value). The gossip stop window always rides the marker, so
+/// the diameter-lagged stop rule is untouched, and `keepalive` bounds
+/// how many consecutive rounds any payload may stay censored.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CensorSpec {
+    /// Initial censoring threshold `tau_0` (sup-norm units of the
+    /// payload).
+    pub tau0: f64,
+    /// Per-iteration threshold decay `gamma` in (0, 1]: the threshold
+    /// at iteration `t` is `tau0 * decay^t`, so censoring tightens as
+    /// the consensus converges.
+    pub decay: f64,
+    /// Force a full payload at least every `keepalive` iterations per
+    /// neighbor (>= 1; 1 disables censoring entirely). Bounds payload
+    /// staleness so a long censored stretch cannot freeze a neighbor on
+    /// an arbitrarily old state.
+    pub keepalive: usize,
+}
+
+impl Default for CensorSpec {
+    fn default() -> Self {
+        // tau0 on the order of the tol scale used by the experiments,
+        // with a mild decay and a one-full-send-per-8-rounds floor.
+        CensorSpec { tau0: 1e-2, decay: 0.97, keepalive: 8 }
+    }
+}
+
+impl CensorSpec {
+    /// The censoring threshold in force at iteration `t` of a pass.
+    pub fn threshold(&self, t: usize) -> f64 {
+        self.tau0 * self.decay.powi(t as i32)
+    }
+
+    /// Reject non-finite/negative thresholds, decay outside (0, 1],
+    /// and a zero keep-alive (config-construction boundaries call
+    /// this, mirroring `normalize_schedule`).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.tau0.is_finite() && self.tau0 != f64::INFINITY {
+            return Err("censor.tau0 must be a number (or +inf to censor always)".into());
+        }
+        if self.tau0 < 0.0 {
+            return Err("censor.tau0 must be >= 0".into());
+        }
+        if !(self.decay > 0.0 && self.decay <= 1.0) {
+            return Err("censor.decay must lie in (0, 1]".into());
+        }
+        if self.keepalive == 0 {
+            return Err("censor.keepalive must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
 impl SetupExchange {
     /// The shared feature map this mode prescribes for `m`-dim inputs
     /// (`None` under `RawData`). Every participant sampling from the
@@ -114,6 +172,15 @@ pub struct AdmmConfig {
     pub setup: SetupExchange,
     /// Multi-component extraction strategy (k >= 2 only).
     pub multik: MultiKStrategy,
+    /// Communication censoring of the iteration rounds (`None` =
+    /// dense rounds — every send goes out in full, bit-identical to
+    /// runs predating the knob).
+    pub censor: Option<CensorSpec>,
+    /// Iteration-payload quantization codec: round-A/round-B payloads
+    /// are uniform-quantized to this many bits per value at the
+    /// transport boundary (2..=32; `None` = full f64 width). Setup and
+    /// deflation payloads are untouched.
+    pub quant_bits: Option<u8>,
 }
 
 impl Default for AdmmConfig {
@@ -130,6 +197,8 @@ impl Default for AdmmConfig {
             init: Init::LocalKpca,
             setup: SetupExchange::RawData,
             multik: MultiKStrategy::Block,
+            censor: None,
+            quant_bits: None,
         }
     }
 }
@@ -264,5 +333,39 @@ mod tests {
     #[test]
     fn default_multik_strategy_is_block() {
         assert_eq!(AdmmConfig::default().multik, MultiKStrategy::Block);
+    }
+
+    #[test]
+    fn censoring_and_quantization_are_off_by_default() {
+        // The bit-identity guarantee: default configs carry neither
+        // knob, so every pre-existing golden trace stays byte-exact.
+        let c = AdmmConfig::default();
+        assert!(c.censor.is_none());
+        assert!(c.quant_bits.is_none());
+    }
+
+    #[test]
+    fn censor_threshold_decays_geometrically() {
+        let s = CensorSpec { tau0: 2.0, decay: 0.5, keepalive: 4 };
+        assert_eq!(s.threshold(0), 2.0);
+        assert_eq!(s.threshold(1), 1.0);
+        assert_eq!(s.threshold(3), 0.25);
+    }
+
+    #[test]
+    fn censor_validation_rejects_bad_specs() {
+        assert!(CensorSpec::default().validate().is_ok());
+        let inf = CensorSpec { tau0: f64::INFINITY, ..Default::default() };
+        assert!(inf.validate().is_ok(), "+inf means censor whenever allowed");
+        let neg = CensorSpec { tau0: -1.0, ..Default::default() };
+        assert!(neg.validate().is_err());
+        let nan = CensorSpec { tau0: f64::NAN, ..Default::default() };
+        assert!(nan.validate().is_err());
+        let decay0 = CensorSpec { decay: 0.0, ..Default::default() };
+        assert!(decay0.validate().is_err());
+        let decay2 = CensorSpec { decay: 1.5, ..Default::default() };
+        assert!(decay2.validate().is_err());
+        let ka0 = CensorSpec { keepalive: 0, ..Default::default() };
+        assert!(ka0.validate().is_err());
     }
 }

@@ -7,7 +7,7 @@ pub mod lagrangian;
 pub mod node;
 pub mod solver;
 
-pub use config::{AdmmConfig, Init, MultiKStrategy, SetupExchange, ZNorm};
+pub use config::{AdmmConfig, CensorSpec, Init, MultiKStrategy, SetupExchange, ZNorm};
 pub use lagrangian::lagrangian;
 pub use node::{NodeState, RoundA, RoundABlock, RoundB, RoundBBlock};
 pub use solver::{DkpcaResult, DkpcaSolver};

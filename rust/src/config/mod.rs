@@ -2,7 +2,7 @@
 //! the CLI launcher (`dkpca run --config file.json`). Every field has a
 //! paper-faithful default so `{}` is a valid config.
 
-use crate::admm::{AdmmConfig, Init, MultiKStrategy, SetupExchange, ZNorm};
+use crate::admm::{AdmmConfig, CensorSpec, Init, MultiKStrategy, SetupExchange, ZNorm};
 use crate::data::NoiseModel;
 use crate::kernels::Kernel;
 use crate::topology::{Graph, TopologyError};
@@ -373,6 +373,30 @@ fn parse_admm(j: &Json, base: AdmmConfig) -> Result<AdmmConfig, String> {
             other => return Err(format!("unknown init {other:?}")),
         };
     }
+    if let Some(v) = j.get("censor") {
+        // Communication censoring: skip a round-A/round-B send whenever
+        // the payload moved less than tau0 * decay^t since the last
+        // transmission to that neighbor (a cheap marker rides instead).
+        let mut spec = CensorSpec::default();
+        if let Some(t) = v.get("tau0") {
+            spec.tau0 = t.as_f64().ok_or("censor tau0 must be a number")?;
+        }
+        if let Some(g) = v.get("decay") {
+            spec.decay = g.as_f64().ok_or("censor decay must be a number")?;
+        }
+        if let Some(k) = v.get("keepalive") {
+            spec.keepalive = k.as_usize().ok_or("censor keepalive must be a number")?;
+        }
+        spec.validate()?;
+        cfg.censor = Some(spec);
+    }
+    if let Some(v) = j.get("quant_bits") {
+        let bf = v.as_f64().ok_or("quant_bits must be a number")?;
+        if bf.fract() != 0.0 || !(2.0..=32.0).contains(&bf) {
+            return Err("quant_bits must be an integer in 2..=32".into());
+        }
+        cfg.quant_bits = Some(bf as u8);
+    }
     if let Some(v) = j.get("setup") {
         cfg.setup = match v.field("kind")?.as_str() {
             Some("raw") => SetupExchange::RawData,
@@ -380,15 +404,45 @@ fn parse_admm(j: &Json, base: AdmmConfig) -> Result<AdmmConfig, String> {
                 // Present-but-invalid values must error, not silently
                 // fall back — a mistyped dim/seed would change the
                 // sampled feature map and the experiment's results.
+                let err_budget = match v.get("err_budget") {
+                    Some(b) => {
+                        let bf = b.as_f64().ok_or("setup err_budget must be a number")?;
+                        if !(bf.is_finite() && bf > 0.0) {
+                            return Err("setup err_budget must be a positive number".into());
+                        }
+                        Some(bf)
+                    }
+                    None => None,
+                };
                 let dim = match v.get("dim") {
+                    Some(d) if d.as_str() == Some("auto") => {
+                        // Adaptive dim: invert the c/sqrt(D) Gram-error
+                        // law at the requested budget (default 0.05 —
+                        // see kernels::dim_for_budget and BENCH_rff).
+                        crate::kernels::dim_for_budget(err_budget.unwrap_or(0.05))
+                    }
                     Some(d) => {
-                        let df = d.as_f64().ok_or("setup dim must be a number")?;
+                        if err_budget.is_some() {
+                            return Err(
+                                "setup err_budget needs dim: \"auto\"".into()
+                            );
+                        }
+                        let df = d
+                            .as_f64()
+                            .ok_or("setup dim must be a number or \"auto\"")?;
                         if df < 1.0 || df.fract() != 0.0 || df > u32::MAX as f64 {
                             return Err("setup dim must be a positive integer".into());
                         }
                         df as usize
                     }
-                    None => 4096,
+                    None => {
+                        if err_budget.is_some() {
+                            return Err(
+                                "setup err_budget needs dim: \"auto\"".into()
+                            );
+                        }
+                        4096
+                    }
                 };
                 let seed = match v.get("seed") {
                     Some(s) => {
@@ -507,6 +561,72 @@ mod tests {
         for bad in ["0", "-5", "2.7"] {
             let json = format!(r#"{{"admm": {{"setup": {{"kind": "rff", "dim": {bad}}}}}}}"#);
             assert!(ExperimentConfig::from_json(&json).is_err(), "dim {bad} accepted");
+        }
+    }
+
+    #[test]
+    fn censor_and_quant_knobs_parse() {
+        let dflt = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(dflt.admm.censor, None, "censoring is opt-in");
+        assert_eq!(dflt.admm.quant_bits, None, "quantization is opt-in");
+        let cfg = ExperimentConfig::from_json(
+            r#"{"admm": {"censor": {"tau0": 0.5, "decay": 0.9, "keepalive": 4},
+                         "quant_bits": 8}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.admm.censor,
+            Some(CensorSpec { tau0: 0.5, decay: 0.9, keepalive: 4 })
+        );
+        assert_eq!(cfg.admm.quant_bits, Some(8));
+        // An empty censor object takes the documented defaults.
+        let cfg = ExperimentConfig::from_json(r#"{"admm": {"censor": {}}}"#).unwrap();
+        assert_eq!(cfg.admm.censor, Some(CensorSpec::default()));
+        // Present-but-invalid values error instead of silently falling
+        // back — the CensorSpec validator runs at the parse boundary.
+        for bad in [
+            r#"{"admm": {"censor": {"tau0": -1}}}"#,
+            r#"{"admm": {"censor": {"decay": 0}}}"#,
+            r#"{"admm": {"censor": {"decay": 1.5}}}"#,
+            r#"{"admm": {"censor": {"keepalive": 0}}}"#,
+            r#"{"admm": {"censor": {"tau0": "tight"}}}"#,
+            r#"{"admm": {"quant_bits": 1}}"#,
+            r#"{"admm": {"quant_bits": 33}}"#,
+            r#"{"admm": {"quant_bits": 7.5}}"#,
+            r#"{"admm": {"quant_bits": "low"}}"#,
+        ] {
+            assert!(ExperimentConfig::from_json(bad).is_err(), "{bad} accepted");
+        }
+    }
+
+    #[test]
+    fn rff_auto_dim_parses_via_the_error_budget() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"admm": {"setup": {"kind": "rff", "dim": "auto", "err_budget": 0.1}}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.admm.setup,
+            SetupExchange::RffFeatures { dim: crate::kernels::dim_for_budget(0.1), seed: 0 }
+        );
+        // "auto" with no budget takes the documented 0.05 default.
+        let cfg = ExperimentConfig::from_json(
+            r#"{"admm": {"setup": {"kind": "rff", "dim": "auto"}}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.admm.setup,
+            SetupExchange::RffFeatures { dim: crate::kernels::dim_for_budget(0.05), seed: 0 }
+        );
+        // err_budget without dim: "auto" is a contradiction — reject.
+        for bad in [
+            r#"{"admm": {"setup": {"kind": "rff", "dim": 512, "err_budget": 0.1}}}"#,
+            r#"{"admm": {"setup": {"kind": "rff", "err_budget": 0.1}}}"#,
+            r#"{"admm": {"setup": {"kind": "rff", "dim": "auto", "err_budget": 0}}}"#,
+            r#"{"admm": {"setup": {"kind": "rff", "dim": "auto", "err_budget": -0.1}}}"#,
+            r#"{"admm": {"setup": {"kind": "rff", "dim": "manual"}}}"#,
+        ] {
+            assert!(ExperimentConfig::from_json(bad).is_err(), "{bad} accepted");
         }
     }
 

@@ -46,6 +46,12 @@ pub struct RunReport {
     pub comm_floats_total: u64,
     /// Floats moved by the one-time setup exchange alone.
     pub setup_floats_total: u64,
+    /// Iteration sends suppressed by communication censoring (a cheap
+    /// marker went out instead of the full payload). 0 when censoring
+    /// is off.
+    pub censored_sends: u64,
+    /// Iteration sends that carried a full (or quantized) payload.
+    pub kept_sends: u64,
     /// Floats sent per node.
     pub per_node_sent: Vec<u64>,
     /// Iterations actually run — identical at every node (the
@@ -91,6 +97,12 @@ pub struct MultiRunReport {
     /// 0 for `Block` runs: the block schedule has one pass and never
     /// emits a `Payload::Converged` envelope.
     pub deflate_floats_total: u64,
+    /// Iteration sends suppressed by communication censoring (a cheap
+    /// marker went out instead of the full payload). 0 when censoring
+    /// is off.
+    pub censored_sends: u64,
+    /// Iteration sends that carried a full (or quantized) payload.
+    pub kept_sends: u64,
     /// Iteration-protocol floats each node sent, in node order.
     pub per_node_sent: Vec<u64>,
     /// Per-node telemetry sidecars (phase spans + convergence trace),
@@ -116,6 +128,8 @@ pub fn run_decentralized(
         node_compute_secs: rep.node_compute_secs,
         comm_floats_total: rep.comm_floats_total,
         setup_floats_total: rep.setup_floats_total,
+        censored_sends: rep.censored_sends,
+        kept_sends: rep.kept_sends,
         per_node_sent: rep.per_node_sent,
         iterations: rep.per_component_iterations[0],
         converged: rep.converged[0],
@@ -166,7 +180,7 @@ pub fn run_decentralized_multik_traced(
     // — the lag of the decentralized stop rule (shared with the
     // lockstep transport so both stop at the same iteration).
     let stop_lag = graph.diameter().max(1);
-    let channel = ChannelSpec { noise, noise_seed, n_nodes: j };
+    let channel = ChannelSpec { noise, noise_seed, n_nodes: j, quant_bits: cfg.quant_bits };
     let (endpoints, stats) = build_fabric(graph, channel, trace);
     let wall = Instant::now();
 
@@ -232,6 +246,8 @@ pub fn run_decentralized_multik_traced(
         comm_floats_total: stats.total(),
         setup_floats_total: stats.setup_total(),
         deflate_floats_total: stats.phase_total(crate::protocol::Phase::Deflate),
+        censored_sends: stats.censored_sends(),
+        kept_sends: stats.kept_sends(),
         per_node_sent,
         node_traces,
     }

@@ -5,14 +5,15 @@
 
 use std::sync::Arc;
 
-use crate::admm::{MultiKStrategy, SetupExchange};
+use crate::admm::{CensorSpec, MultiKStrategy, SetupExchange};
 use crate::backend::ComputeBackend;
+use crate::central::similarity;
 use crate::config::{DataSpec, ExperimentConfig, TopoSpec};
 use crate::coordinator::{run_decentralized, run_decentralized_multik};
 use crate::data::NoiseModel;
 use crate::metrics::Table;
 
-use super::{build_env, paper_admm};
+use super::{build_env, central_kpca_power, paper_admm};
 
 /// One measurement of §4.2 per-iteration traffic vs its closed form.
 pub struct CommRow {
@@ -97,6 +98,10 @@ pub fn table(rows: &[CommRow]) -> Table {
 /// the multik deflation transitions — across N, RawData vs
 /// RffFeatures, and k.
 pub struct CommTrajEntry {
+    /// Traffic mode the row measured: "dense" (every iteration send
+    /// carries the full-width payload — today's default) or "censored"
+    /// (communication censoring and/or payload quantization engaged).
+    pub mode: &'static str,
     /// Setup-exchange mode label ("raw" / "rff").
     pub setup: &'static str,
     /// Multik training path that actually ran ("block" / "deflate" —
@@ -118,6 +123,11 @@ pub struct CommTrajEntry {
     /// multik only; exactly 0 for block runs, which never ship a
     /// `Payload::Converged` envelope).
     pub deflate_floats_per_edge: f64,
+    /// Iteration sends suppressed by censoring across the whole run
+    /// (a marker went out instead of the payload). 0 in dense mode.
+    pub censored_sends: u64,
+    /// Iteration sends that carried a full (or quantized) payload.
+    pub kept_sends: u64,
 }
 
 /// Measure the trajectory on a ring (|Omega| = 2) through the threaded
@@ -135,6 +145,40 @@ pub fn trajectory(
     backend: Arc<dyn ComputeBackend>,
     seed: u64,
 ) -> Vec<CommTrajEntry> {
+    trajectory_tuned(
+        nodes,
+        sample_counts,
+        iters,
+        ks,
+        rff_dim,
+        strategy,
+        None,
+        None,
+        backend,
+        seed,
+    )
+}
+
+/// [`trajectory`] with the floats-per-edge reducers engaged: an
+/// optional censoring spec (skip sends whose payload barely moved) and
+/// an optional quantization width (round-A/round-B values packed to
+/// `quant_bits` per value on the wire). Rows carry mode `"censored"`
+/// whenever either knob is on, `"dense"` otherwise — the BENCH_comm
+/// comparison key.
+#[allow(clippy::too_many_arguments)]
+pub fn trajectory_tuned(
+    nodes: usize,
+    sample_counts: &[usize],
+    iters: usize,
+    ks: &[usize],
+    rff_dim: usize,
+    strategy: MultiKStrategy,
+    censor: Option<CensorSpec>,
+    quant_bits: Option<u8>,
+    backend: Arc<dyn ComputeBackend>,
+    seed: u64,
+) -> Vec<CommTrajEntry> {
+    let mode = if censor.is_some() || quant_bits.is_some() { "censored" } else { "dense" };
     let mut out = Vec::new();
     let modes: [(&'static str, SetupExchange); 2] = [
         ("raw", SetupExchange::RawData),
@@ -155,6 +199,8 @@ pub fn trajectory(
                 let mut admm = paper_admm(seed, iters);
                 admm.setup = setup;
                 admm.multik = strategy;
+                admm.censor = censor;
+                admm.quant_bits = quant_bits;
                 let rep = run_decentralized_multik(
                     &env.xs,
                     &env.graph,
@@ -171,6 +217,7 @@ pub fn trajectory(
                     - rep.setup_floats_total
                     - rep.deflate_floats_total;
                 out.push(CommTrajEntry {
+                    mode,
                     setup: label,
                     strategy: match rep.strategy {
                         MultiKStrategy::Block => "block",
@@ -185,6 +232,8 @@ pub fn trajectory(
                         / edges
                         / (total_iters.max(1)) as f64,
                     deflate_floats_per_edge: rep.deflate_floats_total as f64 / edges,
+                    censored_sends: rep.censored_sends,
+                    kept_sends: rep.kept_sends,
                 });
             }
         }
@@ -192,31 +241,163 @@ pub fn trajectory(
     out
 }
 
+/// One row of the censored-vs-dense comparison on the fig-5 neighbor
+/// sweep: how many iteration floats per directed edge each mode moved,
+/// and the mean final similarity to central KPCA each mode reached —
+/// the "order-of-magnitude cut at matched quality" evidence in
+/// `BENCH_comm.json`.
+pub struct CensorSavingsRow {
+    /// Neighbor count |Omega| (ring half-width times two).
+    pub omega: usize,
+    /// Samples per node N_j.
+    pub samples_per_node: usize,
+    /// Iteration-protocol floats per directed edge, dense run.
+    pub dense_floats_per_edge: f64,
+    /// Iteration-protocol floats per directed edge with censoring +
+    /// quantization on.
+    pub censored_floats_per_edge: f64,
+    /// The cut: dense / censored floats per edge.
+    pub cut: f64,
+    /// Mean final similarity to central KPCA, dense run.
+    pub dense_similarity: f64,
+    /// Mean final similarity to central KPCA, censored run.
+    pub censored_similarity: f64,
+    /// Iteration sends the censored run suppressed.
+    pub censored_sends: u64,
+    /// Iteration sends the censored run transmitted.
+    pub kept_sends: u64,
+}
+
+/// Run the fig-5-style neighbor sweep (MNIST-like data, ring with
+/// |Omega| neighbors) twice per omega — dense, then with `spec` +
+/// `quant_bits` engaged — and measure floats per directed edge and
+/// final similarity to central KPCA for both. Every float count comes
+/// off the fabric's counters.
+#[allow(clippy::too_many_arguments)]
+pub fn censor_savings(
+    nodes: usize,
+    samples_per_node: usize,
+    omegas: &[usize],
+    iters: usize,
+    spec: CensorSpec,
+    quant_bits: Option<u8>,
+    backend: Arc<dyn ComputeBackend>,
+    seed: u64,
+) -> Vec<CensorSavingsRow> {
+    let mut rows = Vec::new();
+    for &omega in omegas {
+        assert!(omega % 2 == 0, "ring topology needs even |Omega|");
+        let cfg = ExperimentConfig {
+            nodes,
+            samples_per_node,
+            data: DataSpec::MnistLike { feat_gamma: 0.02 },
+            topo: TopoSpec::Ring { k: omega / 2 },
+            seed,
+            ..Default::default()
+        };
+        let env = build_env(&cfg);
+        let central = central_kpca_power(&env.xs, &env.kernel, 500);
+        let edges = (nodes * omega) as f64;
+        let mut measure = |censor: Option<CensorSpec>, bits: Option<u8>| {
+            let mut admm = paper_admm(seed, iters);
+            admm.censor = censor;
+            admm.quant_bits = bits;
+            let rep = run_decentralized(
+                &env.xs,
+                &env.graph,
+                &env.kernel,
+                &admm,
+                NoiseModel::None,
+                seed,
+                backend.clone(),
+            );
+            let iter_floats = (rep.comm_floats_total - rep.setup_floats_total) as f64;
+            let sim = rep
+                .alphas
+                .iter()
+                .enumerate()
+                .map(|(j, alpha)| similarity(alpha, &env.xs[j], &central, &env.kernel))
+                .sum::<f64>()
+                / nodes as f64;
+            (iter_floats / edges, sim, rep.censored_sends, rep.kept_sends)
+        };
+        let (dense_floats, dense_sim, _, _) = measure(None, None);
+        let (cens_floats, cens_sim, censored_sends, kept_sends) =
+            measure(Some(spec), quant_bits);
+        rows.push(CensorSavingsRow {
+            omega,
+            samples_per_node,
+            dense_floats_per_edge: dense_floats,
+            censored_floats_per_edge: cens_floats,
+            cut: dense_floats / cens_floats.max(f64::MIN_POSITIVE),
+            dense_similarity: dense_sim,
+            censored_similarity: cens_sim,
+            censored_sends,
+            kept_sends,
+        });
+    }
+    rows
+}
+
+fn trajectory_row_json(e: &CommTrajEntry) -> String {
+    format!(
+        "{{\"mode\": \"{}\", \"setup\": \"{}\", \"strategy\": \"{}\", \"k\": {}, \
+         \"nodes\": {}, \"n\": {}, \"iters\": {}, \"setup_floats_per_edge\": {:.1}, \
+         \"iter_floats_per_edge_per_iter\": {:.1}, \
+         \"deflate_floats_per_edge\": {:.1}, \"censored_sends\": {}, \
+         \"kept_sends\": {}}}",
+        e.mode,
+        e.setup,
+        e.strategy,
+        e.k,
+        e.nodes,
+        e.samples_per_node,
+        e.iters,
+        e.setup_floats_per_edge,
+        e.iter_floats_per_edge_per_iter,
+        e.deflate_floats_per_edge,
+        e.censored_sends,
+        e.kept_sends,
+    )
+}
+
+fn savings_row_json(r: &CensorSavingsRow) -> String {
+    format!(
+        "{{\"omega\": {}, \"n\": {}, \"dense_floats_per_edge\": {:.1}, \
+         \"censored_floats_per_edge\": {:.1}, \"cut\": {:.2}, \
+         \"dense_similarity\": {:.4}, \"censored_similarity\": {:.4}, \
+         \"censored_sends\": {}, \"kept_sends\": {}}}",
+        r.omega,
+        r.samples_per_node,
+        r.dense_floats_per_edge,
+        r.censored_floats_per_edge,
+        r.cut,
+        r.dense_similarity,
+        r.censored_similarity,
+        r.censored_sends,
+        r.kept_sends,
+    )
+}
+
 /// Render the trajectory as the `BENCH_comm.json` payload (same
 /// hand-rolled shape as `BENCH_gemm.json`; no serde in the offline
 /// vendor set).
 pub fn trajectory_json(entries: &[CommTrajEntry]) -> String {
-    let rows: Vec<String> = entries
-        .iter()
-        .map(|e| {
-            format!(
-                "{{\"setup\": \"{}\", \"strategy\": \"{}\", \"k\": {}, \"nodes\": {}, \
-                 \"n\": {}, \"iters\": {}, \"setup_floats_per_edge\": {:.1}, \
-                 \"iter_floats_per_edge_per_iter\": {:.1}, \
-                 \"deflate_floats_per_edge\": {:.1}}}",
-                e.setup,
-                e.strategy,
-                e.k,
-                e.nodes,
-                e.samples_per_node,
-                e.iters,
-                e.setup_floats_per_edge,
-                e.iter_floats_per_edge_per_iter,
-                e.deflate_floats_per_edge,
-            )
-        })
-        .collect();
+    let rows: Vec<String> = entries.iter().map(trajectory_row_json).collect();
     format!("{{\"bench\": \"comm_cost\", \"results\": [{}]}}\n", rows.join(", "))
+}
+
+/// The full `BENCH_comm.json` payload: the per-edge trajectory rows
+/// plus the censored-vs-dense fig-5 comparison under a
+/// `"censor_savings"` key.
+pub fn bench_json(entries: &[CommTrajEntry], savings: &[CensorSavingsRow]) -> String {
+    let rows: Vec<String> = entries.iter().map(trajectory_row_json).collect();
+    let saves: Vec<String> = savings.iter().map(savings_row_json).collect();
+    format!(
+        "{{\"bench\": \"comm_cost\", \"results\": [{}], \"censor_savings\": [{}]}}\n",
+        rows.join(", "),
+        saves.join(", ")
+    )
 }
 
 #[cfg(test)]
@@ -284,6 +465,137 @@ mod tests {
         }
         let json = trajectory_json(&rows);
         assert_eq!(json.matches("\"deflate_floats_per_edge\": 0.0").count(), 2);
+    }
+
+    #[test]
+    fn quantized_trajectory_matches_closed_forms() {
+        // 8-bit codec, N = 8, tol = 0 (no gossip): each round-A vector
+        // (alpha, bcol) packs its 8 values into one u64 word plus the
+        // [lo, hi] pair -> 3 wire floats each; the round-B segment the
+        // same. 6 + 3 = 9 floats per directed edge per iteration,
+        // against 3N = 24 dense.
+        let rows = trajectory_tuned(
+            6,
+            &[8],
+            4,
+            &[1],
+            16,
+            MultiKStrategy::Deflate,
+            None,
+            Some(8),
+            Arc::new(NativeBackend),
+            5,
+        );
+        assert_eq!(rows.len(), 2, "one row per setup mode");
+        for r in &rows {
+            assert_eq!(r.mode, "censored");
+            assert_eq!(r.iter_floats_per_edge_per_iter, 9.0);
+            // The codec only touches iteration payloads — setup moves
+            // full-width floats.
+            let width = if r.setup == "raw" { 5 } else { 16 };
+            assert_eq!(r.setup_floats_per_edge, (8 * width) as f64);
+            assert_eq!(r.censored_sends, 0, "no censoring configured");
+            // 12 directed edges x (1 round-A + 1 round-B) x 4 iters.
+            assert_eq!(r.kept_sends, 12 * 2 * 4);
+        }
+    }
+
+    #[test]
+    fn censored_trajectory_matches_closed_forms() {
+        // tau0 huge + decay 1.0 censors whenever allowed, so the
+        // keepalive = 2 schedule alone dictates traffic: full payloads
+        // at t = 0 and t = 2, markers at t = 1 and t = 3. Markers are
+        // free with tol = 0 (no gossip window rides them).
+        let spec = CensorSpec { tau0: 1e12, decay: 1.0, keepalive: 2 };
+        let rows = trajectory_tuned(
+            6,
+            &[8],
+            4,
+            &[1],
+            16,
+            MultiKStrategy::Deflate,
+            Some(spec),
+            None,
+            Arc::new(NativeBackend),
+            5,
+        );
+        for r in &rows {
+            assert_eq!(r.mode, "censored");
+            // 2 of the 4 iterations move the full 3N = 24 floats.
+            assert_eq!(r.iter_floats_per_edge_per_iter, (2 * 3 * 8) as f64 / 4.0);
+            assert_eq!(r.censored_sends, 12 * 2 * 2);
+            assert_eq!(r.kept_sends, 12 * 2 * 2);
+            // Every iteration send is accounted for, kept or censored.
+            assert_eq!(r.censored_sends + r.kept_sends, 12 * 2 * 4);
+        }
+    }
+
+    #[test]
+    fn censoring_plus_quantization_cuts_floats_five_fold() {
+        // The tentpole acceptance number, measured deterministically:
+        // keepalive = 2 halves the kept iterations and the 8-bit codec
+        // shrinks each kept payload 24 -> 9 floats, so the average
+        // drops 24 -> 4.5 per edge per iteration (a 5.33x cut).
+        let spec = CensorSpec { tau0: 1e12, decay: 1.0, keepalive: 2 };
+        let dense = trajectory(
+            6,
+            &[8],
+            4,
+            &[1],
+            16,
+            MultiKStrategy::Deflate,
+            Arc::new(NativeBackend),
+            5,
+        );
+        let cens = trajectory_tuned(
+            6,
+            &[8],
+            4,
+            &[1],
+            16,
+            MultiKStrategy::Deflate,
+            Some(spec),
+            Some(8),
+            Arc::new(NativeBackend),
+            5,
+        );
+        for (d, c) in dense.iter().zip(&cens) {
+            assert_eq!(d.mode, "dense");
+            assert_eq!(d.censored_sends, 0);
+            let cut = d.iter_floats_per_edge_per_iter / c.iter_floats_per_edge_per_iter;
+            assert!(cut >= 5.0, "cut {cut} below the 5x floor");
+        }
+        let json = bench_json(&cens, &[]);
+        assert!(json.contains("\"mode\": \"censored\""), "{json}");
+        assert!(json.contains("\"censored_sends\""), "{json}");
+        assert!(json.contains("\"censor_savings\": []"), "{json}");
+    }
+
+    #[test]
+    fn censor_savings_reports_cut_and_matched_quality() {
+        // Realistic knobs on the fig-5-style sweep: 8-bit quantization
+        // alone guarantees 3N / (3 * (2 + ceil(N/8))) = 5x at N = 30,
+        // and any censored round only widens the cut.
+        let spec = CensorSpec { tau0: 1e-2, decay: 0.97, keepalive: 8 };
+        let rows =
+            censor_savings(8, 30, &[4], 25, spec, Some(8), Arc::new(NativeBackend), 7);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert!(r.censored_floats_per_edge < r.dense_floats_per_edge);
+        assert!(r.cut >= 5.0 - 1e-9, "cut {} below the 5x floor", r.cut);
+        // Every iteration send is accounted for across the 32 directed
+        // edges, 2 sends each, 25 iterations.
+        assert_eq!(r.censored_sends + r.kept_sends, 8 * 4 * 2 * 25);
+        // Quality stays matched (the bench records the exact ratio).
+        assert!(r.dense_similarity > 0.5, "dense sim {}", r.dense_similarity);
+        assert!(
+            r.censored_similarity > 0.8 * r.dense_similarity,
+            "censored run lost too much quality: {} vs {}",
+            r.censored_similarity,
+            r.dense_similarity
+        );
+        let json = bench_json(&[], &rows);
+        assert!(json.contains("\"censor_savings\": [{\"omega\": 4"), "{json}");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::backend::ComputeBackend;
 use crate::central::{central_kpca, mean_similarity};
 use crate::data::synth::{blob_centers, sample_blobs, BlobSpec};
 use crate::data::{NoiseModel, Rng};
-use crate::kernels::Kernel;
+use crate::kernels::{gram_sym, Kernel, RffMap};
 use crate::linalg::Matrix;
 use crate::metrics::Table;
 use crate::topology::Graph;
@@ -79,6 +79,76 @@ pub fn run(
     rows
 }
 
+/// One row of the Gram-approximation error sweep behind the
+/// `setup.rff.dim: "auto"` law: how far the RFF inner-product Gram
+/// `z(a).z(b)` deviates from the exact kernel Gram `K(a, b)` at
+/// dimension D.
+pub struct GramErrorRow {
+    /// RFF dimension D.
+    pub dim: usize,
+    /// `max |z(a).z(b) - K(a, b)|` over all sample pairs.
+    pub max_abs_err: f64,
+    /// Root-mean-square deviation over all sample pairs.
+    pub rmse: f64,
+}
+
+/// Measure the Gram approximation error at each dimension on a blob
+/// sample (the Monte-Carlo `~ c / sqrt(D)` law that
+/// [`crate::kernels::dim_for_budget`] inverts for `dim: "auto"`).
+pub fn gram_error_sweep(n_samples: usize, dims: &[usize], seed: u64) -> Vec<GramErrorRow> {
+    let spec = BlobSpec::default();
+    let centers = blob_centers(&spec, seed);
+    let mut rng = Rng::new(seed + 1);
+    let x = sample_blobs(&spec, &centers, n_samples, None, &mut rng).0;
+    let kernel = Kernel::Rbf { gamma: 0.1 };
+    let exact = gram_sym(&kernel, &x);
+    dims.iter()
+        .map(|&dim| {
+            let map = RffMap::sample(x.cols(), dim, 0.1, seed ^ 0x5F0F);
+            let approx = map.gram(&x, &x);
+            let mut max_abs = 0.0f64;
+            let mut sq_sum = 0.0f64;
+            let mut count = 0usize;
+            for i in 0..n_samples {
+                for j in 0..n_samples {
+                    let d = (approx[(i, j)] - exact[(i, j)]).abs();
+                    max_abs = max_abs.max(d);
+                    sq_sum += d * d;
+                    count += 1;
+                }
+            }
+            GramErrorRow { dim, max_abs_err: max_abs, rmse: (sq_sum / count as f64).sqrt() }
+        })
+        .collect()
+}
+
+/// Fit the constant `c` in `max_abs_err ~= c / sqrt(D)` by averaging
+/// `err * sqrt(D)` across the sweep — the number
+/// [`crate::kernels::RFF_ERR_CONST`] conservatively over-estimates.
+pub fn fitted_constant(rows: &[GramErrorRow]) -> f64 {
+    assert!(!rows.is_empty(), "need at least one sweep row to fit");
+    rows.iter().map(|r| r.max_abs_err * (r.dim as f64).sqrt()).sum::<f64>() / rows.len() as f64
+}
+
+/// Render the Gram-error sweep as the `BENCH_rff.json` payload (same
+/// hand-rolled shape as `BENCH_comm.json`).
+pub fn gram_error_json(rows: &[GramErrorRow], fitted_c: f64) -> String {
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"dim\": {}, \"max_abs_err\": {:.5}, \"rmse\": {:.5}}}",
+                r.dim, r.max_abs_err, r.rmse
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\": \"rff_dim\", \"fitted_c\": {:.4}, \"results\": [{}]}}\n",
+        fitted_c,
+        entries.join(", ")
+    )
+}
+
 /// Render the sweep as a report table.
 pub fn table(rows: &[RffSweepRow]) -> Table {
     let mut t = Table::new(
@@ -116,6 +186,42 @@ mod tests {
         assert_eq!(rows[1].setup_floats, directed * (8 * 16) as u64);
         assert_eq!(rows[2].setup_floats, directed * (8 * 64) as u64);
         assert!(rows.iter().all(|r| r.sim_mean.is_finite() && r.sim_mean > 0.0));
+    }
+
+    #[test]
+    fn gram_error_follows_the_inverse_sqrt_law() {
+        let rows = gram_error_sweep(24, &[64, 1024], 9);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.max_abs_err.is_finite() && r.max_abs_err > 0.0);
+            assert!(r.rmse > 0.0 && r.rmse <= r.max_abs_err);
+        }
+        // 64 -> 1024 dims is a 4x error drop under the law — far
+        // beyond Monte-Carlo wobble.
+        assert!(
+            rows[1].max_abs_err < rows[0].max_abs_err,
+            "error did not shrink: {} -> {}",
+            rows[0].max_abs_err,
+            rows[1].max_abs_err
+        );
+        let c = fitted_constant(&rows);
+        assert!(c.is_finite() && c > 0.0 && c < 10.0, "implausible fit {c}");
+        let json = gram_error_json(&rows, c);
+        assert!(json.starts_with("{\"bench\": \"rff_dim\""), "{json}");
+        assert!(json.contains("\"fitted_c\""), "{json}");
+        assert_eq!(json.matches("\"dim\":").count(), 2);
+    }
+
+    #[test]
+    fn auto_dim_law_inverts_the_sweep_abscissa() {
+        // dim_for_budget is the exact inverse of err = C / sqrt(D) at
+        // the conservative constant, so feeding it the error the law
+        // predicts at D must give back D.
+        use crate::kernels::{dim_for_budget, RFF_ERR_CONST};
+        for d in [64usize, 256, 1024, 4096] {
+            let predicted_err = RFF_ERR_CONST / (d as f64).sqrt();
+            assert_eq!(dim_for_budget(predicted_err), d);
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod rff;
 
 pub use center::{center_gram, center_gram_inplace};
 pub use gram::{gram, gram_sym};
-pub use rff::RffMap;
+pub use rff::{dim_for_budget, RffMap, RFF_AUTO_DIM_RANGE, RFF_ERR_CONST};
 
 /// Positive definite kernel functions over `R^M`.
 #[derive(Clone, Copy, Debug, PartialEq)]

@@ -97,6 +97,35 @@ impl RffMap {
     }
 }
 
+/// Calibrated constant of the Monte-Carlo max-Gram-error law
+/// `err(D) ~ RFF_ERR_CONST / sqrt(D)`: the Bochner estimator averages
+/// `D` bounded i.i.d. cosine terms, so the entrywise error shrinks as
+/// `1/sqrt(D)`. The constant is fitted empirically by
+/// `experiments::rff_sweep::gram_error_sweep` (`BENCH_rff.json` tracks
+/// the fit in CI) and matches the in-repo evidence: `D = 4096` lands
+/// around max error 0.03 in `approximates_rbf_gram`.
+pub const RFF_ERR_CONST: f64 = 2.0;
+
+/// Bounds of [`dim_for_budget`]: below 16 features the estimator is
+/// noise, above 65536 the setup exchange dwarfs every real dataset
+/// width.
+pub const RFF_AUTO_DIM_RANGE: (usize, usize) = (16, 65_536);
+
+/// Smallest feature dimension whose expected max Gram error meets
+/// `budget`, inverting the `RFF_ERR_CONST / sqrt(D)` law:
+/// `D = ceil((c / budget)^2)`, clamped to [`RFF_AUTO_DIM_RANGE`].
+/// This is what `setup.rff.dim: "auto"` resolves through at config
+/// load time. Panics on a non-positive or non-finite budget — the
+/// config loader validates first.
+pub fn dim_for_budget(budget: f64) -> usize {
+    assert!(
+        budget.is_finite() && budget > 0.0,
+        "RFF error budget must be a positive number, got {budget}"
+    );
+    let raw = (RFF_ERR_CONST / budget).powi(2).ceil() as usize;
+    raw.clamp(RFF_AUTO_DIM_RANGE.0, RFF_AUTO_DIM_RANGE.1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,5 +232,27 @@ mod tests {
             .alphas
             .iter()
             .all(|a| a.iter().all(|v| v.is_finite())));
+    }
+
+    #[test]
+    fn dim_for_budget_inverts_the_sqrt_law() {
+        // D = ceil((c / eps)^2) with c = RFF_ERR_CONST = 2.
+        assert_eq!(dim_for_budget(2.0), RFF_AUTO_DIM_RANGE.0, "loose budget clamps low");
+        assert_eq!(dim_for_budget(0.1), 400);
+        assert_eq!(dim_for_budget(0.05), 1600);
+        assert_eq!(dim_for_budget(1e-6), RFF_AUTO_DIM_RANGE.1, "tight budget clamps high");
+    }
+
+    #[test]
+    fn dim_for_budget_is_monotone_in_the_budget() {
+        let budgets = [0.5, 0.2, 0.1, 0.05, 0.02];
+        let dims: Vec<usize> = budgets.iter().map(|&b| dim_for_budget(b)).collect();
+        assert!(dims.windows(2).all(|w| w[0] <= w[1]), "tighter budget, larger dim: {dims:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "positive number")]
+    fn dim_for_budget_rejects_zero() {
+        dim_for_budget(0.0);
     }
 }

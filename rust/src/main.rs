@@ -53,6 +53,16 @@ fn main() {
 /// Experiment arms `dkpca sweep --experiment` accepts.
 const SWEEP_EXPERIMENTS: &str = "fig3|fig4|fig5|timing|comm|ablation|rff|topk";
 
+/// The one `sweep` usage line — unknown experiments and bad flag
+/// values print it before returning exit code 2.
+fn sweep_usage() -> String {
+    format!(
+        "USAGE: dkpca sweep --experiment <{SWEEP_EXPERIMENTS}> [--full] [--pjrt] \
+         [--seed <S>] [--multik <block|deflate>] [--censor <on|off>] \
+         [--quant-bits <2..32>]"
+    )
+}
+
 fn print_usage() {
     println!(
         "dkpca — Decentralized Kernel PCA with Projection Consensus Constraints\n\
@@ -74,6 +84,8 @@ fn print_usage() {
          sweep flags:  --experiment <{SWEEP_EXPERIMENTS}>\n\
          \u{20}             --full --pjrt --seed <S> --threads <T>\n\
          \u{20}             --multik <block|deflate> (topk training schedule)\n\
+         \u{20}             --censor <on|off> --quant-bits <2..32> (comm experiment:\n\
+         \u{20}             COKE-style send censoring / iteration-payload codec)\n\
          central flags: --nodes <J> --samples <N> --seed <S> --threads <T>\n\
          analyze flags: <timeline.json> [--check]\n\
          info flags:   --config <file.json> --metrics\n\
@@ -339,9 +351,74 @@ fn cmd_sweep(args: &[String]) -> i32 {
             println!("{}", experiments::timing::table(&rows));
         }
         "comm" => {
-            let rows =
-                experiments::comm::run(20, &[2, 4, 6], &[50, 100, 200], 5, backend, seed);
+            let censor = match flag(args, "--censor") {
+                None | Some("off") => None,
+                Some("on") => Some(dkpca::admm::CensorSpec::default()),
+                Some(other) => {
+                    eprintln!("unknown --censor value '{other}' (want on|off)\n{}", sweep_usage());
+                    return 2;
+                }
+            };
+            let quant_bits = match flag(args, "--quant-bits") {
+                None => None,
+                Some(v) => match v.parse::<u8>() {
+                    Ok(b) if (2..=32).contains(&b) => Some(b),
+                    _ => {
+                        eprintln!(
+                            "--quant-bits must be an integer in 2..=32, got '{v}'\n{}",
+                            sweep_usage()
+                        );
+                        return 2;
+                    }
+                },
+            };
+            let rows = experiments::comm::run(
+                20,
+                &[2, 4, 6],
+                &[50, 100, 200],
+                5,
+                backend.clone(),
+                seed,
+            );
             println!("{}", experiments::comm::table(&rows));
+            if censor.is_some() || quant_bits.is_some() {
+                // Censored-vs-dense per-edge trajectory: same grid both
+                // modes, every number off the fabric's counters.
+                let mut entries = experiments::comm::trajectory(
+                    8,
+                    &[50, 100],
+                    3,
+                    &[1],
+                    64,
+                    dkpca::admm::MultiKStrategy::Deflate,
+                    backend.clone(),
+                    seed,
+                );
+                entries.extend(experiments::comm::trajectory_tuned(
+                    8,
+                    &[50, 100],
+                    3,
+                    &[1],
+                    64,
+                    dkpca::admm::MultiKStrategy::Deflate,
+                    censor,
+                    quant_bits,
+                    backend,
+                    seed,
+                ));
+                for e in &entries {
+                    println!(
+                        "comm {}/{} N={:>3}: iter {:>6.1} floats/edge/it, \
+                         censored {} / kept {} sends",
+                        e.mode,
+                        e.setup,
+                        e.samples_per_node,
+                        e.iter_floats_per_edge_per_iter,
+                        e.censored_sends,
+                        e.kept_sends,
+                    );
+                }
+            }
         }
         "rff" => {
             let dims: &[usize] = if full { &[64, 256, 1024, 4096] } else { &[32, 128] };
@@ -392,10 +469,7 @@ fn cmd_sweep(args: &[String]) -> i32 {
             println!("{}", experiments::ablation::init_table(&i));
         }
         other => {
-            eprintln!(
-                "unknown experiment '{other}'\n\
-                 USAGE: dkpca sweep --experiment <{SWEEP_EXPERIMENTS}> [--full] [--pjrt] [--seed <S>]"
-            );
+            eprintln!("unknown experiment '{other}'\n{}", sweep_usage());
             return 2;
         }
     }

@@ -126,6 +126,14 @@ pub mod names {
     pub const EV_MSG_RECV: &str = "msg.recv";
     /// Timeline event: send→recv flow pair (`s`/`f`).
     pub const EV_MSG_FLOW: &str = "msg.flow";
+    /// Timeline event: a full round-A/B payload was withheld by the
+    /// censoring rule (a marker shipped instead).
+    pub const EV_MSG_CENSORED: &str = "msg.censored";
+    /// Iteration sends the censoring rule withheld (marker on the wire
+    /// instead of the full payload).
+    pub const COMM_CENSORED_SENDS: &str = "comm.censored_sends";
+    /// Iteration sends that went out at full payload width.
+    pub const COMM_KEPT_SENDS: &str = "comm.kept_sends";
     /// Timeline event: pool fan-out dispatch (`X`).
     pub const EV_POOL_TASK: &str = "pool.task";
     /// Timeline event: serve request entered the queue.

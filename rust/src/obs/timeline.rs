@@ -130,6 +130,18 @@ pub enum EventKind {
         /// Wire phase index (`PHASE_*`).
         phase: usize,
     },
+    /// A full round-A/B payload toward `dst` was withheld by the
+    /// censoring rule — a censor marker was emitted instead (recorded
+    /// at emission, like [`EventKind::Send`]; the marker itself also
+    /// records a `Send`).
+    SendCensored {
+        /// Destination node id of the withheld payload.
+        dst: usize,
+        /// Wire iteration tag of the censored round.
+        iter: usize,
+        /// Wire phase index (`PHASE_*`).
+        phase: usize,
+    },
     /// An envelope from `src` was consumed (recorded at consumption).
     Recv {
         /// Source node id.
@@ -270,6 +282,19 @@ impl Recorder {
             return;
         }
         self.record(Track::Node(node), self.now_nanos(), EventKind::Send { dst, iter, phase });
+    }
+
+    /// Record a censoring decision: the full payload `node -> dst` was
+    /// withheld this round (a marker went out in its place).
+    pub fn send_censored(&self, node: usize, dst: usize, iter: usize, phase: usize) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        self.record(Track::Node(node), self.now_nanos(), EventKind::SendCensored {
+            dst,
+            iter,
+            phase,
+        });
     }
 
     /// Record an envelope consumption `src -> node` (wire iteration tag
@@ -610,6 +635,14 @@ pub fn chrome_trace(snap: &TimelineSnapshot, traces: &[NodeTrace]) -> Json {
                     ct.ev_instant(names::EV_MSG_SEND, tid, ts, args);
                     let id = format!("{node}:{dst}:{iter}:{phase}");
                     ct.ev_flow_out(names::EV_MSG_FLOW, tid, ts, &id);
+                }
+                EventKind::SendCensored { dst, iter, phase } => {
+                    let args = Json::obj([
+                        ("dst", Json::Num(dst as f64)),
+                        ("iter", Json::Num(iter as f64)),
+                        ("phase", Json::Str(pname(phase).into())),
+                    ]);
+                    ct.ev_instant(names::EV_MSG_CENSORED, tid, ts, args);
                 }
                 EventKind::Recv { src, iter, phase } => {
                     let args = Json::obj([

@@ -85,7 +85,7 @@ impl LockstepNet {
         let n = xs.len();
         let stop_lag = graph.diameter().max(1);
         let stats = Arc::new(TrafficStats::new(n));
-        let channel = ChannelSpec { noise, noise_seed, n_nodes: n };
+        let channel = ChannelSpec { noise, noise_seed, n_nodes: n, quant_bits: cfg.quant_bits };
         let programs: Vec<NodeProgram> = (0..n)
             .map(|id| {
                 NodeProgram::new(
@@ -266,6 +266,18 @@ impl LockstepNet {
     /// The raw per-edge counters.
     pub fn stats(&self) -> &TrafficStats {
         &self.stats
+    }
+
+    /// Iteration sends suppressed by communication censoring (a cheap
+    /// marker went out instead of the full payload). 0 when censoring
+    /// is off.
+    pub fn censored_sends(&self) -> u64 {
+        self.stats.censored_sends()
+    }
+
+    /// Iteration sends that carried a full (or quantized) payload.
+    pub fn kept_sends(&self) -> u64 {
+        self.stats.kept_sends()
     }
 
     /// Telemetry sidecars of all programs, in node order (empty traces

@@ -5,6 +5,116 @@
 use crate::admm::{RoundA, RoundABlock, RoundB, RoundBBlock};
 use crate::linalg::Matrix;
 
+/// A uniform-quantized float vector — the iteration-payload codec.
+///
+/// `encode` maps each value onto `2^bits - 1` uniform steps over the
+/// vector's own empirical `[lo, hi]` range (the same scheme as the
+/// `NoiseModel::Quantize` setup channel) and bit-packs the codes into
+/// `u64` words, whole codes per word (no straddling — `floor(64 /
+/// bits)` codes each). On the wire that is `2 + words` float-equivalent
+/// slots: the two range floats plus one per 64-bit word, which is what
+/// [`Envelope::floats`] charges. The codec is pure arithmetic — no RNG,
+/// no platform dependence — so both transports produce bit-identical
+/// quantized runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantVec {
+    /// Smallest encoded value (dequantization offset).
+    pub lo: f64,
+    /// Largest encoded value (fixes the dequantization step).
+    pub hi: f64,
+    /// Bits per code (2..=32).
+    pub bits: u8,
+    /// Number of encoded values.
+    pub len: usize,
+    /// Bit-packed codes, `floor(64 / bits)` per word.
+    pub words: Vec<u64>,
+}
+
+impl QuantVec {
+    /// Quantize `values` to `bits` bits per entry over their empirical
+    /// range. Panics outside 2..=32 bits — the config loader validates
+    /// first.
+    pub fn encode(values: &[f64], bits: u8) -> QuantVec {
+        assert!((2..=32).contains(&bits), "quant_bits must lie in 2..=32, got {bits}");
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in values {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if values.is_empty() {
+            (lo, hi) = (0.0, 0.0);
+        }
+        let steps = ((1u64 << bits) - 1) as f64;
+        let span = hi - lo;
+        let per_word = (64 / bits as usize).max(1);
+        let mut words = vec![0u64; values.len().div_ceil(per_word)];
+        for (i, &v) in values.iter().enumerate() {
+            let code = if span > 0.0 {
+                (((v - lo) / span * steps).round() as u64).min(steps as u64)
+            } else {
+                0
+            };
+            words[i / per_word] |= code << ((i % per_word) * bits as usize);
+        }
+        QuantVec { lo, hi, bits, len: values.len(), words }
+    }
+
+    /// Reconstruct the (lossy) values.
+    pub fn decode(&self) -> Vec<f64> {
+        let steps = ((1u64 << self.bits) - 1) as f64;
+        let span = self.hi - self.lo;
+        let per_word = (64 / self.bits as usize).max(1);
+        let mask = (1u64 << self.bits) - 1;
+        (0..self.len)
+            .map(|i| {
+                let code = (self.words[i / per_word] >> ((i % per_word) * self.bits as usize))
+                    & mask;
+                if span > 0.0 {
+                    self.lo + code as f64 / steps * span
+                } else {
+                    self.lo
+                }
+            })
+            .collect()
+    }
+
+    /// Wire size in float-equivalent slots: the `[lo, hi]` range pair
+    /// plus one slot per packed 64-bit word.
+    pub fn wire_floats(&self) -> u64 {
+        2 + self.words.len() as u64
+    }
+}
+
+/// A uniform-quantized matrix: the row-major data as a [`QuantVec`]
+/// plus the shape (header metadata, not charged as floats — mirroring
+/// how `iter`/`phase` headers are never charged).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantMat {
+    /// Row count of the encoded matrix.
+    pub rows: usize,
+    /// Column count of the encoded matrix.
+    pub cols: usize,
+    /// The codec'd row-major entries.
+    pub data: QuantVec,
+}
+
+impl QuantMat {
+    /// Quantize a matrix's row-major entries to `bits` bits each.
+    pub fn encode(m: &Matrix, bits: u8) -> QuantMat {
+        QuantMat { rows: m.rows(), cols: m.cols(), data: QuantVec::encode(m.as_slice(), bits) }
+    }
+
+    /// Reconstruct the (lossy) matrix.
+    pub fn decode(&self) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.data.decode())
+    }
+
+    /// Wire size in float-equivalent slots (see [`QuantVec::wire_floats`]).
+    pub fn wire_floats(&self) -> u64 {
+        self.data.wire_floats()
+    }
+}
+
 /// Protocol phase tag (messages are matched by (iter, phase)).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Phase {
@@ -60,6 +170,47 @@ pub enum Payload {
     /// directed edge per pass transition), so every neighbor deflates
     /// its Gram copies with the identical dual.
     Converged(Vec<f64>),
+    /// Censor marker replacing a round-A payload (scalar or block)
+    /// whose state moved less than the censoring threshold since the
+    /// last full transmission on this edge: the receiver reuses the
+    /// last received round-A message. Carries ONLY the convergence-
+    /// gossip window — the stop rule always rides, so the diameter-
+    /// lagged stop decision is identical to the dense run's fold over
+    /// the same windows.
+    ACensor(Vec<f64>),
+    /// Censor marker replacing a round-B payload: the receiver reuses
+    /// the z-host's last transmitted segment. Zero floats on the wire.
+    BCensor,
+    /// Quantized round-A payload (`quant_bits` codec): the codec'd
+    /// alpha and multiplier columns plus the full-precision gossip
+    /// window (stop decisions never go through the lossy path).
+    AQuant {
+        /// Codec'd `alpha` column.
+        alpha: QuantVec,
+        /// Codec'd multiplier column toward the target z-host.
+        bcol: QuantVec,
+        /// Convergence-gossip window, full width.
+        gossip: Vec<f64>,
+    },
+    /// Quantized round-B payload.
+    BQuant {
+        /// Codec'd z-projection segment.
+        segment: QuantVec,
+    },
+    /// Quantized block-mode round-A payload (`N x k` blocks).
+    ABlockQuant {
+        /// Codec'd `N x k` dual block.
+        alpha: QuantMat,
+        /// Codec'd `N x k` multiplier block.
+        bcol: QuantMat,
+        /// Convergence-gossip window, full width.
+        gossip: Vec<f64>,
+    },
+    /// Quantized block-mode round-B payload.
+    BBlockQuant {
+        /// Codec'd `N_to x k` segment block.
+        segment: QuantMat,
+    },
 }
 
 impl Envelope {
@@ -78,7 +229,24 @@ impl Envelope {
             }
             Payload::BBlock(b) => (b.segment.rows() * b.segment.cols()) as u64,
             Payload::Converged(alpha) => alpha.len() as u64,
+            Payload::ACensor(gossip) => gossip.len() as u64,
+            Payload::BCensor => 0,
+            Payload::AQuant { alpha, bcol, gossip } => {
+                alpha.wire_floats() + bcol.wire_floats() + gossip.len() as u64
+            }
+            Payload::BQuant { segment } => segment.wire_floats(),
+            Payload::ABlockQuant { alpha, bcol, gossip } => {
+                alpha.wire_floats() + bcol.wire_floats() + gossip.len() as u64
+            }
+            Payload::BBlockQuant { segment } => segment.wire_floats(),
         }
+    }
+
+    /// Whether this envelope is a censor marker (a withheld round-A/B
+    /// payload) — what the `censored_sends` traffic counter and the
+    /// trace's `censored` tag key on.
+    pub fn is_censor_marker(&self) -> bool {
+        matches!(self.payload, Payload::ACensor(_) | Payload::BCensor)
     }
 }
 
@@ -156,5 +324,105 @@ mod tests {
             payload: Payload::Converged(vec![0.0; 9]),
         };
         assert_eq!(e.floats(), 9, "deflation exchange moves N floats per edge");
+    }
+
+    #[test]
+    fn censor_markers_cost_only_the_gossip_window() {
+        let a = Envelope {
+            from: 0,
+            iter: 4,
+            phase: Phase::RoundA,
+            payload: Payload::ACensor(vec![0.5; 3]),
+        };
+        assert_eq!(a.floats(), 3, "A marker ships only the stop window");
+        assert!(a.is_censor_marker());
+        let b = Envelope { from: 0, iter: 4, phase: Phase::RoundB, payload: Payload::BCensor };
+        assert_eq!(b.floats(), 0, "B marker is free on the wire");
+        assert!(b.is_censor_marker());
+        let full = Envelope {
+            from: 0,
+            iter: 4,
+            phase: Phase::RoundA,
+            payload: Payload::A(RoundA { alpha: vec![0.0; 2], bcol: vec![0.0; 2] }, Vec::new()),
+        };
+        assert!(!full.is_censor_marker());
+    }
+
+    #[test]
+    fn quant_codec_roundtrips_within_a_step() {
+        let vals: Vec<f64> = (0..37).map(|i| (i as f64 * 0.73).sin() * 4.0 - 1.0).collect();
+        let q = QuantVec::encode(&vals, 8);
+        assert_eq!(q.len, 37);
+        // 8 codes per 64-bit word -> ceil(37/8) = 5 words + lo/hi.
+        assert_eq!(q.words.len(), 5);
+        assert_eq!(q.wire_floats(), 7);
+        let back = q.decode();
+        let step = (q.hi - q.lo) / 255.0;
+        for (v, d) in vals.iter().zip(&back) {
+            assert!((v - d).abs() <= step / 2.0 + 1e-12, "{v} vs {d}");
+        }
+        // Extremes are exact: lo and hi are on the grid.
+        let lo_i = vals.iter().enumerate().min_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        assert_eq!(back[lo_i], q.lo);
+    }
+
+    #[test]
+    fn quant_codec_handles_degenerate_inputs() {
+        let flat = QuantVec::encode(&[3.25; 9], 4);
+        assert!(flat.decode().iter().all(|&v| v == 3.25), "zero span decodes exactly");
+        let empty = QuantVec::encode(&[], 8);
+        assert_eq!(empty.decode(), Vec::<f64>::new());
+        assert_eq!(empty.wire_floats(), 2);
+        let wide = QuantVec::encode(&[1.0, -1.0], 32);
+        assert_eq!(wide.words.len(), 1, "two 32-bit codes pack one word");
+        let back = wide.decode();
+        assert!((back[0] - 1.0).abs() < 1e-9 && (back[1] + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantized_payload_floats_reflect_the_reduced_width() {
+        // N = 64 at 8 bits: alpha = 2 + 64/8 = 10 slots, same for bcol,
+        // vs 128 full-width floats — a >5x cut before censoring.
+        let n = 64;
+        let vals = vec![0.5; n];
+        let a = Envelope {
+            from: 0,
+            iter: 0,
+            phase: Phase::RoundA,
+            payload: Payload::AQuant {
+                alpha: QuantVec::encode(&vals, 8),
+                bcol: QuantVec::encode(&vals, 8),
+                gossip: vec![0.0; 1],
+            },
+        };
+        assert_eq!(a.floats(), 10 + 10 + 1);
+        let b = Envelope {
+            from: 0,
+            iter: 0,
+            phase: Phase::RoundB,
+            payload: Payload::BQuant { segment: QuantVec::encode(&vals, 8) },
+        };
+        assert_eq!(b.floats(), 10);
+        let m = Matrix::zeros(8, 3);
+        let blk = Envelope {
+            from: 0,
+            iter: 0,
+            phase: Phase::RoundB,
+            payload: Payload::BBlockQuant { segment: QuantMat::encode(&m, 8) },
+        };
+        // 24 entries at 8/word -> 3 words + 2 range floats.
+        assert_eq!(blk.floats(), 5);
+    }
+
+    #[test]
+    fn quant_mat_roundtrips_shape() {
+        let m = Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        let q = QuantMat::encode(&m, 16);
+        let back = q.decode();
+        assert_eq!((back.rows(), back.cols()), (4, 3));
+        let step = (q.data.hi - q.data.lo) / 65535.0;
+        for (a, b) in m.as_slice().iter().zip(back.as_slice()) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-12);
+        }
     }
 }

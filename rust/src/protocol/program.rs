@@ -34,7 +34,9 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use crate::admm::{AdmmConfig, MultiKStrategy, NodeState, RoundA, RoundABlock};
+use crate::admm::{
+    AdmmConfig, CensorSpec, MultiKStrategy, NodeState, RoundA, RoundABlock, RoundB, RoundBBlock,
+};
 use crate::backend::ComputeBackend;
 use crate::kernels::Kernel;
 use crate::linalg::{kmetric_orthonormalize, Matrix};
@@ -69,6 +71,129 @@ fn emit(out: &mut Vec<Outbound>, to: usize, env: Envelope) {
         obs::timeline::recorder().send(env.from, to, env.iter, phase_wire_idx(env.phase));
     }
     out.push((to, env));
+}
+
+/// Per-neighbor communication-censoring caches (COKE, PAPERS.md),
+/// indexed by neighbor position in `nbrs`. Sender side: the last
+/// payload actually transmitted toward each neighbor plus how many
+/// consecutive rounds the direction has been censored (the keep-alive
+/// counter). Receiver side: the last full payload received from each
+/// neighbor, substituted whenever a censor marker arrives. Reset at
+/// every pass boundary — deflation reseeds alpha, so a cache would
+/// otherwise compare payloads across incompatible passes.
+struct CensorState {
+    spec: CensorSpec,
+    last_sent_a: Vec<Option<RoundA>>,
+    last_sent_ab: Vec<Option<RoundABlock>>,
+    since_full_a: Vec<usize>,
+    last_sent_b: Vec<Option<RoundB>>,
+    last_sent_bb: Vec<Option<RoundBBlock>>,
+    since_full_b: Vec<usize>,
+    last_recv_a: Vec<Option<RoundA>>,
+    last_recv_ab: Vec<Option<RoundABlock>>,
+    last_recv_b: Vec<Option<RoundB>>,
+    last_recv_bb: Vec<Option<RoundBBlock>>,
+}
+
+impl CensorState {
+    fn new(spec: CensorSpec, deg: usize) -> CensorState {
+        CensorState {
+            spec,
+            last_sent_a: vec![None; deg],
+            last_sent_ab: vec![None; deg],
+            since_full_a: vec![0; deg],
+            last_sent_b: vec![None; deg],
+            last_sent_bb: vec![None; deg],
+            since_full_b: vec![0; deg],
+            last_recv_a: vec![None; deg],
+            last_recv_ab: vec![None; deg],
+            last_recv_b: vec![None; deg],
+            last_recv_bb: vec![None; deg],
+        }
+    }
+
+    /// Forget everything at a pass boundary (deflation reseeds alpha).
+    fn reset(&mut self) {
+        self.last_sent_a.iter_mut().for_each(|s| *s = None);
+        self.last_sent_ab.iter_mut().for_each(|s| *s = None);
+        self.last_sent_b.iter_mut().for_each(|s| *s = None);
+        self.last_sent_bb.iter_mut().for_each(|s| *s = None);
+        self.last_recv_a.iter_mut().for_each(|s| *s = None);
+        self.last_recv_ab.iter_mut().for_each(|s| *s = None);
+        self.last_recv_b.iter_mut().for_each(|s| *s = None);
+        self.last_recv_bb.iter_mut().for_each(|s| *s = None);
+        self.since_full_a.iter_mut().for_each(|c| *c = 0);
+        self.since_full_b.iter_mut().for_each(|c| *c = 0);
+    }
+}
+
+/// Sender-side censor decision for one neighbor: `true` means the full
+/// payload is withheld this round (the caller ships a marker). Updates
+/// the cache and keep-alive counter either way: a full send refreshes
+/// the cache and zeroes the counter; a censored send only bumps the
+/// counter. The first send on an edge (empty cache) and every
+/// `keepalive`-th round are always full, which bounds how stale any
+/// neighbor's view can get.
+fn censor_decide<T: Clone>(
+    cache: &mut Option<T>,
+    since_full: &mut usize,
+    spec: &CensorSpec,
+    t: usize,
+    msg: &T,
+    delta: impl Fn(&T, &T) -> f64,
+) -> bool {
+    let censored = match cache.as_ref() {
+        Some(prev) if *since_full + 1 < spec.keepalive => delta(prev, msg) < spec.threshold(t),
+        _ => false,
+    };
+    if censored {
+        *since_full += 1;
+    } else {
+        *cache = Some(msg.clone());
+        *since_full = 0;
+    }
+    censored
+}
+
+/// Sup-norm distance between equal-length payload vectors.
+fn inf_delta(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).fold(0.0f64, |m, (x, y)| m.max((x - y).abs()))
+}
+
+fn round_a_delta(prev: &RoundA, next: &RoundA) -> f64 {
+    inf_delta(&prev.alpha, &next.alpha).max(inf_delta(&prev.bcol, &next.bcol))
+}
+
+fn round_a_block_delta(prev: &RoundABlock, next: &RoundABlock) -> f64 {
+    inf_delta(prev.alpha.as_slice(), next.alpha.as_slice())
+        .max(inf_delta(prev.bcol.as_slice(), next.bcol.as_slice()))
+}
+
+fn round_b_delta(prev: &RoundB, next: &RoundB) -> f64 {
+    inf_delta(&prev.segment, &next.segment)
+}
+
+fn round_b_block_delta(prev: &RoundBBlock, next: &RoundBBlock) -> f64 {
+    inf_delta(prev.segment.as_slice(), next.segment.as_slice())
+}
+
+/// Observability for a censoring decision (pure telemetry): the
+/// skipped-send timeline event plus the censored-sends counter.
+fn note_censored(node: usize, dst: usize, iter: usize, phase: Phase) {
+    if !obs::enabled() {
+        return;
+    }
+    obs::registry().counter(obs::names::COMM_CENSORED_SENDS).inc();
+    obs::timeline::recorder().send_censored(node, dst, iter, phase_wire_idx(phase));
+}
+
+/// Counterpart of [`note_censored`] for a full iteration send.
+fn note_kept() {
+    if !obs::enabled() {
+        return;
+    }
+    obs::registry().counter(obs::names::COMM_KEPT_SENDS).inc();
 }
 
 /// What the program is currently waiting for.
@@ -160,6 +285,10 @@ pub struct NodeProgram {
     /// The gossip head the last round-A stop check tested (INFINITY
     /// while the window is filling or when gossip is off).
     last_gossip_head: f64,
+    /// Communication-censoring caches (`None` = dense rounds; the
+    /// censored paths are then never entered, keeping default runs
+    /// bit-identical to builds predating the knob).
+    censor: Option<CensorState>,
 }
 
 impl NodeProgram {
@@ -176,6 +305,12 @@ impl NodeProgram {
     ) -> NodeProgram {
         assert!(!neighbors.is_empty(), "Alg. 1 needs |Omega_j| >= 1");
         assert!(n_components >= 1, "need at least one component");
+        let censor = cfg.censor.map(|spec| {
+            if let Err(e) = spec.validate() {
+                panic!("invalid censor spec: {e}");
+            }
+            CensorState::new(spec, neighbors.len())
+        });
         NodeProgram {
             id,
             x_own: Some(x_own),
@@ -201,6 +336,7 @@ impl NodeProgram {
             iter_secs: 0.0,
             trace: NodeTrace::default(),
             last_gossip_head: f64::INFINITY,
+            censor,
         }
     }
 
@@ -331,6 +467,28 @@ impl NodeProgram {
         }
     }
 
+    /// Fold a neighbor's gossip window into ours (positionally — all
+    /// nodes' windows cover the same iterations). Every round-A
+    /// variant, censored or not, carries the window, so the stop rule
+    /// folds the identical data under censoring.
+    fn fold_gossip(&mut self, theirs: &[f64]) {
+        debug_assert_eq!(theirs.len(), self.gossip.len());
+        for (mine, theirs) in self.gossip.iter_mut().zip(theirs) {
+            if *theirs > *mine {
+                *mine = *theirs;
+            }
+        }
+    }
+
+    /// Neighbor position of node `id` in `nbrs` (the censor caches'
+    /// index space).
+    fn nbr_pos(&self, id: usize) -> usize {
+        self.nbrs
+            .iter()
+            .position(|&n| n == id)
+            .expect("protocol message from a non-neighbor")
+    }
+
     /// Advance as far as the inbox allows, pushing outbound envelopes.
     pub fn poll(&mut self, backend: &dyn ComputeBackend, out: &mut Vec<Outbound>) {
         loop {
@@ -447,21 +605,45 @@ impl NodeProgram {
                         continue;
                     }
                     // Fold neighbor windows into ours (positionally —
-                    // all nodes' windows cover the same iterations).
+                    // all nodes' windows cover the same iterations),
+                    // decoding quantized payloads and substituting the
+                    // cached value for censor markers.
                     let mut inbox_a: Vec<(usize, RoundA)> = Vec::with_capacity(msgs.len());
                     for e in msgs {
-                        match e.payload {
+                        let from = e.from;
+                        let a = match e.payload {
                             Payload::A(a, w) => {
-                                debug_assert_eq!(w.len(), self.gossip.len());
-                                for (mine, theirs) in self.gossip.iter_mut().zip(&w) {
-                                    if *theirs > *mine {
-                                        *mine = *theirs;
-                                    }
+                                self.fold_gossip(&w);
+                                if self.censor.is_some() {
+                                    let p = self.nbr_pos(from);
+                                    let cs = self.censor.as_mut().expect("checked");
+                                    cs.last_recv_a[p] = Some(a.clone());
                                 }
-                                inbox_a.push((e.from, a));
+                                a
                             }
-                            _ => unreachable!("round-A phase carries Payload::A"),
-                        }
+                            Payload::AQuant { alpha, bcol, gossip } => {
+                                self.fold_gossip(&gossip);
+                                let a = RoundA { alpha: alpha.decode(), bcol: bcol.decode() };
+                                if self.censor.is_some() {
+                                    let p = self.nbr_pos(from);
+                                    let cs = self.censor.as_mut().expect("checked");
+                                    cs.last_recv_a[p] = Some(a.clone());
+                                }
+                                a
+                            }
+                            Payload::ACensor(w) => {
+                                self.fold_gossip(&w);
+                                let p = self.nbr_pos(from);
+                                self.censor
+                                    .as_ref()
+                                    .expect("censor marker without censoring configured")
+                                    .last_recv_a[p]
+                                    .clone()
+                                    .expect("censor marker before any full round-A payload")
+                            }
+                            _ => unreachable!("round-A phase carries a round-A payload"),
+                        };
+                        inbox_a.push((from, a));
                     }
                     // Decentralized stopping rule: stop after this
                     // iteration once the settled network-wide max of
@@ -495,15 +677,35 @@ impl NodeProgram {
                     for (to, seg) in segments {
                         if to == self.id {
                             node.receive_z(self.id, &seg);
-                        } else {
-                            let env = Envelope {
-                                from: self.id,
-                                iter: tag,
-                                phase: Phase::RoundB,
-                                payload: Payload::B(seg),
-                            };
-                            emit(out, to, env);
+                            continue;
                         }
+                        let mut censored = false;
+                        if let Some(cs) = self.censor.as_mut() {
+                            let p = self
+                                .nbrs
+                                .iter()
+                                .position(|&n| n == to)
+                                .expect("segment toward a non-neighbor");
+                            let spec = cs.spec;
+                            censored = censor_decide(
+                                &mut cs.last_sent_b[p],
+                                &mut cs.since_full_b[p],
+                                &spec,
+                                self.t,
+                                &seg,
+                                round_b_delta,
+                            );
+                        }
+                        let payload = if censored {
+                            note_censored(self.id, to, tag, Phase::RoundB);
+                            Payload::BCensor
+                        } else {
+                            note_kept();
+                            Payload::B(seg)
+                        };
+                        let env =
+                            Envelope { from: self.id, iter: tag, phase: Phase::RoundB, payload };
+                        emit(out, to, env);
                     }
                     self.step = Step::RoundB;
                 }
@@ -521,9 +723,47 @@ impl NodeProgram {
                     let rho2 = self.cfg.rho2_at(self.t);
                     let node = self.node.as_mut().expect("setup done before round B");
                     for e in msgs {
+                        let from = e.from;
                         match e.payload {
-                            Payload::B(seg) => node.receive_z(e.from, &seg),
-                            _ => unreachable!("round-B phase carries Payload::B"),
+                            Payload::B(seg) => {
+                                if let Some(cs) = self.censor.as_mut() {
+                                    let p = self
+                                        .nbrs
+                                        .iter()
+                                        .position(|&n| n == from)
+                                        .expect("round-B from a non-neighbor");
+                                    cs.last_recv_b[p] = Some(seg.clone());
+                                }
+                                node.receive_z(from, &seg);
+                            }
+                            Payload::BQuant { segment } => {
+                                let seg = RoundB { segment: segment.decode() };
+                                if let Some(cs) = self.censor.as_mut() {
+                                    let p = self
+                                        .nbrs
+                                        .iter()
+                                        .position(|&n| n == from)
+                                        .expect("round-B from a non-neighbor");
+                                    cs.last_recv_b[p] = Some(seg.clone());
+                                }
+                                node.receive_z(from, &seg);
+                            }
+                            Payload::BCensor => {
+                                let p = self
+                                    .nbrs
+                                    .iter()
+                                    .position(|&n| n == from)
+                                    .expect("round-B from a non-neighbor");
+                                let seg = self
+                                    .censor
+                                    .as_ref()
+                                    .expect("censor marker without censoring configured")
+                                    .last_recv_b[p]
+                                    .clone()
+                                    .expect("censor marker before any full round-B payload");
+                                node.receive_z(from, &seg);
+                            }
+                            _ => unreachable!("round-B phase carries a round-B payload"),
                         }
                     }
                     let clock = obs::maybe_now();
@@ -607,6 +847,9 @@ impl NodeProgram {
                     self.comp += 1;
                     self.t = 0;
                     self.gossip.clear();
+                    if let Some(cs) = self.censor.as_mut() {
+                        cs.reset();
+                    }
                     self.pass_converged = false;
                     self.begin_iteration(out);
                 }
@@ -625,14 +868,62 @@ impl NodeProgram {
         let window: Vec<f64> = self.gossip.iter().copied().collect();
         let tag = self.base() + self.t;
         let block = self.block_mode();
+        let t = self.t;
+        let id = self.id;
         let node = self.node.as_ref().expect("setup done before iterating");
-        for &to in &self.nbrs {
+        for (p, &to) in self.nbrs.iter().enumerate() {
+            // Censoring: compare the would-be payload against the last
+            // one actually transmitted on this edge; below the decaying
+            // threshold, ship only the gossip window (the neighbor
+            // reuses its cached value, the stop rule rides unharmed).
             let payload = if block {
-                Payload::ABlock(node.round_a_block_message(to), window.clone())
+                let msg = node.round_a_block_message(to);
+                let censored = match self.censor.as_mut() {
+                    Some(cs) => {
+                        let spec = cs.spec;
+                        censor_decide(
+                            &mut cs.last_sent_ab[p],
+                            &mut cs.since_full_a[p],
+                            &spec,
+                            t,
+                            &msg,
+                            round_a_block_delta,
+                        )
+                    }
+                    None => false,
+                };
+                if censored {
+                    note_censored(id, to, tag, Phase::RoundA);
+                    Payload::ACensor(window.clone())
+                } else {
+                    note_kept();
+                    Payload::ABlock(msg, window.clone())
+                }
             } else {
-                Payload::A(node.round_a_message(to), window.clone())
+                let msg = node.round_a_message(to);
+                let censored = match self.censor.as_mut() {
+                    Some(cs) => {
+                        let spec = cs.spec;
+                        censor_decide(
+                            &mut cs.last_sent_a[p],
+                            &mut cs.since_full_a[p],
+                            &spec,
+                            t,
+                            &msg,
+                            round_a_delta,
+                        )
+                    }
+                    None => false,
+                };
+                if censored {
+                    note_censored(id, to, tag, Phase::RoundA);
+                    Payload::ACensor(window.clone())
+                } else {
+                    note_kept();
+                    Payload::A(msg, window.clone())
+                }
             };
-            let env = Envelope { from: self.id, iter: tag, phase: Phase::RoundA, payload };
+            let env = Envelope { from: id, iter: tag, phase: Phase::RoundA, payload };
             emit(out, to, env);
         }
         self.pending_stop = false;
@@ -687,18 +978,40 @@ impl NodeProgram {
     fn round_a_block(&mut self, msgs: Vec<Envelope>, out: &mut Vec<Outbound>) {
         let mut inbox_a: Vec<(usize, RoundABlock)> = Vec::with_capacity(msgs.len());
         for e in msgs {
-            match e.payload {
+            let from = e.from;
+            let a = match e.payload {
                 Payload::ABlock(a, w) => {
-                    debug_assert_eq!(w.len(), self.gossip.len());
-                    for (mine, theirs) in self.gossip.iter_mut().zip(&w) {
-                        if *theirs > *mine {
-                            *mine = *theirs;
-                        }
+                    self.fold_gossip(&w);
+                    if self.censor.is_some() {
+                        let p = self.nbr_pos(from);
+                        let cs = self.censor.as_mut().expect("checked");
+                        cs.last_recv_ab[p] = Some(a.clone());
                     }
-                    inbox_a.push((e.from, a));
+                    a
                 }
-                _ => unreachable!("block round-A phase carries Payload::ABlock"),
-            }
+                Payload::ABlockQuant { alpha, bcol, gossip } => {
+                    self.fold_gossip(&gossip);
+                    let a = RoundABlock { alpha: alpha.decode(), bcol: bcol.decode() };
+                    if self.censor.is_some() {
+                        let p = self.nbr_pos(from);
+                        let cs = self.censor.as_mut().expect("checked");
+                        cs.last_recv_ab[p] = Some(a.clone());
+                    }
+                    a
+                }
+                Payload::ACensor(w) => {
+                    self.fold_gossip(&w);
+                    let p = self.nbr_pos(from);
+                    self.censor
+                        .as_ref()
+                        .expect("censor marker without censoring configured")
+                        .last_recv_ab[p]
+                        .clone()
+                        .expect("censor marker before any full block round-A payload")
+                }
+                _ => unreachable!("block round-A phase carries a round-A payload"),
+            };
+            inbox_a.push((from, a));
         }
         self.last_gossip_head = if self.cfg.tol > 0.0 && self.t >= self.stop_lag {
             self.gossip.front().copied().unwrap_or(f64::INFINITY)
@@ -737,15 +1050,34 @@ impl NodeProgram {
         for (to, seg) in segments {
             if to == self.id {
                 node.receive_z_block(self.id, &seg);
-            } else {
-                let env = Envelope {
-                    from: self.id,
-                    iter: tag,
-                    phase: Phase::RoundB,
-                    payload: Payload::BBlock(seg),
-                };
-                emit(out, to, env);
+                continue;
             }
+            let mut censored = false;
+            if let Some(cs) = self.censor.as_mut() {
+                let p = self
+                    .nbrs
+                    .iter()
+                    .position(|&n| n == to)
+                    .expect("segment toward a non-neighbor");
+                let spec = cs.spec;
+                censored = censor_decide(
+                    &mut cs.last_sent_bb[p],
+                    &mut cs.since_full_b[p],
+                    &spec,
+                    self.t,
+                    &seg,
+                    round_b_block_delta,
+                );
+            }
+            let payload = if censored {
+                note_censored(self.id, to, tag, Phase::RoundB);
+                Payload::BCensor
+            } else {
+                note_kept();
+                Payload::BBlock(seg)
+            };
+            let env = Envelope { from: self.id, iter: tag, phase: Phase::RoundB, payload };
+            emit(out, to, env);
         }
         self.step = Step::RoundB;
     }
@@ -757,9 +1089,47 @@ impl NodeProgram {
         let rho2 = self.cfg.rho2_at(self.t);
         let node = self.node.as_mut().expect("setup done before round B");
         for e in msgs {
+            let from = e.from;
             match e.payload {
-                Payload::BBlock(seg) => node.receive_z_block(e.from, &seg),
-                _ => unreachable!("block round-B phase carries Payload::BBlock"),
+                Payload::BBlock(seg) => {
+                    if let Some(cs) = self.censor.as_mut() {
+                        let p = self
+                            .nbrs
+                            .iter()
+                            .position(|&n| n == from)
+                            .expect("round-B from a non-neighbor");
+                        cs.last_recv_bb[p] = Some(seg.clone());
+                    }
+                    node.receive_z_block(from, &seg);
+                }
+                Payload::BBlockQuant { segment } => {
+                    let seg = RoundBBlock { segment: segment.decode() };
+                    if let Some(cs) = self.censor.as_mut() {
+                        let p = self
+                            .nbrs
+                            .iter()
+                            .position(|&n| n == from)
+                            .expect("round-B from a non-neighbor");
+                        cs.last_recv_bb[p] = Some(seg.clone());
+                    }
+                    node.receive_z_block(from, &seg);
+                }
+                Payload::BCensor => {
+                    let p = self
+                        .nbrs
+                        .iter()
+                        .position(|&n| n == from)
+                        .expect("round-B from a non-neighbor");
+                    let seg = self
+                        .censor
+                        .as_ref()
+                        .expect("censor marker without censoring configured")
+                        .last_recv_bb[p]
+                        .clone()
+                        .expect("censor marker before any full block round-B payload");
+                    node.receive_z_block(from, &seg);
+                }
+                _ => unreachable!("block round-B phase carries a round-B payload"),
             }
         }
         let clock = obs::maybe_now();

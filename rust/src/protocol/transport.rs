@@ -34,12 +34,13 @@ use std::sync::Mutex;
 use crate::backend::ComputeBackend;
 use crate::data::NoiseModel;
 
-use super::message::{Envelope, Payload, Phase};
+use super::message::{Envelope, Payload, Phase, QuantMat, QuantVec};
 use super::program::{NodeOutput, NodeProgram};
 
 /// The per-directed-edge channel model shared by every transport:
-/// which noise applies to setup payloads and how edge seeds derive, so
-/// the lockstep and threaded runs noise identical payloads identically.
+/// which noise applies to setup payloads, how edge seeds derive, and
+/// whether the iteration-payload quantization codec runs, so the
+/// lockstep and threaded runs transform identical payloads identically.
 #[derive(Clone, Copy, Debug)]
 pub struct ChannelSpec {
     /// Channel noise applied to setup payloads.
@@ -48,12 +49,17 @@ pub struct ChannelSpec {
     pub noise_seed: u64,
     /// Network size (fixes the edge-seed derivation).
     pub n_nodes: usize,
+    /// Iteration-payload quantization codec (`AdmmConfig::quant_bits`):
+    /// round-A/round-B payloads are codec'd to this many bits per value
+    /// in flight; `None` ships full f64 width. Deterministic (no RNG),
+    /// so it cannot break cross-transport bit-identity.
+    pub quant_bits: Option<u8>,
 }
 
 impl ChannelSpec {
     /// A lossless channel (tests, baselines).
     pub fn lossless(n_nodes: usize) -> ChannelSpec {
-        ChannelSpec { noise: NoiseModel::None, noise_seed: 0, n_nodes }
+        ChannelSpec { noise: NoiseModel::None, noise_seed: 0, n_nodes, quant_bits: None }
     }
 
     /// Edge `(from -> to)` channel seed — one independent noisy copy
@@ -68,8 +74,13 @@ impl ChannelSpec {
     /// Apply the channel to an envelope in flight: setup payloads (raw
     /// data or RFF features) pass through the per-edge noise model;
     /// iteration messages are noise-free (paper §3.1 noises the data
-    /// exchange only).
+    /// exchange only) but go through the quantization codec when
+    /// `quant_bits` is set.
     pub fn transmit(&self, from: usize, to: usize, env: Envelope) -> Envelope {
+        let env = match self.quant_bits {
+            Some(bits) => Self::quantize_iteration_payload(env, bits),
+            None => env,
+        };
         // Lossless channels pass the payload through untouched —
         // NoiseModel::apply would clone a full setup matrix per edge
         // for nothing.
@@ -87,6 +98,33 @@ impl ChannelSpec {
             other => other,
         };
         Envelope { from: sender, iter, phase, payload }
+    }
+
+    /// The iteration-payload codec: round-A/round-B payloads (scalar
+    /// and block) are uniform-quantized; the gossip window, setup,
+    /// deflation, and censor markers keep full width. Stats and traces
+    /// record the POST-codec envelope, so the §4.2 accounting charges
+    /// what actually crosses the edge.
+    fn quantize_iteration_payload(env: Envelope, bits: u8) -> Envelope {
+        let Envelope { from, iter, phase, payload } = env;
+        let payload = match payload {
+            Payload::A(a, gossip) => Payload::AQuant {
+                alpha: QuantVec::encode(&a.alpha, bits),
+                bcol: QuantVec::encode(&a.bcol, bits),
+                gossip,
+            },
+            Payload::B(b) => Payload::BQuant { segment: QuantVec::encode(&b.segment, bits) },
+            Payload::ABlock(a, gossip) => Payload::ABlockQuant {
+                alpha: QuantMat::encode(&a.alpha, bits),
+                bcol: QuantMat::encode(&a.bcol, bits),
+                gossip,
+            },
+            Payload::BBlock(b) => {
+                Payload::BBlockQuant { segment: QuantMat::encode(&b.segment, bits) }
+            }
+            other => other,
+        };
+        Envelope { from, iter, phase, payload }
     }
 }
 
@@ -106,6 +144,12 @@ pub struct TrafficStats {
     counters: Vec<AtomicU64>,
     /// Totals per protocol phase (Setup/RoundA/RoundB/Deflate).
     phases: [AtomicU64; 4],
+    /// Iteration sends withheld by the censoring rule (a marker crossed
+    /// the edge instead of the full round-A/B payload).
+    censored: AtomicU64,
+    /// Iteration sends that went out in full (round-A/B payloads,
+    /// quantized or not; setup and deflation are not iteration sends).
+    kept: AtomicU64,
     n: usize,
 }
 
@@ -115,6 +159,8 @@ impl TrafficStats {
         TrafficStats {
             counters: (0..n * n).map(|_| AtomicU64::new(0)).collect(),
             phases: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            censored: AtomicU64::new(0),
+            kept: AtomicU64::new(0),
             n,
         }
     }
@@ -127,6 +173,29 @@ impl TrafficStats {
         // job, the stats never gate protocol progress.
         self.counters[from * self.n + to].fetch_add(floats, Ordering::Relaxed);
         self.phases[phase_idx(env.phase)].fetch_add(floats, Ordering::Relaxed);
+        if env.is_censor_marker() {
+            // ORDERING: relaxed — isolated monotone counter (see above).
+            self.censored.fetch_add(1, Ordering::Relaxed);
+        } else if matches!(env.phase, Phase::RoundA | Phase::RoundB) {
+            // ORDERING: relaxed — isolated monotone counter (see above).
+            self.kept.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Iteration sends the censoring rule withheld (markers on the
+    /// wire). Always 0 when `censor` is off.
+    pub fn censored_sends(&self) -> u64 {
+        // ORDERING: relaxed — reporting read (see `record_env`).
+        self.censored.load(Ordering::Relaxed)
+    }
+
+    /// Iteration (round-A/B) sends that shipped their full payload.
+    /// `censored_sends + kept_sends` is the total number of iteration
+    /// envelopes, dense or censored — the closed-form accounting test
+    /// in `experiments::comm` pins this.
+    pub fn kept_sends(&self) -> u64 {
+        // ORDERING: relaxed — reporting read (see `record_env`).
+        self.kept.load(Ordering::Relaxed)
     }
 
     /// Floats sent on the directed edge `from -> to`.
@@ -178,6 +247,9 @@ pub struct TraceEvent {
     pub phase: Phase,
     /// Payload size in floats (§4.2 accounting).
     pub floats: u64,
+    /// Whether the envelope was a censor marker — a withheld full
+    /// payload, visible in the rendered trace as a tagged gap.
+    pub censored: bool,
 }
 
 /// Optional per-send recorder. Cross-edge interleaving differs between
@@ -219,8 +291,12 @@ impl TraceLog {
         let mut out = String::new();
         for ((from, to), events) in edges {
             for ev in events {
+                // Markers are tagged so a censored run's gaps are
+                // visible in the golden trace; dense runs render
+                // byte-identically to before the tag existed.
+                let tag = if ev.censored { " censored" } else { "" };
                 out.push_str(&format!(
-                    "{from}->{to} iter={} phase={:?} floats={}\n",
+                    "{from}->{to} iter={} phase={:?} floats={}{tag}\n",
                     ev.iter, ev.phase, ev.floats
                 ));
             }
@@ -229,10 +305,11 @@ impl TraceLog {
     }
 }
 
-/// Shared send-side bookkeeping: account, trace, then run the channel
-/// model. Every transport's `send` goes through here — comm accounting
-/// and noise injection live behind the transport boundary, never in
-/// driver code.
+/// Shared send-side bookkeeping: run the channel model, then account
+/// and trace what actually crossed the edge. Every transport's `send`
+/// goes through here — comm accounting, the quantization codec, and
+/// noise injection live behind the transport boundary, never in driver
+/// code.
 pub(crate) fn transmit_env(
     channel: &ChannelSpec,
     stats: &TrafficStats,
@@ -241,11 +318,23 @@ pub(crate) fn transmit_env(
     to: usize,
     env: Envelope,
 ) -> Envelope {
+    // The channel model runs FIRST so the accounting charges what
+    // actually crosses the edge: the quantization codec changes the
+    // float count (the noise models never did, so recording pre- or
+    // post-channel was equivalent before the codec existed).
+    let env = channel.transmit(from, to, env);
     stats.record_env(from, to, &env);
     if let Some(log) = trace {
-        log.record(TraceEvent { from, to, iter: env.iter, phase: env.phase, floats: env.floats() });
+        log.record(TraceEvent {
+            from,
+            to,
+            iter: env.iter,
+            phase: env.phase,
+            floats: env.floats(),
+            censored: env.is_censor_marker(),
+        });
     }
-    channel.transmit(from, to, env)
+    env
 }
 
 /// One node's view of the network fabric.
@@ -324,6 +413,7 @@ mod tests {
             noise: NoiseModel::Gaussian { sigma: 0.5 },
             noise_seed: 7,
             n_nodes: 4,
+            quant_bits: None,
         };
         let m = Matrix::full(3, 2, 1.0);
         let data = chan.transmit(
@@ -348,6 +438,7 @@ mod tests {
             noise: NoiseModel::Gaussian { sigma: 0.1 },
             noise_seed: 3,
             n_nodes: 5,
+            quant_bits: None,
         };
         let m = Matrix::full(2, 2, 0.5);
         let env = |dst: usize| {
@@ -407,14 +498,92 @@ mod tests {
     #[test]
     fn trace_renders_per_edge_in_send_order() {
         let log = TraceLog::default();
-        log.record(TraceEvent { from: 1, to: 0, iter: 0, phase: Phase::Setup, floats: 6 });
-        log.record(TraceEvent { from: 0, to: 1, iter: 0, phase: Phase::Setup, floats: 6 });
-        log.record(TraceEvent { from: 0, to: 1, iter: 0, phase: Phase::RoundA, floats: 8 });
+        let ev = |from, to, iter, phase, floats| TraceEvent {
+            from,
+            to,
+            iter,
+            phase,
+            floats,
+            censored: false,
+        };
+        log.record(ev(1, 0, 0, Phase::Setup, 6));
+        log.record(ev(0, 1, 0, Phase::Setup, 6));
+        log.record(ev(0, 1, 0, Phase::RoundA, 8));
         assert_eq!(
             log.render_per_edge(),
             "0->1 iter=0 phase=Setup floats=6\n\
              0->1 iter=0 phase=RoundA floats=8\n\
              1->0 iter=0 phase=Setup floats=6\n"
         );
+    }
+
+    #[test]
+    fn trace_tags_censor_markers() {
+        let log = TraceLog::default();
+        log.record(TraceEvent { from: 0, to: 1, iter: 2, phase: Phase::RoundA, floats: 1, censored: true });
+        assert_eq!(log.render_per_edge(), "0->1 iter=2 phase=RoundA floats=1 censored\n");
+    }
+
+    #[test]
+    fn stats_count_censored_and_kept_sends() {
+        let stats = TrafficStats::new(2);
+        stats.record_env(0, 1, &round_a_env(0, 0, 4));
+        stats.record_env(
+            0,
+            1,
+            &Envelope { from: 0, iter: 1, phase: Phase::RoundA, payload: Payload::ACensor(vec![]) },
+        );
+        stats.record_env(
+            0,
+            1,
+            &Envelope { from: 0, iter: 1, phase: Phase::RoundB, payload: Payload::BCensor },
+        );
+        stats.record_env(
+            0,
+            1,
+            &Envelope {
+                from: 0,
+                iter: 0,
+                phase: Phase::Setup,
+                payload: Payload::Data(Matrix::zeros(2, 2)),
+            },
+        );
+        assert_eq!(stats.kept_sends(), 1, "setup is not an iteration send");
+        assert_eq!(stats.censored_sends(), 2);
+    }
+
+    #[test]
+    fn quantizing_channel_codecs_iteration_payloads_only() {
+        let chan = ChannelSpec { quant_bits: Some(8), ..ChannelSpec::lossless(3) };
+        let a = chan.transmit(0, 1, round_a_env(0, 2, 16));
+        match &a.payload {
+            Payload::AQuant { alpha, bcol, gossip } => {
+                assert_eq!(alpha.bits, 8);
+                assert_eq!(alpha.len, 16);
+                assert_eq!(bcol.len, 16);
+                assert!(gossip.is_empty());
+            }
+            other => panic!("expected AQuant, got {other:?}"),
+        }
+        // 2 range + 2 words per column vs 32 full floats (+0 gossip).
+        assert_eq!(a.floats(), 8);
+        let setup = chan.transmit(
+            0,
+            1,
+            Envelope {
+                from: 0,
+                iter: 0,
+                phase: Phase::Setup,
+                payload: Payload::Data(Matrix::zeros(2, 3)),
+            },
+        );
+        assert!(matches!(setup.payload, Payload::Data(_)), "setup skips the codec");
+        assert_eq!(setup.floats(), 6);
+        let marker = chan.transmit(
+            0,
+            1,
+            Envelope { from: 0, iter: 1, phase: Phase::RoundB, payload: Payload::BCensor },
+        );
+        assert!(marker.is_censor_marker(), "markers skip the codec");
     }
 }

@@ -21,7 +21,7 @@
 
 use std::sync::Arc;
 
-use dkpca::admm::{AdmmConfig, MultiKStrategy};
+use dkpca::admm::{AdmmConfig, CensorSpec, MultiKStrategy};
 use dkpca::backend::NativeBackend;
 use dkpca::coordinator::run_decentralized_multik_traced;
 use dkpca::data::{NoiseModel, Rng};
@@ -176,6 +176,209 @@ fn golden_block_trace_identical_on_both_transports() {
         "block wire trace changed — if intentional, update expected_block_trace()"
     );
     assert!(!lock.contains("Deflate"), "block runs must never ship a deflation exchange");
+}
+
+/// The checked-in golden CENSORED trace: tau0 huge + decay 1.0 censors
+/// whenever the keepalive schedule allows, so the wire program is
+/// numerics-independent — full payloads at t = 0 and t = 2, zero-float
+/// markers (tagged `censored`) at t = 1 and t = 3. Setup is untouched.
+fn expected_censored_trace() -> String {
+    let per_edge = [
+        "iter=0 phase=Setup floats=8",
+        "iter=0 phase=RoundA floats=8",
+        "iter=0 phase=RoundB floats=4",
+        "iter=1 phase=RoundA floats=0 censored",
+        "iter=1 phase=RoundB floats=0 censored",
+        "iter=2 phase=RoundA floats=8",
+        "iter=2 phase=RoundB floats=4",
+        "iter=3 phase=RoundA floats=0 censored",
+        "iter=3 phase=RoundB floats=0 censored",
+    ];
+    let mut out = String::new();
+    for (from, to) in EDGES {
+        for line in per_edge {
+            out.push_str(&format!("{from}->{to} {line}\n"));
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_censored_trace_identical_on_both_transports() {
+    let xs = fixed_xs();
+    let graph = Graph::ring(3, 1);
+    let censored_cfg = AdmmConfig {
+        max_iters: 4,
+        multik: MultiKStrategy::Deflate,
+        censor: Some(CensorSpec { tau0: 1e12, decay: 1.0, keepalive: 2 }),
+        ..Default::default()
+    };
+
+    let lock_trace = Arc::new(TraceLog::default());
+    let mut seq = MultiKpcaSolver::new_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &censored_cfg,
+        NoiseModel::None,
+        0,
+        1,
+        &NativeBackend,
+        Some(lock_trace.clone()),
+    );
+    let _ = seq.run(&NativeBackend);
+
+    let thread_trace = Arc::new(TraceLog::default());
+    let _ = run_decentralized_multik_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &censored_cfg,
+        NoiseModel::None,
+        0,
+        1,
+        Arc::new(NativeBackend),
+        Some(thread_trace.clone()),
+    );
+
+    let lock = lock_trace.render_per_edge();
+    let thread = thread_trace.render_per_edge();
+    assert_eq!(lock, thread, "transports disagree on the censored wire sequence");
+    assert_eq!(
+        lock,
+        expected_censored_trace(),
+        "censored wire trace changed — if intentional, update expected_censored_trace()"
+    );
+}
+
+/// The checked-in golden QUANTIZED trace: the 8-bit codec packs each
+/// N = 4 round-A vector (alpha, bcol) into one u64 word plus its
+/// [lo, hi] pair — 3 wire floats each, so round A moves 6 and round B
+/// 3 floats per edge. Setup stays full-width.
+fn expected_quantized_trace() -> String {
+    let per_edge = [
+        "iter=0 phase=Setup floats=8",
+        "iter=0 phase=RoundA floats=6",
+        "iter=0 phase=RoundB floats=3",
+        "iter=1 phase=RoundA floats=6",
+        "iter=1 phase=RoundB floats=3",
+    ];
+    let mut out = String::new();
+    for (from, to) in EDGES {
+        for line in per_edge {
+            out.push_str(&format!("{from}->{to} {line}\n"));
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_quantized_trace_identical_on_both_transports() {
+    let xs = fixed_xs();
+    let graph = Graph::ring(3, 1);
+    let quant_cfg = AdmmConfig {
+        max_iters: 2,
+        multik: MultiKStrategy::Deflate,
+        quant_bits: Some(8),
+        ..Default::default()
+    };
+
+    let lock_trace = Arc::new(TraceLog::default());
+    let mut seq = MultiKpcaSolver::new_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &quant_cfg,
+        NoiseModel::None,
+        0,
+        1,
+        &NativeBackend,
+        Some(lock_trace.clone()),
+    );
+    let _ = seq.run(&NativeBackend);
+
+    let thread_trace = Arc::new(TraceLog::default());
+    let _ = run_decentralized_multik_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &quant_cfg,
+        NoiseModel::None,
+        0,
+        1,
+        Arc::new(NativeBackend),
+        Some(thread_trace.clone()),
+    );
+
+    let lock = lock_trace.render_per_edge();
+    let thread = thread_trace.render_per_edge();
+    assert_eq!(lock, thread, "transports disagree on the quantized wire sequence");
+    assert_eq!(
+        lock,
+        expected_quantized_trace(),
+        "quantized wire trace changed — if intentional, update expected_quantized_trace()"
+    );
+    assert!(!lock.contains("censored"), "quantization alone never censors");
+}
+
+#[test]
+fn censored_stop_rule_fires_identically_on_both_transports() {
+    // Censoring must not perturb the diameter-lagged stop rule: the
+    // gossip window rides every censor marker, so both transports (and
+    // every node — asserted inside the drivers' join paths) stop at
+    // the same iteration. tol huge makes every node want to stop
+    // immediately; tau0 huge censors every allowed round; the whole
+    // run is deterministic.
+    let xs = fixed_xs();
+    let graph = Graph::ring(3, 1);
+    let cfg = AdmmConfig {
+        max_iters: 8,
+        tol: 1e30,
+        multik: MultiKStrategy::Deflate,
+        censor: Some(CensorSpec { tau0: 1e12, decay: 1.0, keepalive: 3 }),
+        ..Default::default()
+    };
+
+    let lock_trace = Arc::new(TraceLog::default());
+    let mut seq = MultiKpcaSolver::new_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &cfg,
+        NoiseModel::None,
+        0,
+        1,
+        &NativeBackend,
+        Some(lock_trace.clone()),
+    );
+    let _ = seq.run(&NativeBackend);
+
+    let thread_trace = Arc::new(TraceLog::default());
+    let rep = run_decentralized_multik_traced(
+        &xs,
+        &graph,
+        &KERNEL,
+        &cfg,
+        NoiseModel::None,
+        0,
+        1,
+        Arc::new(NativeBackend),
+        Some(thread_trace.clone()),
+    );
+
+    let lock = lock_trace.render_per_edge();
+    assert_eq!(
+        lock,
+        thread_trace.render_per_edge(),
+        "transports disagree under censoring + early stop"
+    );
+    assert!(lock.contains("censored"), "tau0=1e12 must censor at least one round");
+    assert!(rep.converged[0], "tol=1e30 must stop on the tolerance criterion");
+    assert!(
+        rep.per_component_iterations[0] < 8,
+        "stop rule never fired: ran all {} iterations",
+        rep.per_component_iterations[0]
+    );
 }
 
 #[test]

@@ -10,7 +10,12 @@ that regressed past its threshold:
 
   - gemm:  parallel_gflops below 0.8x baseline
   - comm:  any floats-per-edge count above 1.2x baseline
-           (comm cost is analytic, so any drift is a protocol change)
+           (comm cost is analytic, so any drift is a protocol change);
+           dense and censored rows compare separately via the "mode"
+           field, and the censor_savings rows track the cut and the
+           similarity the censored mode reaches
+  - rff:   Gram-approximation error above 1.2x baseline per dim, or
+           the fitted c of the err ~ c/sqrt(D) law above 1.2x
   - serve: p99_ms above 1.2x baseline, or points_per_sec below 0.8x
   - topk:  train_secs above 1.2x baseline, floats_per_edge above 1.2x
            (analytic), or affinity below 0.8x baseline — per
@@ -31,6 +36,7 @@ import sys
 BENCHES = [
     ("BENCH_gemm.json", "gemm"),
     ("BENCH_comm.json", "comm"),
+    ("BENCH_rff.json", "rff"),
     ("BENCH_serve.json", "serve"),
     ("BENCH_topk.json", "topk"),
 ]
@@ -93,7 +99,10 @@ def compare_gemm(base, fresh):
 
 def compare_comm(base, fresh):
     n = 0
-    ident = ("setup", "strategy", "k", "nodes", "n")
+    # "mode" distinguishes dense from censored rows; .get keeps old
+    # baselines (no mode field -> None) comparable against fresh dense
+    # rows only when both sides lack/match the field.
+    ident = ("mode", "setup", "strategy", "k", "nodes", "n")
     fields = ("setup_floats_per_edge", "iter_floats_per_edge_per_iter",
               "deflate_floats_per_edge")
     pairs = index_rows(base.get("results", []), ident)
@@ -103,6 +112,36 @@ def compare_comm(base, fresh):
             continue
         for f in fields:
             n += compare_metric("comm", key, f, b.get(f), row.get(f), False)
+    # Censored-vs-dense savings rows: the floats cut must not shrink
+    # and the censored run's similarity must not fall away.
+    sident = ("omega", "n")
+    spairs = index_rows(base.get("censor_savings", []), sident)
+    for key, row in index_rows(fresh.get("censor_savings", []), sident).items():
+        b = spairs.get(key)
+        if b is None:
+            continue
+        n += compare_metric("comm.censor", key, "cut", b.get("cut"), row.get("cut"), True)
+        n += compare_metric("comm.censor", key, "censored_similarity",
+                            b.get("censored_similarity"),
+                            row.get("censored_similarity"), True)
+        n += compare_metric("comm.censor", key, "censored_floats_per_edge",
+                            b.get("censored_floats_per_edge"),
+                            row.get("censored_floats_per_edge"), False)
+    return n
+
+
+def compare_rff(base, fresh):
+    n = 0
+    pairs = index_rows(base.get("results", []), ("dim",))
+    for key, row in index_rows(fresh.get("results", []), ("dim",)).items():
+        b = pairs.get(key)
+        if b is None:
+            continue
+        n += compare_metric("rff", key, "max_abs_err",
+                            b.get("max_abs_err"), row.get("max_abs_err"), False)
+        n += compare_metric("rff", key, "rmse", b.get("rmse"), row.get("rmse"), False)
+    n += compare_metric("rff", ("fit",), "fitted_c",
+                        base.get("fitted_c"), fresh.get("fitted_c"), False)
     return n
 
 
@@ -140,6 +179,7 @@ def compare_topk(base, fresh):
 COMPARATORS = {
     "gemm": compare_gemm,
     "comm": compare_comm,
+    "rff": compare_rff,
     "serve": compare_serve,
     "topk": compare_topk,
 }
